@@ -1,0 +1,104 @@
+//! Rate–distortion anatomy of the RC quantizer (paper §3.2).
+//!
+//! Shows, for a N(0,1) source:
+//!   1. the λ-sweep trade-off curve (MSE vs encoded rate) against the
+//!      Lloyd-Max / NQFL / uniform operating points;
+//!   2. the boundary shift of eq. (10) vs the plain Lloyd midpoints —
+//!      "intervals associated with longer codewords become smaller";
+//!   3. the high-rate law of eq. (20): MSE ≈ (1/12)·2^{2h(Z)}·2^{−2R}.
+//!
+//!     cargo run --release --example rate_distortion
+
+use rcfed::quant::lloyd::{midpoints, LloydMax};
+use rcfed::quant::nqfl::nqfl_codebook;
+use rcfed::quant::rcq::{LengthModel, RateConstrainedQuantizer};
+use rcfed::quant::uniform::uniform_codebook;
+use rcfed::quant::evaluate;
+use rcfed::coding::huffman::HuffmanCode;
+use rcfed::stats::entropy::entropy_bits;
+use rcfed::stats::gaussian::{differential_entropy_bits, StdGaussian};
+
+fn main() {
+    let b = 3u32;
+    println!("=== RC-FED quantizer anatomy (N(0,1), b={b}) ===\n");
+
+    // 1. trade-off curve
+    println!("{:>8} {:>10} {:>10} {:>10}", "lambda", "MSE", "H(Q)", "E[huff]");
+    for lam in [0.0, 0.02, 0.04, 0.06, 0.08, 0.1, 0.2, 0.4] {
+        let rc = RateConstrainedQuantizer {
+            lambda: lam,
+            length_model: LengthModel::Huffman,
+            ..Default::default()
+        };
+        let (_, rep) = rc.design(&StdGaussian, b).unwrap();
+        println!(
+            "{lam:>8.3} {:>10.5} {:>10.4} {:>10.4}",
+            rep.mse, rep.entropy_bits, rep.huffman_rate
+        );
+    }
+    println!("\nbaseline operating points:");
+    let (_, lloyd) = LloydMax::default().design(&StdGaussian, b).unwrap();
+    println!("  lloyd-max : MSE={:.5} E[huff]={:.4}", lloyd.mse,
+             lloyd.huffman_rate);
+    for (name, cb) in [
+        ("nqfl", nqfl_codebook(b).unwrap()),
+        ("uniform", uniform_codebook(b, 4.0).unwrap()),
+    ] {
+        let (mse, probs) = evaluate(&StdGaussian, &cb);
+        let code = HuffmanCode::from_probs(&probs).unwrap();
+        println!(
+            "  {name:<9} : MSE={mse:.5} E[huff]={:.4}",
+            code.expected_length(&probs)
+        );
+    }
+
+    // 2. boundary shift anatomy
+    let rc = RateConstrainedQuantizer {
+        lambda: 0.08,
+        length_model: LengthModel::Huffman,
+        ..Default::default()
+    };
+    let (cb, rep) = rc.design(&StdGaussian, b).unwrap();
+    let code = HuffmanCode::from_probs(&rep.probs).unwrap();
+    let levels: Vec<f64> = cb.levels.iter().map(|&x| x as f64).collect();
+    let mids = midpoints(&levels);
+    println!("\nboundary shifts at λ=0.08 (eq. 10):");
+    println!(
+        "{:>3} {:>9} {:>9} {:>8} {:>6} {:>6}",
+        "l", "midpoint", "u_l", "shift", "ℓ_l-1", "ℓ_l"
+    );
+    for l in 1..levels.len() {
+        println!(
+            "{l:>3} {:>9.4} {:>9.4} {:>+8.4} {:>6} {:>6}",
+            mids[l - 1],
+            cb.bounds[l - 1],
+            cb.bounds[l - 1] as f64 - mids[l - 1],
+            code.lengths()[l - 1],
+            code.lengths()[l]
+        );
+    }
+    println!("(positive shift toward the longer-codeword side shrinks \
+              rare cells)");
+
+    // 3. high-rate law
+    println!("\nhigh-rate law check, MSE vs (1/12)·2^(2h)·2^(−2R):");
+    let h = differential_entropy_bits(1.0);
+    println!("{:>4} {:>10} {:>12} {:>8}", "b", "MSE", "eq20", "ratio");
+    for bb in [2u32, 3, 4, 6] {
+        let rc = RateConstrainedQuantizer {
+            lambda: 0.01,
+            length_model: LengthModel::Ideal,
+            ..Default::default()
+        };
+        let (_, rep) = rc.design(&StdGaussian, bb).unwrap();
+        let predicted = (1.0 / 12.0)
+            * 2f64.powf(2.0 * h)
+            * 2f64.powf(-2.0 * rep.entropy_bits);
+        println!(
+            "{bb:>4} {:>10.6} {predicted:>12.6} {:>8.3}",
+            rep.mse,
+            rep.mse / predicted
+        );
+    }
+    let _ = entropy_bits(&rep.probs);
+}

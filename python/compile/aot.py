@@ -1,0 +1,152 @@
+"""AOT compile path: lower every Layer-2 graph to HLO *text* + manifest.
+
+Run once by ``make artifacts``::
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Emits one ``<name>.hlo.txt`` per exported graph plus ``manifest.json``
+describing parameter inventories and I/O shapes, which the rust runtime
+(`rust/src/runtime/artifacts.rs`) parses to drive PJRT execution.
+
+HLO **text** is the interchange format, not ``.serialize()``: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published ``xla`` crate links) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+# Gradient chunks stream through the Pallas quantize kernel in fixed-size
+# pieces; the rust side zero-pads the final chunk. 65536 f32 = 256 KiB.
+CHUNK = 65536
+BLOCK = 8192
+# Bit widths exported for the quantizer graphs (paper tests b in {3, 6};
+# the rate-distortion bench sweeps wider).
+BITS = (2, 3, 4, 6)
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _dtype_name(dt):
+    return {jnp.float32: "f32", jnp.int32: "i32"}[dt]
+
+
+def export_entry(out_dir, name, fn, in_specs, manifest):
+    lowered = jax.jit(fn).lower(*[_spec(s, d) for s, d in in_specs])
+    text = to_hlo_text(lowered)
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    out_shapes = [
+        {"shape": list(s.shape), "dtype": _dtype_name_from(s.dtype)}
+        for s in jax.eval_shape(fn, *[_spec(s, d) for s, d in in_specs])
+    ]
+    manifest["artifacts"][name] = {
+        "file": fname,
+        "inputs": [{"shape": list(s), "dtype": _dtype_name(d)}
+                   for s, d in in_specs],
+        "outputs": out_shapes,
+    }
+    print(f"  wrote {fname} ({len(text)} chars)")
+
+
+def _dtype_name_from(dt):
+    s = jnp.dtype(dt).name
+    return {"float32": "f32", "int32": "i32"}[s]
+
+
+def build_manifest_models(manifest):
+    for name, spec in M.MODELS.items():
+        manifest["models"][name] = {
+            "kind": spec.kind,
+            "input_shape": list(spec.input_shape),
+            "num_classes": spec.num_classes,
+            "batch": spec.batch,
+            "num_params": spec.num_params(),
+            "params": [{"name": n, "shape": list(s)}
+                       for n, s in spec.param_specs()],
+            "train": f"train_{name}",
+            "eval": f"eval_{name}",
+        }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description="RC-FED AOT export")
+    ap.add_argument("--out", default="../artifacts",
+                    help="output directory for HLO text + manifest")
+    ap.add_argument("--models", default=",".join(M.MODELS),
+                    help="comma-separated model names to export")
+    args = ap.parse_args()
+    out_dir = args.out
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {
+        "version": 1,
+        "chunk": CHUNK,
+        "block": BLOCK,
+        "bits": list(BITS),
+        "artifacts": {},
+        "models": {},
+    }
+    build_manifest_models(manifest)
+
+    # ---- model graphs -----------------------------------------------------
+    for name in args.models.split(","):
+        spec = M.MODELS[name]
+        pin = [(s, F32) for _, s in spec.param_specs()]
+        xin = (spec.batch,) + spec.input_shape
+        yin = (spec.batch,)
+        print(f"[aot] model {name}: {spec.num_params()} params")
+        export_entry(out_dir, f"train_{name}", M.make_train_step(spec),
+                     pin + [(xin, F32), (yin, I32)], manifest)
+        export_entry(out_dir, f"eval_{name}", M.make_eval_step(spec),
+                     pin + [(xin, F32), (yin, I32)], manifest)
+
+    # ---- compression graphs (Layer-1 Pallas, shared by all models) -------
+    for b in BITS:
+        nl = 1 << b
+        print(f"[aot] quantize b={b} ({nl} levels, chunk={CHUNK})")
+        export_entry(
+            out_dir, f"quantize_b{b}",
+            M.make_quantize_chunk(nl, CHUNK, BLOCK),
+            [((CHUNK,), F32), ((1,), F32), ((1,), F32),
+             ((nl - 1,), F32), ((nl,), F32)], manifest)
+        export_entry(
+            out_dir, f"dequantize_b{b}",
+            M.make_dequantize_chunk(nl, CHUNK, BLOCK),
+            [((CHUNK,), I32), ((1,), F32), ((1,), F32), ((nl,), F32)],
+            manifest)
+    export_entry(out_dir, "moments", M.make_moments_chunk(CHUNK, BLOCK),
+                 [((CHUNK,), F32)], manifest)
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"[aot] manifest.json + {len(manifest['artifacts'])} artifacts -> {out_dir}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

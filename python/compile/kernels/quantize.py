@@ -1,0 +1,162 @@
+"""Layer-1 Pallas kernels for the RC-FED gradient-compression hot spot.
+
+The paper's per-coordinate pipeline (Algorithm 1, client side) is
+
+    z      = (g - mu) / sigma          # statistics-aware normalization (S3.1)
+    idx    = bucketize(z, boundaries)  # scalar quantization Q*(.)   (S3.2)
+    deq    = levels[idx] * sigma + mu  # PS-side reconstruction      (S3.4)
+
+fused into a single memory-bound kernel. On TPU this is a pure VPU
+(vector-unit) workload: the 2^b <= 64-entry codebook is replicated into
+VMEM next to every gradient block, and bucketize is a branch-free
+compare-and-accumulate against the sorted boundary vector, i.e.
+
+    idx[i] = sum_j [ z[i] > u_j ]
+
+which vectorizes perfectly and needs no MXU. Blocks of BLOCK coordinates
+stream HBM->VMEM via the BlockSpec grid; the op is roofline-bound on HBM
+bandwidth (see DESIGN.md SS Hardware-Adaptation).
+
+All kernels are lowered with ``interpret=True`` — the CPU PJRT plugin that
+the rust runtime drives cannot execute Mosaic custom-calls. Correctness is
+pinned against the pure-jnp oracle in ``ref.py`` by ``python/tests``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile: 8192 f32 = 32 KiB per input block in VMEM; with the output
+# block, the int32 index block and a <=64-entry codebook this is ~100 KiB,
+# leaving ample VMEM for double buffering on a real TPU core.
+DEFAULT_BLOCK = 8192
+
+# Guard against degenerate (constant) gradient blocks: sigma is clamped so
+# normalization never divides by ~0. Matches ref.py and the rust pipeline.
+SIGMA_FLOOR = 1e-8
+
+
+def _quantize_block_kernel(g_ref, mu_ref, sigma_ref, bounds_ref, levels_ref,
+                           deq_ref, idx_ref):
+    """Fused normalize + bucketize + dequantize over one VMEM block."""
+    g = g_ref[...]
+    mu = mu_ref[0]
+    sigma = jnp.maximum(sigma_ref[0], SIGMA_FLOOR)
+    z = (g - mu) / sigma
+    # Branch-free bucketize: idx[i] = #{j : z[i] > u_j}. bounds is sorted
+    # ascending, so this equals searchsorted(bounds, z, side='left').
+    cmp = z[:, None] > bounds_ref[...][None, :]
+    idx = jnp.sum(cmp.astype(jnp.int32), axis=-1)
+    idx_ref[...] = idx
+    # Reconstruction the PS will compute, eq. (11): sigma * Qi*(s_idx) + mu.
+    deq_ref[...] = jnp.take(levels_ref[...], idx) * sigma + mu
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def quantize_chunk(g, mu, sigma, bounds, levels, *, block=DEFAULT_BLOCK):
+    """Quantize a 1-D f32 chunk against a (levels, bounds) codebook.
+
+    Args:
+      g:      f32[d] gradient chunk; d must be a multiple of ``block``.
+      mu:     f32[1] client-round gradient mean (side information).
+      sigma:  f32[1] client-round gradient std (side information).
+      bounds: f32[2^b - 1] sorted decision boundaries u_1..u_{2^b-1}.
+      levels: f32[2^b] reconstruction levels s_0..s_{2^b-1}.
+
+    Returns:
+      (deq, idx): f32[d] de-normalized reconstruction and i32[d] symbol ids.
+    """
+    (d,) = g.shape
+    if d % block != 0:
+        raise ValueError(f"chunk length {d} not a multiple of block {block}")
+    nb = bounds.shape[0]
+    nl = levels.shape[0]
+    grid = (d // block,)
+    return pl.pallas_call(
+        _quantize_block_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),       # stream g blocks
+            pl.BlockSpec((1,), lambda i: (0,)),           # replicate mu
+            pl.BlockSpec((1,), lambda i: (0,)),           # replicate sigma
+            pl.BlockSpec((nb,), lambda i: (0,)),          # replicate codebook
+            pl.BlockSpec((nl,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((d,), jnp.float32),
+            jax.ShapeDtypeStruct((d,), jnp.int32),
+        ],
+        interpret=True,
+    )(g, mu, sigma, bounds, levels)
+
+
+def _moments_block_kernel(g_ref, sum_ref, sumsq_ref):
+    """Per-block partial sums for the two-pass (mu, sigma) reduction."""
+    g = g_ref[...]
+    sum_ref[0] = jnp.sum(g)
+    sumsq_ref[0] = jnp.sum(g * g)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def moments_chunk(g, *, block=DEFAULT_BLOCK):
+    """Per-block (sum, sum of squares) partials of a 1-D f32 chunk.
+
+    The combine step (across blocks and across chunks) is a cheap host-side
+    scalar reduction done by the rust coordinator; splitting it this way
+    keeps the kernel a single streaming pass over HBM.
+    """
+    (d,) = g.shape
+    if d % block != 0:
+        raise ValueError(f"chunk length {d} not a multiple of block {block}")
+    nblk = d // block
+    return pl.pallas_call(
+        _moments_block_kernel,
+        grid=(nblk,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nblk,), jnp.float32),
+            jax.ShapeDtypeStruct((nblk,), jnp.float32),
+        ],
+        interpret=True,
+    )(g)
+
+
+def _dequantize_block_kernel(idx_ref, mu_ref, sigma_ref, levels_ref, out_ref):
+    """PS-side reconstruction (11): out = sigma * levels[idx] + mu."""
+    mu = mu_ref[0]
+    sigma = jnp.maximum(sigma_ref[0], SIGMA_FLOOR)
+    out_ref[...] = jnp.take(levels_ref[...], idx_ref[...]) * sigma + mu
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def dequantize_chunk(idx, mu, sigma, levels, *, block=DEFAULT_BLOCK):
+    """Reconstruct a chunk from symbol ids (the PS half of the pipeline)."""
+    (d,) = idx.shape
+    if d % block != 0:
+        raise ValueError(f"chunk length {d} not a multiple of block {block}")
+    nl = levels.shape[0]
+    return pl.pallas_call(
+        _dequantize_block_kernel,
+        grid=(d // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((nl,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((d,), jnp.float32),
+        interpret=True,
+    )(idx, mu, sigma, levels)

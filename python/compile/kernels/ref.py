@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for the Layer-1 Pallas kernels.
+
+These are the ground truth the kernels are tested against (pytest +
+hypothesis in ``python/tests/test_kernel.py``). They intentionally use the
+most literal jnp formulation (searchsorted / direct reductions) rather than
+mirroring the kernels' blocked structure.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+SIGMA_FLOOR = 1e-8
+
+
+def quantize_ref(g, mu, sigma, bounds, levels):
+    """Reference fused normalize + bucketize + dequantize.
+
+    idx[i] = searchsorted(bounds, z[i], side='left')  (i.e. #{j: z_i > u_j})
+    deq[i] = levels[idx[i]] * sigma + mu
+    """
+    sigma = jnp.maximum(sigma, SIGMA_FLOOR)
+    z = (g - mu) / sigma
+    idx = jnp.searchsorted(bounds, z, side="left").astype(jnp.int32)
+    deq = levels[idx] * sigma + mu
+    return deq, idx
+
+
+def moments_ref(g, block):
+    """Reference per-block (sum, sumsq) partials."""
+    gb = g.reshape(-1, block)
+    return jnp.sum(gb, axis=1), jnp.sum(gb * gb, axis=1)
+
+
+def dequantize_ref(idx, mu, sigma, levels):
+    sigma = jnp.maximum(sigma, SIGMA_FLOOR)
+    return levels[idx] * sigma + mu

@@ -1,0 +1,213 @@
+"""Layer-2 JAX compute graphs for RC-FED.
+
+Defines the federated learning models the paper evaluates (S5):
+
+* ``mlp``  — a dense classifier used for the SynthCifar task (the paper's
+  ResNet-18 is substituted per DESIGN.md: gradient statistics and the
+  compression mechanics are dimension-independent).
+* ``cnn``  — the paper's FEMNIST architecture verbatim in spirit: two conv
+  layers followed by two fully-connected layers.
+
+Every exported graph is a pure function over explicit parameter lists (no
+pytree magic on the wire): the rust coordinator feeds parameters in the
+manifest order and receives gradients in the same order. Graphs are lowered
+once by ``aot.py`` to HLO text; Python never runs on the request path.
+
+The gradient-compression hot path (``quantize_chunk`` etc.) lives in the
+Layer-1 Pallas kernels and is exported as its own HLO so the rust client
+can run compress/decompress without re-tracing the model.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import quantize as qk
+
+# ---------------------------------------------------------------------------
+# Model configurations
+# ---------------------------------------------------------------------------
+
+
+class ModelSpec:
+    """Static description of one exported model variant."""
+
+    def __init__(self, name, kind, input_shape, num_classes, batch, **kw):
+        self.name = name
+        self.kind = kind                  # "mlp" | "cnn"
+        self.input_shape = tuple(input_shape)
+        self.num_classes = num_classes
+        self.batch = batch
+        self.kw = kw
+
+    # -- parameter inventory -------------------------------------------------
+
+    def param_specs(self) -> List[Tuple[str, Tuple[int, ...]]]:
+        if self.kind == "mlp":
+            dims = [int(math.prod(self.input_shape))] + list(
+                self.kw.get("hidden", (256, 128))
+            ) + [self.num_classes]
+            specs = []
+            for i in range(len(dims) - 1):
+                specs.append((f"w{i}", (dims[i], dims[i + 1])))
+                specs.append((f"b{i}", (dims[i + 1],)))
+            return specs
+        if self.kind == "cnn":
+            h, w, cin = self.input_shape
+            c1 = self.kw.get("c1", 8)
+            c2 = self.kw.get("c2", 16)
+            fc = self.kw.get("fc", 128)
+            # two 3x3 SAME convs, each followed by 2x2 max-pool
+            flat = (h // 4) * (w // 4) * c2
+            return [
+                ("conv1_w", (3, 3, cin, c1)), ("conv1_b", (c1,)),
+                ("conv2_w", (3, 3, c1, c2)), ("conv2_b", (c2,)),
+                ("fc1_w", (flat, fc)), ("fc1_b", (fc,)),
+                ("fc2_w", (fc, self.num_classes)), ("fc2_b", (self.num_classes,)),
+            ]
+        raise ValueError(f"unknown model kind {self.kind!r}")
+
+    def num_params(self) -> int:
+        return sum(int(math.prod(s)) for _, s in self.param_specs())
+
+    # -- init ----------------------------------------------------------------
+
+    def init_params(self, seed: int = 0) -> List[jnp.ndarray]:
+        key = jax.random.PRNGKey(seed)
+        params = []
+        for pname, shape in self.param_specs():
+            key, sub = jax.random.split(key)
+            if pname.endswith("_b") or pname.startswith("b"):
+                params.append(jnp.zeros(shape, jnp.float32))
+            else:
+                fan_in = int(math.prod(shape[:-1])) if len(shape) > 1 else shape[0]
+                scale = math.sqrt(2.0 / max(fan_in, 1))
+                params.append(scale * jax.random.normal(sub, shape, jnp.float32))
+        return params
+
+
+MODELS = {
+    # SynthCifar substitute for the paper's CIFAR-10/ResNet-18 run:
+    # K=10 clients, Dirichlet beta=0.5, batch 64 (S5).
+    "mlp_synthcifar": ModelSpec(
+        "mlp_synthcifar", "mlp", (768,), 10, 64, hidden=(256, 128)),
+    # FEMNIST model from the paper: 2 conv + 2 fc, 62 classes, batch 32.
+    "cnn_synthfemnist": ModelSpec(
+        "cnn_synthfemnist", "cnn", (28, 28, 1), 62, 32, c1=8, c2=16, fc=128),
+    # Tiny variant for fast integration tests / quickstart.
+    "mlp_tiny": ModelSpec("mlp_tiny", "mlp", (32,), 4, 16, hidden=(32,)),
+}
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+
+def _mlp_logits(spec: ModelSpec, params: Sequence[jnp.ndarray], x):
+    h = x.reshape(x.shape[0], -1)
+    n_layers = len(params) // 2
+    for i in range(n_layers):
+        w, b = params[2 * i], params[2 * i + 1]
+        h = h @ w + b
+        if i < n_layers - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def _max_pool_2x2(x):
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def _cnn_logits(spec: ModelSpec, params: Sequence[jnp.ndarray], x):
+    c1w, c1b, c2w, c2b, f1w, f1b, f2w, f2b = params
+    dn = lax.conv_dimension_numbers(x.shape, c1w.shape, ("NHWC", "HWIO", "NHWC"))
+    h = lax.conv_general_dilated(x, c1w, (1, 1), "SAME", dimension_numbers=dn)
+    h = jax.nn.relu(h + c1b)
+    h = _max_pool_2x2(h)
+    dn = lax.conv_dimension_numbers(h.shape, c2w.shape, ("NHWC", "HWIO", "NHWC"))
+    h = lax.conv_general_dilated(h, c2w, (1, 1), "SAME", dimension_numbers=dn)
+    h = jax.nn.relu(h + c2b)
+    h = _max_pool_2x2(h)
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(h @ f1w + f1b)
+    return h @ f2w + f2b
+
+
+def logits_fn(spec: ModelSpec, params, x):
+    if spec.kind == "mlp":
+        return _mlp_logits(spec, params, x)
+    return _cnn_logits(spec, params, x)
+
+
+# ---------------------------------------------------------------------------
+# Exported graphs
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(spec: ModelSpec, params, x, y):
+    """Mean softmax cross-entropy over a mini-batch (labels int32)."""
+    lg = logits_fn(spec, params, x)
+    logp = jax.nn.log_softmax(lg, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[:, None], axis=-1)[:, 0]
+    return jnp.mean(nll)
+
+
+def make_train_step(spec: ModelSpec):
+    """(params..., x, y) -> (grads..., loss). The client-side local step."""
+
+    def train_step(*args):
+        n = len(spec.param_specs())
+        params, x, y = list(args[:n]), args[n], args[n + 1]
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(spec, p, x, y))(params)
+        return tuple(grads) + (loss,)
+
+    return train_step
+
+
+def make_eval_step(spec: ModelSpec):
+    """(params..., x, y) -> correct-prediction count over the batch."""
+
+    def eval_step(*args):
+        n = len(spec.param_specs())
+        params, x, y = list(args[:n]), args[n], args[n + 1]
+        lg = logits_fn(spec, params, x)
+        return (jnp.sum((jnp.argmax(lg, axis=-1) == y).astype(jnp.int32)),)
+
+    return eval_step
+
+
+def make_quantize_chunk(num_levels: int, chunk: int, block: int):
+    """(g, mu, sigma, bounds, levels) -> (deq, idx) via the Pallas kernel."""
+
+    def quantize(g, mu, sigma, bounds, levels):
+        deq, idx = qk.quantize_chunk(g, mu, sigma, bounds, levels, block=block)
+        return deq, idx
+
+    return quantize
+
+
+def make_moments_chunk(chunk: int, block: int):
+    """(g,) -> per-block (sum, sumsq) partials via the Pallas kernel."""
+
+    def moments(g):
+        s, ss = qk.moments_chunk(g, block=block)
+        return s, ss
+
+    return moments
+
+
+def make_dequantize_chunk(num_levels: int, chunk: int, block: int):
+    """(idx, mu, sigma, levels) -> deq via the Pallas kernel (PS side)."""
+
+    def deq(idx, mu, sigma, levels):
+        return (qk.dequantize_chunk(idx, mu, sigma, levels, block=block),)
+
+    return deq

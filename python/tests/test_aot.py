@@ -1,0 +1,73 @@
+"""AOT export path: HLO text well-formedness + manifest integrity."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="module")
+def art_dir(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    r = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", str(out),
+         "--models", "mlp_tiny"],
+        cwd=ROOT, capture_output=True, text=True)
+    assert r.returncode == 0, r.stderr
+    return out
+
+
+def test_manifest_structure(art_dir):
+    man = json.loads((art_dir / "manifest.json").read_text())
+    assert man["version"] == 1
+    assert man["chunk"] % man["block"] == 0
+    assert set(man["bits"]) == {2, 3, 4, 6}
+    assert "train_mlp_tiny" in man["artifacts"]
+    assert "quantize_b3" in man["artifacts"]
+    assert "moments" in man["artifacts"]
+    for name, art in man["artifacts"].items():
+        assert (art_dir / art["file"]).exists(), name
+        assert art["inputs"] and art["outputs"], name
+
+
+def test_hlo_text_is_parseable_hlo(art_dir):
+    man = json.loads((art_dir / "manifest.json").read_text())
+    for name, art in man["artifacts"].items():
+        text = (art_dir / art["file"]).read_text()
+        assert text.startswith("HloModule"), name
+        assert "ENTRY" in text, name
+
+
+def test_quantize_artifact_io_shapes(art_dir):
+    man = json.loads((art_dir / "manifest.json").read_text())
+    chunk = man["chunk"]
+    for b in man["bits"]:
+        art = man["artifacts"][f"quantize_b{b}"]
+        shapes = [tuple(i["shape"]) for i in art["inputs"]]
+        assert shapes == [(chunk,), (1,), (1,), ((1 << b) - 1,), (1 << b,)]
+        out = [tuple(o["shape"]) for o in art["outputs"]]
+        assert out == [(chunk,), (chunk,)]
+        dt = [o["dtype"] for o in art["outputs"]]
+        assert dt == ["f32", "i32"]
+
+
+def test_model_manifest_param_inventory(art_dir):
+    man = json.loads((art_dir / "manifest.json").read_text())
+    m = man["models"]["mlp_tiny"]
+    total = sum(int(_prod(p["shape"])) for p in m["params"])
+    assert total == m["num_params"]
+    art = man["artifacts"][m["train"]]
+    # train inputs = params + x + y; outputs = grads + loss
+    assert len(art["inputs"]) == len(m["params"]) + 2
+    assert len(art["outputs"]) == len(m["params"]) + 1
+
+
+def _prod(xs):
+    out = 1
+    for x in xs:
+        out *= x
+    return out

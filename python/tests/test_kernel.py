@@ -1,0 +1,162 @@
+"""Layer-1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+This is the CORE correctness signal for the compression hot path: hypothesis
+sweeps chunk lengths, block sizes, bit widths, codebooks and gradient
+statistics, asserting exact index agreement and allclose dequantization.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given
+
+from compile.kernels import quantize as qk
+from compile.kernels import ref
+
+hypothesis.settings.register_profile(
+    "kernels", deadline=None, max_examples=25,
+    suppress_health_check=list(hypothesis.HealthCheck))
+hypothesis.settings.load_profile("kernels")
+
+
+def make_codebook(b, spread=2.0):
+    """A monotone Lloyd-like codebook: 2^b levels, 2^b - 1 boundaries."""
+    nl = 1 << b
+    levels = np.linspace(-spread, spread, nl).astype(np.float32)
+    bounds = ((levels[1:] + levels[:-1]) / 2).astype(np.float32)
+    return jnp.asarray(bounds), jnp.asarray(levels)
+
+
+def run_both(g, mu, sigma, bounds, levels, block):
+    deq_k, idx_k = qk.quantize_chunk(
+        jnp.asarray(g), jnp.asarray([mu], jnp.float32),
+        jnp.asarray([sigma], jnp.float32), bounds, levels, block=block)
+    deq_r, idx_r = ref.quantize_ref(
+        jnp.asarray(g), jnp.float32(mu), jnp.float32(sigma), bounds, levels)
+    return (np.asarray(deq_k), np.asarray(idx_k),
+            np.asarray(deq_r), np.asarray(idx_r))
+
+
+class TestQuantizeKernel:
+    @given(
+        nblk=st.integers(1, 4),
+        block=st.sampled_from([128, 256, 1024]),
+        b=st.sampled_from([1, 2, 3, 4, 6]),
+        mu=st.floats(-3, 3),
+        sigma=st.floats(0.05, 5.0),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, nblk, block, b, mu, sigma, seed):
+        rng = np.random.default_rng(seed)
+        d = nblk * block
+        g = (mu + sigma * rng.standard_normal(d)).astype(np.float32)
+        bounds, levels = make_codebook(b)
+        deq_k, idx_k, deq_r, idx_r = run_both(g, mu, sigma, bounds, levels, block)
+        np.testing.assert_array_equal(idx_k, idx_r)
+        np.testing.assert_allclose(deq_k, deq_r, rtol=1e-6, atol=1e-6)
+
+    @given(b=st.sampled_from([2, 3, 6]), seed=st.integers(0, 1000))
+    def test_indices_in_range(self, b, seed):
+        rng = np.random.default_rng(seed)
+        g = rng.standard_normal(512).astype(np.float32) * 10  # heavy tails
+        bounds, levels = make_codebook(b)
+        _, idx, _, _ = run_both(g, 0.0, 1.0, bounds, levels, 256)
+        assert idx.min() >= 0 and idx.max() < (1 << b)
+
+    def test_exact_boundary_goes_to_lower_cell(self):
+        # Paper S3.2: Q(z) = s_l if u_l < z <= u_{l+1} — a value exactly on
+        # a boundary belongs to the lower cell.
+        bounds, levels = make_codebook(3)
+        nb = np.asarray(bounds).shape[0]
+        g = np.pad(np.asarray(bounds), (0, 128 - nb)).astype(np.float32)
+        _, idx, _, _ = run_both(g, 0.0, 1.0, bounds, levels, 128)
+        np.testing.assert_array_equal(idx[:nb], np.arange(nb))
+
+    def test_degenerate_sigma_is_clamped(self):
+        bounds, levels = make_codebook(3)
+        g = np.full(128, 0.25, np.float32)
+        deq_k, idx_k, deq_r, idx_r = run_both(g, 0.25, 0.0, bounds, levels, 128)
+        np.testing.assert_array_equal(idx_k, idx_r)
+        assert np.isfinite(deq_k).all()
+
+    def test_monotonicity(self):
+        # Larger inputs never get a smaller symbol.
+        bounds, levels = make_codebook(4)
+        g = np.sort(np.random.default_rng(0).standard_normal(256)).astype(np.float32)
+        _, idx, _, _ = run_both(g, 0.0, 1.0, bounds, levels, 256)
+        assert (np.diff(idx) >= 0).all()
+
+    def test_reconstruction_error_bounded_by_cell_width(self):
+        bounds, levels = make_codebook(6)
+        rng = np.random.default_rng(1)
+        g = rng.standard_normal(1024).astype(np.float32)
+        deq, idx, _, _ = run_both(g, 0.0, 1.0, bounds, levels, 256)
+        inner = (idx > 0) & (idx < 63)
+        width = np.diff(np.asarray(levels)).max()
+        assert np.abs(deq[inner] - g[inner]).max() <= width
+
+    def test_bad_block_raises(self):
+        bounds, levels = make_codebook(2)
+        with pytest.raises(ValueError):
+            qk.quantize_chunk(jnp.zeros(100), jnp.zeros(1), jnp.ones(1),
+                              bounds, levels, block=64)
+
+
+class TestMomentsKernel:
+    @given(
+        nblk=st.integers(1, 6),
+        block=st.sampled_from([64, 256, 1024]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, nblk, block, seed):
+        rng = np.random.default_rng(seed)
+        g = rng.standard_normal(nblk * block).astype(np.float32)
+        s_k, ss_k = qk.moments_chunk(jnp.asarray(g), block=block)
+        s_r, ss_r = ref.moments_ref(jnp.asarray(g), block)
+        np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r), rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(ss_k), np.asarray(ss_r), rtol=1e-5)
+
+    def test_combined_mean_std(self):
+        # Host-side combine of the partials reproduces global mu/sigma.
+        rng = np.random.default_rng(7)
+        g = (3.0 + 0.5 * rng.standard_normal(4096)).astype(np.float32)
+        s, ss = qk.moments_chunk(jnp.asarray(g), block=512)
+        n = g.size
+        mu = float(np.sum(np.asarray(s))) / n
+        var = float(np.sum(np.asarray(ss))) / n - mu * mu
+        np.testing.assert_allclose(mu, g.mean(), rtol=1e-5)
+        np.testing.assert_allclose(np.sqrt(var), g.std(), rtol=1e-4)
+
+
+class TestDequantizeKernel:
+    @given(
+        b=st.sampled_from([2, 3, 4, 6]),
+        mu=st.floats(-2, 2),
+        sigma=st.floats(0.1, 3.0),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, b, mu, sigma, seed):
+        rng = np.random.default_rng(seed)
+        nl = 1 << b
+        idx = rng.integers(0, nl, 512).astype(np.int32)
+        _, levels = make_codebook(b)
+        out_k = qk.dequantize_chunk(
+            jnp.asarray(idx), jnp.asarray([mu], jnp.float32),
+            jnp.asarray([sigma], jnp.float32), levels, block=256)
+        out_r = ref.dequantize_ref(
+            jnp.asarray(idx), jnp.float32(mu), jnp.float32(sigma), levels)
+        np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_roundtrip_quantize_dequantize(self):
+        bounds, levels = make_codebook(3)
+        rng = np.random.default_rng(3)
+        g = rng.standard_normal(1024).astype(np.float32)
+        mu, sigma = jnp.asarray([0.0]), jnp.asarray([1.0])
+        deq, idx = qk.quantize_chunk(jnp.asarray(g), mu, sigma, bounds,
+                                     levels, block=256)
+        deq2 = qk.dequantize_chunk(idx, mu, sigma, levels, block=256)
+        np.testing.assert_allclose(np.asarray(deq), np.asarray(deq2),
+                                   rtol=1e-6, atol=1e-6)

@@ -1,0 +1,93 @@
+"""Layer-2 correctness: model graphs (shapes, gradients, learnability)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+def batch_for(spec, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((spec.batch,) + spec.input_shape).astype(np.float32)
+    y = rng.integers(0, spec.num_classes, spec.batch).astype(np.int32)
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+@pytest.mark.parametrize("name", list(M.MODELS))
+class TestShapes:
+    def test_param_specs_consistent(self, name):
+        spec = M.MODELS[name]
+        params = spec.init_params(0)
+        assert len(params) == len(spec.param_specs())
+        for p, (_, s) in zip(params, spec.param_specs()):
+            assert p.shape == tuple(s)
+        assert spec.num_params() == sum(int(np.prod(p.shape)) for p in params)
+
+    def test_train_step_shapes(self, name):
+        spec = M.MODELS[name]
+        params = spec.init_params(0)
+        x, y = batch_for(spec)
+        out = M.make_train_step(spec)(*params, x, y)
+        assert len(out) == len(params) + 1
+        for g, p in zip(out[:-1], params):
+            assert g.shape == p.shape
+        assert out[-1].shape == ()
+        assert np.isfinite(float(out[-1]))
+
+    def test_eval_step_counts(self, name):
+        spec = M.MODELS[name]
+        params = spec.init_params(0)
+        x, y = batch_for(spec)
+        (correct,) = M.make_eval_step(spec)(*params, x, y)
+        assert 0 <= int(correct) <= spec.batch
+
+
+class TestGradients:
+    def test_mlp_grad_matches_finite_difference(self):
+        spec = M.MODELS["mlp_tiny"]
+        params = spec.init_params(1)
+        x, y = batch_for(spec, 1)
+        out = M.make_train_step(spec)(*params, x, y)
+        grads = out[:-1]
+        # perturb a handful of coordinates of w0 and compare fd vs autodiff
+        eps = 1e-3
+        rng = np.random.default_rng(0)
+        w0 = np.asarray(params[0])
+        for _ in range(5):
+            i, j = rng.integers(0, w0.shape[0]), rng.integers(0, w0.shape[1])
+            pp = [p for p in params]
+            bump = np.zeros_like(w0)
+            bump[i, j] = eps
+            pp[0] = jnp.asarray(w0 + bump)
+            lp = float(M.loss_fn(spec, pp, x, y))
+            pp[0] = jnp.asarray(w0 - bump)
+            lm = float(M.loss_fn(spec, pp, x, y))
+            fd = (lp - lm) / (2 * eps)
+            ad = float(np.asarray(grads[0])[i, j])
+            np.testing.assert_allclose(fd, ad, rtol=5e-2, atol=5e-4)
+
+    def test_loss_decreases_under_sgd(self):
+        spec = M.MODELS["mlp_tiny"]
+        params = spec.init_params(2)
+        x, y = batch_for(spec, 2)
+        step = jax.jit(M.make_train_step(spec))
+        losses = []
+        for _ in range(30):
+            out = step(*params, x, y)
+            grads, loss = out[:-1], float(out[-1])
+            losses.append(loss)
+            params = [p - 0.1 * g for p, g in zip(params, grads)]
+        assert losses[-1] < losses[0] * 0.7
+
+    def test_gradients_roughly_gaussian(self):
+        # Premise of S3.1 (refs [17,18]): large-model gradient coordinates
+        # are approximately Gaussian. Sanity-check skew/kurtosis are mild.
+        spec = M.MODELS["mlp_synthcifar"]
+        params = spec.init_params(3)
+        x, y = batch_for(spec, 3)
+        out = M.make_train_step(spec)(*params, x, y)
+        g = np.concatenate([np.asarray(t).ravel() for t in out[:-1]])
+        z = (g - g.mean()) / (g.std() + 1e-12)
+        assert abs(float(np.mean(z ** 3))) < 2.0

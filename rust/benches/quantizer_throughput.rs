@@ -1,0 +1,93 @@
+//! L3 hot-path micro-bench: quantizer apply (normalize→bucketize) and
+//! dequantize-accumulate throughput, plus design-time cost of every
+//! scheme. The apply path is the per-coordinate work Fig. 1 multiplies
+//! by d·K·T — §Perf target ≥ 500 Mcoord/s/core for b ≤ 4.
+//!
+//!     cargo bench --bench quantizer_throughput
+
+use rcfed::csv_row;
+use rcfed::quant::lloyd::LloydMax;
+use rcfed::quant::nqfl::nqfl_codebook;
+use rcfed::quant::qsgd::Qsgd;
+use rcfed::quant::rcq::{LengthModel, RateConstrainedQuantizer};
+use rcfed::stats::gaussian::StdGaussian;
+use rcfed::stats::moments::mean_std;
+use rcfed::util::csv::CsvWriter;
+use rcfed::util::rng::Rng;
+use rcfed::util::timer::{bench, report, Timer};
+
+fn main() {
+    let n = 4_000_000usize;
+    let mut rng = Rng::new(3);
+    let mut g = vec![0f32; n];
+    rng.fill_normal_f32(&mut g, 0.01, 0.002);
+    let (mu, sigma) = mean_std(&g);
+    let mut w = CsvWriter::create(
+        "results/quantizer_throughput.csv",
+        &["op", "bits", "mcoord_per_s"],
+    )
+    .unwrap();
+
+    println!("=== quantizer hot-path throughput (d = {n}) ===\n");
+    for bits in [2u32, 3, 4, 6] {
+        let (cb, _) = LloydMax::default().design(&StdGaussian, bits).unwrap();
+        let mut sym = Vec::with_capacity(n);
+        let stats = bench(1, 5, || {
+            cb.quantize_normalized(&g, mu, sigma, &mut sym);
+            std::hint::black_box(&sym);
+        });
+        let tput = n as f64 / stats.median() / 1e6;
+        report(&format!("quantize_normalized_b{bits}"), &stats, n as f64);
+        csv_row!(w, "quantize", bits as usize, tput).unwrap();
+
+        let mut acc = vec![0f32; n];
+        let stats = bench(1, 5, || {
+            cb.dequantize_accumulate(&sym, mu, sigma, &mut acc);
+            std::hint::black_box(&acc);
+        });
+        let tput = n as f64 / stats.median() / 1e6;
+        report(&format!("dequantize_accumulate_b{bits}"), &stats, n as f64);
+        csv_row!(w, "dequantize", bits as usize, tput).unwrap();
+    }
+
+    // QSGD stochastic encode
+    let q = Qsgd::new(3);
+    let mut qrng = Rng::new(9);
+    let stats = bench(1, 3, || {
+        std::hint::black_box(q.encode(&g, &mut qrng));
+    });
+    report("qsgd_encode_b3", &stats, n as f64);
+    csv_row!(w, "qsgd_encode", 3usize, n as f64 / stats.median() / 1e6)
+        .unwrap();
+
+    // moments (two-pass) — the normalization statistics
+    let stats = bench(1, 5, || {
+        std::hint::black_box(mean_std(&g));
+    });
+    report("mean_std", &stats, n as f64);
+    csv_row!(w, "mean_std", 0usize, n as f64 / stats.median() / 1e6).unwrap();
+
+    // design-time cost (done once per training run — §3.1)
+    println!("\ndesign-time cost (once per run):");
+    for bits in [3u32, 6] {
+        let t = Timer::start();
+        let rc = RateConstrainedQuantizer {
+            lambda: 0.05,
+            length_model: LengthModel::Huffman,
+            ..Default::default()
+        };
+        let (_, rep) = rc.design(&StdGaussian, bits).unwrap();
+        println!(
+            "  rcfed  b={bits}: {:>8.2} ms ({} iters)",
+            t.secs() * 1e3, rep.iterations
+        );
+        let t = Timer::start();
+        LloydMax::default().design(&StdGaussian, bits).unwrap();
+        println!("  lloyd  b={bits}: {:>8.2} ms", t.secs() * 1e3);
+        let t = Timer::start();
+        nqfl_codebook(bits).unwrap();
+        println!("  nqfl   b={bits}: {:>8.2} ms", t.secs() * 1e3);
+    }
+    w.flush().unwrap();
+    println!("\nwrote results/quantizer_throughput.csv");
+}

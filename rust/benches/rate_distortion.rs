@@ -1,0 +1,108 @@
+//! E3 — the rate–distortion claims of §3.2: the λ trade-off curve, the
+//! baseline operating points, the boundary-shift mechanism and the
+//! high-rate law (20). Pure quantizer-design bench (no training).
+//!
+//!     cargo bench --bench rate_distortion
+
+use rcfed::coding::huffman::HuffmanCode;
+use rcfed::csv_row;
+use rcfed::quant::evaluate;
+use rcfed::quant::lloyd::{midpoints, LloydMax};
+use rcfed::quant::nqfl::nqfl_codebook;
+use rcfed::quant::rcq::{LengthModel, RateConstrainedQuantizer};
+use rcfed::quant::uniform::uniform_codebook;
+use rcfed::stats::gaussian::{differential_entropy_bits, StdGaussian};
+use rcfed::util::csv::CsvWriter;
+
+fn main() {
+    let mut w = CsvWriter::create(
+        "results/rate_distortion.csv",
+        &["series", "bits", "lambda", "rate_bits", "mse"],
+    )
+    .unwrap();
+
+    println!("=== E3: rate–distortion curves (N(0,1) source) ===\n");
+    for b in [2u32, 3, 4, 6] {
+        println!("-- b={b} --");
+        println!("{:<12} {:>8} {:>10} {:>10}", "series", "λ", "E[huff]", "MSE");
+        for lam in [0.0, 0.01, 0.02, 0.04, 0.06, 0.08, 0.1, 0.15, 0.2, 0.3] {
+            let rc = RateConstrainedQuantizer {
+                lambda: lam,
+                length_model: LengthModel::Huffman,
+                ..Default::default()
+            };
+            let (_, rep) = rc.design(&StdGaussian, b).unwrap();
+            println!(
+                "{:<12} {lam:>8.3} {:>10.4} {:>10.6}",
+                "rcfed", rep.huffman_rate, rep.mse
+            );
+            csv_row!(w, "rcfed", b as usize, lam, rep.huffman_rate, rep.mse)
+                .unwrap();
+        }
+        let (_, lrep) = LloydMax::default().design(&StdGaussian, b).unwrap();
+        println!(
+            "{:<12} {:>8} {:>10.4} {:>10.6}",
+            "lloyd", "-", lrep.huffman_rate, lrep.mse
+        );
+        csv_row!(w, "lloyd", b as usize, 0.0, lrep.huffman_rate, lrep.mse)
+            .unwrap();
+        for (name, cb) in [
+            ("nqfl", nqfl_codebook(b).unwrap()),
+            ("uniform", uniform_codebook(b, 4.0).unwrap()),
+        ] {
+            let (mse, probs) = evaluate(&StdGaussian, &cb);
+            let rate = HuffmanCode::from_probs(&probs)
+                .unwrap()
+                .expected_length(&probs);
+            println!("{name:<12} {:>8} {rate:>10.4} {mse:>10.6}", "-");
+            csv_row!(w, name, b as usize, 0.0, rate, mse).unwrap();
+        }
+        println!();
+    }
+
+    // boundary-shift mechanism at b=3
+    let rc = RateConstrainedQuantizer {
+        lambda: 0.08,
+        length_model: LengthModel::Huffman,
+        ..Default::default()
+    };
+    let (cb, rep) = rc.design(&StdGaussian, 3).unwrap();
+    let code = HuffmanCode::from_probs(&rep.probs).unwrap();
+    let levels: Vec<f64> = cb.levels.iter().map(|&x| x as f64).collect();
+    let mids = midpoints(&levels);
+    println!("boundary shifts (b=3, λ=0.08): u_l − midpoint, Δℓ:");
+    let mut agree = 0;
+    let mut informative = 0;
+    for l in 1..levels.len() {
+        let shift = cb.bounds[l - 1] as f64 - mids[l - 1];
+        let dl = code.lengths()[l] as i64 - code.lengths()[l - 1] as i64;
+        println!("  l={l}: shift={shift:+.4} Δℓ={dl:+}");
+        if dl != 0 && shift.abs() > 1e-9 {
+            informative += 1;
+            if (shift > 0.0) == (dl > 0) {
+                agree += 1;
+            }
+        }
+    }
+    println!(
+        "shift direction matches longer-codeword rule on {agree}/{informative} \
+         informative boundaries (paper: all)\n"
+    );
+
+    // high-rate law (eq. 20)
+    println!("high-rate law: MSE / [(1/12)·2^(2h)·2^(−2R)]");
+    let h = differential_entropy_bits(1.0);
+    for b in [3u32, 4, 6] {
+        let rc = RateConstrainedQuantizer {
+            lambda: 0.005,
+            length_model: LengthModel::Ideal,
+            ..Default::default()
+        };
+        let (_, rep) = rc.design(&StdGaussian, b).unwrap();
+        let pred = (1.0 / 12.0) * 2f64.powf(2.0 * h)
+            * 2f64.powf(-2.0 * rep.entropy_bits);
+        println!("  b={b}: ratio={:.3} (→1 as b grows)", rep.mse / pred);
+    }
+    w.flush().unwrap();
+    println!("\nwrote results/rate_distortion.csv");
+}

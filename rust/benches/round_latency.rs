@@ -1,0 +1,141 @@
+//! End-to-end round-latency breakdown: where the wallclock of one
+//! federated round goes (gradient compute vs moments vs quantize vs
+//! entropy-encode vs decode+aggregate). §Perf target: the compression
+//! side (everything but the gradient) ≤ 10% of gradient compute.
+//!
+//! Runs both backends when artifacts are available: native MLP and the
+//! three-layer PJRT path (whose quantize step is the Pallas kernel).
+//!
+//!     cargo bench --bench round_latency
+
+use std::rc::Rc;
+
+use rcfed::coding::huffman::HuffmanCode;
+use rcfed::csv_row;
+use rcfed::data::{DatasetConfig, FederatedDataset};
+use rcfed::model::native::NativeMlp;
+use rcfed::model::pjrt::PjrtModel;
+use rcfed::model::Backend;
+use rcfed::quant::lloyd::LloydMax;
+use rcfed::stats::gaussian::StdGaussian;
+use rcfed::stats::moments::mean_std;
+use rcfed::util::csv::CsvWriter;
+use rcfed::util::rng::Rng;
+use rcfed::util::timer::Timer;
+
+struct Breakdown {
+    grad: f64,
+    moments: f64,
+    quantize: f64,
+    encode: f64,
+    decode: f64,
+    aggregate: f64,
+}
+
+fn profile_backend<B: Backend + ?Sized>(
+    backend: &B,
+    ds: &FederatedDataset,
+    iters: usize,
+) -> Breakdown {
+    let (cb, rep) = LloydMax::default().design(&StdGaussian, 3).unwrap();
+    let code = HuffmanCode::from_probs(&rep.probs).unwrap();
+    let params = backend.init_params(1);
+    let d = backend.num_params();
+    let mut rng = Rng::new(5);
+    let (mut xs, mut ys) = (Vec::new(), Vec::new());
+    let mut grad = vec![0f32; d];
+    let mut sym = Vec::with_capacity(d);
+    let mut acc = vec![0f32; d];
+    let mut bd = Breakdown {
+        grad: 0.0,
+        moments: 0.0,
+        quantize: 0.0,
+        encode: 0.0,
+        decode: 0.0,
+        aggregate: 0.0,
+    };
+    for _ in 0..iters {
+        ds.shards[0].sample_batch(
+            &mut rng, backend.batch_size(), &mut xs, &mut ys);
+        let t = Timer::start();
+        backend.grad(&params, &xs, &ys, &mut grad).unwrap();
+        bd.grad += t.secs();
+
+        let t = Timer::start();
+        let (mu, sigma) = mean_std(&grad);
+        bd.moments += t.secs();
+
+        let t = Timer::start();
+        cb.quantize_normalized(&grad, mu, sigma, &mut sym);
+        bd.quantize += t.secs();
+
+        let t = Timer::start();
+        let payload = code.encode(&sym).unwrap();
+        bd.encode += t.secs();
+
+        let t = Timer::start();
+        let back = code.decode(&payload, d).unwrap();
+        bd.decode += t.secs();
+
+        let t = Timer::start();
+        cb.dequantize_accumulate(&back, mu, sigma, &mut acc);
+        bd.aggregate += t.secs();
+    }
+    bd
+}
+
+fn show(label: &str, bd: &Breakdown, iters: usize, d: usize,
+        w: &mut CsvWriter) {
+    let n = iters as f64;
+    let comp = bd.moments + bd.quantize + bd.encode;
+    let ps = bd.decode + bd.aggregate;
+    println!("-- {label} (d={d}) --");
+    println!("  gradient compute : {:>9.3} ms", bd.grad / n * 1e3);
+    println!("  moments (μ,σ)    : {:>9.3} ms", bd.moments / n * 1e3);
+    println!("  quantize         : {:>9.3} ms", bd.quantize / n * 1e3);
+    println!("  huffman encode   : {:>9.3} ms", bd.encode / n * 1e3);
+    println!("  huffman decode   : {:>9.3} ms", bd.decode / n * 1e3);
+    println!("  dequant+aggregate: {:>9.3} ms", bd.aggregate / n * 1e3);
+    println!(
+        "  client compression overhead: {:.1}% of gradient compute",
+        100.0 * comp / bd.grad.max(1e-12)
+    );
+    println!(
+        "  PS-side per client          : {:.3} ms\n",
+        ps / n * 1e3
+    );
+    for (op, v) in [
+        ("grad", bd.grad), ("moments", bd.moments),
+        ("quantize", bd.quantize), ("encode", bd.encode),
+        ("decode", bd.decode), ("aggregate", bd.aggregate),
+    ] {
+        csv_row!(w, label, op, v / n * 1e3).unwrap();
+    }
+}
+
+fn main() {
+    rcfed::util::log::init_from_env();
+    let mut w = CsvWriter::create(
+        "results/round_latency.csv",
+        &["backend", "op", "ms_per_round"],
+    )
+    .unwrap();
+    println!("=== round-latency breakdown (per client-round) ===\n");
+
+    let ds = FederatedDataset::build(&DatasetConfig::synth_cifar());
+    let native = NativeMlp::synth_cifar();
+    let bd = profile_backend(&native, &ds, 10);
+    show("native_mlp_synthcifar", &bd, 10, native.num_params(), &mut w);
+
+    match rcfed::runtime::Engine::from_default_dir() {
+        Ok(engine) => {
+            let engine = Rc::new(engine);
+            let pjrt = PjrtModel::new(engine, "mlp_synthcifar").unwrap();
+            let bd = profile_backend(&pjrt, &ds, 10);
+            show("pjrt_mlp_synthcifar", &bd, 10, pjrt.num_params(), &mut w);
+        }
+        Err(e) => println!("(pjrt backend skipped: {e})"),
+    }
+    w.flush().unwrap();
+    println!("wrote results/round_latency.csv");
+}

@@ -1,0 +1,316 @@
+//! Static arithmetic (range) coding.
+//!
+//! The paper's rate analysis assumes "source coding schemes whose
+//! compression rates in the large limit converge to Shannon's bound"
+//! (§2). Huffman pays up to 1 bit/symbol over `H(Q(Z))`; this LZMA-style
+//! binary-carry range coder gets within a few hundredths of a bit and
+//! serves as the Shannon-bound reference in bench E6 and as an optional
+//! wire coder.
+//!
+//! The model is a *static* frequency table shared by encoder and decoder
+//! (in RC-FED the PS knows the design-time cell probabilities, so no
+//! table needs to travel with each message).
+
+use crate::coding::EntropyCoder;
+use crate::util::{Error, Result};
+
+const TOP: u32 = 1 << 24;
+/// Frequency-table precision; total must stay < 2^16 so `range / total`
+/// never loses the invariant `range >= total` during renormalization.
+const FREQ_BITS: u32 = 16;
+
+/// Static-model range coder over a ≤256-symbol alphabet.
+#[derive(Clone, Debug)]
+pub struct ArithmeticCoder {
+    /// scaled frequency per symbol (non-zero), summing to <= 1<<FREQ_BITS
+    freq: Vec<u32>,
+    /// cumulative frequencies, len = nsym + 1
+    cum: Vec<u32>,
+}
+
+impl ArithmeticCoder {
+    /// Build from a probability vector; every symbol is floored to one
+    /// count so any message is encodable.
+    pub fn from_probs(probs: &[f64]) -> Result<ArithmeticCoder> {
+        if probs.is_empty() || probs.len() > 256 {
+            return Err(Error::Coding(format!(
+                "alphabet size {} unsupported", probs.len())));
+        }
+        let total_budget = 1u32 << FREQ_BITS;
+        let psum: f64 = probs.iter().map(|&p| p.max(0.0)).sum();
+        let mut freq: Vec<u32> = probs
+            .iter()
+            .map(|&p| {
+                let q = if psum > 0.0 { p.max(0.0) / psum } else { 0.0 };
+                ((q * (total_budget - probs.len() as u32) as f64) as u32) + 1
+            })
+            .collect();
+        // clamp rounding overshoot
+        let mut total: u32 = freq.iter().sum();
+        while total > total_budget {
+            let i = (0..freq.len()).max_by_key(|&i| freq[i]).unwrap();
+            freq[i] -= 1;
+            total -= 1;
+        }
+        let mut cum = Vec::with_capacity(freq.len() + 1);
+        let mut acc = 0u32;
+        cum.push(0);
+        for &f in &freq {
+            acc += f;
+            cum.push(acc);
+        }
+        Ok(ArithmeticCoder { freq, cum })
+    }
+
+    pub fn from_freqs(freqs: &[u64]) -> Result<ArithmeticCoder> {
+        let total: u64 = freqs.iter().sum::<u64>().max(1);
+        let probs: Vec<f64> =
+            freqs.iter().map(|&f| f as f64 / total as f64).collect();
+        Self::from_probs(&probs)
+    }
+
+    fn total(&self) -> u32 {
+        *self.cum.last().unwrap()
+    }
+
+    /// Ideal coded size of `symbols` under the static model, in bits.
+    pub fn ideal_bits(&self, symbols: &[u8]) -> f64 {
+        let total = self.total() as f64;
+        symbols
+            .iter()
+            .map(|&s| -(self.freq[s as usize] as f64 / total).log2())
+            .sum()
+    }
+}
+
+impl EntropyCoder for ArithmeticCoder {
+    fn encode(&self, symbols: &[u8]) -> Result<Vec<u8>> {
+        let mut enc = RangeEncoder::new();
+        let total = self.total();
+        for &s in symbols {
+            let s = s as usize;
+            if s >= self.freq.len() {
+                return Err(Error::Coding(format!("symbol {s} out of range")));
+            }
+            enc.encode(self.cum[s], self.freq[s], total);
+        }
+        Ok(enc.finish())
+    }
+
+    fn decode(&self, payload: &[u8], n: usize) -> Result<Vec<u8>> {
+        let mut dec = RangeDecoder::new(payload);
+        let total = self.total();
+        let mut out = vec![0u8; n];
+        for slot in out.iter_mut() {
+            let v = dec.decode_freq(total);
+            // the symbol s with cum[s] <= v < cum[s+1]
+            let s = self.cum.partition_point(|&c| c <= v) - 1;
+            let s = s.min(self.freq.len() - 1);
+            dec.consume(self.cum[s], self.freq[s]);
+            *slot = s as u8;
+        }
+        Ok(out)
+    }
+
+    fn name(&self) -> &'static str {
+        "arithmetic"
+    }
+}
+
+/// LZMA-style byte-oriented range encoder with carry propagation.
+struct RangeEncoder {
+    low: u64,
+    range: u32,
+    cache: u8,
+    cache_size: u64,
+    out: Vec<u8>,
+}
+
+impl RangeEncoder {
+    fn new() -> Self {
+        RangeEncoder {
+            low: 0,
+            range: u32::MAX,
+            cache: 0,
+            cache_size: 1,
+            out: Vec::new(),
+        }
+    }
+
+    #[inline]
+    fn shift_low(&mut self) {
+        if (self.low as u32) < 0xFF00_0000 || (self.low >> 32) != 0 {
+            let carry = (self.low >> 32) as u8;
+            let mut temp = self.cache;
+            loop {
+                self.out.push(temp.wrapping_add(carry));
+                temp = 0xFF;
+                self.cache_size -= 1;
+                if self.cache_size == 0 {
+                    break;
+                }
+            }
+            self.cache = (self.low >> 24) as u8;
+        }
+        self.cache_size += 1;
+        // C++ LZMA: `Low = (UInt32)Low << 8` — the shift happens in 32
+        // bits, dropping the byte that just moved into `cache`.
+        self.low = ((self.low as u32) << 8) as u64;
+    }
+
+    #[inline]
+    fn encode(&mut self, cum_lo: u32, freq: u32, total: u32) {
+        let r = self.range / total;
+        self.low += (r as u64) * (cum_lo as u64);
+        self.range = r * freq;
+        while self.range < TOP {
+            self.range <<= 8;
+            self.shift_low();
+        }
+    }
+
+    fn finish(mut self) -> Vec<u8> {
+        for _ in 0..5 {
+            self.shift_low();
+        }
+        self.out
+    }
+}
+
+struct RangeDecoder<'a> {
+    code: u32,
+    range: u32,
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> RangeDecoder<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        let mut d = RangeDecoder { code: 0, range: u32::MAX, buf, pos: 1 };
+        for _ in 0..4 {
+            d.code = (d.code << 8) | d.next_byte() as u32;
+        }
+        d
+    }
+
+    #[inline]
+    fn next_byte(&mut self) -> u8 {
+        let b = self.buf.get(self.pos).copied().unwrap_or(0);
+        self.pos += 1;
+        b
+    }
+
+    #[inline]
+    fn decode_freq(&mut self, total: u32) -> u32 {
+        self.range /= total;
+        (self.code / self.range).min(total - 1)
+    }
+
+    #[inline]
+    fn consume(&mut self, cum_lo: u32, freq: u32) {
+        self.code -= cum_lo * self.range;
+        self.range *= freq;
+        while self.range < TOP {
+            self.code = (self.code << 8) | self.next_byte() as u32;
+            self.range <<= 8;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::entropy::entropy_bits;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_uniform() {
+        let coder = ArithmeticCoder::from_probs(&[0.25; 4]).unwrap();
+        let mut rng = Rng::new(5);
+        let msg: Vec<u8> = (0..10_000).map(|_| rng.below(4) as u8).collect();
+        let payload = EntropyCoder::encode(&coder, &msg).unwrap();
+        assert_eq!(coder.decode(&payload, msg.len()).unwrap(), msg);
+        // ~2 bits/symbol
+        let bps = payload.len() as f64 * 8.0 / msg.len() as f64;
+        assert!((bps - 2.0).abs() < 0.05, "bps={bps}");
+    }
+
+    #[test]
+    fn roundtrip_skewed_various_alphabets() {
+        let mut rng = Rng::new(6);
+        for &nsym in &[2usize, 3, 8, 64, 200] {
+            let probs: Vec<f64> = (0..nsym)
+                .map(|i| 1.0 / (1.0 + i as f64).powi(2))
+                .collect();
+            let coder = ArithmeticCoder::from_probs(&probs).unwrap();
+            let msg: Vec<u8> = (0..4000)
+                .map(|_| rng.categorical(&probs) as u8)
+                .collect();
+            let payload = EntropyCoder::encode(&coder, &msg).unwrap();
+            assert_eq!(coder.decode(&payload, msg.len()).unwrap(), msg,
+                       "nsym={nsym}");
+        }
+    }
+
+    #[test]
+    fn approaches_shannon_bound() {
+        // the property the paper's rate model assumes of entropy coding
+        let probs = [0.6, 0.25, 0.1, 0.05];
+        let coder = ArithmeticCoder::from_probs(&probs).unwrap();
+        let mut rng = Rng::new(7);
+        let msg: Vec<u8> = (0..50_000)
+            .map(|_| rng.categorical(&probs) as u8)
+            .collect();
+        let payload = EntropyCoder::encode(&coder, &msg).unwrap();
+        let bps = payload.len() as f64 * 8.0 / msg.len() as f64;
+        let h = entropy_bits(&probs);
+        assert!(bps < h + 0.03, "bps={bps} H={h}");
+        assert!(bps > h - 0.03, "bps={bps} H={h}");
+    }
+
+    #[test]
+    fn beats_huffman_on_skewed_binary() {
+        // H(0.95) ≈ 0.286 bits; Huffman is stuck at 1 bit/symbol
+        let probs = [0.95, 0.05];
+        let coder = ArithmeticCoder::from_probs(&probs).unwrap();
+        let mut rng = Rng::new(8);
+        let msg: Vec<u8> = (0..20_000)
+            .map(|_| rng.categorical(&probs) as u8)
+            .collect();
+        let payload = EntropyCoder::encode(&coder, &msg).unwrap();
+        let bps = payload.len() as f64 * 8.0 / msg.len() as f64;
+        assert!(bps < 0.35, "bps={bps}");
+        assert_eq!(coder.decode(&payload, msg.len()).unwrap(), msg);
+    }
+
+    #[test]
+    fn empty_message() {
+        let coder = ArithmeticCoder::from_probs(&[0.5, 0.5]).unwrap();
+        let payload = EntropyCoder::encode(&coder, &[]).unwrap();
+        assert_eq!(coder.decode(&payload, 0).unwrap(), Vec::<u8>::new());
+    }
+
+    #[test]
+    fn symbols_never_seen_in_model_still_roundtrip() {
+        // floor guarantees encodability of zero-prob symbols
+        let coder = ArithmeticCoder::from_probs(&[1.0, 0.0, 0.0]).unwrap();
+        let msg = vec![0u8, 1, 2, 0, 2];
+        let payload = EntropyCoder::encode(&coder, &msg).unwrap();
+        assert_eq!(coder.decode(&payload, msg.len()).unwrap(), msg);
+    }
+
+    #[test]
+    fn ideal_bits_tracks_actual_size() {
+        let probs = [0.4, 0.3, 0.2, 0.1];
+        let coder = ArithmeticCoder::from_probs(&probs).unwrap();
+        let mut rng = Rng::new(9);
+        let msg: Vec<u8> = (0..30_000)
+            .map(|_| rng.categorical(&probs) as u8)
+            .collect();
+        let payload = EntropyCoder::encode(&coder, &msg).unwrap();
+        let actual = payload.len() as f64 * 8.0;
+        let ideal = coder.ideal_bits(&msg);
+        assert!((actual - ideal).abs() < 0.01 * ideal + 64.0,
+                "actual={actual} ideal={ideal}");
+    }
+}

@@ -1,0 +1,204 @@
+//! Bit-level I/O, LSB-first within each byte.
+//!
+//! Shared by the Huffman and LZW coders; the writer is on the uplink hot
+//! path, so both push paths are branch-light and operate on a `u64`
+//! accumulator.
+
+/// Append-only bit sink.
+#[derive(Default, Debug)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    /// bit accumulator, LSB-first
+    acc: u64,
+    /// bits currently valid in `acc` (< 8 after flush_acc)
+    nbits: u32,
+    total_bits: u64,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(bytes: usize) -> Self {
+        BitWriter { buf: Vec::with_capacity(bytes), ..Default::default() }
+    }
+
+    /// Push the low `n` bits of `bits` (n <= 57 to keep the accumulator
+    /// from overflowing before the flush).
+    #[inline]
+    pub fn push(&mut self, bits: u64, n: u32) {
+        debug_assert!(n <= 57);
+        debug_assert!(n == 64 || bits < (1u64 << n));
+        if n > 32 {
+            // split so `bits << nbits` (nbits < 32) cannot overflow u64
+            self.push(bits & 0xFFFF_FFFF, 32);
+            self.push(bits >> 32, n - 32);
+            return;
+        }
+        self.acc |= bits << self.nbits;
+        self.nbits += n;
+        self.total_bits += n as u64;
+        // flush in 32-bit units (§Perf: one extend_from_slice instead of
+        // up to 7 per-byte pushes); invariant: nbits < 32 between calls
+        while self.nbits >= 32 {
+            self.buf.extend_from_slice(&(self.acc as u32).to_le_bytes());
+            self.acc >>= 32;
+            self.nbits -= 32;
+        }
+    }
+
+    /// Total number of bits pushed so far.
+    pub fn bit_len(&self) -> u64 {
+        self.total_bits
+    }
+
+    /// Flush and return the byte payload (final partial byte zero-padded).
+    pub fn finish(mut self) -> Vec<u8> {
+        while self.nbits > 0 {
+            self.buf.push(self.acc as u8);
+            self.acc >>= 8;
+            self.nbits = self.nbits.saturating_sub(8);
+        }
+        self.buf
+    }
+}
+
+/// Bit source over a byte payload, LSB-first (mirrors [`BitWriter`]).
+#[derive(Debug)]
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    byte_pos: usize,
+    acc: u64,
+    nbits: u32,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        BitReader { buf, byte_pos: 0, acc: 0, nbits: 0 }
+    }
+
+    /// Refill the accumulator to >= 57 available bits (or EOF).
+    #[inline]
+    fn refill(&mut self) {
+        // fast path: pull 32 bits at once while far from EOF (§Perf —
+        // the Huffman decode loop refills every symbol)
+        while self.nbits <= 32 && self.byte_pos + 4 <= self.buf.len() {
+            let w = u32::from_le_bytes(
+                self.buf[self.byte_pos..self.byte_pos + 4]
+                    .try_into()
+                    .unwrap(),
+            );
+            self.acc |= (w as u64) << self.nbits;
+            self.byte_pos += 4;
+            self.nbits += 32;
+        }
+        while self.nbits <= 56 && self.byte_pos < self.buf.len() {
+            self.acc |= (self.buf[self.byte_pos] as u64) << self.nbits;
+            self.byte_pos += 1;
+            self.nbits += 8;
+        }
+    }
+
+    /// Read `n` bits (<= 57). Reads past EOF return zero bits (callers
+    /// track symbol counts themselves, as the paper's decoder knows `d`).
+    #[inline]
+    pub fn read(&mut self, n: u32) -> u64 {
+        debug_assert!(n <= 57);
+        if self.nbits < n {
+            self.refill();
+        }
+        let out = self.acc & ((1u64 << n) - 1);
+        let take = n.min(self.nbits);
+        self.acc >>= take;
+        self.nbits -= take;
+        out
+    }
+
+    /// Peek up to `n` bits without consuming (missing bits are zero).
+    #[inline]
+    pub fn peek(&mut self, n: u32) -> u64 {
+        debug_assert!(n <= 57);
+        if self.nbits < n {
+            self.refill();
+        }
+        self.acc & ((1u64 << n) - 1)
+    }
+
+    /// Consume `n` bits after a successful peek.
+    #[inline]
+    pub fn consume(&mut self, n: u32) {
+        let take = n.min(self.nbits);
+        self.acc >>= take;
+        self.nbits -= take;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_simple() {
+        let mut w = BitWriter::new();
+        w.push(0b101, 3);
+        w.push(0b1, 1);
+        w.push(0xABCD, 16);
+        assert_eq!(w.bit_len(), 20);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read(3), 0b101);
+        assert_eq!(r.read(1), 0b1);
+        assert_eq!(r.read(16), 0xABCD);
+    }
+
+    #[test]
+    fn roundtrip_random_widths() {
+        let mut rng = Rng::new(77);
+        let items: Vec<(u64, u32)> = (0..10_000)
+            .map(|_| {
+                let n = 1 + rng.below(57) as u32;
+                let v = rng.next_u64() & ((1u64 << n) - 1);
+                (v, n)
+            })
+            .collect();
+        let mut w = BitWriter::new();
+        for &(v, n) in &items {
+            w.push(v, n);
+        }
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        for &(v, n) in &items {
+            assert_eq!(r.read(n), v, "width {n}");
+        }
+    }
+
+    #[test]
+    fn peek_then_consume() {
+        let mut w = BitWriter::new();
+        w.push(0b110101, 6);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.peek(3), 0b101);
+        assert_eq!(r.peek(3), 0b101); // peek is idempotent
+        r.consume(3);
+        assert_eq!(r.read(3), 0b110);
+    }
+
+    #[test]
+    fn reads_past_eof_are_zero() {
+        let mut r = BitReader::new(&[0xFF]);
+        assert_eq!(r.read(8), 0xFF);
+        assert_eq!(r.read(8), 0);
+    }
+
+    #[test]
+    fn bit_len_tracks_padding() {
+        let mut w = BitWriter::new();
+        w.push(1, 1);
+        assert_eq!(w.bit_len(), 1);
+        let bytes = w.finish();
+        assert_eq!(bytes.len(), 1); // padded to a byte
+    }
+}

@@ -1,0 +1,463 @@
+//! Canonical Huffman coding.
+//!
+//! The coder RC-FED (and every baseline, "for a fair comparison") uses to
+//! entropy-encode quantized gradient symbols before transmission. Also the
+//! source of the *integer codeword lengths* `ℓ_l` that enter the RC
+//! boundary update (paper eq. (10)).
+//!
+//! Implementation notes:
+//! * lengths by standard two-queue Huffman over sorted frequencies,
+//!   then zlib-style limiting to [`MAX_LEN`] bits (keeps the decode LUT
+//!   small and bounds worst-case skew);
+//! * canonical code assignment, encoded LSB-first (codes stored
+//!   bit-reversed to match [`super::bitio`]);
+//! * decoding via a full `2^max_len` lookup table — one peek+consume per
+//!   symbol, no tree walking on the hot path.
+
+use crate::coding::bitio::{BitReader, BitWriter};
+use crate::coding::EntropyCoder;
+use crate::util::{Error, Result};
+
+/// Length limit for codewords (also the decode-LUT address width).
+pub const MAX_LEN: u32 = 15;
+
+/// A canonical Huffman code over a small alphabet.
+#[derive(Clone, Debug)]
+pub struct HuffmanCode {
+    /// codeword length per symbol (0 = symbol never occurs)
+    lens: Vec<u32>,
+    /// bit-reversed canonical codeword per symbol
+    enc: Vec<u32>,
+    /// decode LUT: low `max_len` bits of the stream -> (symbol, len)
+    lut: Vec<(u8, u8)>,
+    max_len: u32,
+    /// §Perf: pair-encode table for alphabets ≤ 64 — `(merged bits, total
+    /// len)` for every symbol pair, halving BitWriter pushes on the
+    /// encode hot path. `len == u8::MAX` marks pairs with un-coded
+    /// symbols (encode then falls back to the checked path).
+    pair: Vec<(u32, u8)>,
+    nsym: usize,
+}
+
+impl HuffmanCode {
+    /// Build from symbol frequencies (zero-frequency symbols get no code).
+    pub fn from_freqs(freqs: &[u64]) -> Result<HuffmanCode> {
+        if freqs.is_empty() || freqs.len() > 256 {
+            return Err(Error::Coding(format!(
+                "alphabet size {} unsupported", freqs.len())));
+        }
+        let lens = limited_code_lengths(freqs, MAX_LEN);
+        Self::from_lengths(&lens)
+    }
+
+    /// Build from a probability vector (floored so every symbol gets a
+    /// code) — the form the RC design loop uses.
+    pub fn from_probs(probs: &[f64]) -> Result<HuffmanCode> {
+        const SCALE: f64 = 1e12;
+        let freqs: Vec<u64> = probs
+            .iter()
+            .map(|&p| ((p.max(0.0) * SCALE) as u64).max(1))
+            .collect();
+        Self::from_freqs(&freqs)
+    }
+
+    /// Build directly from codeword lengths (must satisfy Kraft ≤ 1).
+    pub fn from_lengths(lens: &[u32]) -> Result<HuffmanCode> {
+        let max_len = lens.iter().copied().max().unwrap_or(0);
+        if max_len > MAX_LEN {
+            return Err(Error::Coding(format!("length {max_len} > {MAX_LEN}")));
+        }
+        let kraft: f64 =
+            lens.iter().filter(|&&l| l > 0).map(|&l| 0.5f64.powi(l as i32)).sum();
+        if kraft > 1.0 + 1e-9 {
+            return Err(Error::Coding(format!("Kraft violation: {kraft}")));
+        }
+        // canonical assignment: sort by (len, symbol)
+        let mut order: Vec<usize> =
+            (0..lens.len()).filter(|&i| lens[i] > 0).collect();
+        order.sort_by_key(|&i| (lens[i], i));
+        let mut enc = vec![0u32; lens.len()];
+        let mut code = 0u32;
+        let mut prev_len = 0u32;
+        for &i in &order {
+            code <<= lens[i] - prev_len;
+            prev_len = lens[i];
+            enc[i] = code.reverse_bits() >> (32 - lens[i]);
+            code += 1;
+        }
+        // decode LUT
+        let lut = if max_len > 0 {
+            let mut lut = vec![(0u8, 0u8); 1usize << max_len];
+            for &i in &order {
+                let len = lens[i];
+                let step = 1usize << len;
+                let mut idx = enc[i] as usize;
+                while idx < lut.len() {
+                    lut[idx] = (i as u8, len as u8);
+                    idx += step;
+                }
+            }
+            lut
+        } else {
+            Vec::new()
+        };
+        // pair-encode table (encode hot path)
+        let nsym = lens.len();
+        let pair = if nsym <= 64 && max_len <= 28 {
+            let mut pair = vec![(0u32, u8::MAX); nsym * nsym];
+            for s1 in 0..nsym {
+                if lens[s1] == 0 {
+                    continue;
+                }
+                for s2 in 0..nsym {
+                    if lens[s2] == 0 {
+                        continue;
+                    }
+                    pair[s1 * nsym + s2] = (
+                        enc[s1] | (enc[s2] << lens[s1]),
+                        (lens[s1] + lens[s2]) as u8,
+                    );
+                }
+            }
+            pair
+        } else {
+            Vec::new()
+        };
+        Ok(HuffmanCode { lens: lens.to_vec(), enc, lut, max_len, pair, nsym })
+    }
+
+    /// Codeword length (bits) of each symbol — the `ℓ_l` of eq. (10).
+    pub fn lengths(&self) -> &[u32] {
+        &self.lens
+    }
+
+    /// Expected length under `probs` (paper eq. (4)) in bits/symbol.
+    pub fn expected_length(&self, probs: &[f64]) -> f64 {
+        let total: f64 = probs.iter().sum();
+        probs
+            .iter()
+            .zip(&self.lens)
+            .map(|(&p, &l)| p * l as f64)
+            .sum::<f64>()
+            / total.max(f64::MIN_POSITIVE)
+    }
+
+    /// Exact encoded size of `symbols`, in bits (excluding padding).
+    /// Out-of-alphabet symbols contribute 0 (encode rejects them).
+    pub fn message_bits(&self, symbols: &[u8]) -> u64 {
+        symbols
+            .iter()
+            .map(|&s| self.lens.get(s as usize).copied().unwrap_or(0) as u64)
+            .sum()
+    }
+
+    /// Encode into a fresh payload.
+    pub fn encode(&self, symbols: &[u8]) -> Result<Vec<u8>> {
+        let mut w =
+            BitWriter::with_capacity((self.message_bits(symbols) / 8 + 1) as usize);
+        self.encode_into(symbols, &mut w)?;
+        Ok(w.finish())
+    }
+
+    /// Encode appending to an existing writer (hot path — no allocation).
+    pub fn encode_into(&self, symbols: &[u8], w: &mut BitWriter) -> Result<()> {
+        if !self.pair.is_empty() {
+            let mut it = symbols.chunks_exact(2);
+            for p in &mut it {
+                let (s1, s2) = (p[0] as usize, p[1] as usize);
+                if s1 >= self.nsym || s2 >= self.nsym {
+                    return Err(Error::Coding(format!(
+                        "symbol out of range: {s1}/{s2}")));
+                }
+                let (bits, len) = self.pair[s1 * self.nsym + s2];
+                if len == u8::MAX {
+                    return Err(Error::Coding(format!(
+                        "symbol without code in pair {s1},{s2}")));
+                }
+                w.push(bits as u64, len as u32);
+            }
+            for &s in it.remainder() {
+                self.push_one(s, w)?;
+            }
+            return Ok(());
+        }
+        for &s in symbols {
+            self.push_one(s, w)?;
+        }
+        Ok(())
+    }
+
+    #[inline]
+    fn push_one(&self, s: u8, w: &mut BitWriter) -> Result<()> {
+        let len = *self
+            .lens
+            .get(s as usize)
+            .ok_or_else(|| Error::Coding(format!("symbol {s} out of range")))?;
+        if len == 0 {
+            return Err(Error::Coding(format!("symbol {s} has no code")));
+        }
+        w.push(self.enc[s as usize] as u64, len);
+        Ok(())
+    }
+
+    /// Decode exactly `n` symbols.
+    pub fn decode(&self, payload: &[u8], n: usize) -> Result<Vec<u8>> {
+        let mut out = vec![0u8; n];
+        self.decode_into(payload, &mut out)?;
+        Ok(out)
+    }
+
+    /// Decode into a preallocated buffer (hot path).
+    pub fn decode_into(&self, payload: &[u8], out: &mut [u8]) -> Result<()> {
+        if self.max_len == 0 {
+            if out.is_empty() {
+                return Ok(());
+            }
+            return Err(Error::Coding("empty code cannot decode".into()));
+        }
+        let mut r = BitReader::new(payload);
+        for slot in out.iter_mut() {
+            let bits = r.peek(self.max_len) as usize;
+            let (sym, len) = self.lut[bits];
+            if len == 0 {
+                return Err(Error::Coding("invalid codeword".into()));
+            }
+            r.consume(len as u32);
+            *slot = sym;
+        }
+        Ok(())
+    }
+}
+
+impl EntropyCoder for HuffmanCode {
+    fn encode(&self, symbols: &[u8]) -> Result<Vec<u8>> {
+        HuffmanCode::encode(self, symbols)
+    }
+
+    fn decode(&self, payload: &[u8], n: usize) -> Result<Vec<u8>> {
+        HuffmanCode::decode(self, payload, n)
+    }
+
+    fn name(&self) -> &'static str {
+        "huffman"
+    }
+}
+
+/// Plain Huffman code lengths (two-queue algorithm), then zlib-style
+/// limiting to `limit` bits with Kraft repair.
+pub fn limited_code_lengths(freqs: &[u64], limit: u32) -> Vec<u32> {
+    let n = freqs.len();
+    let active: Vec<usize> = (0..n).filter(|&i| freqs[i] > 0).collect();
+    let mut lens = vec![0u32; n];
+    match active.len() {
+        0 => return lens,
+        1 => {
+            lens[active[0]] = 1;
+            return lens;
+        }
+        _ => {}
+    }
+
+    // Two-queue Huffman over sorted leaves.
+    #[derive(Clone)]
+    struct Node {
+        freq: u64,
+        children: (i32, i32), // leaf if (-sym-1, _)
+    }
+    let mut leaves: Vec<(u64, usize)> =
+        active.iter().map(|&i| (freqs[i], i)).collect();
+    leaves.sort();
+    let mut nodes: Vec<Node> = Vec::with_capacity(2 * leaves.len());
+    for &(f, s) in &leaves {
+        nodes.push(Node { freq: f, children: (-(s as i32) - 1, 0) });
+    }
+    let mut q1: std::collections::VecDeque<usize> = (0..leaves.len()).collect();
+    let mut q2: std::collections::VecDeque<usize> = Default::default();
+    let pop_min = |q1: &mut std::collections::VecDeque<usize>,
+                   q2: &mut std::collections::VecDeque<usize>,
+                   nodes: &Vec<Node>| {
+        match (q1.front(), q2.front()) {
+            (Some(&a), Some(&b)) => {
+                if nodes[a].freq <= nodes[b].freq {
+                    q1.pop_front().unwrap()
+                } else {
+                    q2.pop_front().unwrap()
+                }
+            }
+            (Some(_), None) => q1.pop_front().unwrap(),
+            (None, Some(_)) => q2.pop_front().unwrap(),
+            (None, None) => unreachable!(),
+        }
+    };
+    while q1.len() + q2.len() > 1 {
+        let a = pop_min(&mut q1, &mut q2, &nodes);
+        let b = pop_min(&mut q1, &mut q2, &nodes);
+        let parent = Node {
+            freq: nodes[a].freq + nodes[b].freq,
+            children: (a as i32, b as i32),
+        };
+        nodes.push(parent);
+        q2.push_back(nodes.len() - 1);
+    }
+    // depth-first to assign lengths
+    let root = pop_min(&mut q1, &mut q2, &nodes);
+    let mut stack = vec![(root, 0u32)];
+    while let Some((id, depth)) = stack.pop() {
+        let node = &nodes[id];
+        if node.children.0 < 0 {
+            let sym = (-(node.children.0) - 1) as usize;
+            lens[sym] = depth.max(1);
+        } else {
+            stack.push((node.children.0 as usize, depth + 1));
+            stack.push((node.children.1 as usize, depth + 1));
+        }
+    }
+
+    // zlib-style length limiting: clamp, then repair Kraft by deepening
+    // the shallowest over-budget candidates.
+    if lens.iter().any(|&l| l > limit) {
+        for l in lens.iter_mut() {
+            if *l > limit {
+                *l = limit;
+            }
+        }
+        // Kraft sum in units of 2^-limit
+        let unit = |l: u32| 1u64 << (limit - l);
+        let mut kraft: u64 = lens.iter().filter(|&&l| l > 0).map(|&l| unit(l)).sum();
+        let budget = 1u64 << limit;
+        while kraft > budget {
+            // deepen the longest code that is still < limit
+            let mut cand: Option<usize> = None;
+            for (i, &l) in lens.iter().enumerate() {
+                if l > 0 && l < limit {
+                    cand = match cand {
+                        Some(j) if lens[j] >= l => Some(j),
+                        _ => Some(i),
+                    };
+                }
+            }
+            let i = cand.expect("kraft repair: no candidate");
+            kraft -= unit(lens[i]);
+            lens[i] += 1;
+            kraft += unit(lens[i]);
+        }
+    }
+    lens
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::entropy::entropy_bits;
+    use crate::util::rng::Rng;
+
+    fn kraft(lens: &[u32]) -> f64 {
+        lens.iter()
+            .filter(|&&l| l > 0)
+            .map(|&l| 0.5f64.powi(l as i32))
+            .sum()
+    }
+
+    #[test]
+    fn classic_example() {
+        // freqs {a:45, b:13, c:12, d:16, e:9, f:5} — CLRS example;
+        // optimal expected length = 2.24 bits
+        let freqs = [45u64, 13, 12, 16, 9, 5];
+        let code = HuffmanCode::from_freqs(&freqs).unwrap();
+        let total: u64 = freqs.iter().sum();
+        let avg: f64 = freqs
+            .iter()
+            .zip(code.lengths())
+            .map(|(&f, &l)| f as f64 * l as f64)
+            .sum::<f64>()
+            / total as f64;
+        assert!((avg - 2.24).abs() < 1e-9, "avg={avg}");
+        assert!(kraft(code.lengths()) <= 1.0 + 1e-12);
+    }
+
+    #[test]
+    fn roundtrip_random_messages() {
+        let mut rng = Rng::new(1);
+        for &nsym in &[2usize, 3, 8, 64] {
+            let probs: Vec<f64> =
+                (0..nsym).map(|_| rng.uniform() + 0.01).collect();
+            let code = HuffmanCode::from_probs(&probs).unwrap();
+            let msg: Vec<u8> = (0..5000)
+                .map(|_| rng.categorical(&probs) as u8)
+                .collect();
+            let payload = code.encode(&msg).unwrap();
+            let back = code.decode(&payload, msg.len()).unwrap();
+            assert_eq!(back, msg, "nsym={nsym}");
+            assert_eq!(
+                payload.len() as u64,
+                (code.message_bits(&msg) + 7) / 8
+            );
+        }
+    }
+
+    #[test]
+    fn single_symbol_alphabet() {
+        let code = HuffmanCode::from_freqs(&[0, 42, 0]).unwrap();
+        let msg = vec![1u8; 100];
+        let payload = code.encode(&msg).unwrap();
+        assert_eq!(payload.len(), 13); // 100 bits
+        assert_eq!(code.decode(&payload, 100).unwrap(), msg);
+    }
+
+    #[test]
+    fn near_entropy_on_skewed_source() {
+        // E[ℓ] within 1 bit of H (Huffman optimality bound)
+        let probs = [0.57, 0.2, 0.1, 0.05, 0.04, 0.02, 0.01, 0.01];
+        let code = HuffmanCode::from_probs(&probs).unwrap();
+        let h = entropy_bits(&probs);
+        let el = code.expected_length(&probs);
+        assert!(el >= h - 1e-9, "el={el} h={h}");
+        assert!(el <= h + 1.0, "el={el} h={h}");
+    }
+
+    #[test]
+    fn length_limiting_extreme_skew() {
+        // fibonacci-ish frequencies force deep trees; limited to MAX_LEN
+        let freqs: Vec<u64> = (0..40u32)
+            .map(|i| 1u64 << i.min(62))
+            .collect();
+        let lens = limited_code_lengths(&freqs, MAX_LEN);
+        assert!(lens.iter().all(|&l| l <= MAX_LEN && l > 0));
+        assert!(kraft(&lens) <= 1.0 + 1e-12);
+        // still decodable
+        let code = HuffmanCode::from_lengths(&lens).unwrap();
+        let msg: Vec<u8> = (0..40u8).collect();
+        let back = code
+            .decode(&code.encode(&msg).unwrap(), msg.len())
+            .unwrap();
+        assert_eq!(back, msg);
+    }
+
+    #[test]
+    fn zero_prob_symbols_still_get_codes_via_from_probs() {
+        let code = HuffmanCode::from_probs(&[0.5, 0.5, 0.0, 0.0]).unwrap();
+        assert!(code.lengths().iter().all(|&l| l > 0));
+        let msg = vec![0u8, 1, 2, 3, 2, 1, 0];
+        let back = code
+            .decode(&code.encode(&msg).unwrap(), msg.len())
+            .unwrap();
+        assert_eq!(back, msg);
+    }
+
+    #[test]
+    fn encode_unknown_symbol_errors() {
+        let code = HuffmanCode::from_freqs(&[5, 5]).unwrap();
+        assert!(code.encode(&[7]).is_err());
+    }
+
+    #[test]
+    fn message_bits_is_exact() {
+        let code = HuffmanCode::from_probs(&[0.8, 0.1, 0.1]).unwrap();
+        let msg = [0u8, 0, 1, 2, 0];
+        let want: u64 = msg
+            .iter()
+            .map(|&s| code.lengths()[s as usize] as u64)
+            .sum();
+        assert_eq!(code.message_bits(&msg), want);
+    }
+}

@@ -1,0 +1,218 @@
+//! LZW — the Lempel–Ziv-family coder the paper names as an alternative
+//! entropy coder (§2). Dictionary-based, variable-width codes, periodic
+//! reset. Included for the coder-comparison bench (E6); Huffman remains
+//! the wire default, matching the paper's experiments.
+//!
+//! The decoder mirrors the encoder's state machine *synchronously*: it
+//! tracks the encoder's `next_code` (for code widths and dictionary
+//! resets) rather than inferring it from its own — lagging — dictionary.
+
+use crate::coding::bitio::{BitReader, BitWriter};
+use crate::coding::EntropyCoder;
+use crate::util::{Error, Result};
+
+const MAX_CODE_BITS: u32 = 16;
+/// Codes are in `[0, RESET_SIZE)`; when `next_code` would reach the last
+/// value, both sides clear the dictionary instead of inserting.
+const RESET_SIZE: u32 = 1 << MAX_CODE_BITS;
+
+/// LZW over raw symbol bytes.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Lzw;
+
+/// Bits needed to read a code when the next assignable code is
+/// `next_code` (so emitted values are `<= next_code`).
+#[inline]
+fn width_for(next_code: u32) -> u32 {
+    (32 - next_code.leading_zeros()).max(9)
+}
+
+impl EntropyCoder for Lzw {
+    fn encode(&self, symbols: &[u8]) -> Result<Vec<u8>> {
+        let mut w = BitWriter::with_capacity(symbols.len() / 2 + 16);
+        if symbols.is_empty() {
+            return Ok(w.finish());
+        }
+        let mut dict: std::collections::HashMap<(u32, u8), u32> =
+            std::collections::HashMap::new();
+        let mut next_code = 256u32;
+        let mut prefix: u32 = symbols[0] as u32;
+        for &b in &symbols[1..] {
+            if let Some(&code) = dict.get(&(prefix, b)) {
+                prefix = code;
+                continue;
+            }
+            w.push(prefix as u64, width_for(next_code));
+            if next_code == RESET_SIZE - 1 {
+                dict.clear();
+                next_code = 256;
+            } else {
+                dict.insert((prefix, b), next_code);
+                next_code += 1;
+            }
+            prefix = b as u32;
+        }
+        w.push(prefix as u64, width_for(next_code));
+        Ok(w.finish())
+    }
+
+    fn decode(&self, payload: &[u8], n: usize) -> Result<Vec<u8>> {
+        let mut out = Vec::with_capacity(n);
+        if n == 0 {
+            return Ok(out);
+        }
+        let mut r = BitReader::new(payload);
+        // code -> (prefix code or u32::MAX for literal, first byte, last byte)
+        let mut dict: Vec<(u32, u8, u8)> = Vec::with_capacity(4096);
+        // entry from the previous emission awaiting its final byte:
+        // (prev_code, assigned_code)
+        let mut pending: Option<(u32, u32)> = None;
+        let mut next_code = 256u32; // mirror of the encoder's next_code
+
+        // Expand `code` appending to out; returns the first byte.
+        let expand = |dict: &[(u32, u8, u8)], code: u32, out: &mut Vec<u8>|
+            -> Result<u8> {
+            if code < 256 {
+                out.push(code as u8);
+                return Ok(code as u8);
+            }
+            let start = out.len();
+            let mut c = code;
+            loop {
+                if c < 256 {
+                    out.push(c as u8);
+                    out[start..].reverse();
+                    return Ok(c as u8);
+                }
+                let (p, first, last) = *dict
+                    .get((c - 256) as usize)
+                    .ok_or_else(|| Error::Coding(format!("bad LZW code {c}")))?;
+                out.push(last);
+                if p == u32::MAX {
+                    // defensive: literals are handled above
+                    out[start..].reverse();
+                    return Ok(first);
+                }
+                c = p;
+            }
+        };
+        let first_byte = |dict: &[(u32, u8, u8)], code: u32| -> Result<u8> {
+            if code < 256 {
+                Ok(code as u8)
+            } else {
+                dict.get((code - 256) as usize)
+                    .map(|&(_, f, _)| f)
+                    .ok_or_else(|| Error::Coding(format!("bad LZW code {code}")))
+            }
+        };
+
+        while out.len() < n {
+            let code = r.read(width_for(next_code)) as u32;
+            // 1. complete the pending entry from the previous emission
+            let first;
+            if let Some((prev, assigned)) = pending {
+                if code == assigned {
+                    // KwKwK: string = string(prev) + first(string(prev))
+                    let f = first_byte(&dict, prev)?;
+                    dict.push((prev, first_byte(&dict, prev)?, f));
+                    first = expand(&dict, code, &mut out)?;
+                } else {
+                    first = expand(&dict, code, &mut out)?;
+                    dict.push((prev, first_byte(&dict, prev)?, first));
+                }
+                let _ = first;
+            } else {
+                if code >= 256 && (code - 256) as usize >= dict.len() {
+                    return Err(Error::Coding(format!(
+                        "undefined LZW code {code}")));
+                }
+                expand(&dict, code, &mut out)?;
+            }
+            // 2. mirror the encoder's insert/reset decision for this emission
+            if next_code == RESET_SIZE - 1 {
+                dict.clear();
+                next_code = 256;
+                pending = None;
+            } else {
+                pending = Some((code, next_code));
+                next_code += 1;
+            }
+        }
+        out.truncate(n);
+        Ok(out)
+    }
+
+    fn name(&self) -> &'static str {
+        "lzw"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn roundtrip(msg: &[u8]) {
+        let lzw = Lzw;
+        let payload = lzw.encode(msg).unwrap();
+        let back = lzw.decode(&payload, msg.len()).unwrap();
+        assert_eq!(back, msg);
+    }
+
+    #[test]
+    fn roundtrip_repetitive() {
+        roundtrip(b"abababababababababababab");
+        roundtrip(b"aaaaaaaaaaaaaaaaaaaaaaaaaaaaa");
+        roundtrip(b"");
+        roundtrip(b"x");
+    }
+
+    #[test]
+    fn roundtrip_kwkwk_pattern() {
+        // the classic corner case: cScSc where the code is not in the
+        // decoder's dictionary yet
+        roundtrip(b"abcabcabcabcabc");
+        roundtrip(b"aaabaaabaaab");
+        roundtrip(b"aaaa");
+    }
+
+    #[test]
+    fn roundtrip_random_small_alphabet() {
+        let mut rng = Rng::new(10);
+        for nsym in [2usize, 8, 64] {
+            let msg: Vec<u8> =
+                (0..20_000).map(|_| rng.below(nsym) as u8).collect();
+            roundtrip(&msg);
+        }
+    }
+
+    #[test]
+    fn compresses_low_entropy_streams() {
+        let mut rng = Rng::new(11);
+        let probs = [0.9, 0.05, 0.02, 0.01, 0.005, 0.005, 0.005, 0.005];
+        let msg: Vec<u8> = (0..50_000)
+            .map(|_| rng.categorical(&probs) as u8)
+            .collect();
+        let payload = Lzw.encode(&msg).unwrap();
+        assert!(payload.len() < msg.len() / 2,
+                "lzw {} vs raw {}", payload.len(), msg.len());
+        assert_eq!(Lzw.decode(&payload, msg.len()).unwrap(), msg);
+    }
+
+    #[test]
+    fn long_stream_dictionary_reset() {
+        // > 64k dictionary insertions forces at least one reset cycle
+        let mut rng = Rng::new(12);
+        let msg: Vec<u8> = (0..400_000).map(|_| rng.below(16) as u8).collect();
+        roundtrip(&msg);
+    }
+
+    #[test]
+    fn decode_rejects_undefined_code() {
+        // a payload starting with a non-literal code is invalid
+        let mut w = crate::coding::bitio::BitWriter::new();
+        w.push(300, 9);
+        let payload = w.finish();
+        assert!(Lzw.decode(&payload, 5).is_err());
+    }
+}

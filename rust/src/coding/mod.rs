@@ -1,0 +1,33 @@
+//! Entropy-coding substrate.
+//!
+//! Quantized gradients are "source-encoded for further compression" with
+//! an entropy coder (paper §2). This module implements the coders the
+//! evaluation needs:
+//!
+//! * [`huffman`] — canonical Huffman, the coder the paper (and all
+//!   baselines, "for a fair comparison") uses on the wire;
+//! * [`arithmetic`] — a static range coder that approaches the Shannon
+//!   bound `H(Q(Z))` (the quantity the RC design constrains);
+//! * [`lz`] — LZW, the Lempel–Ziv variant the paper mentions as an
+//!   alternative entropy coder;
+//! * [`bitio`] — the shared bit-level reader/writer.
+//!
+//! All coders speak `&[u8]` symbol streams (alphabet ≤ 256; RC-FED uses
+//! `2^b ≤ 64` symbols) and produce self-contained byte payloads.
+
+pub mod arithmetic;
+pub mod bitio;
+pub mod huffman;
+pub mod lz;
+
+use crate::util::Result;
+
+/// A symbol-stream entropy coder.
+pub trait EntropyCoder {
+    /// Encode `symbols` (values `< num_symbols`) into a byte payload.
+    fn encode(&self, symbols: &[u8]) -> Result<Vec<u8>>;
+    /// Decode a payload back into exactly `n` symbols.
+    fn decode(&self, payload: &[u8], n: usize) -> Result<Vec<u8>>;
+    /// Human-readable name for reports.
+    fn name(&self) -> &'static str;
+}

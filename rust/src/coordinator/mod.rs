@@ -1,0 +1,8 @@
+//! Layer-3 coordination: the simulated federation network with its exact
+//! bit ledger ([`network`]), the parallel round scheduler ([`scheduler`])
+//! and the experiment runner that drives full training runs and sweeps
+//! ([`experiment`]).
+
+pub mod experiment;
+pub mod network;
+pub mod scheduler;

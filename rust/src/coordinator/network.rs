@@ -1,0 +1,127 @@
+//! Simulated federation network.
+//!
+//! The x-axis of Fig. 1 is *bits on the uplink*, which we account
+//! exactly per packet. For latency-oriented diagnostics the network can
+//! also model per-client uplink bandwidth: clients transmit in parallel,
+//! so a round's transmission time is the max over its participants.
+
+use crate::fl::packet::Packet;
+
+/// Uplink ledger + optional bandwidth model.
+#[derive(Debug)]
+pub struct SimulatedNetwork {
+    per_client_bits: Vec<u64>,
+    total_bits: u64,
+    /// uplink bandwidth per client in bits/second (None = accounting only)
+    pub uplink_bps: Option<f64>,
+    /// fixed per-message latency in seconds (e.g. RTT/2)
+    pub base_latency_s: f64,
+    round_bits: Vec<u64>,
+}
+
+impl SimulatedNetwork {
+    pub fn new(num_clients: usize) -> SimulatedNetwork {
+        SimulatedNetwork {
+            per_client_bits: vec![0; num_clients],
+            total_bits: 0,
+            uplink_bps: None,
+            base_latency_s: 0.0,
+            round_bits: Vec::new(),
+        }
+    }
+
+    /// With a bandwidth model (bits/s) and a base latency.
+    pub fn with_bandwidth(num_clients: usize, bps: f64, latency_s: f64) -> Self {
+        let mut n = SimulatedNetwork::new(num_clients);
+        n.uplink_bps = Some(bps);
+        n.base_latency_s = latency_s;
+        n
+    }
+
+    /// Record one uplink transmission; returns its simulated duration.
+    pub fn transmit(&mut self, packet: &Packet) -> f64 {
+        let bits = packet.total_bits();
+        let c = packet.client_id as usize;
+        if c < self.per_client_bits.len() {
+            self.per_client_bits[c] += bits;
+        }
+        self.total_bits += bits;
+        *self.round_bits.last_mut().unwrap_or(&mut 0) += bits;
+        self.base_latency_s
+            + self.uplink_bps.map(|b| bits as f64 / b).unwrap_or(0.0)
+    }
+
+    /// Mark the start of a round (opens a fresh round-bits bucket).
+    pub fn begin_round(&mut self) {
+        self.round_bits.push(0);
+    }
+
+    pub fn bits_this_round(&self) -> u64 {
+        *self.round_bits.last().unwrap_or(&0)
+    }
+
+    pub fn total_bits(&self) -> u64 {
+        self.total_bits
+    }
+
+    pub fn total_gigabits(&self) -> f64 {
+        self.total_bits as f64 / 1e9
+    }
+
+    pub fn client_bits(&self, client: usize) -> u64 {
+        self.per_client_bits.get(client).copied().unwrap_or(0)
+    }
+
+    /// Simulated duration of a round where `durations` are the per-client
+    /// transmit times: parallel links ⇒ the slowest client gates.
+    pub fn round_duration(durations: &[f64]) -> f64 {
+        durations.iter().cloned().fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fl::packet::SchemeTag;
+
+    fn pkt(client: u32, payload_bits: u64) -> Packet {
+        Packet {
+            client_id: client,
+            round: 0,
+            scheme: SchemeTag::RcFed,
+            bits_per_symbol: 3,
+            d: 10,
+            side_info: vec![0.0, 1.0],
+            payload: vec![0; payload_bits.div_ceil(8) as usize],
+            payload_bits,
+            table_bits: 0,
+        }
+    }
+
+    #[test]
+    fn ledger_tracks_per_client_and_total() {
+        let mut n = SimulatedNetwork::new(3);
+        n.begin_round();
+        n.transmit(&pkt(0, 1000));
+        n.transmit(&pkt(2, 2000));
+        let expected0 = pkt(0, 1000).total_bits();
+        let expected2 = pkt(2, 2000).total_bits();
+        assert_eq!(n.client_bits(0), expected0);
+        assert_eq!(n.client_bits(1), 0);
+        assert_eq!(n.client_bits(2), expected2);
+        assert_eq!(n.total_bits(), expected0 + expected2);
+        assert_eq!(n.bits_this_round(), expected0 + expected2);
+        n.begin_round();
+        assert_eq!(n.bits_this_round(), 0);
+    }
+
+    #[test]
+    fn bandwidth_model_durations() {
+        let mut n = SimulatedNetwork::with_bandwidth(2, 1e6, 0.01);
+        n.begin_round();
+        let d = n.transmit(&pkt(0, 1_000_000));
+        // ≈ 1 s of payload (+ header/side bits) + 10 ms latency
+        assert!(d > 1.0 && d < 1.1, "{d}");
+        assert_eq!(SimulatedNetwork::round_duration(&[0.1, 0.5, 0.3]), 0.5);
+    }
+}

@@ -1,0 +1,157 @@
+//! Round scheduler: runs the sampled clients' local updates, in parallel
+//! when the backend allows it (native models are pure functions of their
+//! inputs; the PJRT CPU client is driven from one thread and parallelizes
+//! internally via Eigen).
+
+use crate::fl::client::{Client, ClientUpdate};
+use crate::fl::compression::Compressor;
+use crate::model::Backend;
+use crate::util::Result;
+
+/// Per-round execution parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct RoundPlan {
+    pub round: u32,
+    pub local_iters: usize,
+    pub lr: f32,
+    pub batch: usize,
+    /// worker threads for the parallel path (0 ⇒ hardware parallelism)
+    pub threads: usize,
+}
+
+/// Run the sampled clients serially.
+pub fn run_round_serial<B: Backend + ?Sized>(
+    backend: &B,
+    clients: &mut [&mut Client],
+    params: &[f32],
+    plan: &RoundPlan,
+    compressor: &Compressor,
+) -> Result<Vec<ClientUpdate>> {
+    clients
+        .iter_mut()
+        .map(|c| {
+            c.round(
+                backend, params, plan.round, plan.local_iters, plan.lr,
+                plan.batch, compressor,
+            )
+        })
+        .collect()
+}
+
+/// Run the sampled clients across a scoped thread pool. Falls back to the
+/// serial path when the backend is not thread-safe or for tiny rounds.
+pub fn run_round<B: Backend + Sync + ?Sized>(
+    backend: &B,
+    clients: &mut [&mut Client],
+    params: &[f32],
+    plan: &RoundPlan,
+    compressor: &Compressor,
+) -> Result<Vec<ClientUpdate>>
+where
+    Compressor: Sync,
+{
+    let n = clients.len();
+    let threads = if plan.threads == 0 {
+        std::thread::available_parallelism().map(|x| x.get()).unwrap_or(1)
+    } else {
+        plan.threads
+    };
+    let threads = threads.min(n.max(1));
+    if !backend.supports_parallel() || threads <= 1 || n <= 1 {
+        return run_round_serial(backend, clients, params, plan, compressor);
+    }
+    // Partition the &mut Client slice across scoped workers; order of the
+    // returned updates matches the input order (stitched by partition).
+    let per = n.div_ceil(threads);
+    let mut results: Vec<Result<Vec<ClientUpdate>>> = Vec::new();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for chunk in clients.chunks_mut(per) {
+            handles.push(scope.spawn(move || {
+                chunk
+                    .iter_mut()
+                    .map(|c| {
+                        c.round(
+                            backend, params, plan.round, plan.local_iters,
+                            plan.lr, plan.batch, compressor,
+                        )
+                    })
+                    .collect::<Result<Vec<_>>>()
+            }));
+        }
+        for h in handles {
+            results.push(h.join().expect("worker panicked"));
+        }
+    });
+    let mut out = Vec::with_capacity(n);
+    for r in results {
+        out.extend(r?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{DatasetConfig, FederatedDataset};
+    use crate::fl::compression::{CompressionScheme, WireCoder};
+    use crate::model::native::NativeMlp;
+
+    fn setup(nclients: usize) -> (NativeMlp, Vec<Client>, Compressor) {
+        let mut cfg = DatasetConfig::tiny();
+        cfg.num_clients = nclients;
+        let ds = FederatedDataset::build(&cfg);
+        let clients: Vec<Client> = ds
+            .shards
+            .iter()
+            .enumerate()
+            .map(|(i, s)| Client::new(i as u32, s.clone(), 1000 + i as u64))
+            .collect();
+        let c = Compressor::design(
+            CompressionScheme::Lloyd { bits: 3 },
+            WireCoder::Huffman,
+        )
+        .unwrap();
+        (NativeMlp::tiny(), clients, c)
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let (m, mut clients_a, c) = setup(8);
+        let (_, mut clients_b, _) = setup(8);
+        let params = crate::model::Backend::init_params(&m, 1);
+        let plan = RoundPlan {
+            round: 0,
+            local_iters: 2,
+            lr: 0.05,
+            batch: 8,
+            threads: 4,
+        };
+        let mut refs_a: Vec<&mut Client> = clients_a.iter_mut().collect();
+        let mut refs_b: Vec<&mut Client> = clients_b.iter_mut().collect();
+        let par = run_round(&m, &mut refs_a, &params, &plan, &c).unwrap();
+        let ser =
+            run_round_serial(&m, &mut refs_b, &params, &plan, &c).unwrap();
+        assert_eq!(par.len(), ser.len());
+        for (a, b) in par.iter().zip(&ser) {
+            assert_eq!(a.packet.payload, b.packet.payload, "same seeds");
+            assert_eq!(a.packet.client_id, b.packet.client_id);
+        }
+    }
+
+    #[test]
+    fn single_client_round() {
+        let (m, mut clients, c) = setup(1);
+        let params = crate::model::Backend::init_params(&m, 2);
+        let plan = RoundPlan {
+            round: 0,
+            local_iters: 1,
+            lr: 0.1,
+            batch: 8,
+            threads: 0,
+        };
+        let mut refs: Vec<&mut Client> = clients.iter_mut().collect();
+        let ups = run_round(&m, &mut refs, &params, &plan, &c).unwrap();
+        assert_eq!(ups.len(), 1);
+    }
+}

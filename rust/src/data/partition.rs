@@ -1,0 +1,108 @@
+//! Non-IID label partitioning.
+//!
+//! * [`dirichlet_class_weights`] — the CIFAR-10 protocol of §5: each
+//!   client `k` draws a class distribution `q_k ~ Dir(β·1)`; smaller β ⇒
+//!   more skew (β=0.5 in the paper).
+//! * [`device_class_subsets`] — the FEMNIST-style protocol: each device
+//!   holds a small random subset of classes (a "writer" produces only a
+//!   few symbols), plus a long-tailed device size distribution.
+
+use crate::util::rng::Rng;
+
+/// Per-client class weight vectors `q_k ~ Dir(β)`.
+pub fn dirichlet_class_weights(
+    rng: &mut Rng,
+    num_clients: usize,
+    num_classes: usize,
+    beta: f64,
+) -> Vec<Vec<f64>> {
+    (0..num_clients).map(|_| rng.dirichlet(beta, num_classes)).collect()
+}
+
+/// FEMNIST-style: each device gets `min_classes..=max_classes` distinct
+/// classes with uniform weights over its subset.
+pub fn device_class_subsets(
+    rng: &mut Rng,
+    num_devices: usize,
+    num_classes: usize,
+    min_classes: usize,
+    max_classes: usize,
+) -> Vec<Vec<f64>> {
+    assert!(1 <= min_classes && min_classes <= max_classes);
+    assert!(max_classes <= num_classes);
+    (0..num_devices)
+        .map(|_| {
+            let k = min_classes + rng.below(max_classes - min_classes + 1);
+            let classes = rng.sample_indices(num_classes, k);
+            let mut w = vec![0.0; num_classes];
+            for &c in &classes {
+                w[c] = 1.0 / k as f64;
+            }
+            w
+        })
+        .collect()
+}
+
+/// Earth-mover-ish skew diagnostic: mean total-variation distance between
+/// client label distributions and the global uniform distribution.
+/// 0 = IID, →1 = maximally skewed. Used by tests and EXPERIMENTS.md.
+pub fn skew_tv(weights: &[Vec<f64>]) -> f64 {
+    if weights.is_empty() {
+        return 0.0;
+    }
+    let c = weights[0].len() as f64;
+    let mut acc = 0.0;
+    for w in weights {
+        acc += 0.5 * w.iter().map(|&x| (x - 1.0 / c).abs()).sum::<f64>();
+    }
+    acc / weights.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dirichlet_weights_are_distributions() {
+        let mut rng = Rng::new(1);
+        let ws = dirichlet_class_weights(&mut rng, 10, 10, 0.5);
+        assert_eq!(ws.len(), 10);
+        for w in &ws {
+            assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn smaller_beta_is_more_skewed() {
+        let mut rng = Rng::new(2);
+        let skew_01 = skew_tv(&dirichlet_class_weights(&mut rng, 200, 10, 0.1));
+        let skew_05 = skew_tv(&dirichlet_class_weights(&mut rng, 200, 10, 0.5));
+        let skew_50 = skew_tv(&dirichlet_class_weights(&mut rng, 200, 10, 50.0));
+        assert!(skew_01 > skew_05, "{skew_01} vs {skew_05}");
+        assert!(skew_05 > skew_50, "{skew_05} vs {skew_50}");
+        assert!(skew_50 < 0.15);
+    }
+
+    #[test]
+    fn device_subsets_respect_bounds() {
+        let mut rng = Rng::new(3);
+        let ws = device_class_subsets(&mut rng, 100, 62, 2, 5);
+        for w in &ws {
+            let nz = w.iter().filter(|&&x| x > 0.0).count();
+            assert!((2..=5).contains(&nz), "{nz}");
+            assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        }
+        // devices differ
+        assert_ne!(ws[0], ws[1]);
+    }
+
+    #[test]
+    fn skew_tv_extremes() {
+        // IID
+        let iid = vec![vec![0.25; 4]; 8];
+        assert!(skew_tv(&iid) < 1e-12);
+        // one-hot
+        let hot = vec![vec![1.0, 0.0, 0.0, 0.0]; 8];
+        assert!((skew_tv(&hot) - 0.75).abs() < 1e-12);
+    }
+}

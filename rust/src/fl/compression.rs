@@ -1,0 +1,547 @@
+//! Client-side gradient compression + PS-side decompression.
+//!
+//! [`Compressor`] binds a scheme to its designed codebook and wire coder:
+//!
+//! * **RC-FED** — rate-constrained codebook (eqs. (8)/(10)) designed
+//!   *once* against the N(0,1) limit (§3.1's universal quantization);
+//!   static design-time Huffman code, so no table travels;
+//! * **Lloyd-Max** [16], **NQFL** [14], **Uniform** — same universal
+//!   normalize→quantize pipeline, different codebooks, same static coder;
+//! * **QSGD** [8] — norm-scaled stochastic quantization; its symbol
+//!   distribution depends on the data, so each message carries a compact
+//!   code-length table (accounted in `table_bits`);
+//! * **Fp32** — uncompressed reference (32 bits/coordinate).
+//!
+//! All schemes share the same Huffman wire coder, matching the paper's
+//! "for a fair comparison, we use Huffman coding … in all methods".
+
+use crate::coding::arithmetic::ArithmeticCoder;
+use crate::coding::huffman::HuffmanCode;
+use crate::coding::EntropyCoder;
+use crate::fl::packet::{Packet, SchemeTag};
+use crate::quant::codebook::Codebook;
+use crate::quant::lloyd::LloydMax;
+use crate::quant::nqfl::nqfl_codebook;
+use crate::quant::qsgd::Qsgd;
+use crate::quant::rcq::{LengthModel, RateConstrainedQuantizer};
+use crate::quant::uniform::uniform_codebook;
+use crate::stats::gaussian::StdGaussian;
+use crate::stats::moments::mean_std;
+use crate::util::rng::Rng;
+use crate::util::{Error, Result};
+
+/// Which wire entropy coder carries the symbols.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireCoder {
+    /// canonical Huffman (paper default)
+    Huffman,
+    /// static arithmetic coding (Shannon-bound reference)
+    Arithmetic,
+}
+
+/// Scheme selection + hyper-parameters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CompressionScheme {
+    /// the paper's contribution: rate-constrained quantization
+    RcFed { bits: u32, lambda: f64, length_model: LengthModel },
+    /// Lloyd-Max baseline [16]
+    Lloyd { bits: u32 },
+    /// NQFL companding baseline [14]
+    Nqfl { bits: u32 },
+    /// QSGD baseline [8]
+    Qsgd { bits: u32 },
+    /// plain uniform grid over ±clip
+    Uniform { bits: u32, clip: f64 },
+    /// uncompressed float32 reference
+    Fp32,
+}
+
+impl CompressionScheme {
+    pub fn tag(&self) -> SchemeTag {
+        match self {
+            CompressionScheme::RcFed { .. } => SchemeTag::RcFed,
+            CompressionScheme::Lloyd { .. } => SchemeTag::Lloyd,
+            CompressionScheme::Nqfl { .. } => SchemeTag::Nqfl,
+            CompressionScheme::Qsgd { .. } => SchemeTag::Qsgd,
+            CompressionScheme::Uniform { .. } => SchemeTag::Uniform,
+            CompressionScheme::Fp32 => SchemeTag::Fp32,
+        }
+    }
+
+    pub fn bits(&self) -> u32 {
+        match *self {
+            CompressionScheme::RcFed { bits, .. }
+            | CompressionScheme::Lloyd { bits }
+            | CompressionScheme::Nqfl { bits }
+            | CompressionScheme::Qsgd { bits }
+            | CompressionScheme::Uniform { bits, .. } => bits,
+            CompressionScheme::Fp32 => 32,
+        }
+    }
+
+    /// Short label for CSVs/logs, e.g. `rcfed_b3_l0.050`.
+    pub fn label(&self) -> String {
+        match *self {
+            CompressionScheme::RcFed { bits, lambda, .. } => {
+                format!("rcfed_b{bits}_l{lambda:.3}")
+            }
+            CompressionScheme::Lloyd { bits } => format!("lloyd_b{bits}"),
+            CompressionScheme::Nqfl { bits } => format!("nqfl_b{bits}"),
+            CompressionScheme::Qsgd { bits } => format!("qsgd_b{bits}"),
+            CompressionScheme::Uniform { bits, .. } => format!("uniform_b{bits}"),
+            CompressionScheme::Fp32 => "fp32".into(),
+        }
+    }
+}
+
+enum Kernel {
+    /// normalize → codebook → static code (RC-FED / Lloyd / NQFL / Uniform)
+    Codebook {
+        codebook: Codebook,
+        huffman: HuffmanCode,
+        arith: ArithmeticCoder,
+    },
+    Qsgd(Qsgd),
+    Fp32,
+}
+
+/// A ready-to-use compressor (design done once at construction — the
+/// "computed once at the beginning of the training phase" property of
+/// §3.1).
+pub struct Compressor {
+    pub scheme: CompressionScheme,
+    pub wire: WireCoder,
+    kernel: Kernel,
+    /// design-time diagnostics for codebook schemes
+    pub design_mse: Option<f64>,
+    pub design_rate: Option<f64>,
+}
+
+impl Compressor {
+    /// Design the quantizer + wire code against the universal N(0,1)
+    /// model (§3.1). Deterministic; no data needed.
+    pub fn design(scheme: CompressionScheme, wire: WireCoder) -> Result<Compressor> {
+        let (kernel, mse, rate) = match scheme {
+            CompressionScheme::RcFed { bits, lambda, length_model } => {
+                let rc = RateConstrainedQuantizer {
+                    lambda,
+                    length_model,
+                    ..Default::default()
+                };
+                let (cb, rep) = rc.design(&StdGaussian, bits)?;
+                let huffman = HuffmanCode::from_probs(&rep.probs)?;
+                let arith = ArithmeticCoder::from_probs(&rep.probs)?;
+                (
+                    Kernel::Codebook { codebook: cb, huffman, arith },
+                    Some(rep.mse),
+                    Some(rep.huffman_rate),
+                )
+            }
+            CompressionScheme::Lloyd { bits } => {
+                let (cb, rep) = LloydMax::default().design(&StdGaussian, bits)?;
+                let huffman = HuffmanCode::from_probs(&rep.probs)?;
+                let arith = ArithmeticCoder::from_probs(&rep.probs)?;
+                (
+                    Kernel::Codebook { codebook: cb, huffman, arith },
+                    Some(rep.mse),
+                    Some(rep.huffman_rate),
+                )
+            }
+            CompressionScheme::Nqfl { bits } => {
+                let cb = nqfl_codebook(bits)?;
+                let (mse, probs) = crate::quant::evaluate(&StdGaussian, &cb);
+                let huffman = HuffmanCode::from_probs(&probs)?;
+                let rate = huffman.expected_length(&probs);
+                let arith = ArithmeticCoder::from_probs(&probs)?;
+                (
+                    Kernel::Codebook { codebook: cb, huffman, arith },
+                    Some(mse),
+                    Some(rate),
+                )
+            }
+            CompressionScheme::Uniform { bits, clip } => {
+                let cb = uniform_codebook(bits, clip)?;
+                let (mse, probs) = crate::quant::evaluate(&StdGaussian, &cb);
+                let huffman = HuffmanCode::from_probs(&probs)?;
+                let rate = huffman.expected_length(&probs);
+                let arith = ArithmeticCoder::from_probs(&probs)?;
+                (
+                    Kernel::Codebook { codebook: cb, huffman, arith },
+                    Some(mse),
+                    Some(rate),
+                )
+            }
+            CompressionScheme::Qsgd { bits } => {
+                (Kernel::Qsgd(Qsgd::new(bits)), None, None)
+            }
+            CompressionScheme::Fp32 => (Kernel::Fp32, None, None),
+        };
+        Ok(Compressor {
+            scheme,
+            wire,
+            kernel,
+            design_mse: mse,
+            design_rate: rate,
+        })
+    }
+
+    /// The designed codebook (None for QSGD/Fp32).
+    pub fn codebook(&self) -> Option<&Codebook> {
+        match &self.kernel {
+            Kernel::Codebook { codebook, .. } => Some(codebook),
+            _ => None,
+        }
+    }
+
+    /// Compress a flat gradient into an uplink packet. `rng` drives
+    /// QSGD's stochastic rounding (unused by deterministic schemes).
+    pub fn compress(
+        &self,
+        client_id: u32,
+        round: u32,
+        grad: &[f32],
+        rng: &mut Rng,
+    ) -> Result<Packet> {
+        match &self.kernel {
+            Kernel::Codebook { codebook, huffman, arith } => {
+                let (mu, sigma) = mean_std(grad);
+                let mut symbols = Vec::new();
+                codebook.quantize_normalized(grad, mu, sigma, &mut symbols);
+                let (payload, payload_bits) = match self.wire {
+                    WireCoder::Huffman => {
+                        let bits = huffman.message_bits(&symbols);
+                        (huffman.encode(&symbols)?, bits)
+                    }
+                    WireCoder::Arithmetic => {
+                        let p = EntropyCoder::encode(arith, &symbols)?;
+                        let bits = p.len() as u64 * 8;
+                        (p, bits)
+                    }
+                };
+                Ok(Packet {
+                    client_id,
+                    round,
+                    scheme: self.scheme.tag(),
+                    bits_per_symbol: self.scheme.bits() as u8,
+                    d: grad.len() as u32,
+                    side_info: vec![mu, sigma],
+                    payload,
+                    payload_bits,
+                    table_bits: 0, // universal design-time code (§3.1)
+                })
+            }
+            Kernel::Qsgd(q) => {
+                let msg = q.encode(grad, rng);
+                // Per-message Huffman from the empirical symbol histogram.
+                // QSGD has no universal design distribution, so the code
+                // LENGTH TABLE physically travels at the payload head
+                // (5 bits per alphabet symbol, byte-padded) and is charged
+                // to `table_bits`.
+                let hist: Vec<u64> = {
+                    let mut h = vec![0u64; q.num_symbols()];
+                    for &s in &msg.symbols {
+                        h[s as usize] += 1;
+                    }
+                    h
+                };
+                let code = HuffmanCode::from_freqs(&hist)?;
+                let table_bits = (5 * q.num_symbols() as u64).div_ceil(8) * 8;
+                let mut w = crate::coding::bitio::BitWriter::new();
+                for &l in code.lengths() {
+                    w.push(l as u64, 5);
+                }
+                while w.bit_len() < table_bits {
+                    w.push(0, 1); // pad table to a byte boundary
+                }
+                let payload_bits = code.message_bits(&msg.symbols);
+                code.encode_into(&msg.symbols, &mut w)?;
+                Ok(Packet {
+                    client_id,
+                    round,
+                    scheme: SchemeTag::Qsgd,
+                    bits_per_symbol: self.scheme.bits() as u8,
+                    d: grad.len() as u32,
+                    // one 32-bit ‖v‖ per bucket — bucketing's real cost
+                    side_info: msg.norms,
+                    payload: w.finish(),
+                    payload_bits,
+                    table_bits,
+                })
+            }
+            Kernel::Fp32 => {
+                let mut payload = Vec::with_capacity(grad.len() * 4);
+                for &x in grad {
+                    payload.extend_from_slice(&x.to_le_bytes());
+                }
+                Ok(Packet {
+                    client_id,
+                    round,
+                    scheme: SchemeTag::Fp32,
+                    bits_per_symbol: 32,
+                    d: grad.len() as u32,
+                    side_info: vec![],
+                    payload,
+                    payload_bits: grad.len() as u64 * 32,
+                    table_bits: 0,
+                })
+            }
+        }
+    }
+
+    /// PS side: decode a packet and accumulate the reconstructed gradient
+    /// into `acc` (eq. (11) then the sum of §3.4).
+    pub fn decompress_accumulate(
+        &self,
+        packet: &Packet,
+        acc: &mut [f32],
+    ) -> Result<()> {
+        let d = packet.d as usize;
+        if acc.len() != d {
+            return Err(Error::Coding(format!(
+                "accumulator {} != packet d {d}", acc.len())));
+        }
+        match &self.kernel {
+            Kernel::Codebook { codebook, huffman, arith } => {
+                let symbols = match self.wire {
+                    WireCoder::Huffman => huffman.decode(&packet.payload, d)?,
+                    WireCoder::Arithmetic => arith.decode(&packet.payload, d)?,
+                };
+                let (mu, sigma) = (packet.side_info[0], packet.side_info[1]);
+                codebook.dequantize_accumulate(&symbols, mu, sigma, acc);
+            }
+            Kernel::Qsgd(q) => {
+                // read the code-length table from the payload head, then
+                // decode the symbol stream with the rebuilt canonical code
+                let table_bytes = (5 * q.num_symbols()).div_ceil(8);
+                if packet.payload.len() < table_bytes {
+                    return Err(Error::Coding("qsgd packet too short".into()));
+                }
+                let mut r =
+                    crate::coding::bitio::BitReader::new(&packet.payload);
+                let lens: Vec<u32> = (0..q.num_symbols())
+                    .map(|_| r.read(5) as u32)
+                    .collect();
+                let code = HuffmanCode::from_lengths(&lens)?;
+                let symbols =
+                    code.decode(&packet.payload[table_bytes..], d)?;
+                if packet.side_info.len() != q.num_buckets(d) {
+                    return Err(Error::Coding(format!(
+                        "qsgd: {} norms for {} buckets",
+                        packet.side_info.len(),
+                        q.num_buckets(d)
+                    )));
+                }
+                let msg = crate::quant::qsgd::QsgdMessage {
+                    norms: packet.side_info.clone(),
+                    symbols,
+                };
+                q.decode_accumulate(&msg, acc);
+            }
+            Kernel::Fp32 => {
+                for (i, a) in acc.iter_mut().enumerate() {
+                    let off = i * 4;
+                    *a += f32::from_le_bytes(
+                        packet.payload[off..off + 4].try_into().unwrap(),
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gaussian_grad(n: usize, mu: f32, sigma: f32, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        let mut g = vec![0f32; n];
+        rng.fill_normal_f32(&mut g, mu, sigma);
+        g
+    }
+
+    #[test]
+    fn rcfed_compress_decompress_roundtrip() {
+        let c = Compressor::design(
+            CompressionScheme::RcFed {
+                bits: 3,
+                lambda: 0.05,
+                length_model: LengthModel::Huffman,
+            },
+            WireCoder::Huffman,
+        )
+        .unwrap();
+        let g = gaussian_grad(10_000, 0.01, 0.002, 1);
+        let mut rng = Rng::new(2);
+        let pkt = c.compress(0, 0, &g, &mut rng).unwrap();
+        let mut acc = vec![0f32; g.len()];
+        c.decompress_accumulate(&pkt, &mut acc).unwrap();
+        // reconstruction must track the gradient to within ~quantizer MSE
+        let sigma = 0.002f64;
+        let mse: f64 = g
+            .iter()
+            .zip(&acc)
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            / g.len() as f64;
+        let design = c.design_mse.unwrap() * sigma * sigma;
+        assert!(mse < 4.0 * design, "mse={mse} design={design}");
+    }
+
+    #[test]
+    fn payload_bits_match_design_rate() {
+        let c = Compressor::design(
+            CompressionScheme::Lloyd { bits: 3 },
+            WireCoder::Huffman,
+        )
+        .unwrap();
+        let g = gaussian_grad(50_000, 0.0, 1.0, 3);
+        let mut rng = Rng::new(4);
+        let pkt = c.compress(0, 0, &g, &mut rng).unwrap();
+        let bps = pkt.payload_bits as f64 / g.len() as f64;
+        let design = c.design_rate.unwrap();
+        assert!((bps - design).abs() < 0.05, "bps={bps} design={design}");
+    }
+
+    #[test]
+    fn rcfed_cheaper_than_lloyd_at_same_bits() {
+        // the paper's headline mechanism: rate constraint lowers the
+        // encoded bits/symbol at equal b
+        let rc = Compressor::design(
+            CompressionScheme::RcFed {
+                bits: 3,
+                lambda: 0.1,
+                length_model: LengthModel::Huffman,
+            },
+            WireCoder::Huffman,
+        )
+        .unwrap();
+        let ll = Compressor::design(
+            CompressionScheme::Lloyd { bits: 3 },
+            WireCoder::Huffman,
+        )
+        .unwrap();
+        let g = gaussian_grad(50_000, 0.0, 1.0, 5);
+        let mut rng = Rng::new(6);
+        let b_rc = rc.compress(0, 0, &g, &mut rng).unwrap().total_bits();
+        let b_ll = ll.compress(0, 0, &g, &mut rng).unwrap().total_bits();
+        assert!(b_rc < b_ll, "rcfed {b_rc} vs lloyd {b_ll}");
+    }
+
+    #[test]
+    fn fp32_is_lossless() {
+        let c = Compressor::design(CompressionScheme::Fp32, WireCoder::Huffman)
+            .unwrap();
+        let g = gaussian_grad(100, 0.0, 1.0, 7);
+        let mut rng = Rng::new(8);
+        let pkt = c.compress(0, 0, &g, &mut rng).unwrap();
+        assert_eq!(pkt.payload_bits, 3200);
+        let mut acc = vec![0f32; g.len()];
+        c.decompress_accumulate(&pkt, &mut acc).unwrap();
+        assert_eq!(acc, g);
+    }
+
+    #[test]
+    fn arithmetic_wire_is_at_most_huffman() {
+        let g = gaussian_grad(50_000, 0.0, 1.0, 9);
+        let mut rng = Rng::new(10);
+        let h = Compressor::design(
+            CompressionScheme::RcFed {
+                bits: 3,
+                lambda: 0.05,
+                length_model: LengthModel::Huffman,
+            },
+            WireCoder::Huffman,
+        )
+        .unwrap();
+        let a = Compressor::design(
+            CompressionScheme::RcFed {
+                bits: 3,
+                lambda: 0.05,
+                length_model: LengthModel::Huffman,
+            },
+            WireCoder::Arithmetic,
+        )
+        .unwrap();
+        let bh = h.compress(0, 0, &g, &mut rng).unwrap().payload_bits;
+        let ba = a.compress(0, 0, &g, &mut rng).unwrap().payload_bits;
+        assert!(ba <= bh + 64, "arith {ba} vs huffman {bh}");
+        // and arithmetic wire still roundtrips
+        let pkt = a.compress(0, 0, &g, &mut rng).unwrap();
+        let mut acc = vec![0f32; g.len()];
+        a.decompress_accumulate(&pkt, &mut acc).unwrap();
+        let mse: f64 = g.iter().zip(&acc)
+            .map(|(&x, &y)| ((x - y) as f64).powi(2)).sum::<f64>()
+            / g.len() as f64;
+        assert!(mse < 0.1);
+    }
+
+    #[test]
+    fn qsgd_roundtrip_with_inline_table() {
+        // Bucketed QSGD variance is ~(√bucket/s)·‖v‖² per bucket, so at
+        // b=7 (s=127) the reconstruction correlates strongly; at b=3 it
+        // is noisier but clearly aligned (unbiasedness is asserted in
+        // `qsgd_unbiased_through_the_wire`).
+        let g = gaussian_grad(8192, 0.0, 0.5, 11);
+        let mut rng = Rng::new(12);
+        for (bits, min_cos) in [(7u32, 0.9), (3, 0.4)] {
+            let c = Compressor::design(
+                CompressionScheme::Qsgd { bits },
+                WireCoder::Huffman,
+            )
+            .unwrap();
+            let pkt = c.compress(3, 9, &g, &mut rng).unwrap();
+            // one 32-bit norm per 512-coordinate bucket
+            assert_eq!(pkt.side_info.len(), 8192 / 512);
+            assert!(pkt.table_bits > 0 && pkt.table_bits % 8 == 0);
+            let mut acc = vec![0f32; g.len()];
+            c.decompress_accumulate(&pkt, &mut acc).unwrap();
+            let dot: f64 =
+                g.iter().zip(&acc).map(|(&a, &b)| (a * b) as f64).sum();
+            let na: f64 = g.iter().map(|&a| (a * a) as f64).sum();
+            let nb: f64 = acc.iter().map(|&b| (b * b) as f64).sum();
+            let cos = dot / (na.sqrt() * nb.sqrt());
+            assert!(cos > min_cos, "b={bits} cosine {cos}");
+        }
+    }
+
+    #[test]
+    fn qsgd_unbiased_through_the_wire() {
+        let c = Compressor::design(
+            CompressionScheme::Qsgd { bits: 2 },
+            WireCoder::Huffman,
+        )
+        .unwrap();
+        let g = vec![0.25f32, -0.5, 0.75, -0.1];
+        let mut rng = Rng::new(13);
+        let mut mean = vec![0f64; g.len()];
+        let trials = 4000;
+        for _ in 0..trials {
+            let pkt = c.compress(0, 0, &g, &mut rng).unwrap();
+            let mut acc = vec![0f32; g.len()];
+            c.decompress_accumulate(&pkt, &mut acc).unwrap();
+            for (m, &a) in mean.iter_mut().zip(&acc) {
+                *m += a as f64 / trials as f64;
+            }
+        }
+        for (i, (&want, &got)) in g.iter().zip(&mean).enumerate() {
+            assert!((want as f64 - got).abs() < 0.02, "coord {i}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn labels_are_stable() {
+        assert_eq!(
+            CompressionScheme::RcFed {
+                bits: 3,
+                lambda: 0.05,
+                length_model: LengthModel::Huffman
+            }
+            .label(),
+            "rcfed_b3_l0.050"
+        );
+        assert_eq!(CompressionScheme::Qsgd { bits: 6 }.label(), "qsgd_b6");
+    }
+}

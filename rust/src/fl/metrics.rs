@@ -1,0 +1,140 @@
+//! Per-round metrics + the uplink bit ledger that produces Fig. 1's
+//! x-axis.
+
+use crate::util::csv::CsvWriter;
+use crate::util::Result;
+
+/// Metrics of one communication round.
+#[derive(Clone, Debug)]
+pub struct RoundMetrics {
+    pub round: usize,
+    /// mean client training loss this round
+    pub train_loss: f32,
+    /// test accuracy (NaN on rounds without evaluation)
+    pub test_accuracy: f64,
+    /// uplink bits this round (all sampled clients)
+    pub bits_up: u64,
+    /// cumulative uplink bits since round 0
+    pub bits_cum: u64,
+    /// wallclock seconds for the round
+    pub wall_secs: f64,
+}
+
+/// Accumulates the experiment's metric history and bit ledger.
+#[derive(Debug, Default)]
+pub struct MetricsLog {
+    pub rounds: Vec<RoundMetrics>,
+    bits_cum: u64,
+}
+
+impl MetricsLog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(
+        &mut self,
+        round: usize,
+        train_loss: f32,
+        test_accuracy: f64,
+        bits_up: u64,
+        wall_secs: f64,
+    ) {
+        self.bits_cum += bits_up;
+        self.rounds.push(RoundMetrics {
+            round,
+            train_loss,
+            test_accuracy,
+            bits_up,
+            bits_cum: self.bits_cum,
+            wall_secs,
+        });
+    }
+
+    pub fn total_bits(&self) -> u64 {
+        self.bits_cum
+    }
+
+    pub fn total_gigabits(&self) -> f64 {
+        self.bits_cum as f64 / 1e9
+    }
+
+    /// Latest non-NaN accuracy.
+    pub fn final_accuracy(&self) -> f64 {
+        self.rounds
+            .iter()
+            .rev()
+            .map(|r| r.test_accuracy)
+            .find(|a| !a.is_nan())
+            .unwrap_or(f64::NAN)
+    }
+
+    /// Best accuracy over the run.
+    pub fn best_accuracy(&self) -> f64 {
+        self.rounds
+            .iter()
+            .map(|r| r.test_accuracy)
+            .filter(|a| !a.is_nan())
+            .fold(f64::NAN, f64::max)
+    }
+
+    /// Append all rounds to a CSV (schema: see header below).
+    pub fn write_csv(&self, path: &str, label: &str) -> Result<()> {
+        let mut w = CsvWriter::create(
+            path,
+            &["scheme", "round", "train_loss", "test_acc", "bits_up",
+              "bits_cum", "wall_secs"],
+        )?;
+        for r in &self.rounds {
+            crate::csv_row!(
+                w,
+                label,
+                r.round,
+                r.train_loss as f64,
+                r.test_accuracy,
+                r.bits_up,
+                r.bits_cum,
+                r.wall_secs
+            )?;
+        }
+        w.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ledger_accumulates() {
+        let mut m = MetricsLog::new();
+        m.push(0, 1.0, f64::NAN, 100, 0.1);
+        m.push(1, 0.9, 0.5, 150, 0.1);
+        m.push(2, 0.8, 0.6, 150, 0.1);
+        assert_eq!(m.total_bits(), 400);
+        assert_eq!(m.rounds[2].bits_cum, 400);
+        assert_eq!(m.final_accuracy(), 0.6);
+        assert_eq!(m.best_accuracy(), 0.6);
+    }
+
+    #[test]
+    fn final_accuracy_skips_nan() {
+        let mut m = MetricsLog::new();
+        m.push(0, 1.0, 0.4, 10, 0.0);
+        m.push(1, 0.9, f64::NAN, 10, 0.0);
+        assert_eq!(m.final_accuracy(), 0.4);
+    }
+
+    #[test]
+    fn csv_written() {
+        let dir = std::env::temp_dir().join(format!(
+            "rcfed_metrics_{}", std::process::id()));
+        let path = dir.join("m.csv");
+        let mut m = MetricsLog::new();
+        m.push(0, 1.0, 0.5, 42, 0.01);
+        m.write_csv(path.to_str().unwrap(), "test_scheme").unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("test_scheme,0,"));
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -1,0 +1,14 @@
+//! Federated-learning core: the client-side compression pipeline
+//! ([`compression`]), the wire format with exact bit accounting
+//! ([`packet`]), client local training ([`client`]), the parameter
+//! server ([`server`]) and per-round metrics ([`metrics`]).
+//!
+//! This module implements Algorithm 1 of the paper end-to-end:
+//! normalize → quantize (Q*) → entropy-encode → transmit → decode →
+//! de-normalize → aggregate → SGD step.
+
+pub mod client;
+pub mod compression;
+pub mod metrics;
+pub mod packet;
+pub mod server;

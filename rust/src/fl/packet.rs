@@ -1,0 +1,201 @@
+//! Wire format + exact bit accounting.
+//!
+//! Fig. 1's x-axis is *total uplink bits*, so accounting must be exact:
+//!
+//! * fixed header (client id, round, scheme, d, payload length) —
+//!   [`HEADER_BITS`];
+//! * side information: RC-FED/Lloyd/NQFL send `(μ, σ)` at full precision,
+//!   "requiring a total of 64 extra bit transmissions" (§3.3); QSGD sends
+//!   its ‖v‖₂ (32 bits);
+//! * optional per-message Huffman table (schemes without a universal
+//!   design-time code);
+//! * the entropy-coded payload itself.
+//!
+//! Packets also serialize to real bytes (and parse back) so the wire
+//! format is honest, not just a counter.
+
+use crate::util::{Error, Result};
+
+/// Fixed per-message header: client (32) + round (32) + scheme (8) +
+/// bits-per-symbol tag (8) + d (32) + payload bit-length (48) +
+/// side-info count (16).
+pub const HEADER_BITS: u64 = 32 + 32 + 8 + 8 + 32 + 48 + 16;
+
+/// Scheme discriminant on the wire.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchemeTag {
+    RcFed = 0,
+    Lloyd = 1,
+    Nqfl = 2,
+    Qsgd = 3,
+    Uniform = 4,
+    Fp32 = 5,
+}
+
+impl SchemeTag {
+    pub fn from_u8(x: u8) -> Result<SchemeTag> {
+        Ok(match x {
+            0 => SchemeTag::RcFed,
+            1 => SchemeTag::Lloyd,
+            2 => SchemeTag::Nqfl,
+            3 => SchemeTag::Qsgd,
+            4 => SchemeTag::Uniform,
+            5 => SchemeTag::Fp32,
+            other => {
+                return Err(Error::Coding(format!("bad scheme tag {other}")))
+            }
+        })
+    }
+}
+
+/// One client→PS uplink message.
+#[derive(Clone, Debug)]
+pub struct Packet {
+    pub client_id: u32,
+    pub round: u32,
+    pub scheme: SchemeTag,
+    pub bits_per_symbol: u8,
+    /// gradient dimension d
+    pub d: u32,
+    /// side information values (μ,σ for RC-FED family; ‖v‖ for QSGD;
+    /// empty for fp32)
+    pub side_info: Vec<f32>,
+    /// entropy-coded symbol payload
+    pub payload: Vec<u8>,
+    /// exact payload length in bits (≤ 8·payload.len())
+    pub payload_bits: u64,
+    /// per-message code-table bits (0 for universal design-time codes)
+    pub table_bits: u64,
+}
+
+impl Packet {
+    /// Total uplink cost in bits — the quantity Fig. 1 accumulates.
+    pub fn total_bits(&self) -> u64 {
+        HEADER_BITS
+            + 32 * self.side_info.len() as u64
+            + self.table_bits
+            + self.payload_bits
+    }
+
+    /// Serialize to actual bytes (header + side info + padded payload).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(32 + self.payload.len());
+        out.extend_from_slice(&self.client_id.to_le_bytes());
+        out.extend_from_slice(&self.round.to_le_bytes());
+        out.push(self.scheme as u8);
+        out.push(self.bits_per_symbol);
+        out.extend_from_slice(&self.d.to_le_bytes());
+        out.extend_from_slice(&self.payload_bits.to_le_bytes()[..6]);
+        out.extend_from_slice(&(self.side_info.len() as u16).to_le_bytes());
+        for v in &self.side_info {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out.extend_from_slice(&self.payload);
+        out
+    }
+
+    /// Parse a serialized packet (inverse of [`to_bytes`]; `table_bits`
+    /// is accounting metadata and is not carried on the wire).
+    pub fn from_bytes(buf: &[u8]) -> Result<Packet> {
+        let need = |n: usize| -> Result<()> {
+            if buf.len() < n {
+                Err(Error::Coding("truncated packet".into()))
+            } else {
+                Ok(())
+            }
+        };
+        need(24)?;
+        let client_id = u32::from_le_bytes(buf[0..4].try_into().unwrap());
+        let round = u32::from_le_bytes(buf[4..8].try_into().unwrap());
+        let scheme = SchemeTag::from_u8(buf[8])?;
+        let bits_per_symbol = buf[9];
+        let d = u32::from_le_bytes(buf[10..14].try_into().unwrap());
+        let mut pb = [0u8; 8];
+        pb[..6].copy_from_slice(&buf[14..20]);
+        let payload_bits = u64::from_le_bytes(pb);
+        let nside =
+            u16::from_le_bytes(buf[20..22].try_into().unwrap()) as usize;
+        need(22 + 4 * nside)?;
+        let mut side_info = Vec::with_capacity(nside);
+        for i in 0..nside {
+            let off = 22 + 4 * i;
+            side_info.push(f32::from_le_bytes(
+                buf[off..off + 4].try_into().unwrap(),
+            ));
+        }
+        let payload = buf[22 + 4 * nside..].to_vec();
+        if (payload.len() as u64) * 8 < payload_bits {
+            return Err(Error::Coding("payload shorter than bit length".into()));
+        }
+        Ok(Packet {
+            client_id,
+            round,
+            scheme,
+            bits_per_symbol,
+            d,
+            side_info,
+            payload,
+            payload_bits,
+            table_bits: 0,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Packet {
+        Packet {
+            client_id: 7,
+            round: 42,
+            scheme: SchemeTag::RcFed,
+            bits_per_symbol: 3,
+            d: 1000,
+            side_info: vec![0.5, 1.25],
+            payload: vec![0xAB, 0xCD, 0xEF],
+            payload_bits: 21,
+            table_bits: 0,
+        }
+    }
+
+    #[test]
+    fn total_bits_accounting() {
+        let p = sample();
+        assert_eq!(p.total_bits(), HEADER_BITS + 64 + 21);
+    }
+
+    #[test]
+    fn roundtrip_bytes() {
+        let p = sample();
+        let q = Packet::from_bytes(&p.to_bytes()).unwrap();
+        assert_eq!(q.client_id, 7);
+        assert_eq!(q.round, 42);
+        assert_eq!(q.scheme, SchemeTag::RcFed);
+        assert_eq!(q.bits_per_symbol, 3);
+        assert_eq!(q.d, 1000);
+        assert_eq!(q.side_info, vec![0.5, 1.25]);
+        assert_eq!(q.payload, vec![0xAB, 0xCD, 0xEF]);
+        assert_eq!(q.payload_bits, 21);
+    }
+
+    #[test]
+    fn rejects_truncation_and_bad_tags() {
+        let p = sample();
+        let bytes = p.to_bytes();
+        assert!(Packet::from_bytes(&bytes[..10]).is_err());
+        let mut bad = bytes.clone();
+        bad[8] = 99;
+        assert!(Packet::from_bytes(&bad).is_err());
+        let mut short = bytes;
+        short.truncate(25); // side info promised but missing
+        assert!(Packet::from_bytes(&short).is_err());
+    }
+
+    #[test]
+    fn side_info_is_64_bits_for_rcfed() {
+        // the paper's "total of 64 extra bit transmissions" for (μ, σ)
+        let p = sample();
+        assert_eq!(32 * p.side_info.len() as u64, 64);
+    }
+}

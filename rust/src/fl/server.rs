@@ -1,0 +1,164 @@
+//! Parameter server (Algorithm 1, outer loop).
+//!
+//! Receives packets, decodes + de-normalizes each (eq. (11)), averages
+//! into the global gradient `ḡ_t`, and steps
+//! `θ_{t+1} = θ_t − η_t ḡ_t`. Learning-rate schedules include the
+//! Theorem-1 schedule `η_t = 2 / (ρ (t + γ))`.
+
+use crate::fl::compression::Compressor;
+use crate::fl::packet::Packet;
+use crate::util::{Error, Result};
+
+/// Learning-rate schedule.
+#[derive(Clone, Copy, Debug)]
+pub enum LrSchedule {
+    /// constant η (the paper's §5 experiments: η = 0.01)
+    Const(f32),
+    /// Theorem 1: η_t = 2 / (ρ (t + γ))
+    InverseT { rho: f64, gamma: f64 },
+}
+
+impl LrSchedule {
+    pub fn at(&self, round: usize) -> f32 {
+        match *self {
+            LrSchedule::Const(lr) => lr,
+            LrSchedule::InverseT { rho, gamma } => {
+                (2.0 / (rho * (round as f64 + gamma))) as f32
+            }
+        }
+    }
+}
+
+/// The PS state.
+pub struct Server {
+    pub params: Vec<f32>,
+    pub schedule: LrSchedule,
+    pub round: usize,
+    /// gradient accumulator (scratch)
+    acc: Vec<f32>,
+    received: usize,
+}
+
+impl Server {
+    pub fn new(init_params: Vec<f32>, schedule: LrSchedule) -> Server {
+        let d = init_params.len();
+        Server {
+            params: init_params,
+            schedule,
+            round: 0,
+            acc: vec![0.0; d],
+            received: 0,
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn lr(&self) -> f32 {
+        self.schedule.at(self.round)
+    }
+
+    /// Begin a round: clear the accumulator.
+    pub fn begin_round(&mut self) {
+        self.acc.fill(0.0);
+        self.received = 0;
+    }
+
+    /// Ingest one client packet (decode → de-normalize → accumulate).
+    pub fn receive(
+        &mut self,
+        compressor: &Compressor,
+        packet: &Packet,
+    ) -> Result<()> {
+        if packet.d as usize != self.dim() {
+            return Err(Error::Coding(format!(
+                "packet d={} vs model d={}", packet.d, self.dim())));
+        }
+        compressor.decompress_accumulate(packet, &mut self.acc)?;
+        self.received += 1;
+        Ok(())
+    }
+
+    /// Finish the round: average, SGD step, advance the schedule.
+    /// Returns the applied learning rate.
+    pub fn step(&mut self) -> Result<f32> {
+        if self.received == 0 {
+            return Err(Error::Config("no packets received this round".into()));
+        }
+        let lr = self.lr();
+        let scale = lr / self.received as f32;
+        for (p, &g) in self.params.iter_mut().zip(&self.acc) {
+            *p -= scale * g;
+        }
+        self.round += 1;
+        Ok(lr)
+    }
+
+    /// Mean aggregated gradient (diagnostics; valid after receives,
+    /// before `step`).
+    pub fn aggregated_gradient(&self) -> Vec<f32> {
+        let k = self.received.max(1) as f32;
+        self.acc.iter().map(|&g| g / k).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fl::compression::{CompressionScheme, WireCoder};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn lr_schedules() {
+        assert_eq!(LrSchedule::Const(0.01).at(0), 0.01);
+        assert_eq!(LrSchedule::Const(0.01).at(99), 0.01);
+        let s = LrSchedule::InverseT { rho: 0.5, gamma: 8.0 };
+        assert!((s.at(0) - 0.5).abs() < 1e-7); // 2/(0.5*8)
+        assert!(s.at(10) < s.at(0));
+        // η_t is non-increasing with η_{t0} <= 2 η_t for t-t0 <= e-1
+        // (Lemma 1's requirement)
+        for t in 0..50 {
+            assert!(s.at(t + 1) <= s.at(t));
+        }
+    }
+
+    #[test]
+    fn fp32_aggregation_is_exact_mean_sgd() {
+        let c = Compressor::design(CompressionScheme::Fp32, WireCoder::Huffman)
+            .unwrap();
+        let mut server =
+            Server::new(vec![1.0; 4], LrSchedule::Const(0.5));
+        server.begin_round();
+        let mut rng = Rng::new(1);
+        let g1 = vec![1.0f32, 0.0, 2.0, -2.0];
+        let g2 = vec![3.0f32, 0.0, -2.0, -2.0];
+        for (i, g) in [g1, g2].iter().enumerate() {
+            let pkt = c.compress(i as u32, 0, g, &mut rng).unwrap();
+            server.receive(&c, &pkt).unwrap();
+        }
+        let mean = server.aggregated_gradient();
+        assert_eq!(mean, vec![2.0, 0.0, 0.0, -2.0]);
+        server.step().unwrap();
+        assert_eq!(server.params, vec![0.0, 1.0, 1.0, 2.0]);
+        assert_eq!(server.round, 1);
+    }
+
+    #[test]
+    fn step_without_receive_errors() {
+        let mut server = Server::new(vec![0.0; 2], LrSchedule::Const(0.1));
+        server.begin_round();
+        assert!(server.step().is_err());
+    }
+
+    #[test]
+    fn dimension_mismatch_rejected() {
+        let c = Compressor::design(CompressionScheme::Fp32, WireCoder::Huffman)
+            .unwrap();
+        let mut server = Server::new(vec![0.0; 8], LrSchedule::Const(0.1));
+        server.begin_round();
+        let mut rng = Rng::new(2);
+        let pkt = c.compress(0, 0, &[1.0; 4], &mut rng).unwrap();
+        assert!(server.receive(&c, &pkt).is_err());
+    }
+}

@@ -1,0 +1,64 @@
+//! # RC-FED — Rate-Constrained Quantization for Communication-Efficient FL
+//!
+//! Production-grade reproduction of *"Rate-Constrained Quantization for
+//! Communication-Efficient Federated Learning"* (Mohajer Hamidi & Bereyhi,
+//! 2024). The crate is the **Layer-3 rust coordinator** of a three-layer
+//! stack:
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`): the fused
+//!   normalize→bucketize→dequantize gradient-compression hot spot.
+//! * **L2** — JAX model graphs (`python/compile/model.py`): client
+//!   train/eval steps. Both layers are AOT-lowered **once** to HLO text
+//!   (`make artifacts`); Python never runs on the request path.
+//! * **L3** — this crate: the federated-learning system. Quantizer design
+//!   (the paper's contribution, [`quant::rcq`]), entropy coding
+//!   ([`coding`]), federated data ([`data`]), the client/server runtime
+//!   ([`fl`]), the round scheduler ([`coordinator`]) and the PJRT bridge
+//!   ([`runtime`]).
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use rcfed::prelude::*;
+//! use rcfed::quant::rcq::LengthModel;
+//!
+//! let mut cfg = ExperimentConfig::synth_cifar();
+//! cfg.scheme = SchemeConfig::RcFed {
+//!     bits: 3,
+//!     lambda: 0.05,
+//!     length_model: LengthModel::Huffman,
+//! };
+//! cfg.rounds = 20;
+//! let report = run_experiment(&cfg).unwrap();
+//! println!("acc={:.3} uplink={:.3} Gb", report.final_accuracy,
+//!          report.uplink_gigabits());
+//! ```
+//!
+//! See `examples/` for end-to-end drivers and `rust/benches/` for the
+//! harnesses regenerating every figure in the paper (DESIGN.md §Experiment
+//! index).
+
+pub mod coding;
+pub mod coordinator;
+pub mod data;
+pub mod fl;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod stats;
+pub mod util;
+
+/// Convenience re-exports for downstream users and the examples.
+pub mod prelude {
+    pub use crate::coordinator::experiment::{
+        run_experiment, ExperimentConfig, ExperimentReport, SchemeConfig,
+    };
+    pub use crate::coding::huffman::HuffmanCode;
+    pub use crate::data::{DatasetConfig, FederatedDataset};
+    pub use crate::fl::compression::{CompressionScheme, Compressor};
+    pub use crate::quant::{
+        codebook::Codebook, lloyd::LloydMax, rcq::RateConstrainedQuantizer,
+    };
+    pub use crate::stats::gaussian::StdGaussian;
+    pub use crate::util::rng::Rng;
+}

@@ -1,0 +1,275 @@
+//! `rcfed` — the RC-FED launcher.
+//!
+//! Subcommands:
+//!
+//! * `run`      — one federated training run (any scheme/backend)
+//! * `sweep`    — the Fig. 1 sweep: RC-FED λ-curve + all baselines
+//! * `design`   — design a quantizer and print its codebook + report
+//! * `info`     — inspect the artifact manifest
+//!
+//! Examples:
+//!
+//! ```text
+//! rcfed run --dataset cifar --scheme rcfed --bits 3 --lambda 0.05 \
+//!           --rounds 100 --out results/run.csv
+//! rcfed run --dataset cifar --backend pjrt --model mlp_synthcifar --rounds 5
+//! rcfed sweep --dataset cifar --rounds 100 --out results/fig1a.csv
+//! rcfed design --scheme rcfed --bits 3 --lambda 0.05
+//! ```
+
+use rcfed::coordinator::experiment::{
+    run_experiment, BackendChoice, ExperimentConfig,
+};
+use rcfed::data::DatasetKind;
+use rcfed::fl::compression::{CompressionScheme, WireCoder};
+use rcfed::fl::server::LrSchedule;
+use rcfed::quant::lloyd::LloydMax;
+use rcfed::quant::rcq::{LengthModel, RateConstrainedQuantizer};
+use rcfed::stats::gaussian::StdGaussian;
+use rcfed::util::cli::Args;
+use rcfed::util::{Error, Result};
+
+fn main() {
+    rcfed::util::log::init_from_env();
+    if let Err(e) = real_main() {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.subcommand.as_deref() {
+        Some("run") => cmd_run(&args),
+        Some("sweep") => cmd_sweep(&args),
+        Some("design") => cmd_design(&args),
+        Some("info") => cmd_info(&args),
+        Some(other) => Err(Error::Config(format!(
+            "unknown subcommand {other:?} (try run|sweep|design|info)"))),
+        None => {
+            print_usage();
+            Ok(())
+        }
+    }
+}
+
+fn print_usage() {
+    println!(
+        "rcfed — rate-constrained quantization for federated learning\n\n\
+         usage: rcfed <run|sweep|design|info> [--key value ...]\n\n\
+         run    --dataset cifar|femnist|tiny --scheme \
+         rcfed|lloyd|nqfl|qsgd|uniform|fp32\n       \
+         [--bits 3] [--lambda 0.05] [--rounds 100] [--clients-per-round 0]\n       \
+         [--local-iters 1] [--batch 64] [--lr 0.01] [--seed 42]\n       \
+         [--backend native|pjrt] [--model mlp_synthcifar] [--out file.csv]\n\
+         sweep  same dataset flags; runs the full Fig. 1 grid\n\
+         design --scheme rcfed|lloyd --bits b [--lambda l] [--target-rate r]\n\
+         info   [--artifacts dir]"
+    );
+}
+
+fn parse_scheme(args: &Args) -> Result<CompressionScheme> {
+    let bits = args.usize_or("bits", 3)? as u32;
+    let lambda = args.f64_or("lambda", 0.05)?;
+    let lm = match args.str_or("length-model", "huffman").as_str() {
+        "huffman" => LengthModel::Huffman,
+        "ideal" => LengthModel::Ideal,
+        other => {
+            return Err(Error::Config(format!(
+                "bad --length-model {other:?}")))
+        }
+    };
+    Ok(match args.str_or("scheme", "rcfed").as_str() {
+        "rcfed" => CompressionScheme::RcFed { bits, lambda, length_model: lm },
+        "lloyd" => CompressionScheme::Lloyd { bits },
+        "nqfl" => CompressionScheme::Nqfl { bits },
+        "qsgd" => CompressionScheme::Qsgd { bits },
+        "uniform" => CompressionScheme::Uniform {
+            bits,
+            clip: args.f64_or("clip", 4.0)?,
+        },
+        "fp32" => CompressionScheme::Fp32,
+        other => return Err(Error::Config(format!("bad --scheme {other:?}"))),
+    })
+}
+
+fn parse_config(args: &Args) -> Result<ExperimentConfig> {
+    let kind = DatasetKind::parse(&args.str_or("dataset", "cifar"))?;
+    let mut cfg = match kind {
+        DatasetKind::SynthCifar => ExperimentConfig::synth_cifar(),
+        DatasetKind::SynthFemnist => ExperimentConfig::synth_femnist(),
+        DatasetKind::Tiny => ExperimentConfig::tiny(),
+    };
+    cfg.scheme = parse_scheme(args)?;
+    cfg.rounds = args.usize_or("rounds", cfg.rounds)?;
+    cfg.clients_per_round =
+        args.usize_or("clients-per-round", cfg.clients_per_round)?;
+    cfg.local_iters = args.usize_or("local-iters", cfg.local_iters)?;
+    cfg.batch = args.usize_or("batch", cfg.batch)?;
+    cfg.seed = args.u64_or("seed", cfg.seed)?;
+    cfg.eval_every = args.usize_or("eval-every", cfg.eval_every)?;
+    cfg.eval_batches = args.usize_or("eval-batches", cfg.eval_batches)?;
+    cfg.threads = args.usize_or("threads", 0)?;
+    cfg.dataset.num_clients =
+        args.usize_or("clients", cfg.dataset.num_clients)?;
+    cfg.dataset.examples_per_client = args.usize_or(
+        "examples-per-client", cfg.dataset.examples_per_client)?;
+    let lr = args.f64_or("lr", f64::NAN)?;
+    if !lr.is_nan() {
+        cfg.lr = LrSchedule::Const(lr as f32);
+    }
+    cfg.wire = match args.str_or("wire", "huffman").as_str() {
+        "huffman" => WireCoder::Huffman,
+        "arithmetic" => WireCoder::Arithmetic,
+        other => return Err(Error::Config(format!("bad --wire {other:?}"))),
+    };
+    cfg.backend = match args.str_or("backend", "native").as_str() {
+        "native" => BackendChoice::Native,
+        "pjrt" => BackendChoice::Pjrt(args.str_or(
+            "model",
+            match kind {
+                DatasetKind::SynthCifar => "mlp_synthcifar",
+                DatasetKind::SynthFemnist => "cnn_synthfemnist",
+                DatasetKind::Tiny => "mlp_tiny",
+            },
+        )),
+        other => {
+            return Err(Error::Config(format!("bad --backend {other:?}")))
+        }
+    };
+    Ok(cfg)
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let cfg = parse_config(args)?;
+    let out = args.get("out").map(|s| s.to_string());
+    args.finish()?;
+    let report = run_experiment(&cfg)?;
+    println!(
+        "{:<22} d={:<8} rounds={:<4} acc={:.4} best={:.4} uplink={:.5} Gb \
+         wall={:.1}s",
+        report.label,
+        report.num_params,
+        cfg.rounds,
+        report.final_accuracy,
+        report.best_accuracy,
+        report.uplink_gigabits(),
+        report.wall_secs
+    );
+    if let Some(path) = out {
+        report.metrics.write_csv(&path, &report.label)?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let base = parse_config(args)?;
+    let lambdas =
+        args.f64_list_or("lambdas", &[0.02, 0.04, 0.06, 0.08, 0.1])?;
+    let bits = args.usize_list_or("bits-list", &[3, 6])?;
+    let out = args.str_or("out", "results/sweep.csv");
+    args.finish()?;
+
+    let mut schemes: Vec<CompressionScheme> = Vec::new();
+    for &lam in &lambdas {
+        schemes.push(CompressionScheme::RcFed {
+            bits: *bits.first().unwrap_or(&3) as u32,
+            lambda: lam,
+            length_model: LengthModel::Huffman,
+        });
+    }
+    for &b in &bits {
+        schemes.push(CompressionScheme::Lloyd { bits: b as u32 });
+        schemes.push(CompressionScheme::Nqfl { bits: b as u32 });
+        schemes.push(CompressionScheme::Qsgd { bits: b as u32 });
+    }
+    let mut w = rcfed::util::csv::CsvWriter::create(
+        &out,
+        &["scheme", "acc", "gigabits"],
+    )?;
+    for scheme in schemes {
+        let mut cfg = base.clone();
+        cfg.scheme = scheme;
+        let rep = run_experiment(&cfg)?;
+        rcfed::csv_row!(w, rep.label.clone(), rep.final_accuracy,
+                        rep.uplink_gigabits())?;
+        println!(
+            "{:<22} acc={:.4} uplink={:.5} Gb",
+            rep.label, rep.final_accuracy, rep.uplink_gigabits()
+        );
+    }
+    w.flush()?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+fn cmd_design(args: &Args) -> Result<()> {
+    let scheme = parse_scheme(args)?;
+    let target = args.f64_or("target-rate", f64::NAN)?;
+    args.finish()?;
+    match scheme {
+        CompressionScheme::RcFed { bits, lambda, length_model } => {
+            if !target.is_nan() {
+                let (cb, rep, lam) =
+                    RateConstrainedQuantizer::design_for_target_rate(
+                        &StdGaussian, bits, target, length_model)?;
+                println!("solved lambda={lam:.5} for target {target} bits");
+                print_design(&cb.levels, &cb.bounds, rep.mse,
+                             rep.entropy_bits, rep.huffman_rate);
+            } else {
+                let rc = RateConstrainedQuantizer {
+                    lambda, length_model, ..Default::default()
+                };
+                let (cb, rep) = rc.design(&StdGaussian, bits)?;
+                print_design(&cb.levels, &cb.bounds, rep.mse,
+                             rep.entropy_bits, rep.huffman_rate);
+            }
+        }
+        CompressionScheme::Lloyd { bits } => {
+            let (cb, rep) = LloydMax::default().design(&StdGaussian, bits)?;
+            print_design(&cb.levels, &cb.bounds, rep.mse,
+                         rep.entropy_bits, rep.huffman_rate);
+        }
+        other => {
+            return Err(Error::Config(format!(
+                "design supports rcfed|lloyd, got {other:?}")))
+        }
+    }
+    Ok(())
+}
+
+fn print_design(levels: &[f32], bounds: &[f32], mse: f64, h: f64, r: f64) {
+    println!("levels  = {levels:.4?}");
+    println!("bounds  = {bounds:.4?}");
+    println!("mse     = {mse:.6}");
+    println!("H(Q(Z)) = {h:.4} bits/symbol");
+    println!("E[huff] = {r:.4} bits/symbol");
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = args.str_or(
+        "artifacts",
+        rcfed::runtime::artifacts::default_dir().to_str().unwrap(),
+    );
+    args.finish()?;
+    let man = rcfed::runtime::Manifest::load(&dir)?;
+    man.validate()?;
+    println!("artifacts: {dir}");
+    println!("chunk={} block={} bits={:?}", man.chunk, man.block, man.bits);
+    println!("\nmodels:");
+    for (name, m) in &man.models {
+        println!(
+            "  {name:<20} {}  d={:<8} batch={} classes={}",
+            m.kind, m.num_params, m.batch, m.num_classes
+        );
+    }
+    println!("\ngraphs:");
+    for (name, a) in &man.artifacts {
+        println!(
+            "  {name:<24} {} inputs, {} outputs  ({})",
+            a.inputs.len(), a.outputs.len(), a.file
+        );
+    }
+    Ok(())
+}

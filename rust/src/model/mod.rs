@@ -1,0 +1,53 @@
+//! Model backends.
+//!
+//! The FL loop is generic over a [`Backend`]: something that can produce
+//! a stochastic gradient and evaluate accuracy at given parameters.
+//!
+//! * [`native`] — pure-rust MLP (fast path for the large Fig. 1 sweeps;
+//!   layout-compatible with the JAX `mlp_*` models, cross-validated in
+//!   `rust/tests/pjrt_roundtrip.rs`);
+//! * [`pjrt`] — the AOT JAX/Pallas graphs executed via the PJRT engine
+//!   (the paper-faithful three-layer path);
+//! * [`convex`] — L-smooth ρ-strongly-convex quadratics with exact optima
+//!   for the Theorem-1 convergence harness (E4).
+
+pub mod convex;
+pub mod native;
+pub mod pjrt;
+
+use crate::util::Result;
+
+/// A model the FL system can train.
+///
+/// Parameters travel as one flat `f32` vector (manifest order for PJRT
+/// models); the compression pipeline quantizes exactly this vector.
+pub trait Backend {
+    /// Total parameter count `d`.
+    fn num_params(&self) -> usize;
+
+    /// Mini-batch size this backend expects.
+    fn batch_size(&self) -> usize;
+
+    /// Deterministic parameter initialization.
+    fn init_params(&self, seed: u64) -> Vec<f32>;
+
+    /// Compute `(∇f(θ; batch), loss)`; writes the gradient into
+    /// `grad_out` (len = `num_params`) and returns the loss.
+    fn grad(
+        &self,
+        params: &[f32],
+        xs: &[f32],
+        ys: &[i32],
+        grad_out: &mut [f32],
+    ) -> Result<f32>;
+
+    /// Correct predictions on a batch.
+    fn eval(&self, params: &[f32], xs: &[f32], ys: &[i32]) -> Result<usize>;
+
+    /// Whether `grad`/`eval` may be called concurrently from threads.
+    fn supports_parallel(&self) -> bool {
+        false
+    }
+
+    fn name(&self) -> String;
+}

@@ -1,0 +1,115 @@
+//! PJRT model backend — the paper-faithful three-layer path.
+//!
+//! Executes the AOT JAX train/eval graphs (which embed the Pallas L1
+//! kernels) through the [`crate::runtime::Engine`]. Parameters cross the
+//! boundary as per-tensor literals in manifest order and are flattened
+//! back into the single wire vector the compression pipeline quantizes.
+
+use std::rc::Rc;
+
+use crate::model::Backend;
+use crate::runtime::artifacts::ModelManifest;
+use crate::runtime::host::{HostTensor, ParamSet};
+use crate::runtime::Engine;
+use crate::util::{Error, Result};
+
+/// A model served by the PJRT engine.
+pub struct PjrtModel {
+    engine: Rc<Engine>,
+    model: ModelManifest,
+}
+
+impl PjrtModel {
+    pub fn new(engine: Rc<Engine>, model_name: &str) -> Result<PjrtModel> {
+        let model = engine.manifest().model(model_name)?.clone();
+        Ok(PjrtModel { engine, model })
+    }
+
+    pub fn manifest(&self) -> &ModelManifest {
+        &self.model
+    }
+
+    fn batch_tensors(&self, xs: &[f32], ys: &[i32]) -> Result<(HostTensor, HostTensor)> {
+        let feat: usize = self.model.input_shape.iter().product();
+        let b = self.model.batch;
+        if xs.len() != b * feat || ys.len() != b {
+            return Err(Error::Config(format!(
+                "pjrt batch shape: got {} feats / {} labels, want {}x{feat}",
+                xs.len(), ys.len(), b)));
+        }
+        let mut xshape = vec![b];
+        xshape.extend_from_slice(&self.model.input_shape);
+        Ok((
+            HostTensor::F32(xs.to_vec(), xshape),
+            HostTensor::I32(ys.to_vec(), vec![b]),
+        ))
+    }
+
+    fn param_tensors(&self, params: &[f32]) -> Result<Vec<HostTensor>> {
+        let mut set = ParamSet::zeros(&self.model);
+        set.unflatten_from(params)?;
+        Ok(set
+            .tensors
+            .into_iter()
+            .zip(&self.model.params)
+            .map(|(t, p)| HostTensor::F32(t, p.shape.clone()))
+            .collect())
+    }
+}
+
+impl Backend for PjrtModel {
+    fn num_params(&self) -> usize {
+        self.model.num_params
+    }
+
+    fn batch_size(&self) -> usize {
+        self.model.batch
+    }
+
+    fn init_params(&self, seed: u64) -> Vec<f32> {
+        ParamSet::he_init(&self.model, seed).flatten()
+    }
+
+    fn grad(
+        &self,
+        params: &[f32],
+        xs: &[f32],
+        ys: &[i32],
+        grad_out: &mut [f32],
+    ) -> Result<f32> {
+        if grad_out.len() != self.num_params() {
+            return Err(Error::Config("grad_out length mismatch".into()));
+        }
+        let mut inputs = self.param_tensors(params)?;
+        let (xt, yt) = self.batch_tensors(xs, ys)?;
+        inputs.push(xt);
+        inputs.push(yt);
+        let outputs = self.engine.run(&self.model.train, &inputs)?;
+        // outputs = grads (per tensor, manifest order) + scalar loss
+        let mut off = 0;
+        for g in &outputs[..outputs.len() - 1] {
+            let v = g.as_f32()?;
+            grad_out[off..off + v.len()].copy_from_slice(v);
+            off += v.len();
+        }
+        debug_assert_eq!(off, self.num_params());
+        let loss = outputs.last().unwrap().as_f32()?[0];
+        Ok(loss)
+    }
+
+    fn eval(&self, params: &[f32], xs: &[f32], ys: &[i32]) -> Result<usize> {
+        let mut inputs = self.param_tensors(params)?;
+        let (xt, yt) = self.batch_tensors(xs, ys)?;
+        inputs.push(xt);
+        inputs.push(yt);
+        let outputs = self.engine.run(&self.model.eval, &inputs)?;
+        Ok(outputs[0].as_i32()?[0] as usize)
+    }
+
+    fn name(&self) -> String {
+        format!("pjrt_{}", self.model.name)
+    }
+}
+
+// Tests for this backend require compiled artifacts and live in
+// `rust/tests/pjrt_roundtrip.rs`.

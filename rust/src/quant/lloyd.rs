@@ -1,0 +1,194 @@
+//! Classical Lloyd-Max scalar quantizer design [19].
+//!
+//! The distortion-only baseline the paper compares against ([16]) and the
+//! λ → 0 limit of the rate-constrained design. Alternates
+//!
+//! * levels:     `s_l = E[Z | u_l < Z ≤ u_{l+1}]`            (eq. (8))
+//! * boundaries: `u_l = (s_l + s_{l-1}) / 2`                 (nearest rule)
+//!
+//! until the MSE stops improving.
+
+use crate::quant::codebook::Codebook;
+use crate::quant::{evaluate, DesignReport};
+use crate::stats::entropy::entropy_bits;
+use crate::stats::gaussian::inv_cdf;
+use crate::stats::SourcePdf;
+use crate::util::Result;
+
+/// Lloyd-Max designer.
+#[derive(Clone, Copy, Debug)]
+pub struct LloydMax {
+    pub max_iters: usize,
+    /// relative MSE-improvement convergence threshold
+    pub tol: f64,
+}
+
+impl Default for LloydMax {
+    fn default() -> Self {
+        LloydMax { max_iters: 500, tol: 1e-10 }
+    }
+}
+
+/// Quantile-spaced initial levels: `s_l = F^{-1}((l + ½)/N)` under a
+/// Gaussian-shaped guess over the pdf's support. Robust for both the
+/// standard Gaussian and empirical pdfs.
+pub fn init_levels(pdf: &dyn SourcePdf, n: usize) -> Vec<f64> {
+    let (lo, hi) = pdf.support();
+    let mut levels: Vec<f64> = (0..n)
+        .map(|l| {
+            let q = (l as f64 + 0.5) / n as f64;
+            let z = inv_cdf(q);
+            // map the Gaussian quantile into the support window
+            z.clamp(lo, hi)
+        })
+        .collect();
+    // ensure strict monotonicity even under clamping
+    for i in 1..n {
+        if levels[i] <= levels[i - 1] {
+            levels[i] = levels[i - 1] + 1e-6;
+        }
+    }
+    levels
+}
+
+/// Midpoint boundaries of a level vector.
+pub fn midpoints(levels: &[f64]) -> Vec<f64> {
+    levels.windows(2).map(|w| 0.5 * (w[0] + w[1])).collect()
+}
+
+impl LloydMax {
+    /// Design a `2^bits`-level quantizer for `pdf`.
+    pub fn design(
+        &self,
+        pdf: &dyn SourcePdf,
+        bits: u32,
+    ) -> Result<(Codebook, DesignReport)> {
+        let n = 1usize << bits;
+        let mut levels = init_levels(pdf, n);
+        let mut bounds = midpoints(&levels);
+        let mut prev_mse = f64::INFINITY;
+        let mut iters = 0;
+        for it in 0..self.max_iters {
+            iters = it + 1;
+            // centroid step (8)
+            for l in 0..n {
+                let a = if l == 0 { f64::NEG_INFINITY } else { bounds[l - 1] };
+                let b = if l == n - 1 { f64::INFINITY } else { bounds[l] };
+                levels[l] = pdf.centroid(a, b);
+            }
+            enforce_monotone(&mut levels);
+            // nearest-boundary step
+            bounds = midpoints(&levels);
+            // convergence on MSE
+            let cb = Codebook::from_f64_sanitized(&levels, &bounds)?;
+            let (mse, _) = evaluate(pdf, &cb);
+            if (prev_mse - mse).abs() <= self.tol * mse.max(1e-300) {
+                break;
+            }
+            prev_mse = mse;
+        }
+        let cb = Codebook::from_f64_sanitized(&levels, &bounds)?;
+        let (mse, probs) = evaluate(pdf, &cb);
+        let huff =
+            crate::coding::huffman::HuffmanCode::from_probs(&probs)?;
+        Ok((
+            cb,
+            DesignReport {
+                mse,
+                entropy_bits: entropy_bits(&probs),
+                huffman_rate: huff.expected_length(&probs),
+                probs,
+                iterations: iters,
+            },
+        ))
+    }
+}
+
+/// Repair strictly-increasing structure after a centroid step (empty or
+/// near-empty cells can collapse neighbours onto the same point).
+pub fn enforce_monotone(levels: &mut [f64]) {
+    for i in 1..levels.len() {
+        if levels[i] <= levels[i - 1] {
+            levels[i] = levels[i - 1] + 1e-9;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::empirical::EmpiricalPdf;
+    use crate::stats::gaussian::StdGaussian;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn one_bit_gaussian_is_sign_quantizer() {
+        // optimal 1-bit quantizer for N(0,1): levels ±sqrt(2/π), bound 0
+        let (cb, rep) = LloydMax::default().design(&StdGaussian, 1).unwrap();
+        let want = (2.0 / std::f64::consts::PI).sqrt() as f32;
+        assert!((cb.levels[0] + want).abs() < 1e-4, "{:?}", cb.levels);
+        assert!((cb.levels[1] - want).abs() < 1e-4);
+        assert!(cb.bounds[0].abs() < 1e-4);
+        // MSE = 1 - 2/π ≈ 0.3634
+        assert!((rep.mse - (1.0 - 2.0 / std::f64::consts::PI)).abs() < 1e-4);
+    }
+
+    #[test]
+    fn two_bit_gaussian_matches_max_1960() {
+        // Max (1960) table: N=4 levels ±0.4528, ±1.510; MSE ≈ 0.1175
+        let (cb, rep) = LloydMax::default().design(&StdGaussian, 2).unwrap();
+        assert!((cb.levels[2] - 0.4528).abs() < 2e-3, "{:?}", cb.levels);
+        assert!((cb.levels[3] - 1.510).abs() < 5e-3);
+        assert!((rep.mse - 0.1175).abs() < 1e-3, "mse={}", rep.mse);
+    }
+
+    #[test]
+    fn three_bit_gaussian_mse() {
+        // Max (1960): N=8 → MSE ≈ 0.03454
+        let (_, rep) = LloydMax::default().design(&StdGaussian, 3).unwrap();
+        assert!((rep.mse - 0.03454).abs() < 5e-4, "mse={}", rep.mse);
+    }
+
+    #[test]
+    fn mse_decreases_with_bits() {
+        let mut last = f64::INFINITY;
+        for b in 1..=6 {
+            let (_, rep) = LloydMax::default().design(&StdGaussian, b).unwrap();
+            assert!(rep.mse < last, "b={b}");
+            last = rep.mse;
+        }
+    }
+
+    #[test]
+    fn symmetric_for_symmetric_pdf() {
+        let (cb, _) = LloydMax::default().design(&StdGaussian, 3).unwrap();
+        let n = cb.levels.len();
+        for i in 0..n / 2 {
+            assert!(
+                (cb.levels[i] + cb.levels[n - 1 - i]).abs() < 1e-3,
+                "levels not symmetric: {:?}", cb.levels
+            );
+        }
+    }
+
+    #[test]
+    fn empirical_pdf_design_close_to_gaussian_design(){
+        let mut rng = Rng::new(21);
+        let mut z = vec![0f32; 100_000];
+        rng.fill_normal_f32(&mut z, 0.0, 1.0);
+        let emp = EmpiricalPdf::from_samples(&z);
+        let (cb_e, _) = LloydMax::default().design(&emp, 2).unwrap();
+        let (cb_g, _) = LloydMax::default().design(&StdGaussian, 2).unwrap();
+        for (a, b) in cb_e.levels.iter().zip(&cb_g.levels) {
+            assert!((a - b).abs() < 0.05, "{cb_e:?} vs {cb_g:?}");
+        }
+    }
+
+    #[test]
+    fn design_probabilities_sum_to_one() {
+        let (_, rep) = LloydMax::default().design(&StdGaussian, 4).unwrap();
+        let total: f64 = rep.probs.iter().sum();
+        assert!((total - 1.0).abs() < 1e-6);
+        assert!(rep.huffman_rate >= rep.entropy_bits - 1e-9);
+    }
+}

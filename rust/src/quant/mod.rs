@@ -1,0 +1,52 @@
+//! Scalar quantization — the paper's core contribution lives here.
+//!
+//! * [`codebook`] — levels/boundaries container + the branch-free apply
+//!   path (bucketize / dequantize) used on the hot path;
+//! * [`lloyd`] — classical Lloyd-Max (baseline [16], and the λ→0 limit);
+//! * [`rcq`] — **rate-constrained quantizer design** (paper §3.2,
+//!   eqs. (5)–(10)): alternating level/boundary optimization with
+//!   entropy-coding-aware codeword lengths;
+//! * [`qsgd`] — QSGD baseline [8];
+//! * [`nqfl`] — NQFL nonuniform-companding baseline [14];
+//! * [`uniform`] — plain uniform mid-rise quantizer (reference).
+
+pub mod codebook;
+pub mod dither;
+pub mod lloyd;
+pub mod nqfl;
+pub mod qsgd;
+pub mod rcq;
+pub mod uniform;
+
+use crate::stats::SourcePdf;
+
+/// Diagnostics of a designed quantizer against its design PDF.
+#[derive(Clone, Debug)]
+pub struct DesignReport {
+    /// mean squared error, eq. (3)
+    pub mse: f64,
+    /// entropy of the cell distribution H(Q(Z)), bits/symbol
+    pub entropy_bits: f64,
+    /// expected Huffman length Σ p_l ℓ_l, bits/symbol, eq. (4)
+    pub huffman_rate: f64,
+    /// cell probabilities
+    pub probs: Vec<f64>,
+    /// iterations until convergence
+    pub iterations: usize,
+}
+
+/// Evaluate `(MSE, probs)` of a codebook under `pdf`.
+pub fn evaluate(
+    pdf: &dyn SourcePdf,
+    codebook: &codebook::Codebook,
+) -> (f64, Vec<f64>) {
+    let n = codebook.levels.len();
+    let mut mse = 0.0;
+    let mut probs = Vec::with_capacity(n);
+    for l in 0..n {
+        let (a, b) = codebook.cell(l);
+        mse += pdf.cell_mse(a, b, codebook.levels[l] as f64);
+        probs.push(pdf.prob(a, b));
+    }
+    (mse, probs)
+}

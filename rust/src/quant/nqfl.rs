@@ -1,0 +1,104 @@
+//! NQFL baseline [14] (Chen et al., IEEE Comm. Letters 2023):
+//! nonuniform quantization for communication-efficient FL.
+//!
+//! NQFL quantizes normalized gradients with levels matched to the
+//! (approximately Gaussian) gradient density rather than uniformly. We
+//! realize it as a Gaussian-CDF compander: the normalized coordinate is
+//! mapped through `Φ(·)` (making it ~uniform on [0,1]), uniformly
+//! quantized with `2^b` cells, and expanded back through `Φ^{-1}` at cell
+//! centers. This is the standard companding construction for
+//! density-matched nonuniform quantization and reproduces NQFL's headline
+//! behaviour: denser levels near zero where gradient mass concentrates.
+//! (The original letter is not open-source; DESIGN.md records this
+//! substitution.)
+
+use crate::quant::codebook::Codebook;
+use crate::stats::gaussian::{cdf, inv_cdf};
+use crate::util::Result;
+
+/// Build the NQFL-style companded codebook for normalized (~N(0,1))
+/// gradients at bit-width `bits`.
+pub fn nqfl_codebook(bits: u32) -> Result<Codebook> {
+    let n = 1usize << bits;
+    // cell edges uniform in probability space: q_l = l/N
+    // levels at probability cell centers: Φ^{-1}((l+½)/N)
+    let levels: Vec<f64> = (0..n)
+        .map(|l| inv_cdf((l as f64 + 0.5) / n as f64))
+        .collect();
+    let bounds: Vec<f64> =
+        (1..n).map(|l| inv_cdf(l as f64 / n as f64)).collect();
+    Codebook::from_f64(&levels, &bounds)
+}
+
+/// The compander map (exposed for tests/benches).
+pub fn compress(z: f64) -> f64 {
+    cdf(z)
+}
+
+/// Inverse compander.
+pub fn expand(u: f64) -> f64 {
+    inv_cdf(u.clamp(1e-12, 1.0 - 1e-12))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{evaluate, lloyd::LloydMax, uniform::uniform_codebook};
+    use crate::stats::gaussian::StdGaussian;
+
+    #[test]
+    fn codebook_is_valid_and_symmetric() {
+        for bits in [1u32, 2, 3, 6] {
+            let cb = nqfl_codebook(bits).unwrap();
+            cb.validate().unwrap();
+            assert_eq!(cb.num_levels(), 1 << bits);
+            let n = cb.levels.len();
+            for i in 0..n / 2 {
+                assert!(
+                    (cb.levels[i] + cb.levels[n - 1 - i]).abs() < 1e-5,
+                    "b={bits} {:?}", cb.levels
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn cells_are_equiprobable() {
+        // defining property of the CDF compander
+        let cb = nqfl_codebook(3).unwrap();
+        let (_, probs) = evaluate(&StdGaussian, &cb);
+        for &p in &probs {
+            assert!((p - 1.0 / 8.0).abs() < 1e-4, "{probs:?}");
+        }
+    }
+
+    #[test]
+    fn denser_near_zero() {
+        let cb = nqfl_codebook(4).unwrap();
+        let gaps: Vec<f32> =
+            cb.levels.windows(2).map(|w| w[1] - w[0]).collect();
+        let mid = gaps[gaps.len() / 2];
+        let edge = gaps[0];
+        assert!(mid < edge, "inner gap {mid} should be < outer gap {edge}");
+    }
+
+    #[test]
+    fn better_than_uniform_worse_than_lloyd() {
+        // nonuniform companding beats a clipped uniform grid on Gaussian
+        // data but cannot beat the MSE-optimal Lloyd design
+        let (mse_nqfl, _) =
+            evaluate(&StdGaussian, &nqfl_codebook(3).unwrap());
+        let (mse_unif, _) =
+            evaluate(&StdGaussian, &uniform_codebook(3, 4.0).unwrap());
+        let (_, rep_lloyd) = LloydMax::default().design(&StdGaussian, 3).unwrap();
+        assert!(mse_nqfl < mse_unif, "{mse_nqfl} vs uniform {mse_unif}");
+        assert!(mse_nqfl > rep_lloyd.mse, "{mse_nqfl} vs lloyd {}", rep_lloyd.mse);
+    }
+
+    #[test]
+    fn compander_roundtrip() {
+        for z in [-3.0, -0.5, 0.0, 1.7] {
+            assert!((expand(compress(z)) - z).abs() < 1e-7, "z={z}");
+        }
+    }
+}

@@ -1,0 +1,249 @@
+//! QSGD baseline [8] (Alistarh et al., NeurIPS 2017).
+//!
+//! Bucketed variant, as deployed in the reference implementation: the
+//! gradient is split into buckets of `bucket` coordinates; per bucket,
+//! transmit `‖v‖₂` (32-bit float) and per-coordinate signed,
+//! stochastically-rounded magnitude levels `ξ_i ∈ {0, 1/s, …, 1}` with
+//! `s = 2^b − 1`, such that `E[Q(v_i)] = v_i` (unbiased). Bucketing is
+//! essential at FL scale: with a whole-vector norm and d ~ 10⁵–10⁷,
+//! `|v_i|/‖v‖·s ≈ 0` and the quantizer degenerates to zero. Symbols are
+//! the signed levels remapped to `[0, 2s]`, entropy-coded by the same
+//! Huffman wire coder as RC-FED ("for a fair comparison", paper §5).
+
+use crate::util::rng::Rng;
+
+/// Default bucket size (the QSGD paper's deployment value).
+pub const DEFAULT_BUCKET: usize = 512;
+
+/// QSGD encoder/decoder state.
+#[derive(Clone, Copy, Debug)]
+pub struct Qsgd {
+    /// quantization bit-width b; s = 2^b − 1 magnitude levels
+    pub bits: u32,
+    /// coordinates per norm bucket
+    pub bucket: usize,
+}
+
+/// Encoded QSGD message: per-bucket norms + symbol per coordinate.
+#[derive(Clone, Debug)]
+pub struct QsgdMessage {
+    /// ‖v‖₂ of each bucket (ceil(d / bucket) entries)
+    pub norms: Vec<f32>,
+    /// symbol per coordinate in `[0, 2s]`: `s + signed_level`
+    pub symbols: Vec<u8>,
+}
+
+impl Qsgd {
+    pub fn new(bits: u32) -> Self {
+        Self::with_bucket(bits, DEFAULT_BUCKET)
+    }
+
+    pub fn with_bucket(bits: u32, bucket: usize) -> Self {
+        assert!(bits >= 1 && bits <= 7, "qsgd bits in [1,7] (u8 symbols)");
+        assert!(bucket > 0);
+        Qsgd { bits, bucket }
+    }
+
+    /// Number of magnitude levels `s`.
+    pub fn s(&self) -> u32 {
+        (1u32 << self.bits) - 1
+    }
+
+    /// Alphabet size of the emitted symbols (`2s + 1`).
+    pub fn num_symbols(&self) -> usize {
+        2 * self.s() as usize + 1
+    }
+
+    pub fn num_buckets(&self, d: usize) -> usize {
+        d.div_ceil(self.bucket)
+    }
+
+    /// Stochastically quantize `v`; unbiased: `E[decode(encode(v))] = v`.
+    pub fn encode(&self, v: &[f32], rng: &mut Rng) -> QsgdMessage {
+        let s = self.s() as f32;
+        let mut norms = Vec::with_capacity(self.num_buckets(v.len()));
+        let mut symbols = Vec::with_capacity(v.len());
+        for chunk in v.chunks(self.bucket) {
+            let norm = chunk
+                .iter()
+                .map(|&x| (x as f64) * (x as f64))
+                .sum::<f64>()
+                .sqrt() as f32;
+            norms.push(norm);
+            if norm <= 0.0 {
+                symbols.extend(
+                    std::iter::repeat(self.s() as u8).take(chunk.len()));
+                continue;
+            }
+            for &x in chunk {
+                let a = x.abs() / norm * s; // in [0, s]
+                let lo = a.floor();
+                let p = a - lo; // round up with prob p
+                let level = lo as u32 + (rng.uniform() < p as f64) as u32;
+                let signed = if x < 0.0 {
+                    self.s() as i32 - level as i32
+                } else {
+                    self.s() as i32 + level as i32
+                };
+                symbols.push(signed as u8);
+            }
+        }
+        QsgdMessage { norms, symbols }
+    }
+
+    /// Reconstruct coordinates from a message.
+    pub fn decode_into(&self, msg: &QsgdMessage, out: &mut [f32]) {
+        let s = self.s() as f32;
+        for (b, chunk) in out.chunks_mut(self.bucket).enumerate() {
+            let norm = msg.norms[b];
+            for (i, o) in chunk.iter_mut().enumerate() {
+                let sym = msg.symbols[b * self.bucket + i];
+                let signed = sym as i32 - self.s() as i32;
+                *o = norm * signed as f32 / s;
+            }
+        }
+    }
+
+    /// Accumulate reconstruction: `acc[i] += decode(msg)[i]`.
+    pub fn decode_accumulate(&self, msg: &QsgdMessage, acc: &mut [f32]) {
+        let s = self.s() as f32;
+        for (b, chunk) in acc.chunks_mut(self.bucket).enumerate() {
+            let norm = msg.norms[b];
+            for (i, o) in chunk.iter_mut().enumerate() {
+                let sym = msg.symbols[b * self.bucket + i];
+                let signed = sym as i32 - self.s() as i32;
+                *o += norm * signed as f32 / s;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_vector() {
+        let q = Qsgd::new(3);
+        let mut rng = Rng::new(1);
+        let msg = q.encode(&[0.0; 16], &mut rng);
+        let mut out = [1.0f32; 16];
+        q.decode_into(&msg, &mut out);
+        assert!(out.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn symbols_in_range_and_bucket_count() {
+        let q = Qsgd::with_bucket(3, 100);
+        let mut rng = Rng::new(2);
+        let mut v = vec![0f32; 1000];
+        rng.fill_normal_f32(&mut v, 0.0, 2.0);
+        let msg = q.encode(&v, &mut rng);
+        assert_eq!(msg.norms.len(), 10);
+        assert_eq!(msg.symbols.len(), 1000);
+        assert!(msg
+            .symbols
+            .iter()
+            .all(|&s| (s as usize) < q.num_symbols()));
+        // ragged tail
+        let q = Qsgd::with_bucket(3, 300);
+        let msg = q.encode(&v, &mut rng);
+        assert_eq!(msg.norms.len(), 4);
+    }
+
+    #[test]
+    fn unbiasedness() {
+        // E[Q(v)] = v: average many stochastic encodings (two buckets)
+        let q = Qsgd::with_bucket(2, 3);
+        let mut rng = Rng::new(3);
+        let v = [0.3f32, -0.7, 0.05, 0.9, -0.2];
+        let mut acc = vec![0f64; v.len()];
+        let trials = 20_000;
+        let mut out = vec![0f32; v.len()];
+        for _ in 0..trials {
+            let msg = q.encode(&v, &mut rng);
+            q.decode_into(&msg, &mut out);
+            for (a, &o) in acc.iter_mut().zip(&out) {
+                *a += o as f64;
+            }
+        }
+        for (i, (&want, &got)) in v.iter().zip(&acc).enumerate() {
+            let mean = got / trials as f64;
+            assert!(
+                (mean - want as f64).abs() < 0.01,
+                "coord {i}: {mean} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn reconstruction_error_decreases_with_bits() {
+        let mut rng = Rng::new(4);
+        let mut v = vec![0f32; 4096];
+        rng.fill_normal_f32(&mut v, 0.0, 1.0);
+        let mut last = f64::INFINITY;
+        for bits in [1u32, 3, 5, 7] {
+            let q = Qsgd::new(bits);
+            let msg = q.encode(&v, &mut rng);
+            let mut out = vec![0f32; v.len()];
+            q.decode_into(&msg, &mut out);
+            let mse: f64 = v
+                .iter()
+                .zip(&out)
+                .map(|(&a, &b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+                / v.len() as f64;
+            assert!(mse < last, "bits={bits} mse={mse} last={last}");
+            last = mse;
+        }
+    }
+
+    #[test]
+    fn bucketing_reduces_variance() {
+        // smaller buckets ⇒ better-conditioned levels ⇒ lower MSE
+        let mut rng = Rng::new(5);
+        let mut v = vec![0f32; 8192];
+        rng.fill_normal_f32(&mut v, 0.0, 1.0);
+        let mse_of = |bucket: usize, rng: &mut Rng| {
+            let q = Qsgd::with_bucket(3, bucket);
+            let msg = q.encode(&v, rng);
+            let mut out = vec![0f32; v.len()];
+            q.decode_into(&msg, &mut out);
+            v.iter()
+                .zip(&out)
+                .map(|(&a, &b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+                / v.len() as f64
+        };
+        let small = mse_of(128, &mut rng);
+        let huge = mse_of(8192, &mut rng);
+        assert!(small < huge / 4.0, "bucket128 {small} vs whole {huge}");
+    }
+
+    #[test]
+    fn sign_preserved_for_large_coords() {
+        let q = Qsgd::new(4);
+        let mut rng = Rng::new(5);
+        let v = [10.0f32, -10.0, 0.0, 5.0];
+        let msg = q.encode(&v, &mut rng);
+        let mut out = [0f32; 4];
+        q.decode_into(&msg, &mut out);
+        assert!(out[0] > 0.0 && out[1] < 0.0 && out[3] > 0.0);
+    }
+
+    #[test]
+    fn accumulate_matches_decode() {
+        let q = Qsgd::with_bucket(3, 50);
+        let mut rng = Rng::new(6);
+        let mut v = vec![0f32; 128];
+        rng.fill_normal_f32(&mut v, 0.0, 1.0);
+        let msg = q.encode(&v, &mut rng);
+        let mut a = vec![0.5f32; v.len()];
+        let mut b = vec![0f32; v.len()];
+        q.decode_accumulate(&msg, &mut a);
+        q.decode_into(&msg, &mut b);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y - 0.5).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,425 @@
+//! Rate-constrained quantizer design — the paper's core contribution
+//! (§3.2, eqs. (5)–(10)).
+//!
+//! Minimizes `MSE_Q(Z) + λ·R_Q(Z)` by alternating the two marginal
+//! updates:
+//!
+//! * **levels** (eq. (8)) — the rate term does not depend on `s_l`, so the
+//!   marginal problem is the classic Lloyd centroid;
+//! * **boundaries** (eq. (10)) — continuity of the piecewise integrand at
+//!   `u_l` gives the midpoint *shifted toward the level with the longer
+//!   codeword*:
+//!   `u_l = (s_l + s_{l-1})/2 + (λ/2)·(ℓ_l − ℓ_{l-1})/(s_l − s_{l-1})`,
+//!
+//! with the codeword lengths `ℓ_l` recomputed each sweep from the current
+//! cell probabilities — either true integer Huffman lengths (what the wire
+//! coder will realize) or the idealized `−log₂ p_l` (what an arithmetic
+//! coder approaches). The constrained form (5) (`R_Q ≤ R^trg`) is solved
+//! by bisecting λ.
+
+use crate::coding::huffman::HuffmanCode;
+use crate::quant::codebook::Codebook;
+use crate::quant::lloyd::{enforce_monotone, init_levels, midpoints};
+use crate::quant::{evaluate, DesignReport};
+use crate::stats::entropy::{entropy_bits, ideal_lengths};
+use crate::stats::SourcePdf;
+use crate::util::Result;
+
+/// How codeword lengths `ℓ_l` are modeled inside the design loop.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LengthModel {
+    /// true integer Huffman lengths (matches the wire coder)
+    Huffman,
+    /// idealized `ℓ_l = −log₂ p_l` (Shannon/arithmetic-coding lengths)
+    Ideal,
+}
+
+/// Rate-constrained Lloyd-Max designer.
+#[derive(Clone, Copy, Debug)]
+pub struct RateConstrainedQuantizer {
+    /// distortion–rate trade-off multiplier λ ≥ 0 of eq. (6)
+    pub lambda: f64,
+    pub length_model: LengthModel,
+    pub max_iters: usize,
+    /// relative improvement threshold on the Lagrangian `MSE + λR`
+    pub tol: f64,
+}
+
+impl Default for RateConstrainedQuantizer {
+    fn default() -> Self {
+        RateConstrainedQuantizer {
+            lambda: 0.05,
+            length_model: LengthModel::Huffman,
+            max_iters: 300,
+            tol: 1e-10,
+        }
+    }
+}
+
+impl RateConstrainedQuantizer {
+    pub fn new(lambda: f64) -> Self {
+        RateConstrainedQuantizer { lambda, ..Default::default() }
+    }
+
+    /// Codeword lengths for the current cell probabilities.
+    fn lengths(&self, probs: &[f64]) -> Result<Vec<f64>> {
+        match self.length_model {
+            LengthModel::Huffman => {
+                let code = HuffmanCode::from_probs(probs)?;
+                Ok(code.lengths().iter().map(|&l| l as f64).collect())
+            }
+            LengthModel::Ideal => Ok(ideal_lengths(probs, 1e-12)),
+        }
+    }
+
+    /// Design a `2^bits`-level rate-constrained quantizer for `pdf`.
+    ///
+    /// Tracks the best Lagrangian seen: with integer Huffman lengths the
+    /// alternating updates can cycle, so the returned codebook is the
+    /// best iterate, not the last.
+    pub fn design(
+        &self,
+        pdf: &dyn SourcePdf,
+        bits: u32,
+    ) -> Result<(Codebook, DesignReport)> {
+        let n = 1usize << bits;
+        let (lo, hi) = pdf.support();
+        let mut levels = init_levels(pdf, n);
+        let mut bounds = midpoints(&levels);
+        let mut best: Option<(f64, Codebook)> = None;
+        let mut prev_obj = f64::INFINITY;
+        let mut iters = 0;
+        for it in 0..self.max_iters {
+            iters = it + 1;
+            // cell probabilities under current boundaries
+            let probs = cell_probs(pdf, &bounds);
+            // codeword lengths ℓ_l from the entropy coder model
+            let lens = self.lengths(&probs)?;
+            // (8): centroid step (rate term independent of levels)
+            for l in 0..n {
+                let a = if l == 0 { f64::NEG_INFINITY } else { bounds[l - 1] };
+                let b = if l == n - 1 { f64::INFINITY } else { bounds[l] };
+                levels[l] = pdf.centroid(a, b);
+            }
+            enforce_monotone(&mut levels);
+            // (10): shifted-midpoint boundary step
+            for l in 1..n {
+                let mid = 0.5 * (levels[l] + levels[l - 1]);
+                let gap = levels[l] - levels[l - 1];
+                let shift = if gap.abs() > 1e-12 {
+                    0.5 * self.lambda * (lens[l] - lens[l - 1]) / gap
+                } else {
+                    0.0
+                };
+                bounds[l - 1] = (mid + shift).clamp(lo, hi);
+            }
+            repair_bounds(&mut bounds, lo, hi);
+            // Lagrangian objective on this iterate
+            let cb = Codebook::from_f64_sanitized(&levels, &bounds)?;
+            let (mse, probs) = evaluate(pdf, &cb);
+            let lens = self.lengths(&probs)?;
+            let rate: f64 = probs
+                .iter()
+                .zip(&lens)
+                .map(|(&p, &l)| p * l)
+                .sum();
+            let obj = mse + self.lambda * rate;
+            if best.as_ref().map(|(b, _)| obj < *b).unwrap_or(true) {
+                best = Some((obj, cb));
+            }
+            if (prev_obj - obj).abs() <= self.tol * obj.abs().max(1e-300) {
+                break;
+            }
+            prev_obj = obj;
+        }
+        let (_, cb) = best.expect("at least one iterate");
+        let (mse, probs) = evaluate(pdf, &cb);
+        let huff = HuffmanCode::from_probs(&probs)?;
+        Ok((
+            cb,
+            DesignReport {
+                mse,
+                entropy_bits: entropy_bits(&probs),
+                huffman_rate: huff.expected_length(&probs),
+                probs,
+                iterations: iters,
+            },
+        ))
+    }
+
+    /// Solve the constrained form (5): smallest distortion with
+    /// `R_Q(Z) ≤ r_target` (bits/symbol), by bisection on λ.
+    ///
+    /// Returns the designed codebook, its report, and the λ found.
+    pub fn design_for_target_rate(
+        pdf: &dyn SourcePdf,
+        bits: u32,
+        r_target: f64,
+        length_model: LengthModel,
+    ) -> Result<(Codebook, DesignReport, f64)> {
+        let rate_of = |rep: &DesignReport| match length_model {
+            LengthModel::Huffman => rep.huffman_rate,
+            LengthModel::Ideal => rep.entropy_bits,
+        };
+        // λ = 0: unconstrained (max rate). If already under target, done.
+        let mut rc = RateConstrainedQuantizer {
+            lambda: 0.0,
+            length_model,
+            ..Default::default()
+        };
+        let (cb0, rep0) = rc.design(pdf, bits)?;
+        if rate_of(&rep0) <= r_target {
+            return Ok((cb0, rep0, 0.0));
+        }
+        // grow an upper bracket
+        let mut lam_hi = 0.05;
+        let mut hi_result = None;
+        for _ in 0..20 {
+            rc.lambda = lam_hi;
+            let (cb, rep) = rc.design(pdf, bits)?;
+            if rate_of(&rep) <= r_target {
+                hi_result = Some((cb, rep));
+                break;
+            }
+            lam_hi *= 2.0;
+        }
+        let mut hi_result = hi_result.ok_or_else(|| {
+            crate::util::Error::Quant(format!(
+                "target rate {r_target} unreachable at b={bits}"))
+        })?;
+        let mut lam_lo = 0.0;
+        let mut lam = lam_hi;
+        // bisection: smallest λ meeting the constraint (min distortion)
+        for _ in 0..24 {
+            let mid = 0.5 * (lam_lo + lam_hi);
+            rc.lambda = mid;
+            let (cb, rep) = rc.design(pdf, bits)?;
+            if rate_of(&rep) <= r_target {
+                lam_hi = mid;
+                lam = mid;
+                hi_result = (cb, rep);
+            } else {
+                lam_lo = mid;
+            }
+            if lam_hi - lam_lo < 1e-5 {
+                break;
+            }
+        }
+        let (cb, rep) = hi_result;
+        Ok((cb, rep, lam))
+    }
+}
+
+/// Probability of each cell induced by `bounds` (with ±∞ outer edges).
+pub fn cell_probs(pdf: &dyn SourcePdf, bounds: &[f64]) -> Vec<f64> {
+    let n = bounds.len() + 1;
+    (0..n)
+        .map(|l| {
+            let a = if l == 0 { f64::NEG_INFINITY } else { bounds[l - 1] };
+            let b = if l == n - 1 { f64::INFINITY } else { bounds[l] };
+            pdf.prob(a, b)
+        })
+        .collect()
+}
+
+/// Repair strict monotonicity after the shifted-midpoint step; λ large
+/// enough can fold neighbouring boundaries over each other.
+fn repair_bounds(bounds: &mut [f64], lo: f64, hi: f64) {
+    let n = bounds.len();
+    if n == 0 {
+        return;
+    }
+    let eps = (hi - lo).max(1e-6) * 1e-9;
+    bounds[0] = bounds[0].clamp(lo, hi);
+    for i in 1..n {
+        if bounds[i] <= bounds[i - 1] {
+            bounds[i] = bounds[i - 1] + eps;
+        }
+        bounds[i] = bounds[i].clamp(lo, hi);
+    }
+    // a final backward pass in case clamping at hi collapsed the tail
+    for i in (0..n - 1).rev() {
+        if bounds[i] >= bounds[i + 1] {
+            bounds[i] = bounds[i + 1] - eps;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::lloyd::LloydMax;
+    use crate::stats::gaussian::{differential_entropy_bits, StdGaussian};
+
+    #[test]
+    fn lambda_zero_reduces_to_lloyd() {
+        let rc = RateConstrainedQuantizer {
+            lambda: 0.0,
+            ..Default::default()
+        };
+        let (cb_rc, rep_rc) = rc.design(&StdGaussian, 3).unwrap();
+        let (cb_ll, rep_ll) = LloydMax::default().design(&StdGaussian, 3).unwrap();
+        assert!((rep_rc.mse - rep_ll.mse).abs() < 1e-6);
+        for (a, b) in cb_rc.levels.iter().zip(&cb_ll.levels) {
+            assert!((a - b).abs() < 1e-3, "{cb_rc:?} vs {cb_ll:?}");
+        }
+    }
+
+    #[test]
+    fn rate_decreases_and_mse_increases_with_lambda() {
+        let mut last_rate = f64::INFINITY;
+        let mut last_mse = 0.0;
+        for &lam in &[0.0, 0.02, 0.05, 0.1, 0.3] {
+            let rc = RateConstrainedQuantizer {
+                lambda: lam,
+                length_model: LengthModel::Ideal,
+                ..Default::default()
+            };
+            let (_, rep) = rc.design(&StdGaussian, 3).unwrap();
+            assert!(
+                rep.entropy_bits <= last_rate + 1e-6,
+                "rate not decreasing at λ={lam}: {} > {last_rate}",
+                rep.entropy_bits
+            );
+            assert!(
+                rep.mse >= last_mse - 1e-9,
+                "mse not increasing at λ={lam}"
+            );
+            last_rate = rep.entropy_bits;
+            last_mse = rep.mse;
+        }
+        // a strict gap end-to-end
+        let rc0 = RateConstrainedQuantizer {
+            lambda: 0.0,
+            length_model: LengthModel::Ideal,
+            ..Default::default()
+        };
+        let rc3 = RateConstrainedQuantizer {
+            lambda: 0.3,
+            length_model: LengthModel::Ideal,
+            ..Default::default()
+        };
+        let (_, r0) = rc0.design(&StdGaussian, 3).unwrap();
+        let (_, r3) = rc3.design(&StdGaussian, 3).unwrap();
+        assert!(r3.entropy_bits < r0.entropy_bits - 0.05);
+    }
+
+    #[test]
+    fn boundaries_shift_toward_longer_codeword() {
+        // paper §3.2: "u_l is shifted towards the reconstruction level
+        // associated with the longer codeword", shrinking rare cells.
+        let rc = RateConstrainedQuantizer {
+            lambda: 0.05,
+            length_model: LengthModel::Huffman,
+            ..Default::default()
+        };
+        let (cb, rep) = rc.design(&StdGaussian, 3).unwrap();
+        let code = HuffmanCode::from_probs(&rep.probs).unwrap();
+        let lens = code.lengths();
+        // recompute what the unshifted midpoints would be
+        let levels: Vec<f64> = cb.levels.iter().map(|&x| x as f64).collect();
+        let mids = midpoints(&levels);
+        let mut checked = 0;
+        for l in 1..cb.levels.len() {
+            let shift = cb.bounds[l - 1] as f64 - mids[l - 1];
+            let dlen = lens[l] as i64 - lens[l - 1] as i64;
+            if dlen != 0 && shift.abs() > 1e-9 {
+                assert_eq!(
+                    shift.signum() as i64,
+                    dlen.signum(),
+                    "boundary {l}: shift {shift} vs Δℓ {dlen}"
+                );
+                checked += 1;
+            }
+        }
+        assert!(checked > 0, "no informative boundaries");
+    }
+
+    #[test]
+    fn target_rate_constraint_is_met() {
+        for &target in &[2.5, 2.0, 1.5] {
+            let (_, rep, lam) =
+                RateConstrainedQuantizer::design_for_target_rate(
+                    &StdGaussian, 3, target, LengthModel::Ideal)
+                .unwrap();
+            assert!(
+                rep.entropy_bits <= target + 1e-3,
+                "target={target} got {}", rep.entropy_bits
+            );
+            // shouldn't be wildly over-constrained either
+            assert!(
+                rep.entropy_bits > target - 0.5,
+                "target={target} got {} (λ={lam})", rep.entropy_bits
+            );
+        }
+    }
+
+    #[test]
+    fn target_rate_zero_is_unreachable() {
+        assert!(RateConstrainedQuantizer::design_for_target_rate(
+            &StdGaussian, 3, 0.0, LengthModel::Ideal)
+        .is_err());
+    }
+
+    #[test]
+    fn high_rate_distortion_matches_eq20() {
+        // paper eq. (20): MSE ≈ (1/12) 2^{2h(Z)} 2^{-2R} in the high-rate
+        // regime. At b=6 with mild λ the ratio should be near 1.
+        let rc = RateConstrainedQuantizer {
+            lambda: 0.002,
+            length_model: LengthModel::Ideal,
+            ..Default::default()
+        };
+        let (_, rep) = rc.design(&StdGaussian, 6).unwrap();
+        let h = differential_entropy_bits(1.0);
+        let predicted =
+            (1.0 / 12.0) * 2f64.powf(2.0 * h) * 2f64.powf(-2.0 * rep.entropy_bits);
+        let ratio = rep.mse / predicted;
+        assert!(
+            (0.5..2.0).contains(&ratio),
+            "mse={} predicted={predicted} ratio={ratio}",
+            rep.mse
+        );
+    }
+
+    #[test]
+    fn huffman_model_rate_is_realizable() {
+        // designed huffman_rate equals what the actual wire code achieves
+        let rc = RateConstrainedQuantizer::new(0.05);
+        let (_, rep) = rc.design(&StdGaussian, 3).unwrap();
+        let code = HuffmanCode::from_probs(&rep.probs).unwrap();
+        let realized = code.expected_length(&rep.probs);
+        assert!((realized - rep.huffman_rate).abs() < 1e-9);
+        assert!(rep.huffman_rate >= rep.entropy_bits - 1e-9);
+        assert!(rep.huffman_rate <= rep.entropy_bits + 1.0);
+    }
+
+    #[test]
+    fn stable_under_large_lambda() {
+        // large λ collapses to (nearly) one live cell; must not panic or
+        // produce invalid codebooks
+        let rc = RateConstrainedQuantizer {
+            lambda: 5.0,
+            length_model: LengthModel::Ideal,
+            ..Default::default()
+        };
+        let (cb, rep) = rc.design(&StdGaussian, 3).unwrap();
+        cb.validate().unwrap();
+        assert!(rep.entropy_bits < 1.5);
+    }
+
+    #[test]
+    fn works_on_empirical_pdf() {
+        use crate::stats::empirical::EmpiricalPdf;
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(31);
+        let mut z = vec![0f32; 50_000];
+        rng.fill_normal_f32(&mut z, 0.0, 1.0);
+        let emp = EmpiricalPdf::from_samples(&z);
+        let rc = RateConstrainedQuantizer::new(0.05);
+        let (cb, rep) = rc.design(&emp, 3).unwrap();
+        cb.validate().unwrap();
+        let (_, rep_g) = rc.design(&StdGaussian, 3).unwrap();
+        assert!((rep.entropy_bits - rep_g.entropy_bits).abs() < 0.15);
+    }
+}

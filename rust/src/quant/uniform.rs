@@ -1,0 +1,53 @@
+//! Plain uniform (mid-rise) scalar quantizer over a clipped range.
+//! Reference point for the rate–distortion benches and the simplest
+//! possible baseline.
+
+use crate::quant::codebook::Codebook;
+use crate::util::Result;
+
+/// `2^bits` levels uniformly spaced over `[−clip, clip]` (mid-rise:
+/// levels at cell centers).
+pub fn uniform_codebook(bits: u32, clip: f64) -> Result<Codebook> {
+    assert!(clip > 0.0);
+    let n = 1usize << bits;
+    let step = 2.0 * clip / n as f64;
+    let levels: Vec<f64> =
+        (0..n).map(|l| -clip + (l as f64 + 0.5) * step).collect();
+    let bounds: Vec<f64> =
+        (1..n).map(|l| -clip + l as f64 * step).collect();
+    Codebook::from_f64(&levels, &bounds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::evaluate;
+    use crate::stats::gaussian::StdGaussian;
+
+    #[test]
+    fn structure() {
+        let cb = uniform_codebook(2, 2.0).unwrap();
+        assert_eq!(cb.levels, vec![-1.5, -0.5, 0.5, 1.5]);
+        assert_eq!(cb.bounds, vec![-1.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn step_shrinks_with_bits() {
+        let c3 = uniform_codebook(3, 4.0).unwrap();
+        let c6 = uniform_codebook(6, 4.0).unwrap();
+        let gap3 = c3.levels[1] - c3.levels[0];
+        let gap6 = c6.levels[1] - c6.levels[0];
+        assert!((gap3 / gap6 - 8.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn high_rate_mse_matches_step_squared_over_12() {
+        // in-range distortion ≈ Δ²/12 for fine uniform quantization
+        let clip = 6.0;
+        let cb = uniform_codebook(8, clip).unwrap();
+        let (mse, _) = evaluate(&StdGaussian, &cb);
+        let step = 2.0 * clip / 256.0;
+        let want = step * step / 12.0;
+        assert!((mse / want - 1.0).abs() < 0.05, "mse={mse} want={want}");
+    }
+}

@@ -1,0 +1,284 @@
+//! Artifact manifest — the contract between `python/compile/aot.py` and
+//! the rust runtime. Parsed with the in-tree JSON codec.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+use crate::util::{Error, Result};
+
+/// Dtype of a tensor crossing the PJRT boundary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => Err(Error::Artifact(format!("unknown dtype {other:?}"))),
+        }
+    }
+}
+
+/// Shape + dtype of one executable input/output.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Json) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            shape: v.req("shape")?.usize_array()?,
+            dtype: Dtype::parse(v.req("dtype")?.as_str()?)?,
+        })
+    }
+}
+
+/// One AOT-compiled graph.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// HLO text file, relative to the artifact dir
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// One parameter tensor of a model (name + shape, manifest order).
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Model inventory: parameter list (in wire order) + graph names.
+#[derive(Clone, Debug)]
+pub struct ModelManifest {
+    pub name: String,
+    pub kind: String,
+    pub input_shape: Vec<usize>,
+    pub num_classes: usize,
+    pub batch: usize,
+    pub num_params: usize,
+    pub params: Vec<ParamSpec>,
+    pub train: String,
+    pub eval: String,
+}
+
+/// Parsed `manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    /// gradient chunk length fed to the quantize kernels
+    pub chunk: usize,
+    /// Pallas block size inside a chunk
+    pub block: usize,
+    /// exported quantizer bit-widths
+    pub bits: Vec<usize>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub models: BTreeMap<String, ModelManifest>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {} (run `make artifacts`?): {e}",
+                path.display()
+            ))
+        })?;
+        let v = Json::parse(&text)?;
+        let version = v.req("version")?.as_usize()?;
+        if version != 1 {
+            return Err(Error::Artifact(format!(
+                "manifest version {version} unsupported")));
+        }
+        let mut artifacts = BTreeMap::new();
+        for (name, art) in v.req("artifacts")?.as_obj()? {
+            let inputs = art
+                .req("inputs")?
+                .as_arr()?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = art
+                .req("outputs")?
+                .as_arr()?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    file: art.req("file")?.as_str()?.to_string(),
+                    inputs,
+                    outputs,
+                },
+            );
+        }
+        let mut models = BTreeMap::new();
+        for (name, m) in v.req("models")?.as_obj()? {
+            let params = m
+                .req("params")?
+                .as_arr()?
+                .iter()
+                .map(|p| {
+                    Ok(ParamSpec {
+                        name: p.req("name")?.as_str()?.to_string(),
+                        shape: p.req("shape")?.usize_array()?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            models.insert(
+                name.clone(),
+                ModelManifest {
+                    name: name.clone(),
+                    kind: m.req("kind")?.as_str()?.to_string(),
+                    input_shape: m.req("input_shape")?.usize_array()?,
+                    num_classes: m.req("num_classes")?.as_usize()?,
+                    batch: m.req("batch")?.as_usize()?,
+                    num_params: m.req("num_params")?.as_usize()?,
+                    params,
+                    train: m.req("train")?.as_str()?.to_string(),
+                    eval: m.req("eval")?.as_str()?.to_string(),
+                },
+            );
+        }
+        Ok(Manifest { dir, chunk: v.req("chunk")?.as_usize()?,
+                      block: v.req("block")?.as_usize()?,
+                      bits: v.req("bits")?.usize_array()?,
+                      artifacts, models })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts.get(name).ok_or_else(|| {
+            Error::Artifact(format!("unknown artifact {name:?}"))
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelManifest> {
+        self.models
+            .get(name)
+            .ok_or_else(|| Error::Artifact(format!("unknown model {name:?}")))
+    }
+
+    /// Absolute path of an artifact's HLO text.
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.artifact(name)?.file))
+    }
+
+    /// Consistency check: every artifact file exists, every model's
+    /// train/eval graph is present and has the right arity.
+    pub fn validate(&self) -> Result<()> {
+        for (name, art) in &self.artifacts {
+            let p = self.dir.join(&art.file);
+            if !p.exists() {
+                return Err(Error::Artifact(format!(
+                    "{name}: missing file {}", p.display())));
+            }
+        }
+        for (name, m) in &self.models {
+            let total: usize = m.params.iter().map(|p| p.numel()).sum();
+            if total != m.num_params {
+                return Err(Error::Artifact(format!(
+                    "{name}: param inventory {total} != {}", m.num_params)));
+            }
+            let train = self.artifact(&m.train)?;
+            if train.inputs.len() != m.params.len() + 2
+                || train.outputs.len() != m.params.len() + 1
+            {
+                return Err(Error::Artifact(format!(
+                    "{name}: train graph arity mismatch")));
+            }
+            self.artifact(&m.eval)?;
+        }
+        if self.chunk % self.block != 0 {
+            return Err(Error::Artifact("chunk % block != 0".into()));
+        }
+        Ok(())
+    }
+}
+
+/// Default artifact directory: `$RCFED_ARTIFACTS` or `artifacts/` relative
+/// to the workspace root (where `cargo run`/tests execute).
+pub fn default_dir() -> PathBuf {
+    std::env::var_os("RCFED_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The real manifest produced by `make artifacts` (tests run from the
+    /// workspace root).
+    fn load_real() -> Option<Manifest> {
+        Manifest::load(default_dir()).ok()
+    }
+
+    #[test]
+    fn parses_and_validates_real_manifest() {
+        let Some(man) = load_real() else {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        };
+        man.validate().unwrap();
+        assert!(man.chunk >= man.block);
+        assert!(man.bits.contains(&3) && man.bits.contains(&6));
+        assert!(man.artifacts.contains_key("moments"));
+        for b in &man.bits {
+            assert!(man.artifacts.contains_key(&format!("quantize_b{b}")));
+            assert!(man.artifacts.contains_key(&format!("dequantize_b{b}")));
+        }
+    }
+
+    #[test]
+    fn quantize_artifact_shapes_consistent() {
+        let Some(man) = load_real() else { return };
+        for &b in &man.bits {
+            let art = man.artifact(&format!("quantize_b{b}")).unwrap();
+            assert_eq!(art.inputs[0].shape, vec![man.chunk]);
+            assert_eq!(art.inputs[3].shape, vec![(1 << b) - 1]);
+            assert_eq!(art.inputs[4].shape, vec![1 << b]);
+            assert_eq!(art.outputs[0].dtype, Dtype::F32);
+            assert_eq!(art.outputs[1].dtype, Dtype::I32);
+        }
+    }
+
+    #[test]
+    fn model_manifests_have_param_inventories() {
+        let Some(man) = load_real() else { return };
+        for (name, m) in &man.models {
+            assert!(!m.params.is_empty(), "{name}");
+            assert!(m.num_params > 0);
+            assert!(man.artifacts.contains_key(&m.train), "{name}");
+        }
+    }
+
+    #[test]
+    fn missing_manifest_is_a_clean_error() {
+        let err = Manifest::load("/nonexistent/dir").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

@@ -1,0 +1,252 @@
+//! Host-side tensor plumbing: flatten/unflatten model parameters against
+//! the manifest order and build/unpack `xla::Literal`s.
+
+use crate::runtime::artifacts::{Dtype, ModelManifest, TensorSpec};
+use crate::util::{Error, Result};
+
+/// A host-side tensor crossing the PJRT boundary.
+#[derive(Clone, Debug)]
+pub enum HostTensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl HostTensor {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32(_, s) | HostTensor::I32(_, s) => s,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            HostTensor::F32(..) => Dtype::F32,
+            HostTensor::I32(..) => Dtype::I32,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32(v, _) => Ok(v),
+            _ => Err(Error::Artifact("expected f32 tensor".into())),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32(v, _) => Ok(v),
+            _ => Err(Error::Artifact("expected i32 tensor".into())),
+        }
+    }
+
+    /// Build an `xla::Literal` with this tensor's shape.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> =
+            self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostTensor::F32(v, _) => xla::Literal::vec1(v).reshape(&dims)?,
+            HostTensor::I32(v, _) => xla::Literal::vec1(v).reshape(&dims)?,
+        };
+        Ok(lit)
+    }
+
+    /// Read a literal back into a host tensor matching `spec`.
+    pub fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<HostTensor> {
+        Ok(match spec.dtype {
+            Dtype::F32 => HostTensor::F32(lit.to_vec::<f32>()?, spec.shape.clone()),
+            Dtype::I32 => HostTensor::I32(lit.to_vec::<i32>()?, spec.shape.clone()),
+        })
+    }
+
+    /// Validate against an expected spec.
+    pub fn check(&self, spec: &TensorSpec) -> Result<()> {
+        if self.shape() != spec.shape.as_slice() || self.dtype() != spec.dtype {
+            return Err(Error::Artifact(format!(
+                "tensor mismatch: got {:?}/{:?}, want {:?}/{:?}",
+                self.shape(), self.dtype(), spec.shape, spec.dtype)));
+        }
+        Ok(())
+    }
+}
+
+/// Model parameters as per-tensor f32 buffers in manifest order.
+#[derive(Clone, Debug)]
+pub struct ParamSet {
+    pub tensors: Vec<Vec<f32>>,
+    shapes: Vec<Vec<usize>>,
+}
+
+impl ParamSet {
+    /// Zero-initialized parameter set matching `model`.
+    pub fn zeros(model: &ModelManifest) -> ParamSet {
+        ParamSet {
+            tensors: model.params.iter().map(|p| vec![0.0; p.numel()]).collect(),
+            shapes: model.params.iter().map(|p| p.shape.clone()).collect(),
+        }
+    }
+
+    /// He/Kaiming-style init matching `python/compile/model.py` in spirit
+    /// (weights ~ N(0, 2/fan_in), biases zero). Seeds are deterministic.
+    pub fn he_init(model: &ModelManifest, seed: u64) -> ParamSet {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let mut out = ParamSet::zeros(model);
+        for (t, p) in out.tensors.iter_mut().zip(&model.params) {
+            let is_bias = p.shape.len() == 1;
+            if is_bias {
+                continue;
+            }
+            let fan_in: usize =
+                p.shape[..p.shape.len() - 1].iter().product::<usize>().max(1);
+            let scale = (2.0 / fan_in as f64).sqrt() as f32;
+            rng.fill_normal_f32(t, 0.0, scale);
+        }
+        out
+    }
+
+    pub fn num_tensors(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn total_len(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+
+    /// Concatenate all tensors into one flat gradient/parameter vector
+    /// (the order the compression pipeline and manifest agree on).
+    pub fn flatten(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.total_len());
+        for t in &self.tensors {
+            out.extend_from_slice(t);
+        }
+        out
+    }
+
+    /// Inverse of [`flatten`].
+    pub fn unflatten_from(&mut self, flat: &[f32]) -> Result<()> {
+        if flat.len() != self.total_len() {
+            return Err(Error::Artifact(format!(
+                "flat length {} != param total {}",
+                flat.len(), self.total_len())));
+        }
+        let mut off = 0;
+        for t in self.tensors.iter_mut() {
+            let n = t.len();
+            t.copy_from_slice(&flat[off..off + n]);
+            off += n;
+        }
+        Ok(())
+    }
+
+    /// SGD step: `p ← p − lr * g` over flat gradients.
+    pub fn sgd_step(&mut self, flat_grad: &[f32], lr: f32) -> Result<()> {
+        if flat_grad.len() != self.total_len() {
+            return Err(Error::Artifact("gradient/param length mismatch".into()));
+        }
+        let mut off = 0;
+        for t in self.tensors.iter_mut() {
+            for x in t.iter_mut() {
+                *x -= lr * flat_grad[off];
+                off += 1;
+            }
+        }
+        Ok(())
+    }
+
+    /// As PJRT inputs (in manifest order).
+    pub fn to_host_tensors(&self) -> Vec<HostTensor> {
+        self.tensors
+            .iter()
+            .zip(&self.shapes)
+            .map(|(t, s)| HostTensor::F32(t.clone(), s.clone()))
+            .collect()
+    }
+}
+
+/// Pad `v` to a multiple of `chunk` with zeros; returns (padded, orig_len).
+pub fn pad_to_chunks(v: &[f32], chunk: usize) -> (Vec<f32>, usize) {
+    let n = v.len();
+    let padded_len = n.div_ceil(chunk) * chunk;
+    let mut out = Vec::with_capacity(padded_len);
+    out.extend_from_slice(v);
+    out.resize(padded_len, 0.0);
+    (out, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts::ParamSpec;
+
+    fn fake_model() -> ModelManifest {
+        ModelManifest {
+            name: "m".into(),
+            kind: "mlp".into(),
+            input_shape: vec![4],
+            num_classes: 2,
+            batch: 8,
+            num_params: 4 * 3 + 3,
+            params: vec![
+                ParamSpec { name: "w0".into(), shape: vec![4, 3] },
+                ParamSpec { name: "b0".into(), shape: vec![3] },
+            ],
+            train: "t".into(),
+            eval: "e".into(),
+        }
+    }
+
+    #[test]
+    fn flatten_roundtrip() {
+        let m = fake_model();
+        let mut p = ParamSet::he_init(&m, 7);
+        let flat = p.flatten();
+        assert_eq!(flat.len(), 15);
+        let mut p2 = ParamSet::zeros(&m);
+        p2.unflatten_from(&flat).unwrap();
+        assert_eq!(p2.flatten(), flat);
+        // biases stay zero under he_init
+        assert!(p.tensors[1].iter().all(|&x| x == 0.0));
+        // weights are non-trivial
+        assert!(p.tensors[0].iter().any(|&x| x != 0.0));
+        p.unflatten_from(&vec![1.0; 15]).unwrap();
+        assert!(p.tensors[0].iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn sgd_step_applies() {
+        let m = fake_model();
+        let mut p = ParamSet::zeros(&m);
+        let g = vec![2.0f32; 15];
+        p.sgd_step(&g, 0.5).unwrap();
+        assert!(p.flatten().iter().all(|&x| (x + 1.0).abs() < 1e-7));
+        assert!(p.sgd_step(&[0.0; 3], 0.5).is_err());
+    }
+
+    #[test]
+    fn pad_to_chunks_works() {
+        let (p, n) = pad_to_chunks(&[1.0, 2.0, 3.0], 4);
+        assert_eq!(n, 3);
+        assert_eq!(p, vec![1.0, 2.0, 3.0, 0.0]);
+        let (p, _) = pad_to_chunks(&[1.0; 8], 4);
+        assert_eq!(p.len(), 8);
+        let (p, _) = pad_to_chunks(&[], 4);
+        assert!(p.is_empty());
+    }
+
+    #[test]
+    fn host_tensor_checks() {
+        let t = HostTensor::F32(vec![0.0; 6], vec![2, 3]);
+        assert_eq!(t.numel(), 6);
+        t.check(&TensorSpec { shape: vec![2, 3], dtype: Dtype::F32 }).unwrap();
+        assert!(t
+            .check(&TensorSpec { shape: vec![3, 2], dtype: Dtype::F32 })
+            .is_err());
+        assert!(t
+            .check(&TensorSpec { shape: vec![2, 3], dtype: Dtype::I32 })
+            .is_err());
+        assert!(t.as_f32().is_ok() && t.as_i32().is_err());
+    }
+}

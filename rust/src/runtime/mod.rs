@@ -1,0 +1,11 @@
+//! PJRT runtime — loads the AOT artifacts (`artifacts/*.hlo.txt`) that
+//! `python/compile/aot.py` produced and executes them from the rust hot
+//! path. Python never runs at request time; the [`Engine`] is the only
+//! bridge between the coordinator and the compiled L1/L2 graphs.
+
+pub mod artifacts;
+pub mod host;
+pub mod pjrt;
+
+pub use artifacts::{ArtifactSpec, Manifest, ModelManifest, TensorSpec};
+pub use pjrt::Engine;

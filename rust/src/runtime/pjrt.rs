@@ -1,0 +1,112 @@
+//! PJRT execution engine.
+//!
+//! Wraps the `xla` crate's CPU PJRT client: loads HLO **text** artifacts
+//! (`HloModuleProto::from_text_file` — jax≥0.5 serialized protos are
+//! rejected by xla_extension 0.5.1, see DESIGN.md), compiles each once,
+//! and caches the loaded executable keyed by artifact name. All graphs
+//! are lowered with `return_tuple=True`, so outputs are unpacked from a
+//! single tuple literal.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::runtime::artifacts::Manifest;
+use crate::runtime::host::HostTensor;
+use crate::util::{Error, Result};
+
+/// Compiled-executable cache over one PJRT CPU client.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: std::cell::RefCell<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Engine {
+    /// Create a CPU engine over the given artifact directory.
+    pub fn new(manifest: Manifest) -> Result<Engine> {
+        manifest.validate()?;
+        let client = xla::PjRtClient::cpu()?;
+        crate::debug!(
+            "pjrt engine: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Engine { client, manifest, cache: Default::default() })
+    }
+
+    /// Load from the default artifact dir (`$RCFED_ARTIFACTS` or
+    /// `artifacts/`).
+    pub fn from_default_dir() -> Result<Engine> {
+        Engine::new(Manifest::load(crate::runtime::artifacts::default_dir())?)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Fetch (compiling and caching on first use) an executable.
+    pub fn executable(
+        &self,
+        name: &str,
+    ) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let path = self.manifest.hlo_path(name)?;
+        let t = crate::util::timer::Timer::start();
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Arc::new(self.client.compile(&comp)?);
+        crate::debug!("compiled {name} in {:.2}s", t.secs());
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of executables compiled so far (for tests/diagnostics).
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    /// Execute an artifact with host tensors; inputs are validated against
+    /// the manifest and outputs unpacked from the result tuple.
+    pub fn run(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let spec = self.manifest.artifact(name)?.clone();
+        if inputs.len() != spec.inputs.len() {
+            return Err(Error::Artifact(format!(
+                "{name}: {} inputs given, {} expected",
+                inputs.len(), spec.inputs.len())));
+        }
+        for (t, s) in inputs.iter().zip(&spec.inputs) {
+            t.check(s)?;
+        }
+        let exe = self.executable(name)?;
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<Vec<_>>>()?;
+        let result = exe.execute::<xla::Literal>(&lits)?;
+        let tuple = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| Error::Artifact(format!("{name}: empty result")))?
+            .to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        if parts.len() != spec.outputs.len() {
+            return Err(Error::Artifact(format!(
+                "{name}: {} outputs returned, {} expected",
+                parts.len(), spec.outputs.len())));
+        }
+        parts
+            .iter()
+            .zip(&spec.outputs)
+            .map(|(lit, s)| HostTensor::from_literal(lit, s))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Engine tests live in `rust/tests/pjrt_roundtrip.rs` (they need the
+    //! built artifacts and a PJRT client, which is process-global state
+    //! best exercised from integration tests).
+}

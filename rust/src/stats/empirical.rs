@@ -1,0 +1,149 @@
+//! Empirical source PDF over observed gradient samples.
+//!
+//! The paper designs the universal quantizer against the Gaussian limit of
+//! normalized gradients; this module provides the *empirical* alternative
+//! (sorted samples + prefix sums, exact partial moments in O(log n)) used
+//! by the `--pdf empirical` ablation and by tests that validate the
+//! Gaussian approximation against real gradients.
+
+use crate::stats::SourcePdf;
+
+/// Exact empirical distribution of a sample set.
+#[derive(Clone, Debug)]
+pub struct EmpiricalPdf {
+    sorted: Vec<f64>,
+    /// prefix[i] = sum of sorted[0..i]
+    prefix_z: Vec<f64>,
+    /// prefix of squares
+    prefix_z2: Vec<f64>,
+}
+
+impl EmpiricalPdf {
+    pub fn from_samples(samples: &[f32]) -> Self {
+        assert!(!samples.is_empty(), "empirical pdf needs samples");
+        let mut sorted: Vec<f64> =
+            samples.iter().map(|&x| x as f64).collect();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut prefix_z = Vec::with_capacity(sorted.len() + 1);
+        let mut prefix_z2 = Vec::with_capacity(sorted.len() + 1);
+        let (mut s, mut s2) = (0.0, 0.0);
+        prefix_z.push(0.0);
+        prefix_z2.push(0.0);
+        for &z in &sorted {
+            s += z;
+            s2 += z * z;
+            prefix_z.push(s);
+            prefix_z2.push(s2);
+        }
+        EmpiricalPdf { sorted, prefix_z, prefix_z2 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.sorted.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sorted.is_empty()
+    }
+
+    /// Number of samples `<= x` (upper bound index).
+    fn rank(&self, x: f64) -> usize {
+        if x == f64::INFINITY {
+            return self.sorted.len();
+        }
+        // partition_point = first index with sorted[i] > x
+        self.sorted.partition_point(|&z| z <= x)
+    }
+
+    pub fn quantile(&self, q: f64) -> f64 {
+        let n = self.sorted.len();
+        let i = ((q * n as f64) as usize).min(n - 1);
+        self.sorted[i]
+    }
+}
+
+impl SourcePdf for EmpiricalPdf {
+    fn prob(&self, a: f64, b: f64) -> f64 {
+        let (ra, rb) = (self.rank(a), self.rank(b));
+        (rb - ra) as f64 / self.sorted.len() as f64
+    }
+
+    fn partial_mean(&self, a: f64, b: f64) -> f64 {
+        let (ra, rb) = (self.rank(a), self.rank(b));
+        (self.prefix_z[rb] - self.prefix_z[ra]) / self.sorted.len() as f64
+    }
+
+    fn partial_second(&self, a: f64, b: f64) -> f64 {
+        let (ra, rb) = (self.rank(a), self.rank(b));
+        (self.prefix_z2[rb] - self.prefix_z2[ra]) / self.sorted.len() as f64
+    }
+
+    fn support(&self) -> (f64, f64) {
+        (
+            self.sorted[0] - 1e-9,
+            self.sorted[self.sorted.len() - 1] + 1e-9,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::gaussian::StdGaussian;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn total_moments() {
+        let samples = [1.0f32, 2.0, 3.0, 4.0];
+        let p = EmpiricalPdf::from_samples(&samples);
+        let inf = f64::INFINITY;
+        assert_eq!(p.prob(-inf, inf), 1.0);
+        assert!((p.partial_mean(-inf, inf) - 2.5).abs() < 1e-12);
+        assert!((p.partial_second(-inf, inf) - 7.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn half_open_cells() {
+        let samples = [1.0f32, 2.0, 3.0];
+        let p = EmpiricalPdf::from_samples(&samples);
+        // (1, 2] contains exactly {2}
+        assert!((p.prob(1.0, 2.0) - 1.0 / 3.0).abs() < 1e-12);
+        // (0, 1] contains {1}
+        assert!((p.prob(0.0, 1.0) - 1.0 / 3.0).abs() < 1e-12);
+        // boundary exactly on sample: (1,3] has {2,3}
+        assert!((p.prob(1.0, 3.0) - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn centroid_is_cell_mean() {
+        let samples = [0.0f32, 1.0, 10.0];
+        let p = EmpiricalPdf::from_samples(&samples);
+        assert!((p.centroid(-0.5, 1.5) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn converges_to_gaussian() {
+        // with many N(0,1) samples the empirical moments approach the
+        // closed-form Gaussian ones — the premise of the universal design
+        let mut rng = Rng::new(5);
+        let mut samples = vec![0f32; 200_000];
+        rng.fill_normal_f32(&mut samples, 0.0, 1.0);
+        let emp = EmpiricalPdf::from_samples(&samples);
+        let g = StdGaussian;
+        for (a, b) in [(-1.0, 1.0), (0.5, 2.0), (-3.0, -0.5)] {
+            assert!((emp.prob(a, b) - g.prob(a, b)).abs() < 0.01);
+            assert!(
+                (emp.partial_mean(a, b) - g.partial_mean(a, b)).abs() < 0.01
+            );
+        }
+    }
+
+    #[test]
+    fn quantiles() {
+        let samples: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        let p = EmpiricalPdf::from_samples(&samples);
+        assert_eq!(p.quantile(0.0), 0.0);
+        assert_eq!(p.quantile(0.5), 50.0);
+        assert_eq!(p.quantile(1.0), 99.0);
+    }
+}

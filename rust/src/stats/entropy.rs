@@ -1,0 +1,119 @@
+//! Discrete entropy / information helpers (bits).
+//!
+//! The RC design couples the quantizer to the *post-entropy-coding* rate:
+//! with an entropy coder the per-symbol cost is `H(Q(Z))` (paper §2,
+//! "Source-encoded Transmission"), and codeword lengths enter the
+//! alternating update (10) either as true Huffman lengths or as the
+//! idealized `ℓ_l = −log₂ p_l`.
+
+/// Shannon entropy of a probability vector, in bits. Zero entries are
+/// skipped (0·log 0 = 0). Input need not be normalized.
+pub fn entropy_bits(p: &[f64]) -> f64 {
+    let total: f64 = p.iter().sum();
+    if total <= 0.0 {
+        return 0.0;
+    }
+    let mut h = 0.0;
+    for &x in p {
+        if x > 0.0 {
+            let q = x / total;
+            h -= q * q.log2();
+        }
+    }
+    h
+}
+
+/// Average codeword length `Σ p_l ℓ_l` in bits (paper eq. (4)).
+pub fn expected_length_bits(p: &[f64], lens: &[f64]) -> f64 {
+    debug_assert_eq!(p.len(), lens.len());
+    let total: f64 = p.iter().sum();
+    if total <= 0.0 {
+        return 0.0;
+    }
+    p.iter().zip(lens).map(|(&x, &l)| x * l).sum::<f64>() / total
+}
+
+/// Idealized codeword lengths `ℓ_l = −log₂ p_l` (achievable by arithmetic
+/// coding; lower-bounds Huffman). Probabilities are floored to keep dead
+/// cells finite.
+pub fn ideal_lengths(p: &[f64], floor: f64) -> Vec<f64> {
+    let total: f64 = p.iter().sum::<f64>().max(f64::MIN_POSITIVE);
+    p.iter()
+        .map(|&x| -((x / total).max(floor)).log2())
+        .collect()
+}
+
+/// Empirical symbol distribution of a quantized message.
+pub fn symbol_histogram(symbols: &[u8], num_symbols: usize) -> Vec<f64> {
+    let mut counts = vec![0u64; num_symbols];
+    for &s in symbols {
+        counts[s as usize] += 1;
+    }
+    counts.iter().map(|&c| c as f64).collect()
+}
+
+/// KL divergence D(p || q) in bits; q entries are floored.
+pub fn kl_bits(p: &[f64], q: &[f64]) -> f64 {
+    let pt: f64 = p.iter().sum();
+    let qt: f64 = q.iter().sum();
+    let mut d = 0.0;
+    for (&pi, &qi) in p.iter().zip(q) {
+        if pi > 0.0 {
+            let pn = pi / pt;
+            let qn = (qi / qt).max(1e-300);
+            d += pn * (pn / qn).log2();
+        }
+    }
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_entropy() {
+        assert!((entropy_bits(&[0.25; 4]) - 2.0).abs() < 1e-12);
+        assert!((entropy_bits(&[1.0 / 8.0; 8]) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn deterministic_has_zero_entropy() {
+        assert_eq!(entropy_bits(&[1.0, 0.0, 0.0]), 0.0);
+    }
+
+    #[test]
+    fn unnormalized_ok() {
+        assert!((entropy_bits(&[2.0, 2.0]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ideal_lengths_achieve_entropy() {
+        let p = [0.5, 0.25, 0.125, 0.125];
+        let l = ideal_lengths(&p, 1e-12);
+        assert!((expected_length_bits(&p, &l) - entropy_bits(&p)).abs() < 1e-9);
+        assert!((l[0] - 1.0).abs() < 1e-9);
+        assert!((l[1] - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn expected_length_bounded_below_by_entropy() {
+        // any length assignment satisfying Kraft has E[ℓ] >= H
+        let p = [0.7, 0.15, 0.1, 0.05];
+        let huff_like = [1.0, 2.0, 3.0, 3.0];
+        assert!(expected_length_bits(&p, &huff_like) >= entropy_bits(&p) - 1e-9);
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let h = symbol_histogram(&[0, 0, 1, 3, 3, 3], 4);
+        assert_eq!(h, vec![2.0, 1.0, 0.0, 3.0]);
+    }
+
+    #[test]
+    fn kl_properties() {
+        let p = [0.5, 0.5];
+        assert!(kl_bits(&p, &p).abs() < 1e-12);
+        assert!(kl_bits(&p, &[0.9, 0.1]) > 0.0);
+    }
+}

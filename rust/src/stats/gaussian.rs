@@ -1,0 +1,299 @@
+//! Gaussian special functions and the standard-normal source PDF.
+//!
+//! RC-FED normalizes client gradients to ~N(0,1) (paper §3.1), so the
+//! universal quantizer is designed against the standard Gaussian. The
+//! closed-form partial moments here feed the Lloyd/RC alternating updates:
+//!
+//! * `P(a < Z <= b)        = Φ(b) − Φ(a)`
+//! * `∫_a^b z φ(z) dz      = φ(a) − φ(b)`
+//! * `∫_a^b z² φ(z) dz     = P(a,b) + a·φ(a) − b·φ(b)`
+
+use crate::stats::SourcePdf;
+
+pub const SQRT_2: f64 = std::f64::consts::SQRT_2;
+pub const INV_SQRT_2PI: f64 = 0.398_942_280_401_432_7;
+
+/// ln Γ(1/2) = ln √π.
+const LN_GAMMA_HALF: f64 = 0.5723649429247001;
+
+/// Regularized lower incomplete gamma `P(1/2, x)` by series expansion
+/// (for `x < 1.5`) — double-precision accurate.
+fn gamma_p_half_series(x: f64) -> f64 {
+    if x <= 0.0 {
+        return 0.0;
+    }
+    let a = 0.5;
+    let mut ap = a;
+    let mut del = 1.0 / a;
+    let mut sum = del;
+    for _ in 0..200 {
+        ap += 1.0;
+        del *= x / ap;
+        sum += del;
+        if del.abs() < sum.abs() * 1e-17 {
+            break;
+        }
+    }
+    sum * (-x + a * x.ln() - LN_GAMMA_HALF).exp()
+}
+
+/// Regularized upper incomplete gamma `Q(1/2, x)` by modified-Lentz
+/// continued fraction (for `x >= 1.5`).
+fn gamma_q_half_cf(x: f64) -> f64 {
+    const TINY: f64 = 1e-300;
+    let a = 0.5;
+    let mut b = x + 1.0 - a;
+    let mut c = 1.0 / TINY;
+    let mut d = 1.0 / b;
+    let mut h = d;
+    for i in 1..200 {
+        let an = -(i as f64) * (i as f64 - a);
+        b += 2.0;
+        d = an * d + b;
+        if d.abs() < TINY {
+            d = TINY;
+        }
+        c = b + an / c;
+        if c.abs() < TINY {
+            c = TINY;
+        }
+        d = 1.0 / d;
+        let del = d * c;
+        h *= del;
+        if (del - 1.0).abs() < 1e-16 {
+            break;
+        }
+    }
+    (-x + a * x.ln() - LN_GAMMA_HALF).exp() * h
+}
+
+/// Error function, double-precision accurate via the regularized
+/// incomplete gamma: `erf(x) = sign(x) · P(1/2, x²)`.
+pub fn erf(x: f64) -> f64 {
+    if x.is_infinite() {
+        return x.signum();
+    }
+    let x2 = x * x;
+    let p = if x2 < 1.5 {
+        gamma_p_half_series(x2)
+    } else {
+        1.0 - gamma_q_half_cf(x2)
+    };
+    if x >= 0.0 {
+        p
+    } else {
+        -p
+    }
+}
+
+/// Complementary error function (accurate in both tails).
+pub fn erfc(x: f64) -> f64 {
+    if x.is_infinite() {
+        return if x > 0.0 { 0.0 } else { 2.0 };
+    }
+    let x2 = x * x;
+    if x >= 0.0 {
+        if x2 < 1.5 {
+            1.0 - gamma_p_half_series(x2)
+        } else {
+            gamma_q_half_cf(x2)
+        }
+    } else if x2 < 1.5 {
+        1.0 + gamma_p_half_series(x2)
+    } else {
+        2.0 - gamma_q_half_cf(x2)
+    }
+}
+
+/// Standard normal density φ(z).
+#[inline]
+pub fn phi(z: f64) -> f64 {
+    INV_SQRT_2PI * (-0.5 * z * z).exp()
+}
+
+/// Standard normal CDF Φ(z).
+#[inline]
+pub fn cdf(z: f64) -> f64 {
+    0.5 * erfc(-z / SQRT_2)
+}
+
+/// Inverse standard normal CDF (Acklam's rational approximation,
+/// |rel err| < 1.15e-9), refined by one Halley step.
+pub fn inv_cdf(p: f64) -> f64 {
+    assert!((0.0..=1.0).contains(&p), "inv_cdf domain: {p}");
+    if p == 0.0 {
+        return f64::NEG_INFINITY;
+    }
+    if p == 1.0 {
+        return f64::INFINITY;
+    }
+    const A: [f64; 6] = [
+        -3.969683028665376e+01, 2.209460984245205e+02,
+        -2.759285104469687e+02, 1.383577518672690e+02,
+        -3.066479806614716e+01, 2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01, 1.615858368580409e+02,
+        -1.556989798598866e+02, 6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03, -3.223964580411365e-01,
+        -2.400758277161838e+00, -2.549732539343734e+00,
+        4.374664141464968e+00, 2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03, 3.224671290700398e-01,
+        2.445134137142996e+00, 3.754408661907416e+00,
+    ];
+    const P_LOW: f64 = 0.02425;
+    let x = if p < P_LOW {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - P_LOW {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5])
+            * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r
+                + 1.0)
+    } else {
+        let q = (-2.0 * (1.0 - p).ln()).sqrt();
+        -(((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    };
+    // one Halley refinement
+    let e = cdf(x) - p;
+    let u = e / phi(x);
+    x - u / (1.0 + 0.5 * x * u)
+}
+
+/// Differential entropy of N(0, σ²) in **bits**: ½ log₂(2πe σ²).
+pub fn differential_entropy_bits(sigma: f64) -> f64 {
+    0.5 * (2.0 * std::f64::consts::PI * std::f64::consts::E * sigma * sigma)
+        .log2()
+}
+
+/// The standard normal as a [`SourcePdf`] (the universal design target).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StdGaussian;
+
+impl SourcePdf for StdGaussian {
+    fn prob(&self, a: f64, b: f64) -> f64 {
+        (cdf(b) - cdf(a)).max(0.0)
+    }
+
+    fn partial_mean(&self, a: f64, b: f64) -> f64 {
+        let pa = if a.is_finite() { phi(a) } else { 0.0 };
+        let pb = if b.is_finite() { phi(b) } else { 0.0 };
+        pa - pb
+    }
+
+    fn partial_second(&self, a: f64, b: f64) -> f64 {
+        let ta = if a.is_finite() { a * phi(a) } else { 0.0 };
+        let tb = if b.is_finite() { b * phi(b) } else { 0.0 };
+        self.prob(a, b) + ta - tb
+    }
+
+    fn support(&self) -> (f64, f64) {
+        // ±8σ carries 1 - 1.2e-15 of the mass — beyond f32 resolution.
+        (-8.0, 8.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn erf_reference_values() {
+        // reference values from standard tables
+        let cases = [
+            (0.0, 0.0),
+            (0.5, 0.5204998778),
+            (1.0, 0.8427007929),
+            (2.0, 0.9953222650),
+            (-1.0, -0.8427007929),
+        ];
+        for (x, want) in cases {
+            assert!((erf(x) - want).abs() < 2e-7, "erf({x})");
+        }
+    }
+
+    #[test]
+    fn cdf_symmetry_and_values() {
+        assert!((cdf(0.0) - 0.5).abs() < 1e-12);
+        assert!((cdf(1.96) - 0.9750021).abs() < 1e-6);
+        for z in [-3.0, -1.0, 0.3, 2.5] {
+            assert!((cdf(z) + cdf(-z) - 1.0).abs() < 1e-10, "z={z}");
+        }
+    }
+
+    #[test]
+    fn inv_cdf_roundtrip() {
+        for p in [0.001, 0.01, 0.25, 0.5, 0.77, 0.99, 0.9999] {
+            let z = inv_cdf(p);
+            assert!((cdf(z) - p).abs() < 1e-9, "p={p} z={z}");
+        }
+        assert_eq!(inv_cdf(0.0), f64::NEG_INFINITY);
+        assert_eq!(inv_cdf(1.0), f64::INFINITY);
+    }
+
+    #[test]
+    fn partial_moments_total() {
+        let g = StdGaussian;
+        let inf = f64::INFINITY;
+        assert!((g.prob(-inf, inf) - 1.0).abs() < 1e-9);
+        assert!(g.partial_mean(-inf, inf).abs() < 1e-12);
+        assert!((g.partial_second(-inf, inf) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn partial_moments_halves() {
+        let g = StdGaussian;
+        let inf = f64::INFINITY;
+        // E[Z; Z>0] = φ(0) = 1/sqrt(2π)
+        assert!((g.partial_mean(0.0, inf) - INV_SQRT_2PI).abs() < 1e-10);
+        assert!((g.prob(0.0, inf) - 0.5).abs() < 1e-9);
+        // E[Z | Z>0] = sqrt(2/π)
+        let want = (2.0 / std::f64::consts::PI).sqrt();
+        assert!((g.centroid(0.0, inf) - want).abs() < 1e-7);
+    }
+
+    #[test]
+    fn partial_moments_match_numeric_integration() {
+        let g = StdGaussian;
+        let (a, b) = (-0.7, 1.3);
+        let n = 200_000;
+        let h = (b - a) / n as f64;
+        let (mut p, mut m1, mut m2) = (0.0, 0.0, 0.0);
+        for i in 0..n {
+            let z = a + (i as f64 + 0.5) * h;
+            let w = phi(z) * h;
+            p += w;
+            m1 += z * w;
+            m2 += z * z * w;
+        }
+        assert!((g.prob(a, b) - p).abs() < 1e-6);
+        assert!((g.partial_mean(a, b) - m1).abs() < 1e-6);
+        assert!((g.partial_second(a, b) - m2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cell_mse_is_minimized_at_centroid() {
+        let g = StdGaussian;
+        let (a, b) = (0.2, 1.5);
+        let c = g.centroid(a, b);
+        let at_c = g.cell_mse(a, b, c);
+        for ds in [-0.1, -0.01, 0.01, 0.1] {
+            assert!(g.cell_mse(a, b, c + ds) > at_c);
+        }
+    }
+
+    #[test]
+    fn entropy_of_std_normal() {
+        // h(N(0,1)) = 0.5 log2(2πe) ≈ 2.0471 bits
+        assert!((differential_entropy_bits(1.0) - 2.047095585).abs() < 1e-6);
+    }
+}

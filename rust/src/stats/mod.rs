@@ -1,0 +1,43 @@
+//! Statistical substrates: Gaussian special functions and partial moments
+//! (closed-form Lloyd/RC-quantizer design, [`gaussian`]), empirical source
+//! PDFs over gradient samples ([`empirical`]), running moments
+//! ([`moments`]) and entropy helpers ([`entropy`]).
+
+pub mod empirical;
+pub mod entropy;
+pub mod gaussian;
+pub mod moments;
+
+/// A scalar source distribution exposing the partial moments the
+/// quantizer-design math needs (paper eqs. (3), (4), (8)).
+///
+/// All integrals are over the half-open cell `(a, b]`; `a = -inf` /
+/// `b = +inf` are allowed.
+pub trait SourcePdf {
+    /// `P(a < Z <= b)`.
+    fn prob(&self, a: f64, b: f64) -> f64;
+    /// `E[Z; a < Z <= b]` (unnormalized partial mean).
+    fn partial_mean(&self, a: f64, b: f64) -> f64;
+    /// `E[Z^2; a < Z <= b]` (unnormalized partial second moment).
+    fn partial_second(&self, a: f64, b: f64) -> f64;
+    /// A finite interval containing (effectively) all probability mass,
+    /// used to initialize and clamp codebook boundaries.
+    fn support(&self) -> (f64, f64);
+
+    /// Conditional mean of a cell — the Lloyd centroid, eq. (8). Falls back
+    /// to the midpoint for (numerically) empty cells.
+    fn centroid(&self, a: f64, b: f64) -> f64 {
+        let p = self.prob(a, b);
+        if p <= 1e-300 {
+            let (lo, hi) = self.support();
+            return 0.5 * (a.max(lo) + b.min(hi));
+        }
+        self.partial_mean(a, b) / p
+    }
+
+    /// `E[(Z - s)^2; a < Z <= b]` — one cell's MSE contribution, eq. (3).
+    fn cell_mse(&self, a: f64, b: f64, s: f64) -> f64 {
+        self.partial_second(a, b) - 2.0 * s * self.partial_mean(a, b)
+            + s * s * self.prob(a, b)
+    }
+}

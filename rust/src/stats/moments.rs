@@ -1,0 +1,153 @@
+//! Running/streaming moment computation.
+//!
+//! Clients need `(μ_{k,t}, σ_{k,t})` of each local gradient (paper §3.1).
+//! [`Welford`] is the numerically-stable streaming version; [`mean_std`]
+//! is the vectorizable two-pass version used on the hot path; both must
+//! agree (tested below). `combine` merges per-block partials produced by
+//! the L1 `moments` kernel.
+
+/// Numerically stable streaming mean/variance (Welford / Chan).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Population variance.
+    pub fn variance(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    /// Parallel combine (Chan et al.).
+    pub fn merge(&self, other: &Welford) -> Welford {
+        if self.n == 0 {
+            return *other;
+        }
+        if other.n == 0 {
+            return *self;
+        }
+        let n = self.n + other.n;
+        let d = other.mean - self.mean;
+        let mean = self.mean + d * other.n as f64 / n as f64;
+        let m2 = self.m2
+            + other.m2
+            + d * d * self.n as f64 * other.n as f64 / n as f64;
+        Welford { n, mean, m2 }
+    }
+}
+
+/// Two-pass population mean/std of an f32 slice (f64 accumulation).
+pub fn mean_std(xs: &[f32]) -> (f32, f32) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let n = xs.len() as f64;
+    let mean = xs.iter().map(|&x| x as f64).sum::<f64>() / n;
+    let var = xs
+        .iter()
+        .map(|&x| {
+            let d = x as f64 - mean;
+            d * d
+        })
+        .sum::<f64>()
+        / n;
+    (mean as f32, var.sqrt() as f32)
+}
+
+/// Combine per-block `(sum, sumsq)` partials (from the L1 `moments`
+/// kernel) into `(mean, std)` over `n` total elements.
+pub fn combine_partials(sums: &[f32], sumsqs: &[f32], n: usize) -> (f32, f32) {
+    let s: f64 = sums.iter().map(|&x| x as f64).sum();
+    let s2: f64 = sumsqs.iter().map(|&x| x as f64).sum();
+    let mean = s / n as f64;
+    let var = (s2 / n as f64 - mean * mean).max(0.0);
+    (mean as f32, var.sqrt() as f32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn welford_matches_two_pass() {
+        let mut rng = Rng::new(1);
+        let mut xs = vec![0f32; 10_000];
+        rng.fill_normal_f32(&mut xs, 3.0, 0.7);
+        let (m, s) = mean_std(&xs);
+        let mut w = Welford::default();
+        for &x in &xs {
+            w.push(x as f64);
+        }
+        assert!((w.mean() as f32 - m).abs() < 1e-4);
+        assert!((w.stddev() as f32 - s).abs() < 1e-4);
+    }
+
+    #[test]
+    fn welford_merge_equals_sequential() {
+        let mut rng = Rng::new(2);
+        let xs: Vec<f64> = (0..5000).map(|_| rng.normal_with(-1.0, 2.0)).collect();
+        let mut all = Welford::default();
+        xs.iter().for_each(|&x| all.push(x));
+        let (mut a, mut b) = (Welford::default(), Welford::default());
+        xs[..1234].iter().for_each(|&x| a.push(x));
+        xs[1234..].iter().for_each(|&x| b.push(x));
+        let merged = a.merge(&b);
+        assert_eq!(merged.count(), all.count());
+        assert!((merged.mean() - all.mean()).abs() < 1e-10);
+        assert!((merged.variance() - all.variance()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn combine_partials_matches_direct() {
+        let mut rng = Rng::new(3);
+        let mut xs = vec![0f32; 4096];
+        rng.fill_normal_f32(&mut xs, 0.5, 1.5);
+        let block = 512;
+        let sums: Vec<f32> = xs
+            .chunks(block)
+            .map(|c| c.iter().sum::<f32>())
+            .collect();
+        let sumsqs: Vec<f32> = xs
+            .chunks(block)
+            .map(|c| c.iter().map(|x| x * x).sum::<f32>())
+            .collect();
+        let (m1, s1) = combine_partials(&sums, &sumsqs, xs.len());
+        let (m2, s2) = mean_std(&xs);
+        assert!((m1 - m2).abs() < 1e-3);
+        assert!((s1 - s2).abs() < 1e-3);
+    }
+
+    #[test]
+    fn empty_and_constant() {
+        assert_eq!(mean_std(&[]), (0.0, 0.0));
+        let (m, s) = mean_std(&[2.5; 100]);
+        assert_eq!(m, 2.5);
+        assert!(s.abs() < 1e-6);
+    }
+}

@@ -1,0 +1,196 @@
+//! Tiny CLI argument parser (the image has no `clap`).
+//!
+//! Grammar: `rcfed <subcommand> [--key value | --key=value | --flag] ...`
+//! Typed getters with defaults; unknown-flag detection via [`Args::finish`].
+
+use std::collections::BTreeMap;
+
+use crate::util::{Error, Result};
+
+/// Parsed command line: one optional subcommand + `--key value` pairs.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    kv: BTreeMap<String, String>,
+    flags: Vec<String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(it: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = it.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                out.subcommand = it.next();
+            }
+        }
+        while let Some(tok) = it.next() {
+            let key = tok
+                .strip_prefix("--")
+                .ok_or_else(|| {
+                    Error::Config(format!("expected --flag, got {tok:?}"))
+                })?
+                .to_string();
+            if let Some((k, v)) = key.split_once('=') {
+                out.kv.insert(k.to_string(), v.to_string());
+            } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false)
+            {
+                out.kv.insert(key, it.next().unwrap());
+            } else {
+                out.flags.push(key);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse the real process arguments.
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    fn mark(&self, key: &str) {
+        self.consumed.borrow_mut().push(key.to_string());
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.mark(key);
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.mark(key);
+        self.kv.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                Error::Config(format!("--{key} expects integer, got {v:?}"))
+            }),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                Error::Config(format!("--{key} expects integer, got {v:?}"))
+            }),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                Error::Config(format!("--{key} expects number, got {v:?}"))
+            }),
+        }
+    }
+
+    /// Comma-separated list of floats, e.g. `--lambdas 0.02,0.05,0.1`.
+    pub fn f64_list_or(&self, key: &str, default: &[f64]) -> Result<Vec<f64>> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|t| {
+                    t.trim().parse().map_err(|_| {
+                        Error::Config(format!("bad float {t:?} in --{key}"))
+                    })
+                })
+                .collect(),
+        }
+    }
+
+    /// Comma-separated list of usizes, e.g. `--bits 3,6`.
+    pub fn usize_list_or(
+        &self,
+        key: &str,
+        default: &[usize],
+    ) -> Result<Vec<usize>> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|t| {
+                    t.trim().parse().map_err(|_| {
+                        Error::Config(format!("bad int {t:?} in --{key}"))
+                    })
+                })
+                .collect(),
+        }
+    }
+
+    /// Error on any provided key that was never queried (typo protection).
+    pub fn finish(&self) -> Result<()> {
+        let seen = self.consumed.borrow();
+        for k in self.kv.keys().chain(self.flags.iter()) {
+            if !seen.iter().any(|s| s == k) {
+                return Err(Error::Config(format!("unknown option --{k}")));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_kv() {
+        let a = parse(&["run", "--rounds", "50", "--lambda=0.05", "--verbose"]);
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.usize_or("rounds", 0).unwrap(), 50);
+        assert_eq!(a.f64_or("lambda", 0.0).unwrap(), 0.05);
+        assert!(a.has_flag("verbose"));
+        assert!(!a.has_flag("quiet"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[]);
+        assert_eq!(a.subcommand, None);
+        assert_eq!(a.usize_or("k", 10).unwrap(), 10);
+        assert_eq!(a.str_or("scheme", "rcfed"), "rcfed");
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse(&["--bits", "3,6", "--lambdas", "0.02, 0.1"]);
+        assert_eq!(a.usize_list_or("bits", &[]).unwrap(), vec![3, 6]);
+        assert_eq!(a.f64_list_or("lambdas", &[]).unwrap(), vec![0.02, 0.1]);
+    }
+
+    #[test]
+    fn unknown_option_detected() {
+        let a = parse(&["--typo", "1"]);
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = parse(&["--rounds", "abc"]);
+        assert!(a.usize_or("rounds", 1).is_err());
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["--a", "--b", "7"]);
+        assert!(a.has_flag("a"));
+        assert_eq!(a.usize_or("b", 0).unwrap(), 7);
+    }
+}

@@ -1,0 +1,128 @@
+//! CSV emission for experiment results (`results/*.csv`).
+//!
+//! Every bench/experiment writes a header row plus typed records; values
+//! are formatted with enough precision to regenerate the paper's plots.
+
+use std::fs::{create_dir_all, File};
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use crate::util::Result;
+
+/// Streaming CSV writer with a fixed column schema.
+pub struct CsvWriter {
+    out: BufWriter<File>,
+    ncols: usize,
+}
+
+impl CsvWriter {
+    /// Create (truncating) `path`, writing the header immediately. Parent
+    /// directories are created as needed.
+    pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> Result<Self> {
+        if let Some(parent) = path.as_ref().parent() {
+            if !parent.as_os_str().is_empty() {
+                create_dir_all(parent)?;
+            }
+        }
+        let mut out = BufWriter::new(File::create(path)?);
+        writeln!(out, "{}", header.join(","))?;
+        Ok(CsvWriter { out, ncols: header.len() })
+    }
+
+    /// Write one row; panics in debug builds if the arity mismatches.
+    pub fn row(&mut self, fields: &[CsvField]) -> Result<()> {
+        debug_assert_eq!(fields.len(), self.ncols, "csv arity mismatch");
+        let mut first = true;
+        for f in fields {
+            if !first {
+                write!(self.out, ",")?;
+            }
+            first = false;
+            match f {
+                CsvField::Str(s) => write!(self.out, "{s}")?,
+                CsvField::Int(i) => write!(self.out, "{i}")?,
+                CsvField::Float(x) => write!(self.out, "{x:.6}")?,
+                CsvField::Exp(x) => write!(self.out, "{x:e}")?,
+            }
+        }
+        writeln!(self.out)?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+/// One CSV cell.
+pub enum CsvField {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Exp(f64),
+}
+
+impl From<&str> for CsvField {
+    fn from(s: &str) -> Self {
+        CsvField::Str(s.to_string())
+    }
+}
+impl From<String> for CsvField {
+    fn from(s: String) -> Self {
+        CsvField::Str(s)
+    }
+}
+impl From<usize> for CsvField {
+    fn from(x: usize) -> Self {
+        CsvField::Int(x as i64)
+    }
+}
+impl From<i64> for CsvField {
+    fn from(x: i64) -> Self {
+        CsvField::Int(x)
+    }
+}
+impl From<u64> for CsvField {
+    fn from(x: u64) -> Self {
+        CsvField::Int(x as i64)
+    }
+}
+impl From<f64> for CsvField {
+    fn from(x: f64) -> Self {
+        CsvField::Float(x)
+    }
+}
+
+/// Shorthand: `csv_row!(w, "name", 3, 0.5)`.
+#[macro_export]
+macro_rules! csv_row {
+    ($w:expr, $($v:expr),+ $(,)?) => {
+        $w.row(&[$($crate::util::csv::CsvField::from($v)),+])
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let dir = std::env::temp_dir().join(format!(
+            "rcfed_csv_test_{}", std::process::id()));
+        let path = dir.join("t.csv");
+        {
+            let mut w =
+                CsvWriter::create(&path, &["scheme", "round", "acc"]).unwrap();
+            csv_row!(w, "rcfed", 1usize, 0.5f64).unwrap();
+            csv_row!(w, "qsgd", 2usize, 0.25f64).unwrap();
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], "scheme,round,acc");
+        assert!(lines[1].starts_with("rcfed,1,0.5"));
+        assert_eq!(lines.len(), 3);
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

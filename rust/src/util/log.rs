@@ -1,0 +1,93 @@
+//! Leveled stderr logger with wallclock-relative timestamps.
+//!
+//! Level is set once per process (`RCFED_LOG=debug|info|warn|error` or
+//! [`set_level`]); macros are cheap no-ops below the threshold.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+    Error = 3,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(1);
+static START: OnceLock<Instant> = OnceLock::new();
+
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn init_from_env() {
+    let lvl = match std::env::var("RCFED_LOG").as_deref() {
+        Ok("debug") => Level::Debug,
+        Ok("warn") => Level::Warn,
+        Ok("error") => Level::Error,
+        _ => Level::Info,
+    };
+    set_level(lvl);
+    let _ = START.set(Instant::now());
+}
+
+pub fn enabled(level: Level) -> bool {
+    level as u8 >= LEVEL.load(Ordering::Relaxed)
+}
+
+pub fn log(level: Level, args: std::fmt::Arguments<'_>) {
+    if !enabled(level) {
+        return;
+    }
+    let t = START.get_or_init(Instant::now).elapsed().as_secs_f64();
+    let tag = match level {
+        Level::Debug => "DBG",
+        Level::Info => "INF",
+        Level::Warn => "WRN",
+        Level::Error => "ERR",
+    };
+    eprintln!("[{t:9.3}s {tag}] {args}");
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($a:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Debug,
+                               format_args!($($a)*))
+    };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($a:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Info,
+                               format_args!($($a)*))
+    };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($a:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Warn,
+                               format_args!($($a)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_gating() {
+        set_level(Level::Warn);
+        assert!(!enabled(Level::Debug));
+        assert!(!enabled(Level::Info));
+        assert!(enabled(Level::Warn));
+        assert!(enabled(Level::Error));
+        set_level(Level::Info);
+        assert!(enabled(Level::Info));
+    }
+}

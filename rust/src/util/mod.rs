@@ -1,0 +1,43 @@
+//! Standard-library-only substrates.
+//!
+//! The build image has no network registry, so the usual ecosystem crates
+//! (`rand`, `serde`, `clap`, `tokio`, `criterion`) are unavailable. This
+//! module provides the replacements the rest of the crate builds on:
+//! deterministic PRNGs ([`rng`]), a JSON codec for the artifact manifest
+//! and result files ([`json`]), a CLI/config parser ([`cli`]), a leveled
+//! logger ([`log`]), CSV emission ([`csv`]) and wallclock timing helpers
+//! ([`timer`]).
+
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod log;
+pub mod rng;
+pub mod timer;
+
+/// Crate-wide error type.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    #[error("config error: {0}")]
+    Config(String),
+    #[error("json error: {0}")]
+    Json(String),
+    #[error("artifact error: {0}")]
+    Artifact(String),
+    #[error("coding error: {0}")]
+    Coding(String),
+    #[error("quantizer error: {0}")]
+    Quant(String),
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("xla error: {0}")]
+    Xla(String),
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}

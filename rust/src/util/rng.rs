@@ -1,0 +1,325 @@
+//! Deterministic pseudo-random generation.
+//!
+//! `xoshiro256++` core (Blackman & Vigna) seeded through SplitMix64, plus
+//! the distribution samplers the FL simulation needs: uniform, Gaussian
+//! (Box–Muller with cached spare), Gamma (Marsaglia–Tsang), Dirichlet,
+//! categorical, permutation and reservoir-free subset sampling.
+//!
+//! Every run of the system is reproducible from a single `u64` seed;
+//! clients derive independent streams via [`Rng::fork`].
+
+/// xoshiro256++ PRNG with distribution samplers.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// cached second Box–Muller variate
+    spare: Option<f64>,
+}
+
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    /// Create a generator from a 64-bit seed (SplitMix64 expansion).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, spare: None }
+    }
+
+    /// Derive an independent stream, e.g. one per client. Deterministic in
+    /// `(self state, tag)`; does not advance `self`'s own sequence beyond
+    /// one draw.
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        let base = self.next_u64();
+        Rng::new(base ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = (s[0].wrapping_add(s[3]))
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, 1)` with 53-bit precision.
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn uniform_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in `[0, n)` (Lemire rejection, unbiased).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        let n = n as u64;
+        loop {
+            let x = self.next_u64();
+            let (hi, lo) = {
+                let m = (x as u128) * (n as u128);
+                ((m >> 64) as u64, m as u64)
+            };
+            if lo >= n || lo >= n.wrapping_neg() % n {
+                return hi as usize;
+            }
+        }
+    }
+
+    /// Standard normal via Box–Muller (polar form), with spare caching.
+    pub fn normal(&mut self) -> f64 {
+        if let Some(v) = self.spare.take() {
+            return v;
+        }
+        loop {
+            let u = 2.0 * self.uniform() - 1.0;
+            let v = 2.0 * self.uniform() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                let m = (-2.0 * s.ln() / s).sqrt();
+                self.spare = Some(v * m);
+                return u * m;
+            }
+        }
+    }
+
+    /// Normal with given mean and standard deviation.
+    #[inline]
+    pub fn normal_with(&mut self, mu: f64, sigma: f64) -> f64 {
+        mu + sigma * self.normal()
+    }
+
+    /// Fill a slice with i.i.d. `N(mu, sigma^2)` f32 samples.
+    pub fn fill_normal_f32(&mut self, out: &mut [f32], mu: f32, sigma: f32) {
+        for x in out.iter_mut() {
+            *x = mu + sigma * self.normal() as f32;
+        }
+    }
+
+    /// Gamma(shape, 1) via Marsaglia–Tsang; `shape > 0`.
+    pub fn gamma(&mut self, shape: f64) -> f64 {
+        if shape < 1.0 {
+            // boost: Gamma(a) = Gamma(a+1) * U^{1/a}
+            let u: f64 = self.uniform().max(f64::MIN_POSITIVE);
+            return self.gamma(shape + 1.0) * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v3 = v * v * v;
+            let u = self.uniform();
+            if u < 1.0 - 0.0331 * x.powi(4)
+                || u.ln() < 0.5 * x * x + d * (1.0 - v3 + v3.ln())
+            {
+                return d * v3;
+            }
+        }
+    }
+
+    /// Symmetric Dirichlet(beta) over `k` categories.
+    pub fn dirichlet(&mut self, beta: f64, k: usize) -> Vec<f64> {
+        let mut g: Vec<f64> = (0..k).map(|_| self.gamma(beta)).collect();
+        let sum: f64 = g.iter().sum();
+        if sum <= 0.0 {
+            // pathological underflow: fall back to a random one-hot
+            let j = self.below(k);
+            g.iter_mut().for_each(|x| *x = 0.0);
+            g[j] = 1.0;
+            return g;
+        }
+        g.iter_mut().for_each(|x| *x /= sum);
+        g
+    }
+
+    /// Sample an index from an (unnormalized, non-negative) weight vector.
+    pub fn categorical(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        let mut u = self.uniform() * total;
+        for (i, w) in weights.iter().enumerate() {
+            u -= w;
+            if u <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `m` distinct indices from `[0, n)` (partial Fisher–Yates).
+    pub fn sample_indices(&mut self, n: usize, m: usize) -> Vec<usize> {
+        assert!(m <= n, "cannot sample {m} from {n}");
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..m {
+            let j = i + self.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(m);
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_from_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn fork_streams_are_independent() {
+        let mut root = Rng::new(7);
+        let mut a = root.fork(0);
+        let mut b = root.fork(1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same <= 1);
+    }
+
+    #[test]
+    fn uniform_range_and_mean() {
+        let mut r = Rng::new(3);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        assert!((sum / n as f64 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn below_is_unbiased_ish() {
+        let mut r = Rng::new(9);
+        let mut counts = [0usize; 7];
+        for _ in 0..70_000 {
+            counts[r.below(7)] += 1;
+        }
+        for c in counts {
+            assert!((c as f64 - 10_000.0).abs() < 600.0, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(11);
+        let n = 100_000;
+        let (mut s1, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.normal();
+            s1 += x;
+            s2 += x * x;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn gamma_mean_matches_shape() {
+        let mut r = Rng::new(13);
+        for &shape in &[0.5, 1.0, 2.5] {
+            let n = 30_000;
+            let mean: f64 =
+                (0..n).map(|_| r.gamma(shape)).sum::<f64>() / n as f64;
+            assert!((mean - shape).abs() < 0.1 * shape.max(1.0), "{shape}");
+        }
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one() {
+        let mut r = Rng::new(17);
+        for &beta in &[0.1, 0.5, 5.0] {
+            let p = r.dirichlet(beta, 10);
+            assert_eq!(p.len(), 10);
+            assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+            assert!(p.iter().all(|&x| x >= 0.0));
+        }
+    }
+
+    #[test]
+    fn categorical_respects_weights() {
+        let mut r = Rng::new(19);
+        let w = [1.0, 0.0, 3.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..40_000 {
+            counts[r.categorical(&w)] += 1;
+        }
+        assert_eq!(counts[1], 0);
+        let ratio = counts[2] as f64 / counts[0] as f64;
+        assert!((ratio - 3.0).abs() < 0.25, "{counts:?}");
+    }
+
+    #[test]
+    fn sample_indices_distinct_and_in_range() {
+        let mut r = Rng::new(23);
+        let s = r.sample_indices(100, 30);
+        assert_eq!(s.len(), 30);
+        let mut sorted = s.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 30);
+        assert!(s.iter().all(|&i| i < 100));
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(29);
+        let mut v: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,111 @@
+//! Wallclock timing + lightweight statistics for the in-tree bench harness
+//! (no `criterion` on this image).
+
+use std::time::{Duration, Instant};
+
+/// Scoped stopwatch.
+pub struct Timer(Instant);
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer(Instant::now())
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.0.elapsed()
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+}
+
+/// Summary statistics over repeated measurements (seconds).
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub samples: Vec<f64>,
+}
+
+impl BenchStats {
+    pub fn mean(&self) -> f64 {
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn stddev(&self) -> f64 {
+        let m = self.mean();
+        let var = self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+            / self.samples.len() as f64;
+        var.sqrt()
+    }
+
+    pub fn median(&self) -> f64 {
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s[s.len() / 2]
+    }
+}
+
+/// Run `f` `iters` times after `warmup` unmeasured runs; returns per-run
+/// wallclock stats. `f` should do a fixed amount of work per call.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Timer::start();
+        f();
+        samples.push(t.secs());
+    }
+    BenchStats { samples }
+}
+
+/// Standard one-line bench report: name, median, mean±sd, derived
+/// throughput (items/s) if `items_per_iter > 0`.
+pub fn report(name: &str, stats: &BenchStats, items_per_iter: f64) {
+    let med = stats.median();
+    if items_per_iter > 0.0 {
+        println!(
+            "{name:<44} median {:>10.3} ms   mean {:>10.3} ms ± {:>7.3}   {:>12.2} Mitems/s",
+            med * 1e3,
+            stats.mean() * 1e3,
+            stats.stddev() * 1e3,
+            items_per_iter / med / 1e6,
+        );
+    } else {
+        println!(
+            "{name:<44} median {:>10.3} ms   mean {:>10.3} ms ± {:>7.3}",
+            med * 1e3,
+            stats.mean() * 1e3,
+            stats.stddev() * 1e3,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let stats = bench(1, 5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(stats.samples.len(), 5);
+        assert!(stats.min() >= 0.0);
+        assert!(stats.mean() >= stats.min());
+    }
+
+    #[test]
+    fn stats_math() {
+        let s = BenchStats { samples: vec![1.0, 2.0, 3.0] };
+        assert!((s.mean() - 2.0).abs() < 1e-12);
+        assert_eq!(s.median(), 2.0);
+        assert_eq!(s.min(), 1.0);
+        assert!((s.stddev() - (2.0f64 / 3.0).sqrt()).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,224 @@
+//! Three-layer integration: the AOT JAX/Pallas artifacts executed through
+//! the rust PJRT runtime, cross-validated against the rust-native
+//! implementations.
+//!
+//! Requires `make artifacts` (skips cleanly with a message otherwise —
+//! CI runs `make test`, which builds them first).
+
+use std::rc::Rc;
+
+use rcfed::model::native::NativeMlp;
+use rcfed::model::pjrt::PjrtModel;
+use rcfed::model::Backend;
+use rcfed::quant::codebook::Codebook;
+use rcfed::runtime::host::HostTensor;
+use rcfed::runtime::{Engine, Manifest};
+use rcfed::stats::moments::{combine_partials, mean_std};
+use rcfed::util::rng::Rng;
+
+fn engine() -> Option<Rc<Engine>> {
+    let dir = rcfed::runtime::artifacts::default_dir();
+    match Manifest::load(&dir) {
+        Ok(m) => Some(Rc::new(Engine::new(m).expect("engine"))),
+        Err(e) => {
+            eprintln!("SKIP pjrt tests: {e}");
+            None
+        }
+    }
+}
+
+/// A deterministic Lloyd-ish codebook matching the b-bit artifacts.
+fn codebook(bits: u32) -> Codebook {
+    let n = 1usize << bits;
+    let levels: Vec<f64> = (0..n)
+        .map(|l| -2.5 + 5.0 * (l as f64 + 0.5) / n as f64)
+        .collect();
+    let bounds: Vec<f64> =
+        levels.windows(2).map(|w| 0.5 * (w[0] + w[1])).collect();
+    Codebook::from_f64(&levels, &bounds).unwrap()
+}
+
+#[test]
+fn quantize_kernel_matches_rust_codebook() {
+    let Some(eng) = engine() else { return };
+    let man = eng.manifest().clone();
+    let chunk = man.chunk;
+    let mut rng = Rng::new(17);
+    for &bits in &[3usize, 6] {
+        let cb = codebook(bits as u32);
+        let mut g = vec![0f32; chunk];
+        rng.fill_normal_f32(&mut g, 0.3, 1.7);
+        let (mu, sigma) = mean_std(&g);
+        let out = eng
+            .run(
+                &format!("quantize_b{bits}"),
+                &[
+                    HostTensor::F32(g.clone(), vec![chunk]),
+                    HostTensor::F32(vec![mu], vec![1]),
+                    HostTensor::F32(vec![sigma], vec![1]),
+                    HostTensor::F32(cb.bounds.clone(), vec![cb.bounds.len()]),
+                    HostTensor::F32(cb.levels.clone(), vec![cb.levels.len()]),
+                ],
+            )
+            .unwrap();
+        let deq = out[0].as_f32().unwrap();
+        let idx = out[1].as_i32().unwrap();
+        // rust-native mirror
+        let mut sym = Vec::new();
+        cb.quantize_normalized(&g, mu, sigma, &mut sym);
+        let mut rec = vec![0f32; chunk];
+        cb.dequantize_into(&sym, mu, sigma, &mut rec);
+        let mut mismatches = 0;
+        for i in 0..chunk {
+            if idx[i] != sym[i] as i32 {
+                mismatches += 1;
+            }
+        }
+        // f32 normalization rounding can flip coordinates sitting exactly
+        // on a boundary; must be vanishingly rare
+        assert!(
+            mismatches < chunk / 10_000 + 2,
+            "b={bits}: {mismatches} index mismatches"
+        );
+        for i in 0..chunk {
+            if idx[i] == sym[i] as i32 {
+                assert!(
+                    (deq[i] - rec[i]).abs() < 1e-5,
+                    "b={bits} i={i}: {} vs {}", deq[i], rec[i]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn moments_kernel_matches_rust() {
+    let Some(eng) = engine() else { return };
+    let man = eng.manifest().clone();
+    let (chunk, block) = (man.chunk, man.block);
+    let mut rng = Rng::new(23);
+    let mut g = vec![0f32; chunk];
+    rng.fill_normal_f32(&mut g, -0.7, 2.2);
+    let out = eng
+        .run("moments", &[HostTensor::F32(g.clone(), vec![chunk])])
+        .unwrap();
+    let sums = out[0].as_f32().unwrap();
+    let sumsqs = out[1].as_f32().unwrap();
+    assert_eq!(sums.len(), chunk / block);
+    let (mu_k, sd_k) = combine_partials(sums, sumsqs, chunk);
+    let (mu_r, sd_r) = mean_std(&g);
+    assert!((mu_k - mu_r).abs() < 1e-3, "{mu_k} vs {mu_r}");
+    assert!((sd_k - sd_r).abs() < 1e-3, "{sd_k} vs {sd_r}");
+}
+
+#[test]
+fn dequantize_kernel_roundtrip() {
+    let Some(eng) = engine() else { return };
+    let man = eng.manifest().clone();
+    let chunk = man.chunk;
+    let cb = codebook(3);
+    let mut rng = Rng::new(29);
+    let idx: Vec<i32> = (0..chunk).map(|_| rng.below(8) as i32).collect();
+    let (mu, sigma) = (0.4f32, 1.3f32);
+    let out = eng
+        .run(
+            "dequantize_b3",
+            &[
+                HostTensor::I32(idx.clone(), vec![chunk]),
+                HostTensor::F32(vec![mu], vec![1]),
+                HostTensor::F32(vec![sigma], vec![1]),
+                HostTensor::F32(cb.levels.clone(), vec![8]),
+            ],
+        )
+        .unwrap();
+    let deq = out[0].as_f32().unwrap();
+    for i in 0..chunk {
+        let want = sigma * cb.levels[idx[i] as usize] + mu;
+        assert!((deq[i] - want).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn jax_mlp_gradient_matches_native_mlp() {
+    // The core L2↔L3 cross-validation: identical parameters and batch
+    // through the AOT JAX graph and the rust-native MLP must produce the
+    // same loss and gradients (both implement x@w+b / relu / mean-CE).
+    let Some(eng) = engine() else { return };
+    let pjrt = PjrtModel::new(eng, "mlp_tiny").unwrap();
+    let native = NativeMlp::tiny();
+    assert_eq!(pjrt.num_params(), native.num_params());
+    let params = native.init_params(77);
+    let b = pjrt.batch_size();
+    let mut rng = Rng::new(31);
+    let mut xs = vec![0f32; b * 32];
+    rng.fill_normal_f32(&mut xs, 0.0, 1.0);
+    let ys: Vec<i32> = (0..b).map(|_| rng.below(4) as i32).collect();
+    let mut g_pjrt = vec![0f32; pjrt.num_params()];
+    let mut g_nat = vec![0f32; native.num_params()];
+    let loss_p = pjrt.grad(&params, &xs, &ys, &mut g_pjrt).unwrap();
+    let loss_n = native.grad(&params, &xs, &ys, &mut g_nat).unwrap();
+    assert!((loss_p - loss_n).abs() < 1e-4, "loss {loss_p} vs {loss_n}");
+    let mut max_err = 0f32;
+    for (a, b) in g_pjrt.iter().zip(&g_nat) {
+        max_err = max_err.max((a - b).abs());
+    }
+    assert!(max_err < 1e-4, "max grad err {max_err}");
+    // eval agreement
+    let c_p = pjrt.eval(&params, &xs, &ys).unwrap();
+    let c_n = native.eval(&params, &xs, &ys).unwrap();
+    assert_eq!(c_p, c_n);
+}
+
+#[test]
+fn executable_cache_compiles_once() {
+    let Some(eng) = engine() else { return };
+    let chunk = eng.manifest().chunk;
+    let g = vec![0f32; chunk];
+    let input = [HostTensor::F32(g, vec![chunk])];
+    eng.run("moments", &input).unwrap();
+    let after_first = eng.compiled_count();
+    for _ in 0..3 {
+        eng.run("moments", &input).unwrap();
+    }
+    assert_eq!(eng.compiled_count(), after_first);
+}
+
+#[test]
+fn input_validation_rejects_bad_shapes() {
+    let Some(eng) = engine() else { return };
+    let err = eng
+        .run("moments", &[HostTensor::F32(vec![0.0; 7], vec![7])])
+        .unwrap_err();
+    assert!(err.to_string().contains("mismatch"), "{err}");
+    let err = eng.run("moments", &[]).unwrap_err();
+    assert!(err.to_string().contains("inputs"), "{err}");
+    assert!(eng.run("nonexistent", &[]).is_err());
+}
+
+#[test]
+fn end_to_end_experiment_on_pjrt_backend() {
+    // Full Algorithm 1 with the three-layer stack: JAX/Pallas compute,
+    // rust compression/aggregation. Small but real.
+    use rcfed::coordinator::experiment::{
+        run_experiment, BackendChoice, ExperimentConfig,
+    };
+    use rcfed::fl::compression::CompressionScheme;
+    use rcfed::quant::rcq::LengthModel;
+    if engine().is_none() {
+        return;
+    }
+    let mut cfg = ExperimentConfig::tiny();
+    cfg.backend = BackendChoice::Pjrt("mlp_tiny".into());
+    cfg.rounds = 12;
+    cfg.eval_every = 4;
+    cfg.scheme = CompressionScheme::RcFed {
+        bits: 3,
+        lambda: 0.05,
+        length_model: LengthModel::Huffman,
+    };
+    let report = run_experiment(&cfg).unwrap();
+    assert!(report.final_accuracy > 0.3, "acc={}", report.final_accuracy);
+    let first = report.metrics.rounds[0].train_loss;
+    let last = report.metrics.rounds.last().unwrap().train_loss;
+    assert!(last < first, "loss {first} -> {last}");
+}
