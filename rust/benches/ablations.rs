@@ -4,26 +4,31 @@
 //!   (per-client empirical pdf) quantizers: accuracy/rate parity, which
 //!   is what justifies dropping hyperparameter exchange (§3.1);
 //! * **E7b** statistics-aware normalization on vs off (quantize raw
-//!   gradients on the N(0,1) codebook);
+//!   gradients on the N(0,1) codebook) — run as a sweep-engine grid;
 //! * **E8**  length model inside the design loop: true Huffman lengths
-//!   vs idealized −log₂p (and which wire coder realizes it);
+//!   vs idealized −log₂p (and which wire coder realizes it) — designs
+//!   served from the shared codebook cache;
 //! * wire-coder ablation: Huffman vs arithmetic at equal codebooks.
 //!
 //!     cargo bench --bench ablations
 
-use rcfed::coordinator::experiment::{run_experiment, ExperimentConfig};
+use rcfed::coordinator::experiment::ExperimentConfig;
+use rcfed::coordinator::sweep::{run_sweep, SweepGrid};
 use rcfed::csv_row;
-use rcfed::fl::compression::{CompressionScheme, Compressor, WireCoder};
+use rcfed::fl::compression::{
+    design_cache_stats, designed_codebook, CompressionScheme, Compressor,
+    WireCoder,
+};
 use rcfed::quant::lloyd::LloydMax;
-use rcfed::quant::rcq::{LengthModel, RateConstrainedQuantizer};
+use rcfed::quant::rcq::LengthModel;
 use rcfed::stats::empirical::EmpiricalPdf;
-use rcfed::stats::gaussian::StdGaussian;
 use rcfed::stats::moments::mean_std;
 use rcfed::util::csv::CsvWriter;
 use rcfed::util::rng::Rng;
 
 fn main() {
     rcfed::util::log::init_from_env();
+    let before = design_cache_stats();
     let mut w = CsvWriter::create(
         "results/ablations.csv",
         &["ablation", "variant", "metric", "value"],
@@ -34,10 +39,13 @@ fn main() {
     // ---- E7a: universal vs personalized -------------------------------
     // Per-client gradients with wildly different (μ,σ); after
     // normalization the universal N(0,1) design must match per-client
-    // empirical designs on both MSE and encoded rate.
+    // empirical designs on both MSE and encoded rate. The universal
+    // design comes from the cache; the per-client designs are
+    // data-dependent and deliberately uncached.
     println!("E7a: universal vs personalized quantizer (b=3)");
     let mut rng = Rng::new(77);
-    let (cb_u, rep_u) = LloydMax::default().design(&StdGaussian, 3).unwrap();
+    let (_cb_u, rep_u) =
+        designed_codebook(CompressionScheme::Lloyd { bits: 3 }).unwrap();
     let mut worst_mse_gap = 0f64;
     let mut worst_rate_gap = 0f64;
     for (mu, sigma) in [(0.0f32, 1.0f32), (0.02, 0.004), (-1.5, 3.0)] {
@@ -60,34 +68,30 @@ fn main() {
         .unwrap();
     csv_row!(w, "universal_vs_personal", "rate_gap", "bits", worst_rate_gap)
         .unwrap();
-    let _ = cb_u;
 
-    // ---- E7b: normalization on vs off ----------------------------------
+    // ---- E7b: normalization on vs off (sweep-engine grid) -------------
     println!("\nE7b: statistics-aware normalization (b=3, SynthCifar-tiny)");
     let mut base = ExperimentConfig::tiny();
     base.rounds = 30;
-    for (name, scheme) in [
-        (
-            "normalized_lloyd",
-            CompressionScheme::Lloyd { bits: 3 },
-        ),
-        (
+    let grid = SweepGrid::new(base)
+        .scheme(CompressionScheme::Lloyd { bits: 3 })
+        .scheme(
             // raw gradients straight onto a ±4 uniform grid: without the
             // (μ,σ) normalization the tiny-magnitude gradients collapse
             // into the central cells
-            "raw_uniform",
             CompressionScheme::Uniform { bits: 3, clip: 4.0 },
-        ),
-    ] {
-        let mut cfg = base.clone();
-        cfg.scheme = scheme;
-        let rep = run_experiment(&cfg).unwrap();
+        );
+    let report = run_sweep(&grid).expect("E7b sweep failed");
+    for (name, cell) in
+        ["normalized_lloyd", "raw_uniform"].iter().zip(&report.cells)
+    {
         println!(
             "  {name:<18} acc={:.4} uplink={:.3} Mb",
-            rep.final_accuracy,
-            rep.total_bits as f64 / 1e6
+            cell.report.final_accuracy,
+            cell.report.total_bits as f64 / 1e6
         );
-        csv_row!(w, "normalization", name, "acc", rep.final_accuracy)
+        csv_row!(w, "normalization", *name, "acc",
+                 cell.report.final_accuracy)
             .unwrap();
     }
     println!("  (note: Uniform here still normalizes — the pipeline always \
@@ -101,19 +105,17 @@ fn main() {
         "λ", "huff_model_rate", "ideal_model_rate", "huff_mse", "ideal_mse"
     );
     for lam in [0.02, 0.05, 0.1, 0.2] {
-        let (_, rep_h) = RateConstrainedQuantizer {
+        let (_, rep_h) = designed_codebook(CompressionScheme::RcFed {
+            bits: 3,
             lambda: lam,
             length_model: LengthModel::Huffman,
-            ..Default::default()
-        }
-        .design(&StdGaussian, 3)
+        })
         .unwrap();
-        let (_, rep_i) = RateConstrainedQuantizer {
+        let (_, rep_i) = designed_codebook(CompressionScheme::RcFed {
+            bits: 3,
             lambda: lam,
             length_model: LengthModel::Ideal,
-            ..Default::default()
-        }
-        .design(&StdGaussian, 3)
+        })
         .unwrap();
         println!(
             "{lam:>8.3} {:>16.4} {:>16.4} {:>12.5} {:>12.5}",
@@ -131,6 +133,8 @@ fn main() {
     );
 
     // ---- wire coder ----------------------------------------------------
+    // identical codebook under both wires: the second Compressor::design
+    // call is a design-cache hit
     println!("\nwire coder at equal codebooks (RC-FED b=3 λ=0.05):");
     let mut rng = Rng::new(78);
     let mut g = vec![0f32; 200_000];
@@ -153,5 +157,8 @@ fn main() {
         csv_row!(w, "wire_coder", name, "bits_per_coord", bps).unwrap();
     }
     w.flush().unwrap();
+    let cache = design_cache_stats().since(&before);
+    println!("\n{}", report.summary());
+    println!("design cache: {cache} this run");
     println!("\nwrote results/ablations.csv");
 }

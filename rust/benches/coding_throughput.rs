@@ -10,21 +10,22 @@ use rcfed::coding::huffman::HuffmanCode;
 use rcfed::coding::lz::Lzw;
 use rcfed::coding::EntropyCoder;
 use rcfed::csv_row;
-use rcfed::quant::rcq::{LengthModel, RateConstrainedQuantizer};
+use rcfed::fl::compression::{designed_codebook, CompressionScheme};
+use rcfed::quant::rcq::LengthModel;
 use rcfed::stats::entropy::entropy_bits;
-use rcfed::stats::gaussian::StdGaussian;
 use rcfed::util::csv::CsvWriter;
 use rcfed::util::rng::Rng;
 use rcfed::util::timer::{bench, report};
 
 fn symbol_stream(bits: u32, lambda: f64, n: usize, seed: u64) -> (Vec<u8>, Vec<f64>) {
     // realistic stream: quantize N(0,1) "gradients" with the RC codebook
-    let rc = RateConstrainedQuantizer {
+    // (design served from the process-wide cache)
+    let (cb, rep) = designed_codebook(CompressionScheme::RcFed {
+        bits,
         lambda,
         length_model: LengthModel::Huffman,
-        ..Default::default()
-    };
-    let (cb, rep) = rc.design(&StdGaussian, bits).unwrap();
+    })
+    .unwrap();
     let mut rng = Rng::new(seed);
     let mut g = vec![0f32; n];
     rng.fill_normal_f32(&mut g, 0.0, 1.0);

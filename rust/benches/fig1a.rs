@@ -4,6 +4,9 @@
 //!
 //! Series: RC-FED λ ∈ {0.02..0.1} at b=3 (the paper's curve) and the
 //! baselines QSGD / Lloyd-Max / NQFL at b ∈ {3, 6}, all Huffman-coded.
+//! The grid is declared once and executed by the sweep engine
+//! (`rcfed::coordinator::sweep`): cells fan out across a scoped worker
+//! pool and codebook designs are served from the process-wide cache.
 //!
 //! Default scale is CPU-budget friendly (40 rounds, 512 examples/client);
 //! set `RCFED_FULL=1` for the paper's 100 rounds. Expected *shape*
@@ -13,87 +16,46 @@
 //!
 //!     cargo bench --bench fig1a
 
-use rcfed::coordinator::experiment::{run_experiment, ExperimentConfig};
-use rcfed::csv_row;
-use rcfed::fl::compression::CompressionScheme;
-use rcfed::quant::rcq::LengthModel;
-use rcfed::util::csv::CsvWriter;
+use rcfed::coordinator::experiment::ExperimentConfig;
+use rcfed::coordinator::sweep::{run_sweep, SweepGrid};
 
 fn main() {
     rcfed::util::log::init_from_env();
     let full = std::env::var("RCFED_FULL").is_ok();
     let rounds = if full { 100 } else { 40 };
 
-    let mut schemes: Vec<CompressionScheme> = Vec::new();
-    for lam in [0.02, 0.04, 0.06, 0.08, 0.10] {
-        schemes.push(CompressionScheme::RcFed {
-            bits: 3,
-            lambda: lam,
-            length_model: LengthModel::Huffman,
-        });
-    }
-    for b in [3u32, 6] {
-        schemes.push(CompressionScheme::Qsgd { bits: b });
-        schemes.push(CompressionScheme::Lloyd { bits: b });
-        schemes.push(CompressionScheme::Nqfl { bits: b });
-    }
+    let mut base = ExperimentConfig::synth_cifar();
+    base.rounds = rounds;
+    base.eval_every = 5;
+    let grid = SweepGrid::new(base)
+        .rcfed_lambda_curve(3, &[0.02, 0.04, 0.06, 0.08, 0.10])
+        .baselines(&[3, 6]);
 
-    let mut w = CsvWriter::create(
-        "results/fig1a.csv",
-        &["scheme", "final_acc", "best_acc", "gigabits", "wall_secs"],
-    )
-    .unwrap();
     println!("=== Fig. 1a — SynthCifar, {rounds} rounds ===");
+    let report = run_sweep(&grid).expect("sweep failed");
+
     println!(
         "{:<22} {:>9} {:>9} {:>12} {:>8}",
         "scheme", "final_acc", "best_acc", "uplink_Gb", "wall_s"
     );
-    let mut results = Vec::new();
-    for scheme in schemes {
-        let mut cfg = ExperimentConfig::synth_cifar();
-        cfg.rounds = rounds;
-        cfg.eval_every = 5;
-        cfg.scheme = scheme;
-        let rep = run_experiment(&cfg).expect("run failed");
+    for cell in &report.cells {
         println!(
             "{:<22} {:>9.4} {:>9.4} {:>12.5} {:>8.1}",
-            rep.label,
-            rep.final_accuracy,
-            rep.best_accuracy,
-            rep.uplink_gigabits(),
-            rep.wall_secs
+            cell.label,
+            cell.report.final_accuracy,
+            cell.report.best_accuracy,
+            cell.report.uplink_gigabits(),
+            cell.report.wall_secs
         );
-        csv_row!(
-            w,
-            rep.label.clone(),
-            rep.final_accuracy,
-            rep.best_accuracy,
-            rep.uplink_gigabits(),
-            rep.wall_secs
-        )
-        .unwrap();
-        results.push((
-            rep.label.clone(),
-            rep.final_accuracy,
-            rep.uplink_gigabits(),
-        ));
     }
-    w.flush().unwrap();
+    report.write_csv("results/fig1a.csv").expect("csv");
 
     // Pareto-dominance check (the paper's headline claim)
-    let rc: Vec<_> =
-        results.iter().filter(|r| r.0.starts_with("rcfed")).collect();
-    let mut dominated = 0;
-    let mut total = 0;
-    for base in results.iter().filter(|r| !r.0.starts_with("rcfed")) {
-        total += 1;
-        if rc.iter().any(|p| p.1 >= base.1 - 0.01 && p.2 <= base.2) {
-            dominated += 1;
-        }
-    }
+    let (dominated, total) = report.pareto_dominance("rcfed", 0.01);
     println!(
         "\nPareto check: RC-FED dominates {dominated}/{total} baseline \
          points (paper shape: all)"
     );
+    println!("{}", report.summary());
     println!("wrote results/fig1a.csv");
 }

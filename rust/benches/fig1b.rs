@@ -5,15 +5,14 @@
 //! Default scale: 355 devices / 50 sampled / 30 rounds (a 10× scale-down
 //! of the paper's 3550/500/100 recorded in EXPERIMENTS.md; uplink is
 //! reported per sampled-client-round so the comparison is scale-free).
-//! `RCFED_FULL=1` runs the paper-faithful sizes.
+//! `RCFED_FULL=1` runs the paper-faithful sizes. The grid runs through
+//! the sweep engine (parallel cells + shared codebook design cache).
 //!
 //!     cargo bench --bench fig1b
 
-use rcfed::coordinator::experiment::{run_experiment, ExperimentConfig};
-use rcfed::csv_row;
-use rcfed::fl::compression::CompressionScheme;
-use rcfed::quant::rcq::LengthModel;
-use rcfed::util::csv::CsvWriter;
+use rcfed::coordinator::experiment::ExperimentConfig;
+use rcfed::coordinator::sweep::{run_sweep, SweepGrid};
+use rcfed::util::csv::CsvField;
 
 fn main() {
     rcfed::util::log::init_from_env();
@@ -21,86 +20,62 @@ fn main() {
     let (devices, sample, rounds) =
         if full { (3550, 500, 100) } else { (355, 50, 30) };
 
-    let mut schemes: Vec<CompressionScheme> = Vec::new();
-    for lam in [0.02, 0.04, 0.06, 0.08, 0.10] {
-        schemes.push(CompressionScheme::RcFed {
-            bits: 3,
-            lambda: lam,
-            length_model: LengthModel::Huffman,
-        });
-    }
-    for b in [3u32, 6] {
-        schemes.push(CompressionScheme::Qsgd { bits: b });
-        schemes.push(CompressionScheme::Lloyd { bits: b });
-        schemes.push(CompressionScheme::Nqfl { bits: b });
-    }
+    let mut base = ExperimentConfig::synth_femnist();
+    base.dataset.num_clients = devices;
+    base.clients_per_round = sample;
+    base.rounds = rounds;
+    base.eval_every = 5;
+    let grid = SweepGrid::new(base)
+        .rcfed_lambda_curve(3, &[0.02, 0.04, 0.06, 0.08, 0.10])
+        .baselines(&[3, 6]);
 
-    let mut w = CsvWriter::create(
-        "results/fig1b.csv",
-        &["scheme", "final_acc", "best_acc", "gigabits",
-          "bits_per_client_round", "wall_secs"],
-    )
-    .unwrap();
     println!(
         "=== Fig. 1b — SynthFemnist, {devices} devices, {sample}/round, \
          {rounds} rounds, e=2 ==="
     );
+    let report = run_sweep(&grid).expect("sweep failed");
+
     println!(
         "{:<22} {:>9} {:>9} {:>12} {:>14} {:>8}",
         "scheme", "final_acc", "best_acc", "uplink_Gb", "Mb/client-rnd",
         "wall_s"
     );
-    let mut results = Vec::new();
-    for scheme in schemes {
-        let mut cfg = ExperimentConfig::synth_femnist();
-        cfg.dataset.num_clients = devices;
-        cfg.clients_per_round = sample;
-        cfg.rounds = rounds;
-        cfg.eval_every = 5;
-        cfg.scheme = scheme;
-        let rep = run_experiment(&cfg).expect("run failed");
-        let per_client =
-            rep.total_bits as f64 / (rounds * sample) as f64 / 1e6;
+    let per_client =
+        |total_bits: u64| total_bits as f64 / (rounds * sample) as f64 / 1e6;
+    for cell in &report.cells {
         println!(
             "{:<22} {:>9.4} {:>9.4} {:>12.5} {:>14.4} {:>8.1}",
-            rep.label,
-            rep.final_accuracy,
-            rep.best_accuracy,
-            rep.uplink_gigabits(),
-            per_client,
-            rep.wall_secs
+            cell.label,
+            cell.report.final_accuracy,
+            cell.report.best_accuracy,
+            cell.report.uplink_gigabits(),
+            per_client(cell.report.total_bits),
+            cell.report.wall_secs
         );
-        csv_row!(
-            w,
-            rep.label.clone(),
-            rep.final_accuracy,
-            rep.best_accuracy,
-            rep.uplink_gigabits(),
-            per_client,
-            rep.wall_secs
+    }
+    report
+        .write_csv_with(
+            "results/fig1b.csv",
+            &["scheme", "final_acc", "best_acc", "gigabits",
+              "bits_per_client_round", "wall_secs"],
+            |c| {
+                vec![
+                    CsvField::from(c.label.clone()),
+                    CsvField::from(c.report.final_accuracy),
+                    CsvField::from(c.report.best_accuracy),
+                    CsvField::from(c.report.uplink_gigabits()),
+                    CsvField::from(per_client(c.report.total_bits)),
+                    CsvField::from(c.report.wall_secs),
+                ]
+            },
         )
-        .unwrap();
-        results.push((
-            rep.label.clone(),
-            rep.final_accuracy,
-            rep.uplink_gigabits(),
-        ));
-    }
-    w.flush().unwrap();
+        .expect("csv");
 
-    let rc: Vec<_> =
-        results.iter().filter(|r| r.0.starts_with("rcfed")).collect();
-    let mut dominated = 0;
-    let mut total = 0;
-    for base in results.iter().filter(|r| !r.0.starts_with("rcfed")) {
-        total += 1;
-        if rc.iter().any(|p| p.1 >= base.1 - 0.01 && p.2 <= base.2) {
-            dominated += 1;
-        }
-    }
+    let (dominated, total) = report.pareto_dominance("rcfed", 0.01);
     println!(
         "\nPareto check: RC-FED dominates {dominated}/{total} baseline \
          points (paper shape: all)"
     );
+    println!("{}", report.summary());
     println!("wrote results/fig1b.csv");
 }

@@ -2,19 +2,40 @@
 //! baseline operating points, the boundary-shift mechanism and the
 //! high-rate law (20). Pure quantizer-design bench (no training).
 //!
+//! The per-bit-width operating-point grid is declared as a `DesignGrid`
+//! and executed by the sweep engine: designs run in parallel and are
+//! served from the process-wide codebook design cache, so overlapping
+//! points (e.g. the boundary-shift section reusing b=3 λ=0.08) are
+//! designed once.
+//!
 //!     cargo bench --bench rate_distortion
 
 use rcfed::coding::huffman::HuffmanCode;
+use rcfed::coordinator::sweep::{run_design_sweep, DesignGrid};
 use rcfed::csv_row;
-use rcfed::quant::evaluate;
-use rcfed::quant::lloyd::{midpoints, LloydMax};
-use rcfed::quant::nqfl::nqfl_codebook;
-use rcfed::quant::rcq::{LengthModel, RateConstrainedQuantizer};
-use rcfed::quant::uniform::uniform_codebook;
-use rcfed::stats::gaussian::{differential_entropy_bits, StdGaussian};
+use rcfed::fl::compression::{design_cache_stats, designed_codebook};
+use rcfed::fl::compression::CompressionScheme;
+use rcfed::quant::lloyd::midpoints;
+use rcfed::quant::rcq::LengthModel;
+use rcfed::stats::gaussian::differential_entropy_bits;
 use rcfed::util::csv::CsvWriter;
 
+const LAMBDAS: [f64; 10] =
+    [0.0, 0.01, 0.02, 0.04, 0.06, 0.08, 0.1, 0.15, 0.2, 0.3];
+
+/// (series name, λ column) for the CSV.
+fn series_of(scheme: &CompressionScheme) -> (&'static str, f64) {
+    match *scheme {
+        CompressionScheme::RcFed { lambda, .. } => ("rcfed", lambda),
+        CompressionScheme::Lloyd { .. } => ("lloyd", 0.0),
+        CompressionScheme::Nqfl { .. } => ("nqfl", 0.0),
+        CompressionScheme::Uniform { .. } => ("uniform", 0.0),
+        _ => ("other", 0.0),
+    }
+}
+
 fn main() {
+    let before = design_cache_stats();
     let mut w = CsvWriter::create(
         "results/rate_distortion.csv",
         &["series", "bits", "lambda", "rate_bits", "mse"],
@@ -23,50 +44,49 @@ fn main() {
 
     println!("=== E3: rate–distortion curves (N(0,1) source) ===\n");
     for b in [2u32, 3, 4, 6] {
-        println!("-- b={b} --");
-        println!("{:<12} {:>8} {:>10} {:>10}", "series", "λ", "E[huff]", "MSE");
-        for lam in [0.0, 0.01, 0.02, 0.04, 0.06, 0.08, 0.1, 0.15, 0.2, 0.3] {
-            let rc = RateConstrainedQuantizer {
-                lambda: lam,
+        let mut schemes: Vec<CompressionScheme> = LAMBDAS
+            .iter()
+            .map(|&lambda| CompressionScheme::RcFed {
+                bits: b,
+                lambda,
                 length_model: LengthModel::Huffman,
-                ..Default::default()
-            };
-            let (_, rep) = rc.design(&StdGaussian, b).unwrap();
-            println!(
-                "{:<12} {lam:>8.3} {:>10.4} {:>10.6}",
-                "rcfed", rep.huffman_rate, rep.mse
-            );
-            csv_row!(w, "rcfed", b as usize, lam, rep.huffman_rate, rep.mse)
+            })
+            .collect();
+        schemes.push(CompressionScheme::Lloyd { bits: b });
+        schemes.push(CompressionScheme::Nqfl { bits: b });
+        schemes.push(CompressionScheme::Uniform { bits: b, clip: 4.0 });
+        let cells = run_design_sweep(&DesignGrid { schemes, threads: 0 })
+            .expect("design sweep failed");
+
+        println!("-- b={b} --");
+        println!("{:<12} {:>8} {:>10} {:>10}", "series", "λ", "E[huff]",
+                 "MSE");
+        for cell in &cells {
+            let (series, lambda) = series_of(&cell.scheme);
+            match series {
+                "rcfed" => println!(
+                    "{:<12} {lambda:>8.3} {:>10.4} {:>10.6}",
+                    series, cell.report.huffman_rate, cell.report.mse
+                ),
+                _ => println!(
+                    "{series:<12} {:>8} {:>10.4} {:>10.6}",
+                    "-", cell.report.huffman_rate, cell.report.mse
+                ),
+            }
+            csv_row!(w, series, b as usize, lambda,
+                     cell.report.huffman_rate, cell.report.mse)
                 .unwrap();
-        }
-        let (_, lrep) = LloydMax::default().design(&StdGaussian, b).unwrap();
-        println!(
-            "{:<12} {:>8} {:>10.4} {:>10.6}",
-            "lloyd", "-", lrep.huffman_rate, lrep.mse
-        );
-        csv_row!(w, "lloyd", b as usize, 0.0, lrep.huffman_rate, lrep.mse)
-            .unwrap();
-        for (name, cb) in [
-            ("nqfl", nqfl_codebook(b).unwrap()),
-            ("uniform", uniform_codebook(b, 4.0).unwrap()),
-        ] {
-            let (mse, probs) = evaluate(&StdGaussian, &cb);
-            let rate = HuffmanCode::from_probs(&probs)
-                .unwrap()
-                .expected_length(&probs);
-            println!("{name:<12} {:>8} {rate:>10.4} {mse:>10.6}", "-");
-            csv_row!(w, name, b as usize, 0.0, rate, mse).unwrap();
         }
         println!();
     }
 
-    // boundary-shift mechanism at b=3
-    let rc = RateConstrainedQuantizer {
+    // boundary-shift mechanism at b=3 (cache hit: designed above)
+    let (cb, rep) = designed_codebook(CompressionScheme::RcFed {
+        bits: 3,
         lambda: 0.08,
         length_model: LengthModel::Huffman,
-        ..Default::default()
-    };
-    let (cb, rep) = rc.design(&StdGaussian, 3).unwrap();
+    })
+    .unwrap();
     let code = HuffmanCode::from_probs(&rep.probs).unwrap();
     let levels: Vec<f64> = cb.levels.iter().map(|&x| x as f64).collect();
     let mids = midpoints(&levels);
@@ -93,16 +113,18 @@ fn main() {
     println!("high-rate law: MSE / [(1/12)·2^(2h)·2^(−2R)]");
     let h = differential_entropy_bits(1.0);
     for b in [3u32, 4, 6] {
-        let rc = RateConstrainedQuantizer {
+        let (_, rep) = designed_codebook(CompressionScheme::RcFed {
+            bits: b,
             lambda: 0.005,
             length_model: LengthModel::Ideal,
-            ..Default::default()
-        };
-        let (_, rep) = rc.design(&StdGaussian, b).unwrap();
+        })
+        .unwrap();
         let pred = (1.0 / 12.0) * 2f64.powf(2.0 * h)
             * 2f64.powf(-2.0 * rep.entropy_bits);
         println!("  b={b}: ratio={:.3} (→1 as b grows)", rep.mse / pred);
     }
     w.flush().unwrap();
-    println!("\nwrote results/rate_distortion.csv");
+    let cache = design_cache_stats().since(&before);
+    println!("\ndesign cache: {cache} this run");
+    println!("wrote results/rate_distortion.csv");
 }

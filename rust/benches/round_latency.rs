@@ -13,11 +13,10 @@ use std::rc::Rc;
 use rcfed::coding::huffman::HuffmanCode;
 use rcfed::csv_row;
 use rcfed::data::{DatasetConfig, FederatedDataset};
+use rcfed::fl::compression::{designed_codebook, CompressionScheme};
 use rcfed::model::native::NativeMlp;
 use rcfed::model::pjrt::PjrtModel;
 use rcfed::model::Backend;
-use rcfed::quant::lloyd::LloydMax;
-use rcfed::stats::gaussian::StdGaussian;
 use rcfed::stats::moments::mean_std;
 use rcfed::util::csv::CsvWriter;
 use rcfed::util::rng::Rng;
@@ -37,7 +36,9 @@ fn profile_backend<B: Backend + ?Sized>(
     ds: &FederatedDataset,
     iters: usize,
 ) -> Breakdown {
-    let (cb, rep) = LloydMax::default().design(&StdGaussian, 3).unwrap();
+    // served from the process-wide design cache (shared with the sweeps)
+    let (cb, rep) =
+        designed_codebook(CompressionScheme::Lloyd { bits: 3 }).unwrap();
     let code = HuffmanCode::from_probs(&rep.probs).unwrap();
     let params = backend.init_params(1);
     let d = backend.num_params();

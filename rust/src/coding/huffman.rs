@@ -445,6 +445,64 @@ mod tests {
     }
 
     #[test]
+    fn single_live_symbol_distribution_roundtrips() {
+        // the degenerate RC-FED regime at very large λ: one cell carries
+        // (almost) all probability, the rest are ~0. from_probs floors
+        // every cell to one count, so all symbols stay encodable.
+        let mut probs = vec![1e-15; 8];
+        probs[3] = 1.0 - 7e-15;
+        let code = HuffmanCode::from_probs(&probs).unwrap();
+        assert!(code.lengths().iter().all(|&l| l > 0 && l <= MAX_LEN));
+        // Kraft still satisfied
+        assert!(kraft(code.lengths()) <= 1.0 + 1e-12);
+
+        // all-live-symbol message, explicitly through BitWriter/BitReader
+        let mut msg = vec![3u8; 4096];
+        // sprinkle in every dead symbol to hit their (long) codewords
+        for (i, s) in (0..8u8).cycle().take(64).enumerate() {
+            msg[i * 64] = s;
+        }
+        let mut w = BitWriter::new();
+        code.encode_into(&msg, &mut w).unwrap();
+        let payload = w.finish();
+        let mut back = vec![0u8; msg.len()];
+        code.decode_into(&payload, &mut back).unwrap();
+        assert_eq!(back, msg);
+        // the dominant symbol must cost ~1 bit, so the payload is small
+        assert!(
+            code.message_bits(&msg) < 2 * msg.len() as u64,
+            "dominant symbol not short: {:?}", code.lengths()
+        );
+    }
+
+    #[test]
+    fn full_256_symbol_alphabet_at_max_len_saturation() {
+        // 256 symbols with doubly-exponential skew force the raw Huffman
+        // tree past MAX_LEN; the zlib-style limiter must clamp to
+        // MAX_LEN, keep Kraft ≤ 1, and the canonical code must still
+        // roundtrip through BitWriter/BitReader. (256 symbols also
+        // bypasses the ≤64-symbol pair-encode fast path.)
+        let freqs: Vec<u64> = (0..256u32).map(|i| 1u64 << i.min(50)).collect();
+        let lens = limited_code_lengths(&freqs, MAX_LEN);
+        assert!(lens.iter().all(|&l| l > 0 && l <= MAX_LEN));
+        assert_eq!(lens.iter().copied().max(), Some(MAX_LEN));
+        assert!(kraft(&lens) <= 1.0 + 1e-12);
+
+        let code = HuffmanCode::from_freqs(&freqs).unwrap();
+        // every symbol once, then a burst of the most/least likely
+        let mut msg: Vec<u8> = (0..=255u8).collect();
+        msg.extend(std::iter::repeat(255u8).take(500));
+        msg.extend(std::iter::repeat(0u8).take(500));
+        let mut w = BitWriter::new();
+        code.encode_into(&msg, &mut w).unwrap();
+        assert_eq!(w.bit_len(), code.message_bits(&msg));
+        let payload = w.finish();
+        let mut back = vec![0u8; msg.len()];
+        code.decode_into(&payload, &mut back).unwrap();
+        assert_eq!(back, msg);
+    }
+
+    #[test]
     fn encode_unknown_symbol_errors() {
         let code = HuffmanCode::from_freqs(&[5, 5]).unwrap();
         assert!(code.encode(&[7]).is_err());

@@ -176,8 +176,27 @@ fn evaluate<B: Backend + ?Sized>(
 
 /// Run a full experiment; the core entry point of the library.
 pub fn run_experiment(config: &ExperimentConfig) -> Result<ExperimentReport> {
-    let total_timer = Timer::start();
     let ds = FederatedDataset::build(&config.dataset);
+    run_experiment_on(config, &ds)
+}
+
+/// Like [`run_experiment`], but reusing a prebuilt dataset. The sweep
+/// engine builds each base's dataset once and shares it across that
+/// base's cells, instead of rebuilding (and holding) one copy per
+/// concurrently running cell.
+///
+/// `ds` must have been built from exactly `config.dataset` (checked).
+pub fn run_experiment_on(
+    config: &ExperimentConfig,
+    ds: &FederatedDataset,
+) -> Result<ExperimentReport> {
+    if ds.config != config.dataset {
+        return Err(Error::Config(format!(
+            "dataset mismatch: built from {:?}, config wants {:?}",
+            ds.config, config.dataset
+        )));
+    }
+    let total_timer = Timer::start();
     let compressor = Compressor::design(config.scheme, config.wire)?;
     let label = config.scheme.label();
 
@@ -198,7 +217,7 @@ pub fn run_experiment(config: &ExperimentConfig) -> Result<ExperimentReport> {
     let report = match &config.backend {
         BackendChoice::Native => {
             let backend = config.native_backend();
-            drive(config, &ds, &mut clients, &mut sampler, &compressor,
+            drive(config, ds, &mut clients, &mut sampler, &compressor,
                   &backend, run_round::<NativeMlp>)?
         }
         BackendChoice::Pjrt(model) => {
@@ -209,7 +228,7 @@ pub fn run_experiment(config: &ExperimentConfig) -> Result<ExperimentReport> {
                     "pjrt model batch {} overrides configured batch {}",
                     backend.batch_size(), config.batch);
             }
-            drive(config, &ds, &mut clients, &mut sampler, &compressor,
+            drive(config, ds, &mut clients, &mut sampler, &compressor,
                   &backend, run_round_serial::<PjrtModel>)?
         }
     };

@@ -1,8 +1,11 @@
 //! Layer-3 coordination: the simulated federation network with its exact
-//! bit ledger ([`network`]), the parallel round scheduler ([`scheduler`])
-//! and the experiment runner that drives full training runs and sweeps
-//! ([`experiment`]).
+//! bit ledger ([`network`]), the parallel round scheduler ([`scheduler`]),
+//! the experiment runner that drives full training runs ([`experiment`])
+//! and the sharded multi-experiment sweep engine that fans whole grids of
+//! experiments across a worker pool with a shared codebook design cache
+//! ([`sweep`]).
 
 pub mod experiment;
 pub mod network;
 pub mod scheduler;
+pub mod sweep;

@@ -1,0 +1,745 @@
+//! Sharded multi-experiment sweep engine.
+//!
+//! Every figure in the paper is a *sweep*: a grid of
+//! `schemes × bits × λ × datasets × seeds` operating points, each one a
+//! full federated run ([`crate::coordinator::experiment::run_experiment`])
+//! or a pure quantizer design. Before this module, every bench hand-rolled
+//! its own serial loop over that grid; now the grid is declared once
+//! ([`SweepGrid`] / [`DesignGrid`]), expanded into cells with
+//! deterministic per-cell seeds, executed across a scoped worker pool
+//! (same pattern as `scheduler::run_round`), stitched back in declaration
+//! order, and emitted as CSV/JSON through one report type
+//! ([`SweepReport`]).
+//!
+//! Cells share the process-wide **codebook design cache**
+//! ([`crate::fl::compression::designed_codebook`]): the expensive
+//! Lloyd/RC alternation runs once per distinct operating point and every
+//! repeat (other seeds, other datasets, re-runs) is a cache hit. The
+//! per-sweep hit/miss delta is part of the report, so reuse is
+//! observable, not assumed.
+//!
+//! Results are independent of the worker count: each cell's experiment is
+//! deterministic in its config, and stitching is by cell index.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::coordinator::experiment::{
+    run_experiment_on, ExperimentConfig, ExperimentReport,
+};
+use crate::data::FederatedDataset;
+use crate::fl::compression::{
+    design_cache_stats, designed_codebook, CompressionScheme,
+    DesignCacheStats,
+};
+use crate::quant::codebook::Codebook;
+use crate::quant::rcq::LengthModel;
+use crate::quant::DesignReport;
+use crate::util::csv::{CsvField, CsvWriter};
+use crate::util::json::{num, obj, s, Json};
+use crate::util::timer::Timer;
+use crate::util::Result;
+
+/// Resolve a requested worker count: 0 ⇒ hardware parallelism, always
+/// clamped to the number of jobs and at least 1.
+fn effective_threads(requested: usize, jobs: usize) -> usize {
+    let t = if requested == 0 {
+        std::thread::available_parallelism().map(|x| x.get()).unwrap_or(1)
+    } else {
+        requested
+    };
+    t.min(jobs.max(1)).max(1)
+}
+
+/// Run `f` over `items` on a scoped worker pool, preserving input order
+/// in the output. Workers pull indices from a shared atomic counter
+/// (work-stealing by index), so long cells don't convoy short ones.
+///
+/// `threads == 0` means hardware parallelism; `threads == 1` (or a
+/// single item) runs inline with no pool.
+pub fn parallel_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let n = items.len();
+    let threads = effective_threads(threads, n);
+    if threads <= 1 || n <= 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<R>>> =
+        (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(i, &items[i]);
+                *slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| {
+            m.into_inner().unwrap().expect("worker filled every slot")
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// Experiment sweeps (full federated runs)
+// ---------------------------------------------------------------------
+
+/// Declarative experiment grid: `datasets × seeds × schemes`.
+///
+/// Each base config carries a dataset + protocol (rounds, sampling,
+/// batch, …); the grid crosses every base with every seed and scheme.
+/// Each base's dataset is built once and shared read-only across its
+/// cells; what still scales with the worker count is the per-client
+/// shard copies inside each *running* cell, so bound `threads` on
+/// memory-tight machines when sweeping paper-scale datasets.
+#[derive(Clone, Debug)]
+pub struct SweepGrid {
+    /// dataset/protocol templates (one per dataset axis value)
+    pub bases: Vec<ExperimentConfig>,
+    pub schemes: Vec<CompressionScheme>,
+    /// replicate seeds (empty ⇒ each base's own seed)
+    pub seeds: Vec<u64>,
+    /// sweep worker threads (0 ⇒ hardware)
+    pub threads: usize,
+    /// scheduler threads *inside* each cell. Defaults to 1: the sweep
+    /// parallelizes across cells, so fanning clients out as well would
+    /// oversubscribe the machine.
+    pub inner_threads: usize,
+}
+
+impl SweepGrid {
+    pub fn new(base: ExperimentConfig) -> SweepGrid {
+        SweepGrid {
+            bases: vec![base],
+            schemes: Vec::new(),
+            seeds: Vec::new(),
+            threads: 0,
+            inner_threads: 1,
+        }
+    }
+
+    /// Add another dataset/protocol axis value.
+    pub fn dataset(mut self, base: ExperimentConfig) -> Self {
+        self.bases.push(base);
+        self
+    }
+
+    /// Add one scheme.
+    pub fn scheme(mut self, scheme: CompressionScheme) -> Self {
+        self.schemes.push(scheme);
+        self
+    }
+
+    /// The paper's RC-FED λ-curve at a fixed bit-width (Huffman length
+    /// model, matching the wire coder).
+    pub fn rcfed_lambda_curve(mut self, bits: u32, lambdas: &[f64]) -> Self {
+        for &lambda in lambdas {
+            self.schemes.push(CompressionScheme::RcFed {
+                bits,
+                lambda,
+                length_model: LengthModel::Huffman,
+            });
+        }
+        self
+    }
+
+    /// The Fig. 1 baseline set (QSGD / Lloyd-Max / NQFL) at each
+    /// bit-width.
+    pub fn baselines(mut self, bits_list: &[u32]) -> Self {
+        for &bits in bits_list {
+            self.schemes.push(CompressionScheme::Qsgd { bits });
+            self.schemes.push(CompressionScheme::Lloyd { bits });
+            self.schemes.push(CompressionScheme::Nqfl { bits });
+        }
+        self
+    }
+
+    /// Replicate seeds (each scheme runs once per seed).
+    pub fn seeds(mut self, seeds: &[u64]) -> Self {
+        self.seeds = seeds.to_vec();
+        self
+    }
+
+    /// Sweep worker threads (0 ⇒ hardware).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    /// Expand the grid into per-cell configs with deterministic per-cell
+    /// seeds, in declaration order (bases → seeds → schemes).
+    pub fn expand(&self) -> Vec<SweepCell> {
+        let mut cells = Vec::new();
+        for (base_index, base) in self.bases.iter().enumerate() {
+            let seeds: Vec<u64> = if self.seeds.is_empty() {
+                vec![base.seed]
+            } else {
+                self.seeds.clone()
+            };
+            for &seed in &seeds {
+                for &scheme in &self.schemes {
+                    let mut config = base.clone();
+                    config.scheme = scheme;
+                    config.seed = seed;
+                    config.threads = self.inner_threads;
+                    cells.push(SweepCell {
+                        index: cells.len(),
+                        base_index,
+                        label: scheme.label(),
+                        dataset: base.dataset.kind.name(),
+                        seed,
+                        config,
+                    });
+                }
+            }
+        }
+        cells
+    }
+}
+
+/// One expanded grid cell, ready to run.
+#[derive(Clone, Debug)]
+pub struct SweepCell {
+    pub index: usize,
+    /// which [`SweepGrid::bases`] entry this cell came from (cells of
+    /// one base share one prebuilt dataset during execution)
+    pub base_index: usize,
+    pub label: String,
+    pub dataset: &'static str,
+    pub seed: u64,
+    pub config: ExperimentConfig,
+}
+
+/// One finished cell.
+#[derive(Debug)]
+pub struct SweepCellResult {
+    pub label: String,
+    pub dataset: &'static str,
+    pub seed: u64,
+    pub scheme: CompressionScheme,
+    pub report: ExperimentReport,
+}
+
+/// One cell that errored (the rest of the sweep is still reported).
+#[derive(Debug)]
+pub struct SweepCellFailure {
+    pub label: String,
+    pub dataset: &'static str,
+    pub seed: u64,
+    pub error: String,
+}
+
+/// Everything a sweep produced, in declaration order.
+#[derive(Debug)]
+pub struct SweepReport {
+    pub cells: Vec<SweepCellResult>,
+    /// cells that errored — successful cells are never discarded because
+    /// one operating point failed (a 20-cell sweep is hours of work)
+    pub failures: Vec<SweepCellFailure>,
+    pub wall_secs: f64,
+    /// worker threads the pool actually used
+    pub threads: usize,
+    /// codebook design-cache movement during this sweep
+    pub design_cache: DesignCacheStats,
+}
+
+/// Execute a grid: expand, fan the cells out across the worker pool,
+/// stitch results back in declaration order.
+pub fn run_sweep(grid: &SweepGrid) -> Result<SweepReport> {
+    let timer = Timer::start();
+    let cells = grid.expand();
+    let threads = effective_threads(grid.threads, cells.len());
+    // one dataset per base, shared (read-only) across that base's cells —
+    // concurrent cells must not each build and hold their own copy
+    let datasets: Vec<FederatedDataset> = grid
+        .bases
+        .iter()
+        .map(|base| FederatedDataset::build(&base.dataset))
+        .collect();
+    let before = design_cache_stats();
+    let results = parallel_map(&cells, threads, |_, cell| {
+        run_experiment_on(&cell.config, &datasets[cell.base_index])
+    });
+    let design_cache = design_cache_stats().since(&before);
+    let mut out = Vec::with_capacity(cells.len());
+    let mut failures = Vec::new();
+    for (cell, result) in cells.into_iter().zip(results) {
+        match result {
+            Ok(report) => out.push(SweepCellResult {
+                label: cell.label,
+                dataset: cell.dataset,
+                seed: cell.seed,
+                scheme: cell.config.scheme,
+                report,
+            }),
+            Err(e) => {
+                crate::warn!(
+                    "sweep cell {} (dataset {}, seed {}) failed: {e}",
+                    cell.label, cell.dataset, cell.seed
+                );
+                failures.push(SweepCellFailure {
+                    label: cell.label,
+                    dataset: cell.dataset,
+                    seed: cell.seed,
+                    error: e.to_string(),
+                });
+            }
+        }
+    }
+    if out.is_empty() && !failures.is_empty() {
+        return Err(crate::util::Error::Config(format!(
+            "all {} sweep cells failed; first: {} — {}",
+            failures.len(), failures[0].label, failures[0].error
+        )));
+    }
+    Ok(SweepReport {
+        cells: out,
+        failures,
+        wall_secs: timer.secs(),
+        threads,
+        design_cache,
+    })
+}
+
+impl SweepReport {
+    /// The scheme-keyed base schema (identical to the pre-engine fig1a
+    /// harness output). [`Self::write_csv`] uses `CSV_HEADER[0]` as the
+    /// key column and `CSV_HEADER[1..]` as the metric columns, inserting
+    /// `dataset`/`seed` columns between them for replicated grids.
+    pub const CSV_HEADER: [&'static str; 5] =
+        ["scheme", "final_acc", "best_acc", "gigabits", "wall_secs"];
+
+    /// Write the standard per-cell CSV ([`Self::CSV_HEADER`] schema).
+    ///
+    /// Replicated grids would collapse under a scheme-keyed schema, so a
+    /// `dataset` and/or `seed` column is inserted after `scheme` whenever
+    /// the report spans more than one of either — rows stay uniquely
+    /// keyed without every caller having to remember the guard.
+    pub fn write_csv(&self, path: &str) -> Result<()> {
+        let distinct = |mut vals: Vec<&str>| {
+            vals.sort_unstable();
+            vals.dedup();
+            vals.len() > 1
+        };
+        let multi_dataset =
+            distinct(self.cells.iter().map(|c| c.dataset).collect());
+        let multi_seed = {
+            let mut seeds: Vec<u64> =
+                self.cells.iter().map(|c| c.seed).collect();
+            seeds.sort_unstable();
+            seeds.dedup();
+            seeds.len() > 1
+        };
+        let mut header: Vec<&str> = vec![Self::CSV_HEADER[0]];
+        if multi_dataset {
+            header.push("dataset");
+        }
+        if multi_seed {
+            header.push("seed");
+        }
+        header.extend_from_slice(&Self::CSV_HEADER[1..]);
+        let mut w = CsvWriter::create(path, &header)?;
+        for c in &self.cells {
+            let mut row = vec![CsvField::from(c.label.clone())];
+            if multi_dataset {
+                row.push(CsvField::from(c.dataset));
+            }
+            if multi_seed {
+                row.push(CsvField::from(c.seed));
+            }
+            row.push(CsvField::from(c.report.final_accuracy));
+            row.push(CsvField::from(c.report.best_accuracy));
+            row.push(CsvField::from(c.report.uplink_gigabits()));
+            row.push(CsvField::from(c.report.wall_secs));
+            w.row(&row)?;
+        }
+        w.flush()
+    }
+
+    /// Write a CSV with a caller-controlled schema (header + row
+    /// projection), for harnesses with extra derived columns.
+    pub fn write_csv_with<F>(
+        &self,
+        path: &str,
+        header: &[&str],
+        row: F,
+    ) -> Result<()>
+    where
+        F: Fn(&SweepCellResult) -> Vec<CsvField>,
+    {
+        let mut w = CsvWriter::create(path, header)?;
+        for cell in &self.cells {
+            w.row(&row(cell))?;
+        }
+        w.flush()
+    }
+
+    /// Serialize the whole report (cells + pool + cache counters).
+    pub fn to_json(&self) -> Json {
+        fn num_or_null(x: f64) -> Json {
+            if x.is_finite() {
+                num(x)
+            } else {
+                Json::Null
+            }
+        }
+        let cells: Vec<Json> = self
+            .cells
+            .iter()
+            .map(|c| {
+                obj(vec![
+                    ("scheme", s(&c.label)),
+                    ("dataset", s(c.dataset)),
+                    ("seed", num(c.seed as f64)),
+                    ("final_acc", num_or_null(c.report.final_accuracy)),
+                    ("best_acc", num_or_null(c.report.best_accuracy)),
+                    ("gigabits", num(c.report.uplink_gigabits())),
+                    ("total_bits", num(c.report.total_bits as f64)),
+                    ("wall_secs", num(c.report.wall_secs)),
+                ])
+            })
+            .collect();
+        let failures: Vec<Json> = self
+            .failures
+            .iter()
+            .map(|f| {
+                obj(vec![
+                    ("scheme", s(&f.label)),
+                    ("dataset", s(f.dataset)),
+                    ("seed", num(f.seed as f64)),
+                    ("error", s(&f.error)),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("threads", num(self.threads as f64)),
+            ("wall_secs", num(self.wall_secs)),
+            (
+                "design_cache",
+                obj(vec![
+                    ("hits", num(self.design_cache.hits as f64)),
+                    ("misses", num(self.design_cache.misses as f64)),
+                ]),
+            ),
+            ("cells", Json::Arr(cells)),
+            ("failures", Json::Arr(failures)),
+        ])
+    }
+
+    /// Write the JSON report (parent directories created as needed).
+    pub fn write_json(&self, path: &str) -> Result<()> {
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    /// Fig. 1's headline check: how many cells *outside* `prefix` are
+    /// dominated (≥ accuracy − `acc_tol`, ≤ uplink) by some cell whose
+    /// label starts with `prefix`. Returns `(dominated, total)`.
+    pub fn pareto_dominance(
+        &self,
+        prefix: &str,
+        acc_tol: f64,
+    ) -> (usize, usize) {
+        let curve: Vec<&SweepCellResult> = self
+            .cells
+            .iter()
+            .filter(|c| c.label.starts_with(prefix))
+            .collect();
+        let mut dominated = 0;
+        let mut total = 0;
+        for base in self.cells.iter().filter(|c| !c.label.starts_with(prefix))
+        {
+            total += 1;
+            if curve.iter().any(|p| {
+                p.report.final_accuracy >= base.report.final_accuracy - acc_tol
+                    && p.report.uplink_gigabits()
+                        <= base.report.uplink_gigabits()
+            }) {
+                dominated += 1;
+            }
+        }
+        (dominated, total)
+    }
+
+    /// One-line pool/cache summary for bench footers.
+    pub fn summary(&self) -> String {
+        let mut line = format!(
+            "sweep: {} cells across {} workers in {:.1}s; design cache {}",
+            self.cells.len(),
+            self.threads,
+            self.wall_secs,
+            self.design_cache
+        );
+        if !self.failures.is_empty() {
+            line.push_str(&format!("; {} cells FAILED", self.failures.len()));
+        }
+        line
+    }
+}
+
+// ---------------------------------------------------------------------
+// Design sweeps (quantizer design only, no training)
+// ---------------------------------------------------------------------
+
+/// Declarative quantizer-design grid — the rate–distortion benches'
+/// core object. Cells run through the design cache, so overlapping
+/// operating points across benches are designed once per process.
+#[derive(Clone, Debug)]
+pub struct DesignGrid {
+    pub schemes: Vec<CompressionScheme>,
+    /// worker threads (0 ⇒ hardware)
+    pub threads: usize,
+}
+
+/// One designed operating point.
+pub struct DesignCellResult {
+    pub label: String,
+    pub scheme: CompressionScheme,
+    pub codebook: Codebook,
+    pub report: DesignReport,
+}
+
+/// Design every scheme in the grid (parallel, cached, order-preserving).
+pub fn run_design_sweep(grid: &DesignGrid) -> Result<Vec<DesignCellResult>> {
+    let threads = effective_threads(grid.threads, grid.schemes.len());
+    let results = parallel_map(&grid.schemes, threads, |_, &scheme| {
+        designed_codebook(scheme)
+    });
+    let mut out = Vec::with_capacity(grid.schemes.len());
+    for (&scheme, result) in grid.schemes.iter().zip(results) {
+        let (codebook, report) = result?;
+        out.push(DesignCellResult {
+            label: scheme.label(),
+            scheme,
+            codebook,
+            report,
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fl::compression::CompressionScheme;
+
+    fn tiny_base() -> ExperimentConfig {
+        let mut base = ExperimentConfig::tiny();
+        base.rounds = 6;
+        base.eval_every = 3;
+        base
+    }
+
+    fn small_grid() -> SweepGrid {
+        SweepGrid::new(tiny_base())
+            .scheme(CompressionScheme::Lloyd { bits: 3 })
+            .scheme(CompressionScheme::Fp32)
+            .seeds(&[11, 12])
+    }
+
+    #[test]
+    fn expansion_is_ordered_and_deterministic() {
+        let grid = small_grid();
+        let cells = grid.expand();
+        assert_eq!(cells.len(), 4); // 2 seeds × 2 schemes
+        assert_eq!(cells[0].label, "lloyd_b3");
+        assert_eq!(cells[0].seed, 11);
+        assert_eq!(cells[1].label, "fp32");
+        assert_eq!(cells[2].seed, 12);
+        for (i, c) in cells.iter().enumerate() {
+            assert_eq!(c.index, i);
+            assert_eq!(c.config.threads, 1, "inner rounds must stay serial");
+        }
+        let again = grid.expand();
+        assert_eq!(again.len(), cells.len());
+        assert_eq!(again[3].label, cells[3].label);
+    }
+
+    #[test]
+    fn multi_dataset_grids_cross_every_base() {
+        let mut femnist = ExperimentConfig::tiny();
+        femnist.seed = 99;
+        let grid = SweepGrid::new(tiny_base())
+            .dataset(femnist)
+            .scheme(CompressionScheme::Fp32);
+        let cells = grid.expand();
+        assert_eq!(cells.len(), 2);
+        // with no explicit seeds each base contributes its own
+        assert_eq!(cells[0].seed, tiny_base().seed);
+        assert_eq!(cells[1].seed, 99);
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let items: Vec<usize> = (0..40).collect();
+        let doubled = parallel_map(&items, 4, |i, &x| {
+            assert_eq!(i, x);
+            x * 2
+        });
+        assert_eq!(doubled, (0..40).map(|x| x * 2).collect::<Vec<_>>());
+        // serial path agrees
+        let serial = parallel_map(&items, 1, |_, &x| x * 2);
+        assert_eq!(doubled, serial);
+    }
+
+    #[test]
+    fn sweep_results_independent_of_worker_count() {
+        let mut parallel = small_grid();
+        parallel.threads = 2;
+        let mut serial = small_grid();
+        serial.threads = 1;
+        let a = run_sweep(&parallel).unwrap();
+        let b = run_sweep(&serial).unwrap();
+        assert_eq!(a.cells.len(), b.cells.len());
+        assert!(a.threads >= 1 && b.threads == 1);
+        for (x, y) in a.cells.iter().zip(&b.cells) {
+            assert_eq!(x.label, y.label);
+            assert_eq!(x.seed, y.seed);
+            assert_eq!(x.report.total_bits, y.report.total_bits);
+            assert_eq!(x.report.final_accuracy, y.report.final_accuracy);
+        }
+    }
+
+    #[test]
+    fn repeated_cells_hit_the_design_cache() {
+        // one scheme × two seeds, serial pool: the second cell's design
+        // must be a cache hit, and the report must expose it.
+        let mut grid = SweepGrid::new(tiny_base()).seeds(&[21, 22]);
+        grid.schemes.push(CompressionScheme::RcFed {
+            bits: 3,
+            lambda: 0.0719, // unusual λ so the first cell is a real miss
+            length_model: crate::quant::rcq::LengthModel::Huffman,
+        });
+        grid.threads = 1;
+        let report = run_sweep(&grid).unwrap();
+        assert_eq!(report.cells.len(), 2);
+        assert!(
+            report.design_cache.hits >= 1,
+            "sweep report shows no design-cache hits: {:?}",
+            report.design_cache
+        );
+        // a replicated report must not collapse under the default CSV
+        // schema: the seed column is inserted automatically
+        let dir = std::env::temp_dir()
+            .join(format!("rcfed_sweep_seeds_{}", std::process::id()));
+        let path = dir.join("replicated.csv");
+        report.write_csv(path.to_str().unwrap()).unwrap();
+        let csv = std::fs::read_to_string(&path).unwrap();
+        assert!(
+            csv.starts_with("scheme,seed,final_acc"),
+            "replicated schema missing seed column: {csv}"
+        );
+        assert_eq!(csv.lines().count(), 3);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn failed_cells_do_not_discard_completed_work() {
+        // a batch larger than the test set makes evaluation fail
+        // deterministically in that cell only
+        let mut bad = tiny_base();
+        bad.batch = 100_000;
+        bad.eval_every = 1;
+        let mut grid = SweepGrid::new(tiny_base())
+            .dataset(bad.clone())
+            .scheme(CompressionScheme::Fp32);
+        grid.threads = 1;
+        let report = run_sweep(&grid).unwrap();
+        assert_eq!(report.cells.len(), 1, "good cell must survive");
+        assert_eq!(report.failures.len(), 1);
+        assert!(
+            report.failures[0].error.contains("test set"),
+            "unexpected failure: {}",
+            report.failures[0].error
+        );
+        assert!(report.summary().contains("FAILED"));
+        // ... but a sweep where every cell fails is a hard error
+        let mut all_bad =
+            SweepGrid::new(bad).scheme(CompressionScheme::Fp32);
+        all_bad.threads = 1;
+        assert!(run_sweep(&all_bad).is_err());
+    }
+
+    #[test]
+    fn csv_and_json_reports_roundtrip() {
+        let mut grid = SweepGrid::new(tiny_base())
+            .scheme(CompressionScheme::Lloyd { bits: 3 });
+        grid.threads = 1;
+        let report = run_sweep(&grid).unwrap();
+        let dir = std::env::temp_dir()
+            .join(format!("rcfed_sweep_{}", std::process::id()));
+        let csv_path = dir.join("sweep.csv");
+        let json_path = dir.join("sweep.json");
+        report.write_csv(csv_path.to_str().unwrap()).unwrap();
+        report.write_json(json_path.to_str().unwrap()).unwrap();
+        let csv = std::fs::read_to_string(&csv_path).unwrap();
+        assert!(csv.starts_with("scheme,final_acc,best_acc,gigabits"));
+        assert!(csv.lines().count() == 2);
+        let json = std::fs::read_to_string(&json_path).unwrap();
+        let v = crate::util::json::Json::parse(&json).unwrap();
+        assert_eq!(
+            v.req("cells").unwrap().as_arr().unwrap().len(),
+            1
+        );
+        assert!(v.req("design_cache").unwrap().get("hits").is_some());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn design_sweep_runs_the_grid_in_order() {
+        let grid = DesignGrid {
+            schemes: vec![
+                CompressionScheme::Lloyd { bits: 2 },
+                CompressionScheme::Nqfl { bits: 2 },
+                CompressionScheme::Uniform { bits: 2, clip: 4.0 },
+            ],
+            threads: 2,
+        };
+        let cells = run_design_sweep(&grid).unwrap();
+        assert_eq!(cells.len(), 3);
+        assert_eq!(cells[0].label, "lloyd_b2");
+        assert_eq!(cells[1].label, "nqfl_b2");
+        for c in &cells {
+            c.codebook.validate().unwrap();
+            assert!(c.report.mse > 0.0);
+        }
+        // lloyd is MSE-optimal among these
+        assert!(cells[0].report.mse <= cells[1].report.mse);
+        assert!(cells[0].report.mse <= cells[2].report.mse);
+    }
+
+    #[test]
+    fn pareto_dominance_counts() {
+        let mut grid = SweepGrid::new(tiny_base())
+            .scheme(CompressionScheme::RcFed {
+                bits: 3,
+                lambda: 0.1,
+                length_model: crate::quant::rcq::LengthModel::Huffman,
+            })
+            .scheme(CompressionScheme::Fp32);
+        grid.threads = 1;
+        let report = run_sweep(&grid).unwrap();
+        // tolerance 1.0 ⇒ dominance reduces to the uplink ordering,
+        // which is deterministic: rcfed b=3 ≪ fp32 bits
+        let (dominated, total) = report.pareto_dominance("rcfed", 1.0);
+        assert_eq!(total, 1); // fp32 is the only non-rcfed cell
+        assert_eq!(dominated, 1);
+        assert!(!report.summary().is_empty());
+    }
+}

@@ -68,7 +68,7 @@ impl DatasetKind {
 }
 
 /// Dataset construction parameters.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct DatasetConfig {
     pub kind: DatasetKind,
     /// number of client shards (paper: 10 for CIFAR, 3550 for FEMNIST)

@@ -53,9 +53,14 @@ pub mod prelude {
     pub use crate::coordinator::experiment::{
         run_experiment, ExperimentConfig, ExperimentReport, SchemeConfig,
     };
+    pub use crate::coordinator::sweep::{
+        run_design_sweep, run_sweep, DesignGrid, SweepGrid, SweepReport,
+    };
     pub use crate::coding::huffman::HuffmanCode;
     pub use crate::data::{DatasetConfig, FederatedDataset};
-    pub use crate::fl::compression::{CompressionScheme, Compressor};
+    pub use crate::fl::compression::{
+        designed_codebook, CompressionScheme, Compressor,
+    };
     pub use crate::quant::{
         codebook::Codebook, lloyd::LloydMax, rcq::RateConstrainedQuantizer,
     };

@@ -20,10 +20,12 @@
 use rcfed::coordinator::experiment::{
     run_experiment, BackendChoice, ExperimentConfig,
 };
+use rcfed::coordinator::sweep::{run_sweep, SweepGrid};
 use rcfed::data::DatasetKind;
-use rcfed::fl::compression::{CompressionScheme, WireCoder};
+use rcfed::fl::compression::{
+    designed_codebook, CompressionScheme, WireCoder,
+};
 use rcfed::fl::server::LrSchedule;
-use rcfed::quant::lloyd::LloydMax;
 use rcfed::quant::rcq::{LengthModel, RateConstrainedQuantizer};
 use rcfed::stats::gaussian::StdGaussian;
 use rcfed::util::cli::Args;
@@ -62,7 +64,9 @@ fn print_usage() {
          [--bits 3] [--lambda 0.05] [--rounds 100] [--clients-per-round 0]\n       \
          [--local-iters 1] [--batch 64] [--lr 0.01] [--seed 42]\n       \
          [--backend native|pjrt] [--model mlp_synthcifar] [--out file.csv]\n\
-         sweep  same dataset flags; runs the full Fig. 1 grid\n\
+         sweep  same dataset flags; runs the full Fig. 1 grid through the\n       \
+         sweep engine [--lambdas l1,l2] [--bits-list 3,6] [--seeds s1,s2]\n       \
+         [--sweep-threads 0] [--json file.json]\n\
          design --scheme rcfed|lloyd --bits b [--lambda l] [--target-rate r]\n\
          info   [--artifacts dir]"
     );
@@ -168,38 +172,84 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let lambdas =
         args.f64_list_or("lambdas", &[0.02, 0.04, 0.06, 0.08, 0.1])?;
     let bits = args.usize_list_or("bits-list", &[3, 6])?;
+    let seeds = args.usize_list_or("seeds", &[])?;
+    let sweep_threads = args.usize_or("sweep-threads", 0)?;
     let out = args.str_or("out", "results/sweep.csv");
+    let json_out = args.get("json").map(|s| s.to_string());
     args.finish()?;
 
-    let mut schemes: Vec<CompressionScheme> = Vec::new();
-    for &lam in &lambdas {
-        schemes.push(CompressionScheme::RcFed {
-            bits: *bits.first().unwrap_or(&3) as u32,
-            lambda: lam,
-            length_model: LengthModel::Huffman,
-        });
+    // declarative grid: RC-FED λ-curve + baselines, expanded and executed
+    // by the sweep engine across a scoped worker pool with the shared
+    // codebook design cache.
+    let rc_bits = *bits.first().unwrap_or(&3) as u32;
+    // --threads controls the scheduler *inside* each cell; the engine
+    // defaults it to 1 so sweep workers don't oversubscribe the machine.
+    let inner_threads = base.threads;
+    let mut grid = SweepGrid::new(base)
+        .rcfed_lambda_curve(rc_bits, &lambdas)
+        .threads(sweep_threads);
+    if inner_threads > 1 {
+        grid.inner_threads = inner_threads;
+        if sweep_threads == 0 {
+            // keep total parallelism ≈ the machine: workers × inner ≤ cores
+            let cores = std::thread::available_parallelism()
+                .map(|x| x.get())
+                .unwrap_or(1);
+            grid.threads = (cores / inner_threads).max(1);
+        }
     }
     for &b in &bits {
-        schemes.push(CompressionScheme::Lloyd { bits: b as u32 });
-        schemes.push(CompressionScheme::Nqfl { bits: b as u32 });
-        schemes.push(CompressionScheme::Qsgd { bits: b as u32 });
+        grid = grid
+            .scheme(CompressionScheme::Lloyd { bits: b as u32 })
+            .scheme(CompressionScheme::Nqfl { bits: b as u32 })
+            .scheme(CompressionScheme::Qsgd { bits: b as u32 });
     }
-    let mut w = rcfed::util::csv::CsvWriter::create(
-        &out,
-        &["scheme", "acc", "gigabits"],
-    )?;
-    for scheme in schemes {
-        let mut cfg = base.clone();
-        cfg.scheme = scheme;
-        let rep = run_experiment(&cfg)?;
-        rcfed::csv_row!(w, rep.label.clone(), rep.final_accuracy,
-                        rep.uplink_gigabits())?;
+    let replicated = !seeds.is_empty();
+    if replicated {
+        let seeds: Vec<u64> = seeds.iter().map(|&s| s as u64).collect();
+        grid = grid.seeds(&seeds);
+    }
+
+    let report = run_sweep(&grid)?;
+    for cell in &report.cells {
         println!(
-            "{:<22} acc={:.4} uplink={:.5} Gb",
-            rep.label, rep.final_accuracy, rep.uplink_gigabits()
+            "{:<22} seed={:<6} acc={:.4} uplink={:.5} Gb",
+            cell.label,
+            cell.seed,
+            cell.report.final_accuracy,
+            cell.report.uplink_gigabits()
         );
     }
-    w.flush()?;
+    use rcfed::util::csv::CsvField;
+    if replicated {
+        // replicate seeds would collapse under the seedless schema
+        report.write_csv_with(
+            &out,
+            &["scheme", "seed", "acc", "gigabits"],
+            |c| {
+                vec![
+                    CsvField::from(c.label.clone()),
+                    CsvField::from(c.seed),
+                    CsvField::from(c.report.final_accuracy),
+                    CsvField::from(c.report.uplink_gigabits()),
+                ]
+            },
+        )?;
+    } else {
+        // the pre-engine schema, unchanged
+        report.write_csv_with(&out, &["scheme", "acc", "gigabits"], |c| {
+            vec![
+                CsvField::from(c.label.clone()),
+                CsvField::from(c.report.final_accuracy),
+                CsvField::from(c.report.uplink_gigabits()),
+            ]
+        })?;
+    }
+    println!("{}", report.summary());
+    if let Some(path) = json_out {
+        report.write_json(&path)?;
+        println!("wrote {path}");
+    }
     println!("wrote {out}");
     Ok(())
 }
@@ -209,25 +259,19 @@ fn cmd_design(args: &Args) -> Result<()> {
     let target = args.f64_or("target-rate", f64::NAN)?;
     args.finish()?;
     match scheme {
-        CompressionScheme::RcFed { bits, lambda, length_model } => {
-            if !target.is_nan() {
-                let (cb, rep, lam) =
-                    RateConstrainedQuantizer::design_for_target_rate(
-                        &StdGaussian, bits, target, length_model)?;
-                println!("solved lambda={lam:.5} for target {target} bits");
-                print_design(&cb.levels, &cb.bounds, rep.mse,
-                             rep.entropy_bits, rep.huffman_rate);
-            } else {
-                let rc = RateConstrainedQuantizer {
-                    lambda, length_model, ..Default::default()
-                };
-                let (cb, rep) = rc.design(&StdGaussian, bits)?;
-                print_design(&cb.levels, &cb.bounds, rep.mse,
-                             rep.entropy_bits, rep.huffman_rate);
-            }
+        CompressionScheme::RcFed { bits, length_model, .. }
+            if !target.is_nan() =>
+        {
+            let (cb, rep, lam) =
+                RateConstrainedQuantizer::design_for_target_rate(
+                    &StdGaussian, bits, target, length_model)?;
+            println!("solved lambda={lam:.5} for target {target} bits");
+            print_design(&cb.levels, &cb.bounds, rep.mse,
+                         rep.entropy_bits, rep.huffman_rate);
         }
-        CompressionScheme::Lloyd { bits } => {
-            let (cb, rep) = LloydMax::default().design(&StdGaussian, bits)?;
+        CompressionScheme::RcFed { .. } | CompressionScheme::Lloyd { .. } => {
+            // served from the process-wide design cache
+            let (cb, rep) = designed_codebook(scheme)?;
             print_design(&cb.levels, &cb.bounds, rep.mse,
                          rep.entropy_bits, rep.huffman_rate);
         }

@@ -222,9 +222,15 @@ pub fn cell_probs(pdf: &dyn SourcePdf, bounds: &[f64]) -> Vec<f64> {
         .collect()
 }
 
-/// Repair strict monotonicity after the shifted-midpoint step; λ large
-/// enough can fold neighbouring boundaries over each other.
-fn repair_bounds(bounds: &mut [f64], lo: f64, hi: f64) {
+/// Repair monotonicity after the shifted-midpoint step; λ large enough
+/// can fold neighbouring boundaries over each other.
+///
+/// Postconditions: non-decreasing order and every boundary inside
+/// `[lo, hi]`. Strictness is restored downstream by
+/// [`Codebook::from_f64_sanitized`]; what must never survive is an
+/// out-of-support boundary, which would put probability mass in cells
+/// the design integrals can't see.
+pub(crate) fn repair_bounds(bounds: &mut [f64], lo: f64, hi: f64) {
     let n = bounds.len();
     if n == 0 {
         return;
@@ -237,11 +243,18 @@ fn repair_bounds(bounds: &mut [f64], lo: f64, hi: f64) {
         }
         bounds[i] = bounds[i].clamp(lo, hi);
     }
-    // a final backward pass in case clamping at hi collapsed the tail
+    // a backward pass in case clamping at hi collapsed the tail
     for i in (0..n - 1).rev() {
         if bounds[i] >= bounds[i + 1] {
             bounds[i] = bounds[i + 1] - eps;
         }
+    }
+    // the backward pass subtracts below already-clamped values, so it can
+    // step past `lo` when a run of boundaries collapses near the support
+    // edge at large λ; clamp once more (clamping a sorted sequence keeps
+    // it sorted, so both postconditions hold).
+    for b in bounds.iter_mut() {
+        *b = b.clamp(lo, hi);
     }
 }
 
@@ -406,6 +419,59 @@ mod tests {
         let (cb, rep) = rc.design(&StdGaussian, 3).unwrap();
         cb.validate().unwrap();
         assert!(rep.entropy_bits < 1.5);
+    }
+
+    #[test]
+    fn large_lambda_bounds_stay_in_support() {
+        // regression: the old repair_bounds ran its backward
+        // tie-breaking pass after clamping, so a collapsed run of
+        // boundaries could be stepped past the lower support edge at
+        // large λ. All boundaries must lie inside pdf.support().
+        let (lo, hi) = StdGaussian.support();
+        for &length_model in &[LengthModel::Huffman, LengthModel::Ideal] {
+            let rc = RateConstrainedQuantizer {
+                lambda: 5.0,
+                length_model,
+                ..Default::default()
+            };
+            let (cb, _) = rc.design(&StdGaussian, 3).unwrap();
+            cb.validate().unwrap();
+            // tolerance: one f32 rounding + sanitizer ULP step
+            let tol = 1e-3;
+            for (i, &b) in cb.bounds.iter().enumerate() {
+                let b = b as f64;
+                assert!(
+                    b >= lo - tol && b <= hi + tol,
+                    "{length_model:?}: bound {i} = {b} outside \
+                     support [{lo}, {hi}]"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn repair_bounds_postconditions() {
+        let (lo, hi) = (-8.0, 8.0);
+        let cases: Vec<Vec<f64>> = vec![
+            vec![9.0, -9.0, 9.0, 9.0, -9.0],          // wild fold-over
+            vec![8.0; 7],                              // collapse at hi
+            vec![-8.0; 7],                             // collapse at lo
+            vec![-20.0, -19.0, 0.0, 19.0, 20.0],       // clamped tails
+            vec![0.5, 0.5, 0.5],                       // interior ties
+        ];
+        for mut bounds in cases {
+            let orig = bounds.clone();
+            repair_bounds(&mut bounds, lo, hi);
+            for w in bounds.windows(2) {
+                assert!(w[0] <= w[1], "{orig:?} -> {bounds:?} not sorted");
+            }
+            for &b in &bounds {
+                assert!(
+                    (lo..=hi).contains(&b),
+                    "{orig:?} -> {bounds:?} leaves the support"
+                );
+            }
+        }
     }
 
     #[test]

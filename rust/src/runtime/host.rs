@@ -2,6 +2,7 @@
 //! the manifest order and build/unpack `xla::Literal`s.
 
 use crate::runtime::artifacts::{Dtype, ModelManifest, TensorSpec};
+use crate::runtime::xla_stub as xla;
 use crate::util::{Error, Result};
 
 /// A host-side tensor crossing the PJRT boundary.

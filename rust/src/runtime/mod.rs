@@ -6,6 +6,7 @@
 pub mod artifacts;
 pub mod host;
 pub mod pjrt;
+pub mod xla_stub;
 
 pub use artifacts::{ArtifactSpec, Manifest, ModelManifest, TensorSpec};
 pub use pjrt::Engine;

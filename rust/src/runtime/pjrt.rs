@@ -12,6 +12,9 @@ use std::sync::Arc;
 
 use crate::runtime::artifacts::Manifest;
 use crate::runtime::host::HostTensor;
+// The real `xla` crate cannot be vendored on this image; the stub
+// type-checks the same API and errors cleanly at Engine construction.
+use crate::runtime::xla_stub as xla;
 use crate::util::{Error, Result};
 
 /// Compiled-executable cache over one PJRT CPU client.

@@ -1,12 +1,13 @@
 //! Standard-library-only substrates.
 //!
 //! The build image has no network registry, so the usual ecosystem crates
-//! (`rand`, `serde`, `clap`, `tokio`, `criterion`) are unavailable. This
-//! module provides the replacements the rest of the crate builds on:
-//! deterministic PRNGs ([`rng`]), a JSON codec for the artifact manifest
-//! and result files ([`json`]), a CLI/config parser ([`cli`]), a leveled
-//! logger ([`log`]), CSV emission ([`csv`]) and wallclock timing helpers
-//! ([`timer`]).
+//! (`rand`, `serde`, `clap`, `tokio`, `criterion`, `thiserror`) are
+//! unavailable. This module provides the replacements the rest of the
+//! crate builds on: deterministic PRNGs ([`rng`]), a JSON codec for the
+//! artifact manifest and result files ([`json`]), a CLI/config parser
+//! ([`cli`]), a leveled logger ([`log`]), CSV emission ([`csv`]),
+//! wallclock timing helpers ([`timer`]), and a hand-rolled crate-wide
+//! error type (no `thiserror` derive on this image).
 
 pub mod cli;
 pub mod csv;
@@ -16,28 +17,67 @@ pub mod rng;
 pub mod timer;
 
 /// Crate-wide error type.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
-    #[error("config error: {0}")]
     Config(String),
-    #[error("json error: {0}")]
     Json(String),
-    #[error("artifact error: {0}")]
     Artifact(String),
-    #[error("coding error: {0}")]
     Coding(String),
-    #[error("quantizer error: {0}")]
     Quant(String),
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("xla error: {0}")]
+    Io(std::io::Error),
     Xla(String),
 }
 
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Json(m) => write!(f, "json error: {m}"),
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Coding(m) => write!(f, "coding error: {m}"),
+            Error::Quant(m) => write!(f, "quantizer error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+// From<xla::Error> lives next to the stub in `runtime::xla_stub`, so this
+// bottom-layer module stays standard-library-only.
+
 pub type Result<T> = std::result::Result<T, Error>;
 
-impl From<xla::Error> for Error {
-    fn from(e: xla::Error) -> Self {
-        Error::Xla(e.to_string())
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_prefixes_match_variants() {
+        assert_eq!(Error::Config("x".into()).to_string(), "config error: x");
+        assert_eq!(Error::Quant("q".into()).to_string(), "quantizer error: q");
+        let io: Error =
+            std::io::Error::new(std::io::ErrorKind::Other, "boom").into();
+        assert!(io.to_string().contains("io error"));
+    }
+
+    #[test]
+    fn error_is_std_error() {
+        fn takes_err<E: std::error::Error>(_e: &E) {}
+        takes_err(&Error::Coding("c".into()));
     }
 }
