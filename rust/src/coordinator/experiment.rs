@@ -14,8 +14,12 @@ use crate::fl::server::{LrSchedule, Server};
 use crate::model::native::NativeMlp;
 use crate::model::pjrt::PjrtModel;
 use crate::model::Backend;
-use crate::coordinator::network::SimulatedNetwork;
-use crate::coordinator::scheduler::{run_round, run_round_serial, RoundPlan};
+use crate::coordinator::network::{
+    ChannelSpec, ChannelStats, Delivery, SimulatedNetwork,
+};
+use crate::coordinator::scheduler::{
+    run_round, run_round_serial, select_clients, RoundPlan,
+};
 use crate::util::rng::Rng;
 use crate::util::timer::Timer;
 use crate::util::{Error, Result};
@@ -54,6 +58,9 @@ pub struct ExperimentConfig {
     pub eval_batches: usize,
     /// scheduler worker threads (0 ⇒ hardware)
     pub threads: usize,
+    /// uplink channel model (loss, corruption, stragglers, availability);
+    /// [`ChannelSpec::ideal`] reproduces the fault-free behavior exactly
+    pub channel: ChannelSpec,
 }
 
 impl ExperimentConfig {
@@ -76,6 +83,7 @@ impl ExperimentConfig {
             eval_every: 5,
             eval_batches: 0,
             threads: 0,
+            channel: ChannelSpec::ideal(),
         }
     }
 
@@ -97,6 +105,7 @@ impl ExperimentConfig {
             eval_every: 5,
             eval_batches: 0,
             threads: 0,
+            channel: ChannelSpec::ideal(),
         }
     }
 
@@ -120,6 +129,7 @@ impl ExperimentConfig {
             eval_every: 5,
             eval_batches: 0,
             threads: 0,
+            channel: ChannelSpec::ideal(),
         }
     }
 
@@ -142,6 +152,8 @@ pub struct ExperimentReport {
     pub num_params: usize,
     pub total_bits: u64,
     pub wall_secs: f64,
+    /// channel outcome counters (all-delivered under an ideal channel)
+    pub channel: ChannelStats,
 }
 
 impl ExperimentReport {
@@ -196,6 +208,7 @@ pub fn run_experiment_on(
             ds.config, config.dataset
         )));
     }
+    config.channel.validate()?;
     let total_timer = Timer::start();
     let compressor = Compressor::design(config.scheme, config.wire)?;
     let label = config.scheme.label();
@@ -272,7 +285,11 @@ fn drive<B: Backend>(
         backend.init_params(config.seed ^ 0xA5A5_5A5A),
         config.lr,
     );
-    let mut network = SimulatedNetwork::new(clients.len());
+    let mut network = SimulatedNetwork::with_spec(
+        clients.len(),
+        config.channel,
+        config.seed ^ 0xC4A2_2E1B_9D5F_7733,
+    );
     let mut metrics = MetricsLog::new();
     let k_all = clients.len();
     let k_round = if config.clients_per_round == 0 {
@@ -292,33 +309,74 @@ fn drive<B: Backend>(
             batch,
             threads: config.threads,
         };
-        // client sampling (§5: "K devices are randomly sampled")
-        let sampled = sampler.sample_indices(k_all, k_round);
-        let mut selected: Vec<&mut Client> = {
-            // collect &mut refs to the sampled clients, preserving order
-            let mut flags = vec![false; k_all];
-            for &i in &sampled {
-                flags[i] = true;
-            }
-            clients
-                .iter_mut()
-                .enumerate()
-                .filter(|(i, _)| flags[*i])
-                .map(|(_, c)| c)
-                .collect()
-        };
+        // client sampling (§5: "K devices are randomly sampled"), then
+        // the availability model drops sampled-but-offline clients
+        // before any local compute is spent on them (participates() is
+        // always true — and draws nothing — at availability 1)
+        let mut sampled = sampler.sample_indices(k_all, k_round);
+        sampled.retain(|_| network.participates());
+        let mut selected = select_clients(clients, &sampled);
         let params_snapshot = server.params.clone();
         let updates =
             runner(backend, &mut selected, &params_snapshot, &plan,
                    compressor)?;
+        // uplink: every update goes through the channel; only survivors
+        // reach the aggregate, which the server averages over `received`
+        // so it stays unbiased over whoever made it through
         let mut loss_acc = 0f64;
+        let mut survivors = 0usize;
         for up in &updates {
-            network.transmit(&up.packet);
-            server.receive(compressor, &up.packet)?;
-            loss_acc += up.mean_loss as f64;
+            match network.deliver(&up.packet) {
+                Delivery::Delivered { .. } => {
+                    // intact delivery decodes, or the run is broken
+                    server.receive(compressor, &up.packet)?;
+                    survivors += 1;
+                    loss_acc += up.mean_loss as f64;
+                }
+                Delivery::Corrupted { bytes, .. } => {
+                    // the real wire path: parse → decode; failures are
+                    // channel noise, not run errors
+                    match server.receive_bytes(compressor, &bytes) {
+                        Ok(()) => {
+                            survivors += 1;
+                            loss_acc += up.mean_loss as f64;
+                        }
+                        Err(e) => {
+                            network.note_decode_error();
+                            crate::debug!(
+                                "round {round}: client {} corrupt packet \
+                                 rejected: {e}",
+                                up.packet.client_id
+                            );
+                        }
+                    }
+                }
+                Delivery::Lost => {
+                    crate::debug!(
+                        "round {round}: client {} packet lost",
+                        up.packet.client_id
+                    );
+                }
+                Delivery::Straggled { secs } => {
+                    crate::debug!(
+                        "round {round}: client {} straggled ({secs:.3}s \
+                         deadline)",
+                        up.packet.client_id
+                    );
+                }
+            }
         }
-        server.step()?;
-        let train_loss = (loss_acc / updates.len() as f64) as f32;
+        if survivors > 0 {
+            server.step()?;
+        } else {
+            // the channel wiped the round out: θ holds, schedule advances
+            server.skip_round();
+        }
+        let train_loss = if survivors > 0 {
+            (loss_acc / survivors as f64) as f32
+        } else {
+            f32::NAN
+        };
 
         let is_eval = config.eval_every > 0
             && (round % config.eval_every == config.eval_every - 1
@@ -350,6 +408,7 @@ fn drive<B: Backend>(
         num_params: d,
         total_bits: metrics.total_bits(),
         wall_secs: total_timer.secs(),
+        channel: network.stats,
         metrics,
     })
 }
@@ -419,6 +478,109 @@ mod tests {
         assert!(
             (rep_half.total_bits as f64) < 0.6 * rep_all.total_bits as f64
         );
+    }
+
+    #[test]
+    fn ideal_channel_is_the_default_and_faultless() {
+        let cfg = ExperimentConfig::tiny();
+        assert_eq!(cfg.channel, crate::coordinator::network::ChannelSpec::ideal());
+        let rep = run_experiment(&cfg).unwrap();
+        assert_eq!(rep.channel.faults(), 0);
+        assert!(rep.channel.delivered > 0);
+    }
+
+    #[test]
+    fn lossy_run_replays_bit_exactly_from_seed() {
+        let mut cfg = ExperimentConfig::tiny();
+        cfg.rounds = 12;
+        cfg.channel = crate::coordinator::network::ChannelSpec {
+            loss: 0.25,
+            ..crate::coordinator::network::ChannelSpec::ideal()
+        };
+        let a = run_experiment(&cfg).unwrap();
+        let b = run_experiment(&cfg).unwrap();
+        assert!(a.channel.lost > 0, "loss 0.25 never fired: {:?}", a.channel);
+        assert_eq!(a.channel, b.channel, "survivor set must replay");
+        assert_eq!(a.total_bits, b.total_bits);
+        assert_eq!(a.final_accuracy, b.final_accuracy);
+        // identical per-round bit + loss trajectory
+        for (ra, rb) in a.metrics.rounds.iter().zip(&b.metrics.rounds) {
+            assert_eq!(ra.bits_up, rb.bits_up);
+            assert!(
+                ra.train_loss == rb.train_loss
+                    || (ra.train_loss.is_nan() && rb.train_loss.is_nan())
+            );
+        }
+        // lost packets still pay for their uplink bits. Under fp32 the
+        // packet size is data-independent, so the lossy ledger charges
+        // exactly the fault-free total (entropy-coded schemes diverge in
+        // trajectory, hence in payload sizes — only fp32 is comparable)
+        let mut fp = cfg.clone();
+        fp.scheme = CompressionScheme::Fp32;
+        let lossy_fp = run_experiment(&fp).unwrap();
+        assert!(lossy_fp.channel.lost > 0);
+        let mut fp_ideal = fp.clone();
+        fp_ideal.channel = crate::coordinator::network::ChannelSpec::ideal();
+        let ideal_fp = run_experiment(&fp_ideal).unwrap();
+        assert_eq!(lossy_fp.total_bits, ideal_fp.total_bits);
+    }
+
+    #[test]
+    fn total_loss_blacks_out_rounds_without_erroring() {
+        let mut cfg = ExperimentConfig::tiny();
+        cfg.rounds = 5;
+        cfg.eval_every = 0;
+        cfg.channel = crate::coordinator::network::ChannelSpec::lossy(1.0);
+        let rep = run_experiment(&cfg).unwrap();
+        assert_eq!(rep.channel.delivered, 0);
+        assert_eq!(rep.metrics.rounds.len(), 5);
+        assert!(rep.total_bits > 0, "lost packets still pay bits");
+        assert!(
+            rep.metrics.rounds.iter().all(|r| r.train_loss.is_nan()),
+            "no survivors ⇒ no train loss"
+        );
+    }
+
+    #[test]
+    fn straggler_deadline_cuts_uplink_bits() {
+        let mut base = ExperimentConfig::tiny();
+        base.rounds = 4;
+        base.eval_every = 0;
+        let ideal = run_experiment(&base).unwrap();
+        // a deadline far below any transmit time drops everyone early
+        let mut tight = base.clone();
+        tight.channel = crate::coordinator::network::ChannelSpec {
+            uplink_bps: 1e6,
+            deadline_s: 1e-4,
+            ..crate::coordinator::network::ChannelSpec::ideal()
+        };
+        let cut = run_experiment(&tight).unwrap();
+        assert!(cut.channel.straggled > 0);
+        assert!(
+            cut.total_bits < ideal.total_bits,
+            "stragglers must pay only partial bits: {} vs {}",
+            cut.total_bits,
+            ideal.total_bits
+        );
+    }
+
+    #[test]
+    fn partial_availability_reduces_participation() {
+        let mut cfg = ExperimentConfig::tiny();
+        cfg.rounds = 10;
+        cfg.eval_every = 0;
+        cfg.channel = crate::coordinator::network::ChannelSpec {
+            availability: 0.5,
+            ..crate::coordinator::network::ChannelSpec::ideal()
+        };
+        let rep = run_experiment(&cfg).unwrap();
+        assert!(rep.channel.unavailable > 0);
+        let full = {
+            let mut c = cfg.clone();
+            c.channel = crate::coordinator::network::ChannelSpec::ideal();
+            run_experiment(&c).unwrap()
+        };
+        assert!(rep.total_bits < full.total_bits);
     }
 
     #[test]

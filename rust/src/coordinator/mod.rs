@@ -1,9 +1,11 @@
 //! Layer-3 coordination: the simulated federation network with its exact
-//! bit ledger ([`network`]), the parallel round scheduler ([`scheduler`]),
-//! the experiment runner that drives full training runs ([`experiment`])
-//! and the sharded multi-experiment sweep engine that fans whole grids of
-//! experiments across a worker pool with a shared codebook design cache
-//! ([`sweep`]).
+//! bit ledger and deterministic fault-injecting channel model
+//! ([`network`]), the parallel round scheduler with partial-participation
+//! selection ([`scheduler`]), the experiment runner that drives full
+//! training runs through the channel ([`experiment`]) and the sharded
+//! multi-experiment sweep engine that fans whole grids of experiments —
+//! including loss/deadline scenario axes — across a worker pool with a
+//! shared codebook design cache ([`sweep`]).
 
 pub mod experiment;
 pub mod network;

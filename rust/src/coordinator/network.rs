@@ -1,54 +1,497 @@
-//! Simulated federation network.
+//! Simulated federation network: exact uplink accounting + a
+//! deterministic fault-injecting channel model.
 //!
 //! The x-axis of Fig. 1 is *bits on the uplink*, which we account
-//! exactly per packet. For latency-oriented diagnostics the network can
-//! also model per-client uplink bandwidth: clients transmit in parallel,
-//! so a round's transmission time is the max over its participants.
+//! exactly per packet. On top of the ledger sits a channel model
+//! ([`ChannelSpec`]) expressing the imperfections real federated uplinks
+//! have and that related work (Mitchell et al.; FedVQCS) evaluates
+//! against:
+//!
+//! * **bandwidth heterogeneity** — each client gets a deterministic
+//!   per-client uplink rate in `mean·[1−spread, 1+spread]`;
+//! * **packet loss** — i.i.d. drops and Gilbert–Elliott burst loss
+//!   (a two-state good/bad Markov chain evaluated per packet);
+//! * **payload corruption** — bit flips or tail truncation of the real
+//!   serialized wire bytes; the PS must surface these as decode `Err`s
+//!   through `Packet::parse` → `decompress_accumulate`, never a panic;
+//! * **straggler deadlines** — a client whose simulated transmit time
+//!   exceeds the round deadline is dropped, paying only for the bits it
+//!   pushed before the cut;
+//! * **availability** — a sampled client skips the round entirely with
+//!   probability `1 − availability` (partial participation beyond the
+//!   scheduler's `clients_per_round` sampling).
+//!
+//! **Accounting policy.** Bits are charged for what the *client
+//! transmits*, not what the PS decodes: lost and corrupted packets pay
+//! full price, stragglers pay for the prefix sent before the deadline,
+//! unavailable clients pay nothing.
+//!
+//! **Determinism.** All randomness flows from one seeded
+//! [`crate::util::rng::Rng`]; a fixed `(spec, seed)` pair replays the
+//! same survivor set, bit ledger and loss trajectory bit-exactly. With
+//! [`ChannelSpec::ideal`] no random draw is ever made and every packet
+//! is `Delivered`, so ideal-channel experiments are byte-identical to
+//! the channel-less code path.
 
 use crate::fl::packet::Packet;
+use crate::util::rng::Rng;
+use crate::util::{Error, Result};
 
-/// Uplink ledger + optional bandwidth model.
+/// Channel model configuration. `ideal()` disables every imperfection.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ChannelSpec {
+    /// mean uplink bandwidth in bits/second (0 ⇒ infinite: accounting
+    /// only, transmissions complete in `base_latency_s`)
+    pub uplink_bps: f64,
+    /// per-client bandwidth heterogeneity in [0, 1): client `c`'s rate
+    /// is `uplink_bps · f_c` with `f_c` deterministic in `(seed, c)`,
+    /// uniform over `[1−spread, 1+spread]`
+    pub bandwidth_spread: f64,
+    /// fixed per-message latency in seconds (e.g. RTT/2)
+    pub base_latency_s: f64,
+    /// i.i.d. packet-loss probability (the good-state loss rate)
+    pub loss: f64,
+    /// loss probability while the Gilbert–Elliott chain is in its bad
+    /// (burst) state
+    pub burst_loss: f64,
+    /// per-packet probability of entering the bad state (0 ⇒ the burst
+    /// model is disabled and only `loss` applies)
+    pub burst_enter: f64,
+    /// per-packet probability of leaving the bad state
+    pub burst_exit: f64,
+    /// per-packet probability of payload corruption (bit flips or tail
+    /// truncation of the serialized bytes)
+    pub corrupt: f64,
+    /// bit flips applied to a corrupted packet (flip mode)
+    pub corrupt_bits: u32,
+    /// round deadline in seconds (0 ⇒ none): a client whose transmit
+    /// time exceeds it is dropped as a straggler
+    pub deadline_s: f64,
+    /// probability a sampled client participates at all (1 ⇒ always)
+    pub availability: f64,
+}
+
+impl ChannelSpec {
+    /// The perfect channel: infinite bandwidth, no loss, no corruption,
+    /// no deadline, full availability. Experiments under this spec are
+    /// byte-identical to the pre-channel-model code path.
+    pub const fn ideal() -> ChannelSpec {
+        ChannelSpec {
+            uplink_bps: 0.0,
+            bandwidth_spread: 0.0,
+            base_latency_s: 0.0,
+            loss: 0.0,
+            burst_loss: 0.0,
+            burst_enter: 0.0,
+            burst_exit: 0.0,
+            corrupt: 0.0,
+            corrupt_bits: 16,
+            deadline_s: 0.0,
+            availability: 1.0,
+        }
+    }
+
+    /// Ideal channel with i.i.d. packet loss `p`.
+    pub fn lossy(p: f64) -> ChannelSpec {
+        ChannelSpec { loss: p, ..ChannelSpec::ideal() }
+    }
+
+    /// Whether any fault mechanism (loss, burst, corruption, deadline,
+    /// partial availability) is enabled. Bandwidth/latency modelling
+    /// alone is not a fault: it changes durations, never the survivor
+    /// set or the ledger.
+    pub fn is_faulty(&self) -> bool {
+        self.loss > 0.0
+            || self.burst_enter > 0.0
+            || self.corrupt > 0.0
+            || self.deadline_s > 0.0
+            || self.availability < 1.0
+    }
+
+    /// Whether the loss model (i.i.d. or burst) needs a random draw.
+    fn has_loss(&self) -> bool {
+        self.loss > 0.0 || self.burst_enter > 0.0
+    }
+
+    /// Reject probabilities outside [0, 1] and negative rates.
+    pub fn validate(&self) -> Result<()> {
+        let probs = [
+            ("loss", self.loss),
+            ("burst-loss", self.burst_loss),
+            ("burst-enter", self.burst_enter),
+            ("burst-exit", self.burst_exit),
+            ("corrupt", self.corrupt),
+            ("availability", self.availability),
+        ];
+        for (name, p) in probs {
+            if !(0.0..=1.0).contains(&p) {
+                return Err(Error::Config(format!(
+                    "channel {name} probability {p} outside [0, 1]")));
+            }
+        }
+        if !(0.0..1.0).contains(&self.bandwidth_spread) {
+            return Err(Error::Config(format!(
+                "bandwidth spread {} outside [0, 1)", self.bandwidth_spread)));
+        }
+        for (name, x) in [
+            ("uplink-bps", self.uplink_bps),
+            ("latency", self.base_latency_s),
+            ("deadline", self.deadline_s),
+        ] {
+            if !(x >= 0.0 && x.is_finite()) {
+                return Err(Error::Config(format!(
+                    "channel {name} {x} must be finite and >= 0")));
+            }
+        }
+        // burst-model consistency, enforced here so library users (not
+        // just the CLI) cannot configure a silent no-op or a permanent
+        // blackout by accident
+        if self.burst_enter > 0.0 && self.burst_exit <= 0.0 {
+            return Err(Error::Config(
+                "burst-enter > 0 requires burst-exit > 0 (the burst state \
+                 would be absorbing)"
+                    .into(),
+            ));
+        }
+        if self.burst_loss > 0.0 && self.burst_enter <= 0.0 {
+            return Err(Error::Config(
+                "burst-loss > 0 has no effect with burst-enter = 0 \
+                 (the bad state is never entered)"
+                    .into(),
+            ));
+        }
+        if self.deadline_s > 0.0
+            && self.uplink_bps <= 0.0
+            && self.base_latency_s <= 0.0
+        {
+            return Err(Error::Config(
+                "deadline > 0 can never fire without a time model: set \
+                 uplink-bps (and/or latency) so transmissions take time"
+                    .into(),
+            ));
+        }
+        if self.bandwidth_spread > 0.0 && self.uplink_bps <= 0.0 {
+            return Err(Error::Config(
+                "bandwidth-spread > 0 has no effect with uplink-bps = 0 \
+                 (infinite bandwidth has no per-client heterogeneity)"
+                    .into(),
+            ));
+        }
+        Ok(())
+    }
+
+    /// Short stable label for CSV/JSON rows, e.g. `loss0.05_dl0.2`;
+    /// `"ideal"` when nothing is enabled. Every field that can change
+    /// outcomes appears in the label, so two distinct specs in one sweep
+    /// never collapse onto the same row key.
+    pub fn label(&self) -> String {
+        let mut parts: Vec<String> = Vec::new();
+        if self.uplink_bps > 0.0 {
+            // full-precision exponent form: 1.4e6 and 1e6 must not
+            // collapse onto one row key
+            parts.push(format!("bw{:e}", self.uplink_bps));
+        }
+        if self.bandwidth_spread > 0.0 {
+            parts.push(format!("spread{}", self.bandwidth_spread));
+        }
+        if self.base_latency_s > 0.0 {
+            parts.push(format!("lat{}", self.base_latency_s));
+        }
+        if self.loss > 0.0 {
+            parts.push(format!("loss{}", self.loss));
+        }
+        if self.burst_enter > 0.0 {
+            parts.push(format!(
+                "burst{}e{}x{}",
+                self.burst_loss, self.burst_enter, self.burst_exit
+            ));
+        }
+        if self.corrupt > 0.0 {
+            let mut c = format!("corr{}", self.corrupt);
+            if self.corrupt_bits != 16 {
+                c.push_str(&format!("b{}", self.corrupt_bits));
+            }
+            parts.push(c);
+        }
+        if self.deadline_s > 0.0 {
+            parts.push(format!("dl{}", self.deadline_s));
+        }
+        if self.availability < 1.0 {
+            parts.push(format!("avail{}", self.availability));
+        }
+        if parts.is_empty() {
+            "ideal".into()
+        } else {
+            parts.join("_")
+        }
+    }
+}
+
+impl Default for ChannelSpec {
+    fn default() -> Self {
+        ChannelSpec::ideal()
+    }
+}
+
+/// Outcome of pushing one packet through the channel.
+#[derive(Debug)]
+pub enum Delivery {
+    /// Arrived intact after `secs` of simulated transmission.
+    Delivered { secs: f64 },
+    /// Arrived damaged: `bytes` are the serialized wire bytes after
+    /// corruption; the receiver must go through the real
+    /// `Packet::parse` → decode path and treat failures as recoverable.
+    Corrupted { bytes: Vec<u8>, secs: f64 },
+    /// Dropped in flight by the loss model (bits still paid for).
+    Lost,
+    /// Cut at the round deadline after `secs` of the transmission that
+    /// would have taken longer (partial bits paid for).
+    Straggled { secs: f64 },
+}
+
+/// Cumulative per-run channel outcome counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ChannelStats {
+    pub delivered: u64,
+    pub lost: u64,
+    pub corrupted: u64,
+    pub straggled: u64,
+    /// sampled clients that skipped the round (availability model)
+    pub unavailable: u64,
+    /// corrupted packets the receiver detected as decode `Err`s
+    pub decode_errors: u64,
+}
+
+impl ChannelStats {
+    /// Packets that reached the aggregator intact or as undetected noise.
+    pub fn arrived(&self) -> u64 {
+        self.delivered + self.corrupted - self.decode_errors
+    }
+
+    /// Total fault events injected by the channel.
+    pub fn faults(&self) -> u64 {
+        self.lost + self.corrupted + self.straggled + self.unavailable
+    }
+}
+
+impl std::fmt::Display for ChannelStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} delivered / {} lost / {} corrupted ({} caught) / \
+             {} straggled / {} unavailable",
+            self.delivered, self.lost, self.corrupted, self.decode_errors,
+            self.straggled, self.unavailable
+        )
+    }
+}
+
+/// Uplink ledger + deterministic fault-injecting channel.
 #[derive(Debug)]
 pub struct SimulatedNetwork {
     per_client_bits: Vec<u64>,
     total_bits: u64,
-    /// uplink bandwidth per client in bits/second (None = accounting only)
-    pub uplink_bps: Option<f64>,
-    /// fixed per-message latency in seconds (e.g. RTT/2)
-    pub base_latency_s: f64,
     round_bits: Vec<u64>,
+    /// the channel configuration this network simulates
+    pub spec: ChannelSpec,
+    /// per-client bandwidth factor (empty when `uplink_bps == 0`)
+    client_factor: Vec<f64>,
+    rng: Rng,
+    /// Gilbert–Elliott state: currently in the bad (burst) state?
+    burst_bad: bool,
+    /// outcome counters for reports
+    pub stats: ChannelStats,
 }
 
 impl SimulatedNetwork {
+    /// Ideal channel, accounting only (the pre-channel-model behavior).
     pub fn new(num_clients: usize) -> SimulatedNetwork {
+        SimulatedNetwork::with_spec(num_clients, ChannelSpec::ideal(), 0)
+    }
+
+    /// Homogeneous bandwidth model (bits/s) with a base latency.
+    pub fn with_bandwidth(num_clients: usize, bps: f64, latency_s: f64) -> Self {
+        let spec = ChannelSpec {
+            uplink_bps: bps,
+            base_latency_s: latency_s,
+            ..ChannelSpec::ideal()
+        };
+        SimulatedNetwork::with_spec(num_clients, spec, 0)
+    }
+
+    /// Full channel model. All randomness (loss, corruption,
+    /// availability) derives from `seed`; per-client bandwidth factors
+    /// are deterministic in `(seed, client)` and independent of traffic
+    /// order.
+    pub fn with_spec(
+        num_clients: usize,
+        spec: ChannelSpec,
+        seed: u64,
+    ) -> SimulatedNetwork {
+        let client_factor = if spec.uplink_bps > 0.0
+            && spec.bandwidth_spread > 0.0
+        {
+            let mut r = Rng::new(seed ^ 0xBA2D_81F7_0C3A_55E1);
+            (0..num_clients)
+                .map(|_| {
+                    1.0 + spec.bandwidth_spread * (2.0 * r.uniform() - 1.0)
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
         SimulatedNetwork {
             per_client_bits: vec![0; num_clients],
             total_bits: 0,
-            uplink_bps: None,
-            base_latency_s: 0.0,
             round_bits: Vec::new(),
+            spec,
+            client_factor,
+            rng: Rng::new(seed ^ 0x6E65_7477_6F72_6Bu64), // "network"
+            burst_bad: false,
+            stats: ChannelStats::default(),
         }
     }
 
-    /// With a bandwidth model (bits/s) and a base latency.
-    pub fn with_bandwidth(num_clients: usize, bps: f64, latency_s: f64) -> Self {
-        let mut n = SimulatedNetwork::new(num_clients);
-        n.uplink_bps = Some(bps);
-        n.base_latency_s = latency_s;
-        n
+    /// Uplink bandwidth of `client` in bits/s (None ⇒ infinite).
+    pub fn client_bps(&self, client: usize) -> Option<f64> {
+        if self.spec.uplink_bps <= 0.0 {
+            return None;
+        }
+        let f = self.client_factor.get(client).copied().unwrap_or(1.0);
+        Some(self.spec.uplink_bps * f)
     }
 
-    /// Record one uplink transmission; returns its simulated duration.
-    pub fn transmit(&mut self, packet: &Packet) -> f64 {
-        let bits = packet.total_bits();
-        let c = packet.client_id as usize;
-        if c < self.per_client_bits.len() {
-            self.per_client_bits[c] += bits;
+    /// Simulated transmit duration of `bits` from `client`.
+    fn duration_of(&self, client: usize, bits: u64) -> f64 {
+        self.spec.base_latency_s
+            + self
+                .client_bps(client)
+                .map(|bps| bits as f64 / bps)
+                .unwrap_or(0.0)
+    }
+
+    /// Charge `bits` to the ledger. Transmissions before the first
+    /// `begin_round` open round 0 implicitly, so no bits are ever
+    /// silently dropped from the per-round ledger.
+    fn account(&mut self, client: usize, bits: u64) {
+        if client < self.per_client_bits.len() {
+            self.per_client_bits[client] += bits;
         }
         self.total_bits += bits;
-        *self.round_bits.last_mut().unwrap_or(&mut 0) += bits;
-        self.base_latency_s
-            + self.uplink_bps.map(|b| bits as f64 / b).unwrap_or(0.0)
+        if self.round_bits.is_empty() {
+            self.round_bits.push(0);
+        }
+        *self.round_bits.last_mut().unwrap() += bits;
+    }
+
+    /// Record one uplink transmission (accounting only, no faults);
+    /// returns its simulated duration.
+    pub fn transmit(&mut self, packet: &Packet) -> f64 {
+        let bits = packet.total_bits();
+        let client = packet.client_id as usize;
+        self.account(client, bits);
+        self.duration_of(client, bits)
+    }
+
+    /// Availability model: does a sampled client participate this round?
+    /// Draws from the channel RNG only when `availability < 1`.
+    pub fn participates(&mut self) -> bool {
+        if self.spec.availability >= 1.0 {
+            return true;
+        }
+        let up = self.rng.uniform() < self.spec.availability;
+        if !up {
+            self.stats.unavailable += 1;
+        }
+        up
+    }
+
+    /// Push one packet through the channel: loss → deadline →
+    /// corruption, charging the ledger per the accounting policy. With
+    /// an ideal spec this is exactly [`Self::transmit`] and never draws
+    /// randomness.
+    pub fn deliver(&mut self, packet: &Packet) -> Delivery {
+        let bits = packet.total_bits();
+        let client = packet.client_id as usize;
+        let secs = self.duration_of(client, bits);
+
+        // 1. loss (i.i.d. or Gilbert–Elliott burst), drawn per packet
+        if self.spec.has_loss() {
+            if self.spec.burst_enter > 0.0 {
+                self.burst_bad = if self.burst_bad {
+                    !(self.rng.uniform() < self.spec.burst_exit)
+                } else {
+                    self.rng.uniform() < self.spec.burst_enter
+                };
+            }
+            let p = if self.burst_bad {
+                self.spec.burst_loss
+            } else {
+                self.spec.loss
+            };
+            if p > 0.0 && self.rng.uniform() < p {
+                // the client transmitted; the drop is in flight
+                self.account(client, bits);
+                self.stats.lost += 1;
+                return Delivery::Lost;
+            }
+        }
+
+        // 2. straggler deadline: pay only for the prefix sent in time
+        if self.spec.deadline_s > 0.0 && secs > self.spec.deadline_s {
+            let payload_secs = secs - self.spec.base_latency_s;
+            let sent = if payload_secs > 0.0 {
+                let budget =
+                    (self.spec.deadline_s - self.spec.base_latency_s).max(0.0);
+                let frac = (budget / payload_secs).clamp(0.0, 1.0);
+                (bits as f64 * frac) as u64
+            } else {
+                // infinite bandwidth: everything left at t=0
+                bits
+            };
+            self.account(client, sent);
+            self.stats.straggled += 1;
+            return Delivery::Straggled { secs: self.spec.deadline_s };
+        }
+
+        // 3. payload corruption of the real wire bytes
+        if self.spec.corrupt > 0.0 && self.rng.uniform() < self.spec.corrupt {
+            self.account(client, bits);
+            self.stats.corrupted += 1;
+            let bytes = self.corrupt_bytes(packet.to_bytes());
+            return Delivery::Corrupted { bytes, secs };
+        }
+
+        self.account(client, bits);
+        self.stats.delivered += 1;
+        Delivery::Delivered { secs }
+    }
+
+    /// Damage a serialized packet: either truncate its tail (structural
+    /// damage `Packet::parse` must reject) or flip `corrupt_bits`
+    /// random bits anywhere in the buffer (which the decode layer may
+    /// catch — or may pass through as gradient noise, like a real
+    /// unchecksummed link).
+    fn corrupt_bytes(&mut self, mut bytes: Vec<u8>) -> Vec<u8> {
+        if bytes.is_empty() {
+            return bytes;
+        }
+        if self.rng.below(2) == 0 {
+            let cut = 1 + self.rng.below(4).min(bytes.len() - 1);
+            bytes.truncate(bytes.len() - cut);
+        } else {
+            for _ in 0..self.spec.corrupt_bits.max(1) {
+                let bit = self.rng.below(bytes.len() * 8);
+                bytes[bit / 8] ^= 1 << (bit % 8);
+            }
+        }
+        bytes
+    }
+
+    /// Record that a corrupted delivery was caught as a decode `Err`
+    /// (called by the receiver, which owns the decode path).
+    pub fn note_decode_error(&mut self) {
+        self.stats.decode_errors += 1;
     }
 
     /// Mark the start of a round (opens a fresh round-bits bucket).
@@ -98,6 +541,10 @@ mod tests {
         }
     }
 
+    fn lossy_spec() -> ChannelSpec {
+        ChannelSpec { loss: 0.3, ..ChannelSpec::ideal() }
+    }
+
     #[test]
     fn ledger_tracks_per_client_and_total() {
         let mut n = SimulatedNetwork::new(3);
@@ -116,6 +563,23 @@ mod tests {
     }
 
     #[test]
+    fn transmit_before_begin_round_opens_round_zero() {
+        // regression: `round_bits.last_mut().unwrap_or(&mut 0)` used to
+        // accumulate into a temporary, silently dropping the bits from
+        // the per-round ledger when no round was open
+        let mut n = SimulatedNetwork::new(1);
+        n.transmit(&pkt(0, 800));
+        let bits = pkt(0, 800).total_bits();
+        assert_eq!(n.bits_this_round(), bits, "round-0 bits were dropped");
+        assert_eq!(n.total_bits(), bits);
+        // a later begin_round still opens a fresh bucket
+        n.begin_round();
+        assert_eq!(n.bits_this_round(), 0);
+        n.transmit(&pkt(0, 8));
+        assert_eq!(n.bits_this_round(), pkt(0, 8).total_bits());
+    }
+
+    #[test]
     fn bandwidth_model_durations() {
         let mut n = SimulatedNetwork::with_bandwidth(2, 1e6, 0.01);
         n.begin_round();
@@ -123,5 +587,226 @@ mod tests {
         // ≈ 1 s of payload (+ header/side bits) + 10 ms latency
         assert!(d > 1.0 && d < 1.1, "{d}");
         assert_eq!(SimulatedNetwork::round_duration(&[0.1, 0.5, 0.3]), 0.5);
+    }
+
+    #[test]
+    fn ideal_channel_delivers_everything_without_rng() {
+        let mut n = SimulatedNetwork::with_spec(2, ChannelSpec::ideal(), 7);
+        n.begin_round();
+        for i in 0..20 {
+            assert!(n.participates());
+            match n.deliver(&pkt(i % 2, 1000)) {
+                Delivery::Delivered { secs } => assert_eq!(secs, 0.0),
+                other => panic!("ideal channel produced {other:?}"),
+            }
+        }
+        assert_eq!(n.stats.delivered, 20);
+        assert_eq!(n.stats.faults(), 0);
+        // accounting identical to plain transmit
+        assert_eq!(n.total_bits(), 20 * pkt(0, 1000).total_bits());
+    }
+
+    #[test]
+    fn loss_replays_bit_exactly_from_seed() {
+        let outcomes = |seed: u64| -> (Vec<bool>, ChannelStats, u64) {
+            let mut n = SimulatedNetwork::with_spec(1, lossy_spec(), seed);
+            n.begin_round();
+            let seq: Vec<bool> = (0..200)
+                .map(|_| matches!(n.deliver(&pkt(0, 512)),
+                                  Delivery::Delivered { .. }))
+                .collect();
+            (seq, n.stats, n.total_bits())
+        };
+        let (a, sa, ba) = outcomes(11);
+        let (b, sb, bb) = outcomes(11);
+        assert_eq!(a, b, "same seed must replay the same survivor set");
+        assert_eq!(sa, sb);
+        assert_eq!(ba, bb);
+        let (c, _, _) = outcomes(12);
+        assert_ne!(a, c, "different seeds should differ");
+        // lost packets still pay their bits
+        assert!(sa.lost > 20, "loss 0.3 over 200 packets: {sa:?}");
+        assert_eq!(ba, 200 * pkt(0, 512).total_bits());
+    }
+
+    #[test]
+    fn burst_model_clusters_losses() {
+        let spec = ChannelSpec {
+            loss: 0.0,
+            burst_loss: 1.0,
+            burst_enter: 0.05,
+            burst_exit: 0.3,
+            ..ChannelSpec::ideal()
+        };
+        let mut n = SimulatedNetwork::with_spec(1, spec, 3);
+        n.begin_round();
+        let seq: Vec<bool> = (0..2000)
+            .map(|_| matches!(n.deliver(&pkt(0, 64)), Delivery::Lost))
+            .collect();
+        let losses = seq.iter().filter(|&&l| l).count();
+        assert!(losses > 50, "burst chain never engaged: {losses}");
+        // burst losses arrive in runs: the number of loss→loss
+        // adjacencies must far exceed the i.i.d. expectation
+        let pairs = seq.windows(2).filter(|w| w[0] && w[1]).count();
+        let p = losses as f64 / seq.len() as f64;
+        let iid_pairs = p * p * seq.len() as f64;
+        assert!(
+            pairs as f64 > 3.0 * iid_pairs,
+            "losses not bursty: {pairs} pairs vs iid {iid_pairs:.1}"
+        );
+    }
+
+    #[test]
+    fn bandwidth_spread_is_deterministic_per_client() {
+        let spec = ChannelSpec {
+            uplink_bps: 1e6,
+            bandwidth_spread: 0.5,
+            ..ChannelSpec::ideal()
+        };
+        let a = SimulatedNetwork::with_spec(8, spec, 21);
+        let b = SimulatedNetwork::with_spec(8, spec, 21);
+        let mut distinct = false;
+        for c in 0..8 {
+            let ba = a.client_bps(c).unwrap();
+            assert_eq!(ba, b.client_bps(c).unwrap(), "client {c}");
+            assert!(ba >= 0.5e6 && ba <= 1.5e6, "client {c}: {ba}");
+            if (ba - 1e6).abs() > 1e3 {
+                distinct = true;
+            }
+        }
+        assert!(distinct, "spread produced no heterogeneity");
+        // spread 0 ⇒ exactly the mean for every client
+        let flat = SimulatedNetwork::with_bandwidth(4, 1e6, 0.0);
+        for c in 0..4 {
+            assert_eq!(flat.client_bps(c), Some(1e6));
+        }
+    }
+
+    #[test]
+    fn straggler_deadline_drops_and_charges_partial_bits() {
+        // 1e4 bits at 1e3 bps = 10 s ≫ 1 s deadline
+        let spec = ChannelSpec {
+            uplink_bps: 1e3,
+            deadline_s: 1.0,
+            ..ChannelSpec::ideal()
+        };
+        let mut n = SimulatedNetwork::with_spec(1, spec, 5);
+        n.begin_round();
+        let p = pkt(0, 10_000);
+        let full = p.total_bits();
+        match n.deliver(&p) {
+            Delivery::Straggled { secs } => assert_eq!(secs, 1.0),
+            other => panic!("expected straggler, got {other:?}"),
+        }
+        assert_eq!(n.stats.straggled, 1);
+        let paid = n.total_bits();
+        assert!(paid > 0 && paid < full, "partial bits: {paid} of {full}");
+        // the deadline buys 1 s × 1e3 bps = 1000 of the `full` bits
+        let frac = paid as f64 / full as f64;
+        assert!((frac - 1e3 / full as f64).abs() < 0.01, "fraction {frac}");
+        // a fast packet under the same deadline is delivered
+        match n.deliver(&pkt(0, 100)) {
+            Delivery::Delivered { .. } => {}
+            other => panic!("fast packet {other:?}"),
+        }
+    }
+
+    #[test]
+    fn corruption_damages_real_wire_bytes() {
+        let spec = ChannelSpec { corrupt: 1.0, ..ChannelSpec::ideal() };
+        let mut n = SimulatedNetwork::with_spec(1, spec, 9);
+        n.begin_round();
+        let p = pkt(0, 4096);
+        let clean = p.to_bytes();
+        let mut saw_truncation = false;
+        let mut saw_flip = false;
+        for _ in 0..32 {
+            match n.deliver(&p) {
+                Delivery::Corrupted { bytes, .. } => {
+                    assert_ne!(bytes, clean, "corruption was a no-op");
+                    if bytes.len() < clean.len() {
+                        saw_truncation = true;
+                    } else {
+                        assert_eq!(bytes.len(), clean.len());
+                        saw_flip = true;
+                    }
+                }
+                other => panic!("corrupt=1.0 produced {other:?}"),
+            }
+        }
+        assert!(saw_truncation && saw_flip, "both damage modes expected");
+        assert_eq!(n.stats.corrupted, 32);
+        // corrupted packets pay full price
+        assert_eq!(n.total_bits(), 32 * p.total_bits());
+    }
+
+    #[test]
+    fn availability_skips_clients_deterministically() {
+        let spec = ChannelSpec { availability: 0.5, ..ChannelSpec::ideal() };
+        let draw = |seed| -> Vec<bool> {
+            let mut n = SimulatedNetwork::with_spec(1, spec, seed);
+            (0..100).map(|_| n.participates()).collect()
+        };
+        let a = draw(31);
+        assert_eq!(a, draw(31));
+        let ups = a.iter().filter(|&&x| x).count();
+        assert!(ups > 20 && ups < 80, "availability 0.5: {ups}/100");
+    }
+
+    #[test]
+    fn spec_validation_and_labels() {
+        assert!(ChannelSpec::ideal().validate().is_ok());
+        assert!(!ChannelSpec::ideal().is_faulty());
+        assert_eq!(ChannelSpec::ideal().label(), "ideal");
+        let mut bad = ChannelSpec::ideal();
+        bad.loss = 1.5;
+        assert!(bad.validate().is_err());
+        bad = ChannelSpec::ideal();
+        bad.deadline_s = -1.0;
+        assert!(bad.validate().is_err());
+        let spec = ChannelSpec {
+            loss: 0.05,
+            deadline_s: 0.2,
+            ..ChannelSpec::ideal()
+        };
+        assert!(spec.is_faulty());
+        assert_eq!(spec.label(), "loss0.05_dl0.2");
+        assert!(ChannelSpec::lossy(0.1).is_faulty());
+        // burst-model consistency is a library-level invariant
+        let absorbing = ChannelSpec {
+            burst_loss: 1.0,
+            burst_enter: 0.05,
+            burst_exit: 0.0,
+            ..ChannelSpec::ideal()
+        };
+        assert!(absorbing.validate().is_err());
+        let noop_burst = ChannelSpec {
+            burst_loss: 0.9,
+            ..ChannelSpec::ideal()
+        };
+        assert!(noop_burst.validate().is_err());
+        // silent no-ops are rejected: a deadline that can never fire, a
+        // spread with no bandwidth model to spread
+        let noop_deadline = ChannelSpec {
+            deadline_s: 0.1,
+            ..ChannelSpec::ideal()
+        };
+        assert!(noop_deadline.validate().is_err());
+        let noop_spread = ChannelSpec {
+            bandwidth_spread: 0.5,
+            ..ChannelSpec::ideal()
+        };
+        assert!(noop_spread.validate().is_err());
+        // distinct burst chains get distinct labels (row keys)
+        let b1 = ChannelSpec {
+            burst_loss: 0.8,
+            burst_enter: 0.05,
+            burst_exit: 0.3,
+            ..ChannelSpec::ideal()
+        };
+        let mut b2 = b1;
+        b2.burst_enter = 0.3;
+        assert_ne!(b1.label(), b2.label());
+        assert_eq!(b1.label(), "burst0.8e0.05x0.3");
     }
 }

@@ -19,6 +19,29 @@ pub struct RoundPlan {
     pub threads: usize,
 }
 
+/// Partial participation: borrow the sampled clients (by population
+/// index) out of the full client slice, preserving client-index order.
+/// Out-of-range indices are ignored. The round layer composes this with
+/// the scheduler's `clients_per_round` sampling and the channel model's
+/// availability draws.
+pub fn select_clients<'a>(
+    clients: &'a mut [Client],
+    sampled: &[usize],
+) -> Vec<&'a mut Client> {
+    let mut flags = vec![false; clients.len()];
+    for &i in sampled {
+        if i < flags.len() {
+            flags[i] = true;
+        }
+    }
+    clients
+        .iter_mut()
+        .enumerate()
+        .filter(|(i, _)| flags[*i])
+        .map(|(_, c)| c)
+        .collect()
+}
+
 /// Run the sampled clients serially.
 pub fn run_round_serial<B: Backend + ?Sized>(
     backend: &B,
@@ -137,6 +160,19 @@ mod tests {
             assert_eq!(a.packet.payload, b.packet.payload, "same seeds");
             assert_eq!(a.packet.client_id, b.packet.client_id);
         }
+    }
+
+    #[test]
+    fn select_clients_preserves_index_order() {
+        let (_, mut clients, _) = setup(5);
+        let refs = select_clients(&mut clients, &[3, 0, 4]);
+        let ids: Vec<u32> = refs.iter().map(|c| c.id).collect();
+        assert_eq!(ids, vec![0, 3, 4]);
+        // out-of-range indices are ignored, duplicates collapse
+        let refs = select_clients(&mut clients, &[1, 1, 99]);
+        assert_eq!(refs.len(), 1);
+        assert_eq!(refs[0].id, 1);
+        assert!(select_clients(&mut clients, &[]).is_empty());
     }
 
     #[test]

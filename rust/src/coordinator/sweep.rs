@@ -27,6 +27,7 @@ use std::sync::Mutex;
 use crate::coordinator::experiment::{
     run_experiment_on, ExperimentConfig, ExperimentReport,
 };
+use crate::coordinator::network::ChannelSpec;
 use crate::data::FederatedDataset;
 use crate::fl::compression::{
     design_cache_stats, designed_codebook, CompressionScheme,
@@ -110,6 +111,10 @@ pub struct SweepGrid {
     pub schemes: Vec<CompressionScheme>,
     /// replicate seeds (empty ⇒ each base's own seed)
     pub seeds: Vec<u64>,
+    /// channel-model axis (empty ⇒ each base's own channel): every base
+    /// × seed × scheme cell is replicated per channel, so loss/deadline
+    /// scenario grids are first-class sweep dimensions
+    pub channels: Vec<ChannelSpec>,
     /// sweep worker threads (0 ⇒ hardware)
     pub threads: usize,
     /// scheduler threads *inside* each cell. Defaults to 1: the sweep
@@ -124,6 +129,7 @@ impl SweepGrid {
             bases: vec![base],
             schemes: Vec::new(),
             seeds: Vec::new(),
+            channels: Vec::new(),
             threads: 0,
             inner_threads: 1,
         }
@@ -171,6 +177,40 @@ impl SweepGrid {
         self
     }
 
+    /// Add one channel-model axis value.
+    pub fn channel(mut self, spec: ChannelSpec) -> Self {
+        self.channels.push(spec);
+        self
+    }
+
+    /// Scenario axis over i.i.d. packet-loss probabilities (each on an
+    /// otherwise-ideal channel).
+    pub fn loss_axis(mut self, probs: &[f64]) -> Self {
+        for &p in probs {
+            self.channels.push(ChannelSpec::lossy(p));
+        }
+        self
+    }
+
+    /// Scenario axis over straggler deadlines at a heterogeneous
+    /// bandwidth model (`bps` mean, `spread` per-client factor range).
+    pub fn deadline_axis(
+        mut self,
+        bps: f64,
+        spread: f64,
+        deadlines: &[f64],
+    ) -> Self {
+        for &d in deadlines {
+            self.channels.push(ChannelSpec {
+                uplink_bps: bps,
+                bandwidth_spread: spread,
+                deadline_s: d,
+                ..ChannelSpec::ideal()
+            });
+        }
+        self
+    }
+
     /// Sweep worker threads (0 ⇒ hardware).
     pub fn threads(mut self, threads: usize) -> Self {
         self.threads = threads;
@@ -178,7 +218,7 @@ impl SweepGrid {
     }
 
     /// Expand the grid into per-cell configs with deterministic per-cell
-    /// seeds, in declaration order (bases → seeds → schemes).
+    /// seeds, in declaration order (bases → seeds → channels → schemes).
     pub fn expand(&self) -> Vec<SweepCell> {
         let mut cells = Vec::new();
         for (base_index, base) in self.bases.iter().enumerate() {
@@ -187,20 +227,29 @@ impl SweepGrid {
             } else {
                 self.seeds.clone()
             };
+            let channels: Vec<ChannelSpec> = if self.channels.is_empty() {
+                vec![base.channel]
+            } else {
+                self.channels.clone()
+            };
             for &seed in &seeds {
-                for &scheme in &self.schemes {
-                    let mut config = base.clone();
-                    config.scheme = scheme;
-                    config.seed = seed;
-                    config.threads = self.inner_threads;
-                    cells.push(SweepCell {
-                        index: cells.len(),
-                        base_index,
-                        label: scheme.label(),
-                        dataset: base.dataset.kind.name(),
-                        seed,
-                        config,
-                    });
+                for &channel in &channels {
+                    for &scheme in &self.schemes {
+                        let mut config = base.clone();
+                        config.scheme = scheme;
+                        config.seed = seed;
+                        config.channel = channel;
+                        config.threads = self.inner_threads;
+                        cells.push(SweepCell {
+                            index: cells.len(),
+                            base_index,
+                            label: scheme.label(),
+                            dataset: base.dataset.kind.name(),
+                            seed,
+                            channel: channel.label(),
+                            config,
+                        });
+                    }
                 }
             }
         }
@@ -218,6 +267,8 @@ pub struct SweepCell {
     pub label: String,
     pub dataset: &'static str,
     pub seed: u64,
+    /// channel-model label (`"ideal"` when no faults are configured)
+    pub channel: String,
     pub config: ExperimentConfig,
 }
 
@@ -227,6 +278,7 @@ pub struct SweepCellResult {
     pub label: String,
     pub dataset: &'static str,
     pub seed: u64,
+    pub channel: String,
     pub scheme: CompressionScheme,
     pub report: ExperimentReport,
 }
@@ -237,6 +289,7 @@ pub struct SweepCellFailure {
     pub label: String,
     pub dataset: &'static str,
     pub seed: u64,
+    pub channel: String,
     pub error: String,
 }
 
@@ -280,18 +333,21 @@ pub fn run_sweep(grid: &SweepGrid) -> Result<SweepReport> {
                 label: cell.label,
                 dataset: cell.dataset,
                 seed: cell.seed,
+                channel: cell.channel,
                 scheme: cell.config.scheme,
                 report,
             }),
             Err(e) => {
                 crate::warn!(
-                    "sweep cell {} (dataset {}, seed {}) failed: {e}",
-                    cell.label, cell.dataset, cell.seed
+                    "sweep cell {} (dataset {}, seed {}, channel {}) \
+                     failed: {e}",
+                    cell.label, cell.dataset, cell.seed, cell.channel
                 );
                 failures.push(SweepCellFailure {
                     label: cell.label,
                     dataset: cell.dataset,
                     seed: cell.seed,
+                    channel: cell.channel,
                     error: e.to_string(),
                 });
             }
@@ -323,9 +379,11 @@ impl SweepReport {
     /// Write the standard per-cell CSV ([`Self::CSV_HEADER`] schema).
     ///
     /// Replicated grids would collapse under a scheme-keyed schema, so a
-    /// `dataset` and/or `seed` column is inserted after `scheme` whenever
-    /// the report spans more than one of either — rows stay uniquely
-    /// keyed without every caller having to remember the guard.
+    /// `dataset`, `seed` and/or `channel` column is inserted after
+    /// `scheme` whenever the report spans more than one of them — rows
+    /// stay uniquely keyed without every caller having to remember the
+    /// guard. Single-channel (ideal) grids emit exactly the pre-channel
+    /// schema.
     pub fn write_csv(&self, path: &str) -> Result<()> {
         let distinct = |mut vals: Vec<&str>| {
             vals.sort_unstable();
@@ -341,12 +399,17 @@ impl SweepReport {
             seeds.dedup();
             seeds.len() > 1
         };
+        let multi_channel =
+            distinct(self.cells.iter().map(|c| c.channel.as_str()).collect());
         let mut header: Vec<&str> = vec![Self::CSV_HEADER[0]];
         if multi_dataset {
             header.push("dataset");
         }
         if multi_seed {
             header.push("seed");
+        }
+        if multi_channel {
+            header.push("channel");
         }
         header.extend_from_slice(&Self::CSV_HEADER[1..]);
         let mut w = CsvWriter::create(path, &header)?;
@@ -357,6 +420,9 @@ impl SweepReport {
             }
             if multi_seed {
                 row.push(CsvField::from(c.seed));
+            }
+            if multi_channel {
+                row.push(CsvField::from(c.channel.clone()));
             }
             row.push(CsvField::from(c.report.final_accuracy));
             row.push(CsvField::from(c.report.best_accuracy));
@@ -394,32 +460,62 @@ impl SweepReport {
                 Json::Null
             }
         }
+        // channel fields appear only when some cell ran a non-ideal
+        // channel, keeping ideal-grid JSON byte-identical to the
+        // pre-channel schema
+        let with_channel = self.cells.iter().any(|c| c.channel != "ideal")
+            || self.failures.iter().any(|f| f.channel != "ideal");
         let cells: Vec<Json> = self
             .cells
             .iter()
             .map(|c| {
-                obj(vec![
+                let mut fields = vec![
                     ("scheme", s(&c.label)),
                     ("dataset", s(c.dataset)),
                     ("seed", num(c.seed as f64)),
+                ];
+                if with_channel {
+                    let st = &c.report.channel;
+                    fields.push(("channel", s(&c.channel)));
+                    fields.push((
+                        "survivors",
+                        obj(vec![
+                            ("delivered", num(st.delivered as f64)),
+                            ("lost", num(st.lost as f64)),
+                            ("corrupted", num(st.corrupted as f64)),
+                            (
+                                "decode_errors",
+                                num(st.decode_errors as f64),
+                            ),
+                            ("straggled", num(st.straggled as f64)),
+                            ("unavailable", num(st.unavailable as f64)),
+                        ]),
+                    ));
+                }
+                fields.extend(vec![
                     ("final_acc", num_or_null(c.report.final_accuracy)),
                     ("best_acc", num_or_null(c.report.best_accuracy)),
                     ("gigabits", num(c.report.uplink_gigabits())),
                     ("total_bits", num(c.report.total_bits as f64)),
                     ("wall_secs", num(c.report.wall_secs)),
-                ])
+                ]);
+                obj(fields)
             })
             .collect();
         let failures: Vec<Json> = self
             .failures
             .iter()
             .map(|f| {
-                obj(vec![
+                let mut fields = vec![
                     ("scheme", s(&f.label)),
                     ("dataset", s(f.dataset)),
                     ("seed", num(f.seed as f64)),
-                    ("error", s(&f.error)),
-                ])
+                ];
+                if with_channel {
+                    fields.push(("channel", s(&f.channel)));
+                }
+                fields.push(("error", s(&f.error)));
+                obj(fields)
             })
             .collect();
         obj(vec![
@@ -583,6 +679,60 @@ mod tests {
         // with no explicit seeds each base contributes its own
         assert_eq!(cells[0].seed, tiny_base().seed);
         assert_eq!(cells[1].seed, 99);
+    }
+
+    #[test]
+    fn channel_axis_crosses_every_scheme() {
+        use crate::coordinator::network::ChannelSpec;
+        let grid = SweepGrid::new(tiny_base())
+            .scheme(CompressionScheme::Fp32)
+            .scheme(CompressionScheme::Lloyd { bits: 3 })
+            .channel(ChannelSpec::ideal())
+            .loss_axis(&[0.1, 0.3]);
+        let cells = grid.expand();
+        assert_eq!(cells.len(), 6); // 3 channels × 2 schemes
+        assert_eq!(cells[0].channel, "ideal");
+        assert_eq!(cells[1].channel, "ideal");
+        assert_eq!(cells[2].channel, "loss0.1");
+        assert_eq!(cells[4].channel, "loss0.3");
+        assert_eq!(cells[2].config.channel, ChannelSpec::lossy(0.1));
+        // no channel axis ⇒ every cell inherits the base's (ideal) spec
+        let plain = SweepGrid::new(tiny_base())
+            .scheme(CompressionScheme::Fp32)
+            .expand();
+        assert_eq!(plain[0].channel, "ideal");
+        assert_eq!(plain[0].config.channel, ChannelSpec::ideal());
+    }
+
+    #[test]
+    fn lossy_sweep_reports_channel_column_and_survivors() {
+        use crate::coordinator::network::ChannelSpec;
+        let mut grid = SweepGrid::new(tiny_base())
+            .scheme(CompressionScheme::Fp32)
+            .channel(ChannelSpec::ideal())
+            .channel(ChannelSpec::lossy(0.5));
+        grid.threads = 1;
+        let report = run_sweep(&grid).unwrap();
+        assert_eq!(report.cells.len(), 2);
+        assert_eq!(report.cells[0].report.channel.lost, 0);
+        assert!(report.cells[1].report.channel.lost > 0);
+        let dir = std::env::temp_dir()
+            .join(format!("rcfed_sweep_channel_{}", std::process::id()));
+        let csv_path = dir.join("channels.csv");
+        let json_path = dir.join("channels.json");
+        report.write_csv(csv_path.to_str().unwrap()).unwrap();
+        report.write_json(json_path.to_str().unwrap()).unwrap();
+        let csv = std::fs::read_to_string(&csv_path).unwrap();
+        assert!(
+            csv.starts_with("scheme,channel,final_acc"),
+            "channel column missing: {csv}"
+        );
+        let json = std::fs::read_to_string(&json_path).unwrap();
+        let v = crate::util::json::Json::parse(&json).unwrap();
+        let cells = v.req("cells").unwrap().as_arr().unwrap();
+        assert!(cells[0].get("channel").is_some());
+        assert!(cells[1].get("survivors").is_some());
+        std::fs::remove_dir_all(dir).ok();
     }
 
     #[test]

@@ -453,11 +453,24 @@ impl Compressor {
         }
         match &self.kernel {
             Kernel::Codebook { codebook, huffman, arith } => {
+                // (μ, σ) side info — a corrupted packet can carry any
+                // count or value, so validate before touching it
+                if packet.side_info.len() != 2 {
+                    return Err(Error::Coding(format!(
+                        "codebook packet carries {} side-info values, \
+                         expected 2 (μ, σ)",
+                        packet.side_info.len()
+                    )));
+                }
+                let (mu, sigma) = (packet.side_info[0], packet.side_info[1]);
+                if !mu.is_finite() || !sigma.is_finite() {
+                    return Err(Error::Coding(format!(
+                        "non-finite side info (μ={mu}, σ={sigma})")));
+                }
                 let symbols = match self.wire {
                     WireCoder::Huffman => huffman.decode(&packet.payload, d)?,
                     WireCoder::Arithmetic => arith.decode(&packet.payload, d)?,
                 };
-                let (mu, sigma) = (packet.side_info[0], packet.side_info[1]);
                 codebook.dequantize_accumulate(&symbols, mu, sigma, acc);
             }
             Kernel::Qsgd(q) => {
@@ -482,6 +495,10 @@ impl Compressor {
                         q.num_buckets(d)
                     )));
                 }
+                if !packet.side_info.iter().all(|n| n.is_finite()) {
+                    return Err(Error::Coding(
+                        "qsgd: non-finite bucket norm".into()));
+                }
                 let msg = crate::quant::qsgd::QsgdMessage {
                     norms: packet.side_info.clone(),
                     symbols,
@@ -489,6 +506,15 @@ impl Compressor {
                 q.decode_accumulate(&msg, acc);
             }
             Kernel::Fp32 => {
+                // a truncated/corrupted packet may carry fewer payload
+                // bytes than its claimed dimension needs
+                if packet.payload.len() < 4 * d {
+                    return Err(Error::Coding(format!(
+                        "fp32 payload {} bytes < 4·d = {}",
+                        packet.payload.len(),
+                        4 * d
+                    )));
+                }
                 for (i, a) in acc.iter_mut().enumerate() {
                     let off = i * 4;
                     *a += f32::from_le_bytes(

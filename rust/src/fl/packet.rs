@@ -94,6 +94,14 @@ impl Packet {
         out
     }
 
+    /// Parse a serialized packet — the PS-side entry point for wire
+    /// bytes. Malformed input (truncation, bad scheme tags, length
+    /// mismatches) returns `Err`, never panics or over-reads; the
+    /// channel model's corruption path relies on this.
+    pub fn parse(buf: &[u8]) -> Result<Packet> {
+        Packet::from_bytes(buf)
+    }
+
     /// Parse a serialized packet (inverse of [`to_bytes`]; `table_bits`
     /// is accounting metadata and is not carried on the wire).
     pub fn from_bytes(buf: &[u8]) -> Result<Packet> {

@@ -80,6 +80,24 @@ impl Server {
         Ok(())
     }
 
+    /// Ingest raw wire bytes: parse, then [`receive`](Self::receive).
+    /// Corrupt buffers surface as recoverable `Err`s — the accumulator
+    /// and `received` count are untouched on failure, so the caller can
+    /// skip the client and the round stays unbiased over survivors.
+    pub fn receive_bytes(
+        &mut self,
+        compressor: &Compressor,
+        bytes: &[u8],
+    ) -> Result<()> {
+        let packet = Packet::parse(bytes)?;
+        self.receive(compressor, &packet)
+    }
+
+    /// Packets successfully ingested since `begin_round`.
+    pub fn received(&self) -> usize {
+        self.received
+    }
+
     /// Finish the round: average, SGD step, advance the schedule.
     /// Returns the applied learning rate.
     pub fn step(&mut self) -> Result<f32> {
@@ -93,6 +111,14 @@ impl Server {
         }
         self.round += 1;
         Ok(lr)
+    }
+
+    /// Finish a round in which *no* packet survived the channel:
+    /// advance the schedule without touching the parameters. Lossy
+    /// scenarios can wipe out a whole round; that is a property of the
+    /// channel, not an error in the run.
+    pub fn skip_round(&mut self) {
+        self.round += 1;
     }
 
     /// Mean aggregated gradient (diagnostics; valid after receives,
@@ -149,6 +175,43 @@ mod tests {
         let mut server = Server::new(vec![0.0; 2], LrSchedule::Const(0.1));
         server.begin_round();
         assert!(server.step().is_err());
+    }
+
+    #[test]
+    fn skip_round_advances_schedule_without_stepping() {
+        let mut server = Server::new(
+            vec![1.0; 2],
+            LrSchedule::InverseT { rho: 0.5, gamma: 8.0 },
+        );
+        let lr0 = server.lr();
+        server.begin_round();
+        server.skip_round();
+        assert_eq!(server.round, 1);
+        assert_eq!(server.params, vec![1.0; 2], "params must not move");
+        assert!(server.lr() < lr0, "schedule must advance");
+    }
+
+    #[test]
+    fn corrupt_bytes_leave_survivor_average_unbiased() {
+        // one good packet + one mangled one: the bad packet is rejected
+        // without touching the accumulator, so the step averages over
+        // the single survivor exactly
+        let c = Compressor::design(CompressionScheme::Fp32, WireCoder::Huffman)
+            .unwrap();
+        let mut server = Server::new(vec![0.0; 4], LrSchedule::Const(1.0));
+        server.begin_round();
+        let mut rng = Rng::new(3);
+        let good = c.compress(0, 0, &[1.0, 2.0, 3.0, 4.0], &mut rng).unwrap();
+        let mut bad_bytes =
+            c.compress(1, 0, &[9.0; 4], &mut rng).unwrap().to_bytes();
+        bad_bytes.truncate(bad_bytes.len() - 3); // mid-payload cut
+        assert!(server.receive_bytes(&c, &bad_bytes).is_err());
+        assert_eq!(server.received(), 0);
+        server.receive_bytes(&c, &good.to_bytes()).unwrap();
+        assert_eq!(server.received(), 1);
+        server.step().unwrap();
+        // θ = 0 − 1.0 · (g_good / 1): the corrupt packet left no trace
+        assert_eq!(server.params, vec![-1.0, -2.0, -3.0, -4.0]);
     }
 
     #[test]

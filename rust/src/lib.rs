@@ -53,6 +53,9 @@ pub mod prelude {
     pub use crate::coordinator::experiment::{
         run_experiment, ExperimentConfig, ExperimentReport, SchemeConfig,
     };
+    pub use crate::coordinator::network::{
+        ChannelSpec, ChannelStats, SimulatedNetwork,
+    };
     pub use crate::coordinator::sweep::{
         run_design_sweep, run_sweep, DesignGrid, SweepGrid, SweepReport,
     };

@@ -20,6 +20,7 @@
 use rcfed::coordinator::experiment::{
     run_experiment, BackendChoice, ExperimentConfig,
 };
+use rcfed::coordinator::network::ChannelSpec;
 use rcfed::coordinator::sweep::{run_sweep, SweepGrid};
 use rcfed::data::DatasetKind;
 use rcfed::fl::compression::{
@@ -66,7 +67,13 @@ fn print_usage() {
          [--backend native|pjrt] [--model mlp_synthcifar] [--out file.csv]\n\
          sweep  same dataset flags; runs the full Fig. 1 grid through the\n       \
          sweep engine [--lambdas l1,l2] [--bits-list 3,6] [--seeds s1,s2]\n       \
-         [--sweep-threads 0] [--json file.json]\n\
+         [--sweep-threads 0] [--json file.json]\n       \
+         scenario axes: [--loss-list p1,p2] [--deadline-list s1,s2]\n\n\
+         channel model (run + sweep; all default off/ideal):\n       \
+         [--loss p] [--burst-loss p --burst-enter p --burst-exit p]\n       \
+         [--corrupt p] [--corrupt-bits n] [--deadline secs]\n       \
+         [--bps bits_per_sec] [--bw-spread h] [--latency secs]\n       \
+         [--availability p]\n\n\
          design --scheme rcfed|lloyd --bits b [--lambda l] [--target-rate r]\n\
          info   [--artifacts dir]"
     );
@@ -97,6 +104,28 @@ fn parse_scheme(args: &Args) -> Result<CompressionScheme> {
     })
 }
 
+/// Channel-model flags shared by `run` and `sweep`. Everything defaults
+/// to the ideal channel, so existing invocations behave identically.
+fn parse_channel(args: &Args) -> Result<ChannelSpec> {
+    let mut ch = ChannelSpec::ideal();
+    ch.uplink_bps = args.f64_or("bps", ch.uplink_bps)?;
+    ch.bandwidth_spread = args.f64_or("bw-spread", ch.bandwidth_spread)?;
+    ch.base_latency_s = args.f64_or("latency", ch.base_latency_s)?;
+    ch.loss = args.f64_or("loss", ch.loss)?;
+    ch.burst_loss = args.f64_or("burst-loss", ch.burst_loss)?;
+    ch.burst_enter = args.f64_or("burst-enter", ch.burst_enter)?;
+    ch.burst_exit = args.f64_or("burst-exit", ch.burst_exit)?;
+    ch.corrupt = args.f64_or("corrupt", ch.corrupt)?;
+    ch.corrupt_bits =
+        args.usize_or("corrupt-bits", ch.corrupt_bits as usize)? as u32;
+    ch.deadline_s = args.f64_or("deadline", ch.deadline_s)?;
+    ch.availability = args.f64_or("availability", ch.availability)?;
+    // burst-model consistency (absorbing state, no-op burst-loss) is
+    // checked inside validate(), shared with library users
+    ch.validate()?;
+    Ok(ch)
+}
+
 fn parse_config(args: &Args) -> Result<ExperimentConfig> {
     let kind = DatasetKind::parse(&args.str_or("dataset", "cifar"))?;
     let mut cfg = match kind {
@@ -105,6 +134,7 @@ fn parse_config(args: &Args) -> Result<ExperimentConfig> {
         DatasetKind::Tiny => ExperimentConfig::tiny(),
     };
     cfg.scheme = parse_scheme(args)?;
+    cfg.channel = parse_channel(args)?;
     cfg.rounds = args.usize_or("rounds", cfg.rounds)?;
     cfg.clients_per_round =
         args.usize_or("clients-per-round", cfg.clients_per_round)?;
@@ -160,6 +190,9 @@ fn cmd_run(args: &Args) -> Result<()> {
         report.uplink_gigabits(),
         report.wall_secs
     );
+    if cfg.channel.is_faulty() {
+        println!("channel {:<14} {}", cfg.channel.label(), report.channel);
+    }
     if let Some(path) = out {
         report.metrics.write_csv(&path, &report.label)?;
         println!("wrote {path}");
@@ -173,10 +206,13 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         args.f64_list_or("lambdas", &[0.02, 0.04, 0.06, 0.08, 0.1])?;
     let bits = args.usize_list_or("bits-list", &[3, 6])?;
     let seeds = args.usize_list_or("seeds", &[])?;
+    let loss_list = args.f64_list_or("loss-list", &[])?;
+    let deadline_list = args.f64_list_or("deadline-list", &[])?;
     let sweep_threads = args.usize_or("sweep-threads", 0)?;
     let out = args.str_or("out", "results/sweep.csv");
     let json_out = args.get("json").map(|s| s.to_string());
     args.finish()?;
+    let base_channel = base.channel;
 
     // declarative grid: RC-FED λ-curve + baselines, expanded and executed
     // by the sweep engine across a scoped worker pool with the shared
@@ -209,42 +245,57 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         let seeds: Vec<u64> = seeds.iter().map(|&s| s as u64).collect();
         grid = grid.seeds(&seeds);
     }
+    // scenario axes: each listed loss/deadline value becomes a channel
+    // built on top of the base channel flags; validated up front so a
+    // bad axis is a CLI error, not a sweep of failed cells
+    let channel_axis = !loss_list.is_empty() || !deadline_list.is_empty();
+    if channel_axis {
+        for &p in &loss_list {
+            let spec = ChannelSpec { loss: p, ..base_channel };
+            spec.validate()?;
+            grid = grid.channel(spec);
+        }
+        for &dl in &deadline_list {
+            let spec = ChannelSpec { deadline_s: dl, ..base_channel };
+            spec.validate()?;
+            grid = grid.channel(spec);
+        }
+    }
 
     let report = run_sweep(&grid)?;
     for cell in &report.cells {
         println!(
-            "{:<22} seed={:<6} acc={:.4} uplink={:.5} Gb",
+            "{:<22} seed={:<6} channel={:<14} acc={:.4} uplink={:.5} Gb",
             cell.label,
             cell.seed,
+            cell.channel,
             cell.report.final_accuracy,
             cell.report.uplink_gigabits()
         );
     }
     use rcfed::util::csv::CsvField;
+    // schema grows key columns only for the axes actually in play, so
+    // plain sweeps keep the pre-engine "scheme,acc,gigabits" bytes
+    let mut header: Vec<&str> = vec!["scheme"];
     if replicated {
-        // replicate seeds would collapse under the seedless schema
-        report.write_csv_with(
-            &out,
-            &["scheme", "seed", "acc", "gigabits"],
-            |c| {
-                vec![
-                    CsvField::from(c.label.clone()),
-                    CsvField::from(c.seed),
-                    CsvField::from(c.report.final_accuracy),
-                    CsvField::from(c.report.uplink_gigabits()),
-                ]
-            },
-        )?;
-    } else {
-        // the pre-engine schema, unchanged
-        report.write_csv_with(&out, &["scheme", "acc", "gigabits"], |c| {
-            vec![
-                CsvField::from(c.label.clone()),
-                CsvField::from(c.report.final_accuracy),
-                CsvField::from(c.report.uplink_gigabits()),
-            ]
-        })?;
+        header.push("seed");
     }
+    if channel_axis {
+        header.push("channel");
+    }
+    header.extend_from_slice(&["acc", "gigabits"]);
+    report.write_csv_with(&out, &header, |c| {
+        let mut row = vec![CsvField::from(c.label.clone())];
+        if replicated {
+            row.push(CsvField::from(c.seed));
+        }
+        if channel_axis {
+            row.push(CsvField::from(c.channel.clone()));
+        }
+        row.push(CsvField::from(c.report.final_accuracy));
+        row.push(CsvField::from(c.report.uplink_gigabits()));
+        row
+    })?;
     println!("{}", report.summary());
     if let Some(path) = json_out {
         report.write_json(&path)?;

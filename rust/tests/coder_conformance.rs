@@ -1,0 +1,171 @@
+//! Coder conformance suite: one shared battery of symbol streams run
+//! through every entropy coder (Huffman, Arithmetic, LZW), asserting
+//! `decode(encode(x)) == x` on each, plus the Huffman-specific
+//! guarantee that `message_bits` is *exactly* the bit length `encode`
+//! produces (the RC design loop and the uplink ledger both depend on
+//! that number being honest).
+
+use rcfed::coding::arithmetic::ArithmeticCoder;
+use rcfed::coding::bitio::BitWriter;
+use rcfed::coding::huffman::HuffmanCode;
+use rcfed::coding::lz::Lzw;
+use rcfed::coding::EntropyCoder;
+use rcfed::util::rng::Rng;
+
+/// One battery case: an alphabet size and a symbol stream over it.
+struct Case {
+    name: &'static str,
+    nsym: usize,
+    stream: Vec<u8>,
+}
+
+/// The shared battery. Covers the regimes the quantizers actually
+/// produce: skewed Gaussian-cell distributions, uniform symbols, the
+/// degenerate single-symbol regime (RC-FED at large λ), empty and
+/// near-empty messages, and the full 256-symbol alphabet.
+fn battery() -> Vec<Case> {
+    let mut rng = Rng::new(0xC0DE);
+    let mut cases = Vec::new();
+
+    cases.push(Case { name: "empty", nsym: 4, stream: Vec::new() });
+    cases.push(Case { name: "one_symbol", nsym: 4, stream: vec![2] });
+    cases.push(Case { name: "two_symbols", nsym: 4, stream: vec![3, 0] });
+    cases.push(Case {
+        name: "single_symbol_run",
+        nsym: 8,
+        stream: vec![5; 4096],
+    });
+
+    // uniform over a small alphabet
+    cases.push(Case {
+        name: "uniform_8",
+        nsym: 8,
+        stream: (0..5000).map(|_| rng.below(8) as u8).collect(),
+    });
+
+    // zipf-skewed over 64 symbols (the b=6 quantizer alphabet)
+    let probs: Vec<f64> =
+        (0..64).map(|i| 1.0 / (1.0 + i as f64).powi(2)).collect();
+    cases.push(Case {
+        name: "zipf_64",
+        nsym: 64,
+        stream: (0..5000).map(|_| rng.categorical(&probs) as u8).collect(),
+    });
+
+    // heavily skewed binary (worst case for Huffman's 1-bit floor)
+    let bin = [0.97, 0.03];
+    cases.push(Case {
+        name: "skewed_binary",
+        nsym: 2,
+        stream: (0..8000).map(|_| rng.categorical(&bin) as u8).collect(),
+    });
+
+    // full 256-symbol alphabet, uniform
+    cases.push(Case {
+        name: "uniform_256",
+        nsym: 256,
+        stream: (0..4096).map(|_| rng.below(256) as u8).collect(),
+    });
+
+    // full alphabet with exponential skew (forces Huffman length
+    // limiting and the wide-alphabet code paths)
+    let skew: Vec<f64> = (0..256).map(|i| 0.97f64.powi(i)).collect();
+    cases.push(Case {
+        name: "skewed_256",
+        nsym: 256,
+        stream: (0..4096).map(|_| rng.categorical(&skew) as u8).collect(),
+    });
+
+    cases
+}
+
+/// Histogram of `stream` over `nsym` symbols, floored to 1 so every
+/// alphabet symbol is encodable by the model-based coders.
+fn hist(nsym: usize, stream: &[u8]) -> Vec<u64> {
+    let mut h = vec![1u64; nsym];
+    for &s in stream {
+        h[s as usize] += 1;
+    }
+    h
+}
+
+#[test]
+fn every_coder_roundtrips_the_battery() {
+    for case in battery() {
+        let freqs = hist(case.nsym, &case.stream);
+        let huffman = HuffmanCode::from_freqs(&freqs).unwrap();
+        let arith = ArithmeticCoder::from_freqs(&freqs).unwrap();
+        let lzw = Lzw;
+        let coders: [&dyn EntropyCoder; 3] = [&huffman, &arith, &lzw];
+        for coder in coders {
+            let payload = coder.encode(&case.stream).unwrap_or_else(|e| {
+                panic!("{}/{}: encode failed: {e}", coder.name(), case.name)
+            });
+            let back =
+                coder.decode(&payload, case.stream.len()).unwrap_or_else(
+                    |e| {
+                        panic!(
+                            "{}/{}: decode failed: {e}",
+                            coder.name(),
+                            case.name
+                        )
+                    },
+                );
+            assert_eq!(
+                back, case.stream,
+                "{}/{}: roundtrip mismatch",
+                coder.name(),
+                case.name
+            );
+        }
+    }
+}
+
+#[test]
+fn huffman_message_bits_is_exactly_what_encode_produces() {
+    for case in battery() {
+        let code = HuffmanCode::from_freqs(&hist(case.nsym, &case.stream))
+            .unwrap();
+        let claimed = code.message_bits(&case.stream);
+        // measure the real bit length through the writer
+        let mut w = BitWriter::new();
+        code.encode_into(&case.stream, &mut w).unwrap();
+        assert_eq!(
+            w.bit_len(),
+            claimed,
+            "{}: message_bits lied about the wire cost",
+            case.name
+        );
+        // and the byte payload is the claimed bits, byte-padded
+        let payload = code.encode(&case.stream).unwrap();
+        assert_eq!(
+            payload.len() as u64,
+            claimed.div_ceil(8),
+            "{}: payload padding",
+            case.name
+        );
+    }
+}
+
+#[test]
+fn decoders_reject_or_zero_fill_truncated_payloads_without_panicking() {
+    // conformance for the channel-corruption path: a truncated payload
+    // must never panic any decoder — wrong symbols or Err are both
+    // acceptable, UB/panic is not
+    for case in battery() {
+        if case.stream.is_empty() {
+            continue;
+        }
+        let freqs = hist(case.nsym, &case.stream);
+        let huffman = HuffmanCode::from_freqs(&freqs).unwrap();
+        let arith = ArithmeticCoder::from_freqs(&freqs).unwrap();
+        let lzw = Lzw;
+        let coders: [&dyn EntropyCoder; 3] = [&huffman, &arith, &lzw];
+        for coder in coders {
+            let payload = coder.encode(&case.stream).unwrap();
+            for cut in [payload.len() / 2, 1, 0] {
+                let _ = coder.decode(&payload[..cut], case.stream.len());
+            }
+        }
+    }
+}

@@ -1,0 +1,138 @@
+//! Golden end-to-end regression: fixed-seed tiny runs pinned to exact
+//! uplink-bit totals and final training loss, so wire-format or
+//! accounting changes cannot drift silently.
+//!
+//! Two layers of protection:
+//!
+//! 1. **Closed-form exactness** — fp32 bit totals are fully predictable
+//!    from the wire format (`HEADER_BITS + 32·d` per packet), no
+//!    snapshot needed.
+//! 2. **Snapshot** — data-dependent schemes (RC-FED, Lloyd, QSGD) are
+//!    pinned to `tests/golden/e2e_tiny.golden`. On first run (or with
+//!    `RCFED_UPDATE_GOLDEN=1`) the file is (re)written and the test
+//!    passes with a notice; once the file is committed, any drift in
+//!    total bits (exact) or final loss (1e-6) fails the suite. Commit
+//!    the generated file to lock the behavior in.
+
+use std::fmt::Write as _;
+
+use rcfed::coordinator::experiment::{run_experiment, ExperimentConfig};
+use rcfed::fl::compression::CompressionScheme;
+use rcfed::fl::packet::HEADER_BITS;
+use rcfed::quant::rcq::LengthModel;
+
+fn tiny(scheme: CompressionScheme) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::tiny();
+    cfg.scheme = scheme;
+    cfg.rounds = 10;
+    cfg.eval_every = 5;
+    cfg
+}
+
+#[test]
+fn fp32_uplink_bits_match_the_wire_format_exactly() {
+    let cfg = tiny(CompressionScheme::Fp32);
+    let rep = run_experiment(&cfg).unwrap();
+    let clients = cfg.dataset.num_clients as u64;
+    let d = rep.num_params as u64;
+    let per_packet = HEADER_BITS + 32 * d; // no side info, no table
+    assert_eq!(
+        rep.total_bits,
+        cfg.rounds as u64 * clients * per_packet,
+        "fp32 accounting must be exactly rounds × clients × packet bits \
+         (d={d}, clients={clients})"
+    );
+}
+
+fn golden_schemes() -> Vec<(&'static str, CompressionScheme)> {
+    vec![
+        (
+            "rcfed_b3_l0.05",
+            CompressionScheme::RcFed {
+                bits: 3,
+                lambda: 0.05,
+                length_model: LengthModel::Huffman,
+            },
+        ),
+        ("lloyd_b3", CompressionScheme::Lloyd { bits: 3 }),
+        ("qsgd_b3", CompressionScheme::Qsgd { bits: 3 }),
+    ]
+}
+
+fn golden_path() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/golden/e2e_tiny.golden")
+}
+
+#[test]
+fn fixed_seed_runs_match_the_committed_snapshot() {
+    let mut current = String::new();
+    for (name, scheme) in golden_schemes() {
+        let rep = run_experiment(&tiny(scheme)).unwrap();
+        let final_loss = rep.metrics.rounds.last().unwrap().train_loss;
+        // `{}` on floats is the shortest exact-roundtrip representation,
+        // so the snapshot carries full precision
+        writeln!(
+            current,
+            "{name} total_bits={} final_loss={final_loss} final_acc={}",
+            rep.total_bits, rep.final_accuracy
+        )
+        .unwrap();
+    }
+
+    let path = golden_path();
+    let update = std::env::var("RCFED_UPDATE_GOLDEN").is_ok();
+    if update || !path.exists() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, &current).unwrap();
+        eprintln!(
+            "golden_e2e: wrote snapshot {} — commit it to pin these values",
+            path.display()
+        );
+        return;
+    }
+
+    let committed = std::fs::read_to_string(&path).unwrap();
+    for (have, want) in current.lines().zip(committed.lines()) {
+        let parse = |line: &str| -> (String, u64, f32, f64) {
+            let mut it = line.split_whitespace();
+            let name = it.next().unwrap().to_string();
+            let field = |tok: &str, key: &str| -> String {
+                tok.strip_prefix(key)
+                    .unwrap_or_else(|| panic!("bad golden line: {line}"))
+                    .to_string()
+            };
+            let bits = field(it.next().unwrap(), "total_bits=");
+            let loss = field(it.next().unwrap(), "final_loss=");
+            let acc = field(it.next().unwrap(), "final_acc=");
+            (
+                name,
+                bits.parse().unwrap(),
+                loss.parse().unwrap(),
+                acc.parse().unwrap(),
+            )
+        };
+        let (hn, hb, hl, ha) = parse(have);
+        let (wn, wb, wl, wa) = parse(want);
+        assert_eq!(hn, wn, "scheme order changed");
+        assert_eq!(
+            hb, wb,
+            "{hn}: total uplink bits drifted from golden \
+             (have {hb}, golden {wb}) — if intentional, rerun with \
+             RCFED_UPDATE_GOLDEN=1 and commit"
+        );
+        assert!(
+            (hl - wl).abs() <= 1e-6,
+            "{hn}: final loss drifted: have {hl}, golden {wl}"
+        );
+        assert!(
+            (ha - wa).abs() <= 1e-6,
+            "{hn}: final accuracy drifted: have {ha}, golden {wa}"
+        );
+    }
+    assert_eq!(
+        current.lines().count(),
+        committed.lines().count(),
+        "snapshot line count changed"
+    );
+}

@@ -1,0 +1,157 @@
+//! Integration tests for the fault-injecting channel: corruption flows
+//! through the real `Packet::parse` → `decompress_accumulate` path and
+//! is handled as a recoverable `Err` (client skipped, aggregate
+//! reweighted over survivors); fixed seeds replay whole lossy sweeps
+//! bit-exactly.
+
+use rcfed::coordinator::experiment::{run_experiment, ExperimentConfig};
+use rcfed::coordinator::network::{ChannelSpec, Delivery, SimulatedNetwork};
+use rcfed::coordinator::sweep::{run_sweep, SweepGrid};
+use rcfed::fl::compression::{CompressionScheme, Compressor, WireCoder};
+use rcfed::fl::server::{LrSchedule, Server};
+use rcfed::quant::rcq::LengthModel;
+use rcfed::util::rng::Rng;
+
+fn rcfed_scheme() -> CompressionScheme {
+    CompressionScheme::RcFed {
+        bits: 3,
+        lambda: 0.05,
+        length_model: LengthModel::Huffman,
+    }
+}
+
+/// The acceptance path: a corrupting channel between real compressed
+/// gradients and a real server. Every corrupted packet goes through
+/// `Packet::parse` → `decompress_accumulate`; failures skip the client
+/// and the surviving aggregate equals the plain mean over survivors.
+#[test]
+fn corrupt_packets_are_recoverable_and_survivors_reweight() {
+    let d = 256usize;
+    let clients = 4u32;
+    let spec = ChannelSpec { corrupt: 1.0, ..ChannelSpec::ideal() };
+    let compressor =
+        Compressor::design(rcfed_scheme(), WireCoder::Huffman).unwrap();
+    let mut network = SimulatedNetwork::with_spec(clients as usize, spec, 77);
+    let mut server = Server::new(vec![0.0; d], LrSchedule::Const(0.1));
+    let mut rng = Rng::new(123);
+
+    let mut total_decode_errors = 0u64;
+    for round in 0..6u32 {
+        network.begin_round();
+        server.begin_round();
+        // per-survivor reference decodes, to check the aggregate against
+        let mut reference = vec![0f32; d];
+        let mut survivors = 0usize;
+        for c in 0..clients {
+            let mut grad = vec![0f32; d];
+            rng.fill_normal_f32(&mut grad, 0.01 * c as f32, 1.0);
+            let pkt = compressor.compress(c, round, &grad, &mut rng).unwrap();
+            match network.deliver(&pkt) {
+                Delivery::Corrupted { bytes, .. } => {
+                    // THE path under test: real wire bytes → parse →
+                    // decompress; Err is recoverable, never a panic
+                    match server.receive_bytes(&compressor, &bytes) {
+                        Ok(()) => {
+                            survivors += 1;
+                            // mirror what the server just accumulated
+                            let p = rcfed::fl::packet::Packet::parse(&bytes)
+                                .unwrap();
+                            compressor
+                                .decompress_accumulate(&p, &mut reference)
+                                .unwrap();
+                        }
+                        Err(_) => {
+                            network.note_decode_error();
+                            total_decode_errors += 1;
+                        }
+                    }
+                }
+                other => panic!("corrupt=1.0 produced {other:?}"),
+            }
+        }
+        assert_eq!(server.received(), survivors);
+        if survivors > 0 {
+            // unbiased over survivors: mean = acc / received
+            let mean = server.aggregated_gradient();
+            for (m, r) in mean.iter().zip(&reference) {
+                let want = r / survivors as f32;
+                // undetected bit flips can blow single coordinates up to
+                // ±inf; both sides compute identically, so only compare
+                // where the value is meaningful
+                if !want.is_finite() {
+                    continue;
+                }
+                assert!(
+                    (m - want).abs() <= 1e-5 * want.abs().max(1.0),
+                    "aggregate not reweighted over survivors: {m} vs {want}"
+                );
+            }
+            server.step().unwrap();
+        } else {
+            server.skip_round();
+        }
+    }
+    assert!(
+        total_decode_errors > 0,
+        "no corruption was caught as a decode Err in 24 packets"
+    );
+    assert_eq!(network.stats.decode_errors, total_decode_errors);
+    assert_eq!(network.stats.corrupted, 24);
+    assert_eq!(server.round, 6, "every round must advance");
+}
+
+#[test]
+fn corrupting_experiment_completes_end_to_end() {
+    let mut cfg = ExperimentConfig::tiny();
+    cfg.rounds = 8;
+    cfg.eval_every = 0;
+    cfg.scheme = rcfed_scheme();
+    cfg.channel = ChannelSpec { corrupt: 1.0, ..ChannelSpec::ideal() };
+    let rep = run_experiment(&cfg).unwrap();
+    assert_eq!(rep.channel.delivered, 0);
+    assert_eq!(
+        rep.channel.corrupted,
+        8 * cfg.dataset.num_clients as u64,
+        "every packet must pass through the corruptor"
+    );
+    assert!(
+        rep.channel.decode_errors > 0,
+        "corruption never surfaced as a decode Err: {:?}",
+        rep.channel
+    );
+    // the ledger still charges every transmission
+    assert!(rep.total_bits > 0);
+}
+
+#[test]
+fn lossy_sweep_replays_bit_exactly() {
+    let run = || {
+        let mut base = ExperimentConfig::tiny();
+        base.rounds = 6;
+        base.eval_every = 3;
+        let mut grid = SweepGrid::new(base)
+            .scheme(rcfed_scheme())
+            .channel(ChannelSpec::ideal())
+            .loss_axis(&[0.3])
+            .deadline_axis(1e6, 0.5, &[2e-3]);
+        grid.threads = 1;
+        run_sweep(&grid).unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.cells.len(), 3);
+    for (x, y) in a.cells.iter().zip(&b.cells) {
+        assert_eq!(x.channel, y.channel);
+        assert_eq!(x.report.total_bits, y.report.total_bits);
+        assert_eq!(x.report.final_accuracy, y.report.final_accuracy);
+        assert_eq!(x.report.channel, y.report.channel, "survivor replay");
+        let bits_x: Vec<u64> =
+            x.report.metrics.rounds.iter().map(|r| r.bits_up).collect();
+        let bits_y: Vec<u64> =
+            y.report.metrics.rounds.iter().map(|r| r.bits_up).collect();
+        assert_eq!(bits_x, bits_y, "per-round ledger replay");
+    }
+    // the loss cell lost packets, the deadline cell straggled some
+    assert!(a.cells[1].report.channel.lost > 0);
+    assert_eq!(a.cells[0].report.channel.faults(), 0);
+}

@@ -1,0 +1,199 @@
+//! Wire-format fuzzing: `Packet::parse` and the full
+//! `parse → decompress_accumulate` pipeline must return `Err` on
+//! malformed input — never panic, never over-read, never accumulate a
+//! partial gradient. This is the contract the channel model's
+//! corruption injection relies on.
+
+use rcfed::fl::compression::{CompressionScheme, Compressor, WireCoder};
+use rcfed::fl::packet::Packet;
+use rcfed::quant::rcq::LengthModel;
+use rcfed::util::rng::Rng;
+
+fn sample_packet() -> Packet {
+    Packet {
+        client_id: 7,
+        round: 3,
+        scheme: rcfed::fl::packet::SchemeTag::RcFed,
+        bits_per_symbol: 3,
+        d: 64,
+        side_info: vec![0.25, 1.5],
+        payload: vec![0xA5; 24],
+        payload_bits: 24 * 8 - 3,
+        table_bits: 0,
+    }
+}
+
+#[test]
+fn parse_rejects_every_strict_prefix() {
+    let bytes = sample_packet().to_bytes();
+    for cut in 0..bytes.len() {
+        assert!(
+            Packet::parse(&bytes[..cut]).is_err(),
+            "prefix of {cut} bytes parsed"
+        );
+    }
+    // the full buffer still parses
+    assert!(Packet::parse(&bytes).is_ok());
+}
+
+#[test]
+fn parse_rejects_bad_scheme_tags() {
+    let bytes = sample_packet().to_bytes();
+    for tag in 6u8..=255 {
+        let mut bad = bytes.clone();
+        bad[8] = tag;
+        assert!(Packet::parse(&bad).is_err(), "tag {tag} accepted");
+    }
+}
+
+#[test]
+fn parse_rejects_length_field_mismatches() {
+    let p = sample_packet();
+    // payload_bits claiming more bits than the payload carries
+    let mut bytes = p.to_bytes();
+    let lie = (p.payload.len() as u64 * 8 + 1).to_le_bytes();
+    bytes[14..20].copy_from_slice(&lie[..6]);
+    assert!(Packet::parse(&bytes).is_err());
+    // side-info count promising values the buffer does not have
+    let mut bytes = p.to_bytes();
+    bytes[20..22].copy_from_slice(&u16::MAX.to_le_bytes());
+    assert!(Packet::parse(&bytes).is_err());
+    // a count that swallows the whole payload then runs short
+    let mut bytes = p.to_bytes();
+    let n = ((bytes.len() - 22) / 4 + 1) as u16;
+    bytes[20..22].copy_from_slice(&n.to_le_bytes());
+    assert!(Packet::parse(&bytes).is_err());
+}
+
+#[test]
+fn parse_survives_random_garbage() {
+    let mut rng = Rng::new(0xFADE);
+    for len in 0..96usize {
+        for _ in 0..64 {
+            let buf: Vec<u8> =
+                (0..len).map(|_| rng.next_u64() as u8).collect();
+            // must return (Ok or Err) without panicking or over-reading
+            let _ = Packet::parse(&buf);
+        }
+    }
+}
+
+fn compressors() -> Vec<Compressor> {
+    vec![
+        Compressor::design(
+            CompressionScheme::RcFed {
+                bits: 3,
+                lambda: 0.05,
+                length_model: LengthModel::Huffman,
+            },
+            WireCoder::Huffman,
+        )
+        .unwrap(),
+        Compressor::design(
+            CompressionScheme::RcFed {
+                bits: 3,
+                lambda: 0.05,
+                length_model: LengthModel::Huffman,
+            },
+            WireCoder::Arithmetic,
+        )
+        .unwrap(),
+        Compressor::design(CompressionScheme::Lloyd { bits: 3 }, WireCoder::Huffman)
+            .unwrap(),
+        Compressor::design(CompressionScheme::Qsgd { bits: 3 }, WireCoder::Huffman)
+            .unwrap(),
+        Compressor::design(CompressionScheme::Fp32, WireCoder::Huffman)
+            .unwrap(),
+    ]
+}
+
+#[test]
+fn decompress_never_panics_on_mutated_wire_bytes() {
+    let mut rng = Rng::new(0xBEEF);
+    let d = 600; // > one QSGD bucket so the norms path is exercised
+    let mut grad = vec![0f32; d];
+    rng.fill_normal_f32(&mut grad, 0.0, 1.0);
+    for c in compressors() {
+        let pkt = c.compress(1, 0, &grad, &mut rng).unwrap();
+        let clean = pkt.to_bytes();
+        for trial in 0..400 {
+            let mut bytes = clean.clone();
+            match trial % 3 {
+                0 => {
+                    // truncate anywhere
+                    let cut = rng.below(bytes.len());
+                    bytes.truncate(cut);
+                }
+                1 => {
+                    // flip a handful of random bits
+                    for _ in 0..8 {
+                        let bit = rng.below(bytes.len() * 8);
+                        bytes[bit / 8] ^= 1 << (bit % 8);
+                    }
+                }
+                _ => {
+                    // stomp a whole random field region
+                    let start = rng.below(bytes.len());
+                    let end = (start + 1 + rng.below(8)).min(bytes.len());
+                    for b in &mut bytes[start..end] {
+                        *b = rng.next_u64() as u8;
+                    }
+                }
+            }
+            // parse may fail (good); if it succeeds, decode must return
+            // a Result too — wrong values are channel noise, panics are
+            // bugs
+            if let Ok(parsed) = Packet::parse(&bytes) {
+                let mut acc = vec![0f32; d];
+                let _ = c.decompress_accumulate(&parsed, &mut acc);
+            }
+        }
+    }
+}
+
+#[test]
+fn decompress_rejects_missing_or_bogus_side_info() {
+    let mut rng = Rng::new(0x51DE);
+    let mut grad = vec![0f32; 128];
+    rng.fill_normal_f32(&mut grad, 0.0, 1.0);
+    let c = Compressor::design(
+        CompressionScheme::Lloyd { bits: 3 },
+        WireCoder::Huffman,
+    )
+    .unwrap();
+    let pkt = c.compress(0, 0, &grad, &mut rng).unwrap();
+    let mut acc = vec![0f32; 128];
+    // no side info at all
+    let mut bad = pkt.clone();
+    bad.side_info.clear();
+    assert!(c.decompress_accumulate(&bad, &mut acc).is_err());
+    // wrong count
+    let mut bad = pkt.clone();
+    bad.side_info = vec![0.0; 5];
+    assert!(c.decompress_accumulate(&bad, &mut acc).is_err());
+    // non-finite (μ, σ)
+    let mut bad = pkt.clone();
+    bad.side_info = vec![f32::NAN, 1.0];
+    assert!(c.decompress_accumulate(&bad, &mut acc).is_err());
+    let mut bad = pkt;
+    bad.side_info = vec![0.0, f32::INFINITY];
+    assert!(c.decompress_accumulate(&bad, &mut acc).is_err());
+    // nothing accumulated by any rejected packet
+    assert!(acc.iter().all(|&x| x == 0.0));
+}
+
+#[test]
+fn decompress_rejects_short_fp32_payloads() {
+    let c = Compressor::design(CompressionScheme::Fp32, WireCoder::Huffman)
+        .unwrap();
+    let mut rng = Rng::new(2);
+    let pkt = c.compress(0, 0, &[1.0f32; 32], &mut rng).unwrap();
+    let mut bad = pkt.clone();
+    bad.payload.truncate(32 * 4 - 1);
+    bad.payload_bits = bad.payload.len() as u64 * 8;
+    let mut acc = vec![0f32; 32];
+    assert!(c.decompress_accumulate(&bad, &mut acc).is_err());
+    assert!(acc.iter().all(|&x| x == 0.0), "partial accumulation");
+    // the intact packet still decodes
+    assert!(c.decompress_accumulate(&pkt, &mut acc).is_ok());
+}
