@@ -8,7 +8,9 @@ use std::rc::Rc;
 
 use crate::data::{DatasetConfig, DatasetKind, FederatedDataset};
 use crate::fl::client::Client;
-use crate::fl::compression::{CompressionScheme, Compressor, WireCoder};
+use crate::fl::compression::{
+    CompressionPipeline, CompressionScheme, RateTarget, WireCoder,
+};
 use crate::fl::metrics::MetricsLog;
 use crate::fl::server::{LrSchedule, Server};
 use crate::model::native::NativeMlp;
@@ -61,6 +63,9 @@ pub struct ExperimentConfig {
     /// uplink channel model (loss, corruption, stragglers, availability);
     /// [`ChannelSpec::ideal`] reproduces the fault-free behavior exactly
     pub channel: ChannelSpec,
+    /// closed-loop rate targeting ([`RateTarget::Off`] = the static
+    /// §3.1 design, byte-identical to the pre-pipeline behavior)
+    pub rate_target: RateTarget,
 }
 
 impl ExperimentConfig {
@@ -84,6 +89,7 @@ impl ExperimentConfig {
             eval_batches: 0,
             threads: 0,
             channel: ChannelSpec::ideal(),
+            rate_target: RateTarget::Off,
         }
     }
 
@@ -106,6 +112,7 @@ impl ExperimentConfig {
             eval_batches: 0,
             threads: 0,
             channel: ChannelSpec::ideal(),
+            rate_target: RateTarget::Off,
         }
     }
 
@@ -130,6 +137,7 @@ impl ExperimentConfig {
             eval_batches: 0,
             threads: 0,
             channel: ChannelSpec::ideal(),
+            rate_target: RateTarget::Off,
         }
     }
 
@@ -150,7 +158,11 @@ pub struct ExperimentReport {
     pub final_accuracy: f64,
     pub best_accuracy: f64,
     pub num_params: usize,
+    /// uplink bits (Fig. 1's x-axis)
     pub total_bits: u64,
+    /// server→client codebook-broadcast bits (adaptive pipeline only;
+    /// zero for static runs)
+    pub downlink_bits: u64,
     pub wall_secs: f64,
     /// channel outcome counters (all-delivered under an ideal channel)
     pub channel: ChannelStats,
@@ -159,6 +171,22 @@ pub struct ExperimentReport {
 impl ExperimentReport {
     pub fn uplink_gigabits(&self) -> f64 {
         self.total_bits as f64 / 1e9
+    }
+
+    /// Honest total: uplink plus the downlink codebook broadcasts the
+    /// adaptive pipeline paid for its re-designs.
+    pub fn total_comm_bits(&self) -> u64 {
+        self.total_bits + self.downlink_bits
+    }
+
+    /// Measured uplink bits/coordinate of the last closed adaptation
+    /// window (NaN for static runs or before the first window closed).
+    pub fn realized_bpc(&self) -> f64 {
+        self.metrics
+            .rate_trace()
+            .last()
+            .map(|t| t.realized_bpc)
+            .unwrap_or(f64::NAN)
     }
 }
 
@@ -210,7 +238,8 @@ pub fn run_experiment_on(
     }
     config.channel.validate()?;
     let total_timer = Timer::start();
-    let compressor = Compressor::design(config.scheme, config.wire)?;
+    let mut pipeline = CompressionPipeline::design(
+        config.scheme, config.wire, config.rate_target)?;
     let label = config.scheme.label();
 
     // clients (deterministic per-client seeds)
@@ -230,7 +259,7 @@ pub fn run_experiment_on(
     let report = match &config.backend {
         BackendChoice::Native => {
             let backend = config.native_backend();
-            drive(config, ds, &mut clients, &mut sampler, &compressor,
+            drive(config, ds, &mut clients, &mut sampler, &mut pipeline,
                   &backend, run_round::<NativeMlp>)?
         }
         BackendChoice::Pjrt(model) => {
@@ -241,27 +270,41 @@ pub fn run_experiment_on(
                     "pjrt model batch {} overrides configured batch {}",
                     backend.batch_size(), config.batch);
             }
-            drive(config, ds, &mut clients, &mut sampler, &compressor,
+            drive(config, ds, &mut clients, &mut sampler, &mut pipeline,
                   &backend, run_round_serial::<PjrtModel>)?
         }
     };
-    crate::info!(
-        "{label}: acc={:.4} uplink={:.4} Gb in {:.1}s",
-        report.final_accuracy,
-        report.uplink_gigabits(),
-        total_timer.secs()
-    );
+    if report.downlink_bits > 0 {
+        crate::info!(
+            "{label}: acc={:.4} uplink={:.4} Gb + downlink={:.6} Gb \
+             (λ={:.4}, realized {:.3} b/coord) in {:.1}s",
+            report.final_accuracy,
+            report.uplink_gigabits(),
+            report.downlink_bits as f64 / 1e9,
+            pipeline.lambda(),
+            report.realized_bpc(),
+            total_timer.secs()
+        );
+    } else {
+        crate::info!(
+            "{label}: acc={:.4} uplink={:.4} Gb in {:.1}s",
+            report.final_accuracy,
+            report.uplink_gigabits(),
+            total_timer.secs()
+        );
+    }
     Ok(report)
 }
 
 /// The signature of a round runner (`run_round` for thread-safe
-/// backends, `run_round_serial` otherwise).
+/// backends, `run_round_serial` otherwise). Runners share the pipeline
+/// immutably; adaptation happens between rounds in [`drive`].
 type Runner<B> = fn(
     &B,
     &mut [&mut Client],
     &[f32],
     &RoundPlan,
-    &Compressor,
+    &CompressionPipeline,
 ) -> Result<Vec<crate::fl::client::ClientUpdate>>;
 
 /// The round loop, generic over backend.
@@ -270,7 +313,7 @@ fn drive<B: Backend>(
     ds: &FederatedDataset,
     clients: &mut [Client],
     sampler: &mut Rng,
-    compressor: &Compressor,
+    pipeline: &mut CompressionPipeline,
     backend: &B,
     runner: Runner<B>,
 ) -> Result<ExperimentReport> {
@@ -319,25 +362,32 @@ fn drive<B: Backend>(
         let params_snapshot = server.params.clone();
         let updates =
             runner(backend, &mut selected, &params_snapshot, &plan,
-                   compressor)?;
+                   &*pipeline)?;
         // uplink: every update goes through the channel; only survivors
         // reach the aggregate, which the server averages over `received`
         // so it stays unbiased over whoever made it through
         let mut loss_acc = 0f64;
         let mut survivors = 0usize;
+        let mut coords_sent = 0u64;
         for up in &updates {
+            coords_sent += up.packet.d as u64;
             match network.deliver(&up.packet) {
                 Delivery::Delivered { .. } => {
                     // intact delivery decodes, or the run is broken
-                    server.receive(compressor, &up.packet)?;
+                    server.receive(&*pipeline, &up.packet)?;
+                    // the stats sample rides with the packet, so only
+                    // packets the server actually ingested contribute
+                    // to the design pdf
+                    pipeline.observe_samples(&up.sample);
                     survivors += 1;
                     loss_acc += up.mean_loss as f64;
                 }
                 Delivery::Corrupted { bytes, .. } => {
                     // the real wire path: parse → decode; failures are
                     // channel noise, not run errors
-                    match server.receive_bytes(compressor, &bytes) {
+                    match server.receive_bytes(&*pipeline, &bytes) {
                         Ok(()) => {
+                            pipeline.observe_samples(&up.sample);
                             survivors += 1;
                             loss_acc += up.mean_loss as f64;
                         }
@@ -372,6 +422,22 @@ fn drive<B: Backend>(
             // the channel wiped the round out: θ holds, schedule advances
             server.skip_round();
         }
+        // closed-loop adaptation between rounds: feed the controller the
+        // ledger's measured bits; at window ends it moves λ and
+        // re-designs, and the new codebook is broadcast to every client
+        // (any of them may be sampled next round — stale versions are
+        // rejected on decode), charged to the downlink ledger
+        pipeline.observe_round(network.bits_this_round(), coords_sent);
+        if let Some(broadcast) = pipeline.end_round(round)? {
+            network.broadcast(broadcast, k_all);
+            crate::debug!(
+                "round {round}: codebook v{} published (λ={:.4}, \
+                 realized {:.3} b/coord)",
+                pipeline.version(),
+                pipeline.lambda(),
+                pipeline.last_realized()
+            );
+        }
         let train_loss = if survivors > 0 {
             (loss_acc / survivors as f64) as f32
         } else {
@@ -393,6 +459,13 @@ fn drive<B: Backend>(
             network.bits_this_round(),
             round_timer.secs(),
         );
+        if pipeline.is_adaptive() {
+            metrics.push_rate(
+                pipeline.lambda(),
+                pipeline.last_realized(),
+                network.downlink_bits_this_round(),
+            );
+        }
         if is_eval {
             crate::debug!(
                 "round {round}: loss={train_loss:.4} acc={acc:.4} \
@@ -407,6 +480,7 @@ fn drive<B: Backend>(
         best_accuracy: metrics.best_accuracy(),
         num_params: d,
         total_bits: metrics.total_bits(),
+        downlink_bits: network.downlink_bits(),
         wall_secs: total_timer.secs(),
         channel: network.stats,
         metrics,
@@ -581,6 +655,46 @@ mod tests {
             run_experiment(&c).unwrap()
         };
         assert!(rep.total_bits < full.total_bits);
+    }
+
+    #[test]
+    fn rate_target_off_is_default_and_draws_no_downlink() {
+        let cfg = ExperimentConfig::tiny();
+        assert_eq!(cfg.rate_target, RateTarget::Off);
+        let rep = run_experiment(&cfg).unwrap();
+        assert_eq!(rep.downlink_bits, 0);
+        assert_eq!(rep.total_comm_bits(), rep.total_bits);
+        assert!(rep.realized_bpc().is_nan());
+        assert!(rep.metrics.rate_trace().is_empty());
+    }
+
+    #[test]
+    fn adaptive_run_is_deterministic_and_pays_downlink() {
+        let mut cfg = ExperimentConfig::tiny();
+        cfg.rounds = 12;
+        cfg.rate_target =
+            RateTarget::Track { bits_per_coord: 2.2, adapt_every: 3 };
+        let a = run_experiment(&cfg).unwrap();
+        let b = run_experiment(&cfg).unwrap();
+        // deterministic replay, adaptation and all
+        assert_eq!(a.total_bits, b.total_bits);
+        assert_eq!(a.downlink_bits, b.downlink_bits);
+        assert_eq!(a.final_accuracy, b.final_accuracy);
+        // 12 rounds / window 3 ⇒ 4 windows, each republishing once
+        assert!(a.downlink_bits > 0, "no codebook broadcast charged");
+        assert!(a.total_comm_bits() > a.total_bits);
+        assert_eq!(a.metrics.rate_trace().len(), 12);
+        assert_eq!(a.metrics.total_downlink_bits(), a.downlink_bits);
+        assert!(a.realized_bpc().is_finite());
+    }
+
+    #[test]
+    fn rate_target_on_non_rcfed_scheme_is_rejected() {
+        let mut cfg = ExperimentConfig::tiny();
+        cfg.scheme = CompressionScheme::Lloyd { bits: 3 };
+        cfg.rate_target =
+            RateTarget::Track { bits_per_coord: 2.0, adapt_every: 2 };
+        assert!(run_experiment(&cfg).is_err());
     }
 
     #[test]

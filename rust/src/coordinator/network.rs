@@ -292,6 +292,10 @@ pub struct SimulatedNetwork {
     per_client_bits: Vec<u64>,
     total_bits: u64,
     round_bits: Vec<u64>,
+    /// server→client broadcast ledger (codebook re-publications from the
+    /// adaptive pipeline; zero for static runs)
+    downlink_bits: u64,
+    round_downlink_bits: Vec<u64>,
     /// the channel configuration this network simulates
     pub spec: ChannelSpec,
     /// per-client bandwidth factor (empty when `uplink_bps == 0`)
@@ -344,6 +348,8 @@ impl SimulatedNetwork {
             per_client_bits: vec![0; num_clients],
             total_bits: 0,
             round_bits: Vec::new(),
+            downlink_bits: 0,
+            round_downlink_bits: Vec::new(),
             spec,
             client_factor,
             rng: Rng::new(seed ^ 0x6E65_7477_6F72_6Bu64), // "network"
@@ -382,6 +388,25 @@ impl SimulatedNetwork {
             self.round_bits.push(0);
         }
         *self.round_bits.last_mut().unwrap() += bits;
+    }
+
+    /// Bits the client can physically push before the round deadline:
+    /// the whole packet when no deadline/time model caps it, otherwise
+    /// the prefix transmitted by the cutoff (with infinite bandwidth
+    /// everything leaves at t = 0).
+    fn bits_within_deadline(&self, bits: u64, secs: f64) -> u64 {
+        if self.spec.deadline_s <= 0.0 || secs <= self.spec.deadline_s {
+            return bits;
+        }
+        let payload_secs = secs - self.spec.base_latency_s;
+        if payload_secs > 0.0 {
+            let budget =
+                (self.spec.deadline_s - self.spec.base_latency_s).max(0.0);
+            let frac = (budget / payload_secs).clamp(0.0, 1.0);
+            (bits as f64 * frac) as u64
+        } else {
+            bits
+        }
     }
 
     /// Record one uplink transmission (accounting only, no faults);
@@ -430,8 +455,12 @@ impl SimulatedNetwork {
                 self.spec.loss
             };
             if p > 0.0 && self.rng.uniform() < p {
-                // the client transmitted; the drop is in flight
-                self.account(client, bits);
+                // the client transmitted; the drop is in flight — but
+                // with a time model + deadline it can never have pushed
+                // more than the deadline-capped prefix, so a lost
+                // packet pays at most what a straggler would
+                let paid = self.bits_within_deadline(bits, secs);
+                self.account(client, paid);
                 self.stats.lost += 1;
                 return Delivery::Lost;
             }
@@ -439,16 +468,7 @@ impl SimulatedNetwork {
 
         // 2. straggler deadline: pay only for the prefix sent in time
         if self.spec.deadline_s > 0.0 && secs > self.spec.deadline_s {
-            let payload_secs = secs - self.spec.base_latency_s;
-            let sent = if payload_secs > 0.0 {
-                let budget =
-                    (self.spec.deadline_s - self.spec.base_latency_s).max(0.0);
-                let frac = (budget / payload_secs).clamp(0.0, 1.0);
-                (bits as f64 * frac) as u64
-            } else {
-                // infinite bandwidth: everything left at t=0
-                bits
-            };
+            let sent = self.bits_within_deadline(bits, secs);
             self.account(client, sent);
             self.stats.straggled += 1;
             return Delivery::Straggled { secs: self.spec.deadline_s };
@@ -494,13 +514,43 @@ impl SimulatedNetwork {
         self.stats.decode_errors += 1;
     }
 
-    /// Mark the start of a round (opens a fresh round-bits bucket).
+    /// Charge a server→client broadcast of `bits_per_client` bits to
+    /// `clients` receivers on the downlink ledger — the adaptive
+    /// pipeline's codebook re-publications go through here, so reported
+    /// communication totals stay honest. Returns the total charged.
+    ///
+    /// The downlink is modeled as a loss-free control channel (codebook
+    /// updates are tiny and would be sent reliably in any deployment);
+    /// only the accounting matters here.
+    pub fn broadcast(&mut self, bits_per_client: u64, clients: usize) -> u64 {
+        let bits = bits_per_client * clients as u64;
+        self.downlink_bits += bits;
+        if self.round_downlink_bits.is_empty() {
+            self.round_downlink_bits.push(0);
+        }
+        *self.round_downlink_bits.last_mut().unwrap() += bits;
+        bits
+    }
+
+    /// Mark the start of a round (opens fresh round buckets on both
+    /// ledgers).
     pub fn begin_round(&mut self) {
         self.round_bits.push(0);
+        self.round_downlink_bits.push(0);
     }
 
     pub fn bits_this_round(&self) -> u64 {
         *self.round_bits.last().unwrap_or(&0)
+    }
+
+    /// Downlink bits charged this round (codebook broadcasts).
+    pub fn downlink_bits_this_round(&self) -> u64 {
+        *self.round_downlink_bits.last().unwrap_or(&0)
+    }
+
+    /// Cumulative server→client broadcast bits.
+    pub fn downlink_bits(&self) -> u64 {
+        self.downlink_bits
     }
 
     pub fn total_bits(&self) -> u64 {
@@ -560,6 +610,27 @@ mod tests {
         assert_eq!(n.bits_this_round(), expected0 + expected2);
         n.begin_round();
         assert_eq!(n.bits_this_round(), 0);
+    }
+
+    #[test]
+    fn downlink_ledger_is_separate_and_per_round() {
+        let mut n = SimulatedNetwork::new(4);
+        assert_eq!(n.downlink_bits(), 0);
+        n.begin_round();
+        n.transmit(&pkt(0, 1000));
+        // one 300-bit codebook published to all 4 clients
+        assert_eq!(n.broadcast(300, 4), 1200);
+        assert_eq!(n.downlink_bits(), 1200);
+        assert_eq!(n.downlink_bits_this_round(), 1200);
+        // downlink never leaks into the uplink ledger (Fig. 1's x-axis)
+        assert_eq!(n.total_bits(), pkt(0, 1000).total_bits());
+        n.begin_round();
+        assert_eq!(n.downlink_bits_this_round(), 0);
+        assert_eq!(n.downlink_bits(), 1200);
+        // a broadcast before any begin_round opens round 0 implicitly
+        let mut fresh = SimulatedNetwork::new(2);
+        fresh.broadcast(100, 2);
+        assert_eq!(fresh.downlink_bits_this_round(), 200);
     }
 
     #[test]
@@ -709,6 +780,38 @@ mod tests {
             Delivery::Delivered { .. } => {}
             other => panic!("fast packet {other:?}"),
         }
+    }
+
+    #[test]
+    fn lost_packets_pay_at_most_the_deadline_prefix() {
+        // loss + deadline + bandwidth: a packet the deadline would have
+        // cut cannot be charged full price just because the loss model
+        // fired first — the client physically pushed only the prefix
+        let spec = ChannelSpec {
+            uplink_bps: 1e3,
+            deadline_s: 1.0,
+            loss: 1.0,
+            ..ChannelSpec::ideal()
+        };
+        let mut n = SimulatedNetwork::with_spec(1, spec, 13);
+        n.begin_round();
+        let p = pkt(0, 10_000); // 10 s of transmit ≫ 1 s deadline
+        let full = p.total_bits();
+        match n.deliver(&p) {
+            Delivery::Lost => {}
+            other => panic!("loss=1.0 produced {other:?}"),
+        }
+        let paid = n.total_bits();
+        assert!(
+            paid > 0 && paid < full / 5,
+            "lost packet paid {paid} of {full}, beyond the 1 s prefix"
+        );
+        // without a deadline, lost packets still pay full price
+        let mut m =
+            SimulatedNetwork::with_spec(1, ChannelSpec::lossy(1.0), 13);
+        m.begin_round();
+        assert!(matches!(m.deliver(&p), Delivery::Lost));
+        assert_eq!(m.total_bits(), full);
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //! internally via Eigen).
 
 use crate::fl::client::{Client, ClientUpdate};
-use crate::fl::compression::Compressor;
+use crate::fl::compression::CompressionPipeline;
 use crate::model::Backend;
 use crate::util::Result;
 
@@ -42,20 +42,21 @@ pub fn select_clients<'a>(
         .collect()
 }
 
-/// Run the sampled clients serially.
+/// Run the sampled clients serially. The pipeline is shared immutably
+/// during the round; the coordinator adapts it *between* rounds.
 pub fn run_round_serial<B: Backend + ?Sized>(
     backend: &B,
     clients: &mut [&mut Client],
     params: &[f32],
     plan: &RoundPlan,
-    compressor: &Compressor,
+    pipeline: &CompressionPipeline,
 ) -> Result<Vec<ClientUpdate>> {
     clients
         .iter_mut()
         .map(|c| {
             c.round(
                 backend, params, plan.round, plan.local_iters, plan.lr,
-                plan.batch, compressor,
+                plan.batch, pipeline,
             )
         })
         .collect()
@@ -68,10 +69,10 @@ pub fn run_round<B: Backend + Sync + ?Sized>(
     clients: &mut [&mut Client],
     params: &[f32],
     plan: &RoundPlan,
-    compressor: &Compressor,
+    pipeline: &CompressionPipeline,
 ) -> Result<Vec<ClientUpdate>>
 where
-    Compressor: Sync,
+    CompressionPipeline: Sync,
 {
     let n = clients.len();
     let threads = if plan.threads == 0 {
@@ -81,7 +82,7 @@ where
     };
     let threads = threads.min(n.max(1));
     if !backend.supports_parallel() || threads <= 1 || n <= 1 {
-        return run_round_serial(backend, clients, params, plan, compressor);
+        return run_round_serial(backend, clients, params, plan, pipeline);
     }
     // Partition the &mut Client slice across scoped workers; order of the
     // returned updates matches the input order (stitched by partition).
@@ -96,7 +97,7 @@ where
                     .map(|c| {
                         c.round(
                             backend, params, plan.round, plan.local_iters,
-                            plan.lr, plan.batch, compressor,
+                            plan.lr, plan.batch, pipeline,
                         )
                     })
                     .collect::<Result<Vec<_>>>()
@@ -117,10 +118,13 @@ where
 mod tests {
     use super::*;
     use crate::data::{DatasetConfig, FederatedDataset};
-    use crate::fl::compression::{CompressionScheme, WireCoder};
+    use crate::fl::compression::{
+        CompressionScheme, RateTarget, WireCoder,
+    };
     use crate::model::native::NativeMlp;
 
-    fn setup(nclients: usize) -> (NativeMlp, Vec<Client>, Compressor) {
+    fn setup(nclients: usize) -> (NativeMlp, Vec<Client>, CompressionPipeline)
+    {
         let mut cfg = DatasetConfig::tiny();
         cfg.num_clients = nclients;
         let ds = FederatedDataset::build(&cfg);
@@ -130,9 +134,10 @@ mod tests {
             .enumerate()
             .map(|(i, s)| Client::new(i as u32, s.clone(), 1000 + i as u64))
             .collect();
-        let c = Compressor::design(
+        let c = CompressionPipeline::design(
             CompressionScheme::Lloyd { bits: 3 },
             WireCoder::Huffman,
+            RateTarget::Off,
         )
         .unwrap();
         (NativeMlp::tiny(), clients, c)

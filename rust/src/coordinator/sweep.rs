@@ -31,7 +31,7 @@ use crate::coordinator::network::ChannelSpec;
 use crate::data::FederatedDataset;
 use crate::fl::compression::{
     design_cache_stats, designed_codebook, CompressionScheme,
-    DesignCacheStats,
+    DesignCacheStats, RateTarget,
 };
 use crate::quant::codebook::Codebook;
 use crate::quant::rcq::LengthModel;
@@ -115,6 +115,10 @@ pub struct SweepGrid {
     /// × seed × scheme cell is replicated per channel, so loss/deadline
     /// scenario grids are first-class sweep dimensions
     pub channels: Vec<ChannelSpec>,
+    /// rate-target axis (empty ⇒ each base's own target, normally
+    /// `Off`): crosses every cell with each closed-loop target, so
+    /// target-rate curves are first-class sweep dimensions too
+    pub rate_targets: Vec<RateTarget>,
     /// sweep worker threads (0 ⇒ hardware)
     pub threads: usize,
     /// scheduler threads *inside* each cell. Defaults to 1: the sweep
@@ -130,6 +134,7 @@ impl SweepGrid {
             schemes: Vec::new(),
             seeds: Vec::new(),
             channels: Vec::new(),
+            rate_targets: Vec::new(),
             threads: 0,
             inner_threads: 1,
         }
@@ -211,6 +216,30 @@ impl SweepGrid {
         self
     }
 
+    /// Add one rate-target axis value.
+    pub fn rate_target(mut self, target: RateTarget) -> Self {
+        self.rate_targets.push(target);
+        self
+    }
+
+    /// Scenario axis over closed-loop rate targets (bits/coordinate),
+    /// all at one adaptation-window length. An explicit `Off` cell is
+    /// *not* added — chain `.rate_target(RateTarget::Off)` for the
+    /// static reference point.
+    pub fn rate_target_axis(
+        mut self,
+        targets: &[f64],
+        adapt_every: usize,
+    ) -> Self {
+        for &bits_per_coord in targets {
+            self.rate_targets.push(RateTarget::Track {
+                bits_per_coord,
+                adapt_every,
+            });
+        }
+        self
+    }
+
     /// Sweep worker threads (0 ⇒ hardware).
     pub fn threads(mut self, threads: usize) -> Self {
         self.threads = threads;
@@ -218,7 +247,8 @@ impl SweepGrid {
     }
 
     /// Expand the grid into per-cell configs with deterministic per-cell
-    /// seeds, in declaration order (bases → seeds → channels → schemes).
+    /// seeds, in declaration order (bases → seeds → channels →
+    /// rate targets → schemes).
     pub fn expand(&self) -> Vec<SweepCell> {
         let mut cells = Vec::new();
         for (base_index, base) in self.bases.iter().enumerate() {
@@ -232,23 +262,33 @@ impl SweepGrid {
             } else {
                 self.channels.clone()
             };
+            let rate_targets: Vec<RateTarget> = if self.rate_targets.is_empty()
+            {
+                vec![base.rate_target]
+            } else {
+                self.rate_targets.clone()
+            };
             for &seed in &seeds {
                 for &channel in &channels {
-                    for &scheme in &self.schemes {
-                        let mut config = base.clone();
-                        config.scheme = scheme;
-                        config.seed = seed;
-                        config.channel = channel;
-                        config.threads = self.inner_threads;
-                        cells.push(SweepCell {
-                            index: cells.len(),
-                            base_index,
-                            label: scheme.label(),
-                            dataset: base.dataset.kind.name(),
-                            seed,
-                            channel: channel.label(),
-                            config,
-                        });
+                    for &rate_target in &rate_targets {
+                        for &scheme in &self.schemes {
+                            let mut config = base.clone();
+                            config.scheme = scheme;
+                            config.seed = seed;
+                            config.channel = channel;
+                            config.rate_target = rate_target;
+                            config.threads = self.inner_threads;
+                            cells.push(SweepCell {
+                                index: cells.len(),
+                                base_index,
+                                label: scheme.label(),
+                                dataset: base.dataset.kind.name(),
+                                seed,
+                                channel: channel.label(),
+                                rate: rate_target.label(),
+                                config,
+                            });
+                        }
                     }
                 }
             }
@@ -269,6 +309,8 @@ pub struct SweepCell {
     pub seed: u64,
     /// channel-model label (`"ideal"` when no faults are configured)
     pub channel: String,
+    /// rate-target label (`"off"` for the static design)
+    pub rate: String,
     pub config: ExperimentConfig,
 }
 
@@ -279,6 +321,8 @@ pub struct SweepCellResult {
     pub dataset: &'static str,
     pub seed: u64,
     pub channel: String,
+    /// rate-target label (`"off"` for the static design)
+    pub rate: String,
     pub scheme: CompressionScheme,
     pub report: ExperimentReport,
 }
@@ -290,6 +334,7 @@ pub struct SweepCellFailure {
     pub dataset: &'static str,
     pub seed: u64,
     pub channel: String,
+    pub rate: String,
     pub error: String,
 }
 
@@ -334,20 +379,23 @@ pub fn run_sweep(grid: &SweepGrid) -> Result<SweepReport> {
                 dataset: cell.dataset,
                 seed: cell.seed,
                 channel: cell.channel,
+                rate: cell.rate,
                 scheme: cell.config.scheme,
                 report,
             }),
             Err(e) => {
                 crate::warn!(
-                    "sweep cell {} (dataset {}, seed {}, channel {}) \
-                     failed: {e}",
-                    cell.label, cell.dataset, cell.seed, cell.channel
+                    "sweep cell {} (dataset {}, seed {}, channel {}, \
+                     rate {}) failed: {e}",
+                    cell.label, cell.dataset, cell.seed, cell.channel,
+                    cell.rate
                 );
                 failures.push(SweepCellFailure {
                     label: cell.label,
                     dataset: cell.dataset,
                     seed: cell.seed,
                     channel: cell.channel,
+                    rate: cell.rate,
                     error: e.to_string(),
                 });
             }
@@ -401,6 +449,10 @@ impl SweepReport {
         };
         let multi_channel =
             distinct(self.cells.iter().map(|c| c.channel.as_str()).collect());
+        // rate columns appear as soon as any cell ran the closed loop —
+        // all-static grids keep the exact pre-pipeline schema bytes
+        let with_rate = self.cells.iter().any(|c| c.rate != "off")
+            || self.failures.iter().any(|f| f.rate != "off");
         let mut header: Vec<&str> = vec![Self::CSV_HEADER[0]];
         if multi_dataset {
             header.push("dataset");
@@ -411,7 +463,13 @@ impl SweepReport {
         if multi_channel {
             header.push("channel");
         }
+        if with_rate {
+            header.push("rate_target");
+        }
         header.extend_from_slice(&Self::CSV_HEADER[1..]);
+        if with_rate {
+            header.extend_from_slice(&["realized_bpc", "downlink_gigabits"]);
+        }
         let mut w = CsvWriter::create(path, &header)?;
         for c in &self.cells {
             let mut row = vec![CsvField::from(c.label.clone())];
@@ -424,10 +482,19 @@ impl SweepReport {
             if multi_channel {
                 row.push(CsvField::from(c.channel.clone()));
             }
+            if with_rate {
+                row.push(CsvField::from(c.rate.clone()));
+            }
             row.push(CsvField::from(c.report.final_accuracy));
             row.push(CsvField::from(c.report.best_accuracy));
             row.push(CsvField::from(c.report.uplink_gigabits()));
             row.push(CsvField::from(c.report.wall_secs));
+            if with_rate {
+                row.push(CsvField::from(c.report.realized_bpc()));
+                row.push(CsvField::from(
+                    c.report.downlink_bits as f64 / 1e9,
+                ));
+            }
             w.row(&row)?;
         }
         w.flush()
@@ -462,9 +529,12 @@ impl SweepReport {
         }
         // channel fields appear only when some cell ran a non-ideal
         // channel, keeping ideal-grid JSON byte-identical to the
-        // pre-channel schema
+        // pre-channel schema; rate fields likewise only when some cell
+        // ran the closed loop
         let with_channel = self.cells.iter().any(|c| c.channel != "ideal")
             || self.failures.iter().any(|f| f.channel != "ideal");
+        let with_rate = self.cells.iter().any(|c| c.rate != "off")
+            || self.failures.iter().any(|f| f.rate != "off");
         let cells: Vec<Json> = self
             .cells
             .iter()
@@ -474,6 +544,17 @@ impl SweepReport {
                     ("dataset", s(c.dataset)),
                     ("seed", num(c.seed as f64)),
                 ];
+                if with_rate {
+                    fields.push(("rate_target", s(&c.rate)));
+                    fields.push((
+                        "realized_bpc",
+                        num_or_null(c.report.realized_bpc()),
+                    ));
+                    fields.push((
+                        "downlink_bits",
+                        num(c.report.downlink_bits as f64),
+                    ));
+                }
                 if with_channel {
                     let st = &c.report.channel;
                     fields.push(("channel", s(&c.channel)));
@@ -511,6 +592,9 @@ impl SweepReport {
                     ("dataset", s(f.dataset)),
                     ("seed", num(f.seed as f64)),
                 ];
+                if with_rate {
+                    fields.push(("rate_target", s(&f.rate)));
+                }
                 if with_channel {
                     fields.push(("channel", s(&f.channel)));
                 }
@@ -733,6 +817,66 @@ mod tests {
         assert!(cells[0].get("channel").is_some());
         assert!(cells[1].get("survivors").is_some());
         std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn rate_target_axis_crosses_and_reports_gated_columns() {
+        use crate::fl::compression::RateTarget;
+        use crate::quant::rcq::LengthModel;
+        let rcfed = CompressionScheme::RcFed {
+            bits: 3,
+            lambda: 0.05,
+            length_model: LengthModel::Huffman,
+        };
+        let mut base = tiny_base();
+        base.rounds = 6;
+        let grid = SweepGrid::new(base)
+            .scheme(rcfed)
+            .rate_target(RateTarget::Off)
+            .rate_target_axis(&[2.2], 3);
+        let cells = grid.expand();
+        assert_eq!(cells.len(), 2); // off + one target
+        assert_eq!(cells[0].rate, "off");
+        assert_eq!(cells[1].rate, "rt2.2w3");
+        assert_eq!(
+            cells[1].config.rate_target,
+            RateTarget::Track { bits_per_coord: 2.2, adapt_every: 3 }
+        );
+        let mut grid = grid;
+        grid.threads = 1;
+        let report = run_sweep(&grid).unwrap();
+        assert_eq!(report.cells.len(), 2);
+        assert_eq!(report.cells[0].report.downlink_bits, 0);
+        assert!(report.cells[1].report.downlink_bits > 0);
+        let dir = std::env::temp_dir()
+            .join(format!("rcfed_sweep_rate_{}", std::process::id()));
+        let csv_path = dir.join("rate.csv");
+        let json_path = dir.join("rate.json");
+        report.write_csv(csv_path.to_str().unwrap()).unwrap();
+        report.write_json(json_path.to_str().unwrap()).unwrap();
+        let csv = std::fs::read_to_string(&csv_path).unwrap();
+        assert!(
+            csv.starts_with("scheme,rate_target,final_acc"),
+            "rate_target key column missing: {csv}"
+        );
+        assert!(
+            csv.lines().next().unwrap().ends_with(
+                "wall_secs,realized_bpc,downlink_gigabits"
+            ),
+            "rate metric columns missing: {csv}"
+        );
+        let json = std::fs::read_to_string(&json_path).unwrap();
+        let v = crate::util::json::Json::parse(&json).unwrap();
+        let jcells = v.req("cells").unwrap().as_arr().unwrap();
+        assert!(jcells[0].get("rate_target").is_some());
+        assert!(jcells[1].get("downlink_bits").is_some());
+        std::fs::remove_dir_all(dir).ok();
+        // a grid without the axis stays rate-free (no schema drift)
+        let mut plain = SweepGrid::new(tiny_base())
+            .scheme(CompressionScheme::Fp32);
+        plain.threads = 1;
+        let plain_report = run_sweep(&plain).unwrap();
+        assert_eq!(plain_report.cells[0].rate, "off");
     }
 
     #[test]

@@ -8,7 +8,7 @@
 //! covers). The effective gradient is what gets compressed.
 
 use crate::data::Shard;
-use crate::fl::compression::Compressor;
+use crate::fl::compression::CompressionPipeline;
 use crate::fl::packet::Packet;
 use crate::model::Backend;
 use crate::util::rng::Rng;
@@ -30,6 +30,9 @@ pub struct Client {
 pub struct ClientUpdate {
     pub packet: Packet,
     pub mean_loss: f32,
+    /// strided sample of the normalized effective gradient for the
+    /// pipeline's stats pass (empty when rate targeting is off)
+    pub sample: Vec<f32>,
 }
 
 impl Client {
@@ -46,7 +49,8 @@ impl Client {
     }
 
     /// Run `e` local iterations from `params` and return the compressed
-    /// effective gradient.
+    /// effective gradient (plus the pipeline's stats sample when rate
+    /// targeting is on — free otherwise).
     #[allow(clippy::too_many_arguments)]
     pub fn round<B: Backend + ?Sized>(
         &mut self,
@@ -56,7 +60,7 @@ impl Client {
         local_iters: usize,
         lr: f32,
         batch: usize,
-        compressor: &Compressor,
+        pipeline: &CompressionPipeline,
     ) -> Result<ClientUpdate> {
         let d = backend.num_params();
         self.grad.resize(d, 0.0);
@@ -83,10 +87,13 @@ impl Client {
             *g = (p0 - pl) * inv_lr;
         }
         let packet =
-            compressor.compress(self.id, round, &self.grad, &mut self.rng)?;
+            pipeline.compress(self.id, round, &self.grad, &mut self.rng)?;
+        // stats sample reuses the (μ, σ) the compressor just computed
+        let sample = pipeline.grad_sample_from(&self.grad, &packet);
         Ok(ClientUpdate {
             packet,
             mean_loss: (loss_acc / local_iters.max(1) as f64) as f32,
+            sample,
         })
     }
 
@@ -101,16 +108,19 @@ impl Client {
 mod tests {
     use super::*;
     use crate::data::{DatasetConfig, FederatedDataset};
-    use crate::fl::compression::{CompressionScheme, WireCoder};
+    use crate::fl::compression::{
+        CompressionScheme, RateTarget, WireCoder,
+    };
     use crate::model::native::NativeMlp;
     use crate::model::Backend;
 
-    fn setup() -> (NativeMlp, FederatedDataset, Compressor) {
+    fn setup() -> (NativeMlp, FederatedDataset, CompressionPipeline) {
         let ds = FederatedDataset::build(&DatasetConfig::tiny());
         let m = NativeMlp::tiny();
-        let c = Compressor::design(
+        let c = CompressionPipeline::design(
             CompressionScheme::Fp32,
             WireCoder::Huffman,
+            RateTarget::Off,
         )
         .unwrap();
         (m, ds, c)

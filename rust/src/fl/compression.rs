@@ -30,9 +30,10 @@ use crate::quant::qsgd::Qsgd;
 use crate::quant::rcq::{LengthModel, RateConstrainedQuantizer};
 use crate::quant::uniform::uniform_codebook;
 use crate::quant::DesignReport;
+use crate::stats::empirical::EmpiricalPdf;
 use crate::stats::entropy::entropy_bits;
 use crate::stats::gaussian::StdGaussian;
-use crate::stats::moments::mean_std;
+use crate::stats::moments::{mean_std, Welford};
 use crate::util::rng::Rng;
 use crate::util::{Error, Result};
 
@@ -137,6 +138,40 @@ enum DesignKey {
     Lloyd { bits: u32 },
     Nqfl { bits: u32 },
     Uniform { bits: u32, clip_q: i64 },
+    /// One adaptation window of the closed-loop pipeline: λ after the
+    /// dual-ascent step, the window ordinal, the quantized moments of
+    /// the window's sample set and a fingerprint of the warm-start
+    /// codebook. Unlike the universal keys the empirical design target
+    /// is not derivable from the key alone — it rides along into
+    /// [`designed_adaptive_codebook`] and is only consulted on a miss;
+    /// the moment + warm fingerprints make two cells that agree on the
+    /// whole key deterministic replays of the same run state (same
+    /// seed, same windows, same design inputs), so sharing one design
+    /// is sound even across concurrent sweep workers.
+    Adaptive {
+        bits: u32,
+        lambda_q: i64,
+        step: u32,
+        mean_q: i64,
+        std_q: i64,
+        count: u64,
+        warm_fp: u64,
+        huffman_lengths: bool,
+    },
+}
+
+/// Order-sensitive FNV-1a over a codebook's f32 bit patterns — a cheap
+/// fingerprint that distinguishes warm-start inputs inside
+/// [`DesignKey::Adaptive`], so two sweep cells whose controllers happen
+/// to agree on (λ, window, moments) but arrive with different previous
+/// codebooks cannot collide on one cache slot.
+fn codebook_fingerprint(cb: &Codebook) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for x in cb.levels.iter().chain(&cb.bounds) {
+        h ^= x.to_bits() as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
 }
 
 #[derive(Clone)]
@@ -253,6 +288,41 @@ fn closed_form_report(cb: Codebook) -> Result<(Codebook, DesignReport)> {
     Ok((cb, report))
 }
 
+/// Serve one design key from the process-wide cache, running `design`
+/// only on a miss. The map lock covers only slot lookup/creation, never
+/// the design itself: exactly one caller per key runs it; racers block
+/// on the slot and then read the finished value, so hit/miss counts are
+/// deterministic.
+fn cached_design<F>(
+    key: DesignKey,
+    design: F,
+) -> Result<(Codebook, DesignReport)>
+where
+    F: FnOnce() -> Result<(Codebook, DesignReport)>,
+{
+    let cache = DESIGN_CACHE.get_or_init(Default::default);
+    let slot: DesignSlot = {
+        let mut map = cache.lock().unwrap();
+        map.entry(key).or_default().clone()
+    };
+    let mut designed_here = false;
+    let value = slot.get_or_init(|| {
+        designed_here = true;
+        design()
+            .map(|(codebook, report)| CachedDesign { codebook, report })
+            .map_err(|e| e.to_string())
+    });
+    if designed_here {
+        CACHE_MISSES.fetch_add(1, Ordering::Relaxed);
+    } else {
+        CACHE_HITS.fetch_add(1, Ordering::Relaxed);
+    }
+    match value {
+        Ok(cached) => Ok((cached.codebook.clone(), cached.report.clone())),
+        Err(msg) => Err(Error::Quant(msg.clone())),
+    }
+}
+
 /// Designed codebook + report for a codebook-backed scheme, served from
 /// the process-wide design cache. Errors for QSGD/Fp32 (no codebook).
 ///
@@ -266,30 +336,43 @@ pub fn designed_codebook(
         return Err(Error::Quant(format!(
             "scheme {scheme:?} has no designed codebook")));
     };
-    let cache = DESIGN_CACHE.get_or_init(Default::default);
-    // the map lock covers only slot lookup/creation, never the design
-    let slot: DesignSlot = {
-        let mut map = cache.lock().unwrap();
-        map.entry(key).or_default().clone()
+    cached_design(key, || design_codebook_uncached(&scheme))
+}
+
+/// Designed codebook + report for one adaptation window of the
+/// [`CompressionPipeline`], served from the same process-wide cache
+/// under a [`DesignKey::Adaptive`] key.
+///
+/// `moments` are `(mean, std, count)` of the window's normalized sample
+/// set; `warm` seeds the alternation with the previous window's
+/// codebook (see [`RateConstrainedQuantizer::design_warm`]).
+pub(crate) fn designed_adaptive_codebook(
+    bits: u32,
+    lambda: f64,
+    length_model: LengthModel,
+    step: u32,
+    moments: (f64, f64, u64),
+    pdf: &EmpiricalPdf,
+    warm: Option<&Codebook>,
+) -> Result<(Codebook, DesignReport)> {
+    let key = DesignKey::Adaptive {
+        bits,
+        lambda_q: quantize_key_f64(lambda),
+        step,
+        mean_q: quantize_key_f64(moments.0),
+        std_q: quantize_key_f64(moments.1),
+        count: moments.2,
+        warm_fp: warm.map(codebook_fingerprint).unwrap_or(0),
+        huffman_lengths: length_model == LengthModel::Huffman,
     };
-    // exactly one caller per key runs the design; racers block here and
-    // then read the finished slot, so hit/miss counts are deterministic
-    let mut designed_here = false;
-    let value = slot.get_or_init(|| {
-        designed_here = true;
-        design_codebook_uncached(&scheme)
-            .map(|(codebook, report)| CachedDesign { codebook, report })
-            .map_err(|e| e.to_string())
-    });
-    if designed_here {
-        CACHE_MISSES.fetch_add(1, Ordering::Relaxed);
-    } else {
-        CACHE_HITS.fetch_add(1, Ordering::Relaxed);
-    }
-    match value {
-        Ok(cached) => Ok((cached.codebook.clone(), cached.report.clone())),
-        Err(msg) => Err(Error::Quant(msg.clone())),
-    }
+    cached_design(key, || {
+        let rc = RateConstrainedQuantizer {
+            lambda,
+            length_model,
+            ..Default::default()
+        };
+        rc.design_warm(pdf, bits, warm)
+    })
 }
 
 /// A ready-to-use compressor (design done once at construction — the
@@ -452,7 +535,7 @@ impl Compressor {
                 "accumulator {} != packet d {d}", acc.len())));
         }
         match &self.kernel {
-            Kernel::Codebook { codebook, huffman, arith } => {
+            Kernel::Codebook { .. } => {
                 // (μ, σ) side info — a corrupted packet can carry any
                 // count or value, so validate before touching it
                 if packet.side_info.len() != 2 {
@@ -463,15 +546,7 @@ impl Compressor {
                     )));
                 }
                 let (mu, sigma) = (packet.side_info[0], packet.side_info[1]);
-                if !mu.is_finite() || !sigma.is_finite() {
-                    return Err(Error::Coding(format!(
-                        "non-finite side info (μ={mu}, σ={sigma})")));
-                }
-                let symbols = match self.wire {
-                    WireCoder::Huffman => huffman.decode(&packet.payload, d)?,
-                    WireCoder::Arithmetic => arith.decode(&packet.payload, d)?,
-                };
-                codebook.dequantize_accumulate(&symbols, mu, sigma, acc);
+                self.decode_codebook_accumulate(packet, mu, sigma, acc)?;
             }
             Kernel::Qsgd(q) => {
                 // read the code-length table from the payload head, then
@@ -526,6 +601,466 @@ impl Compressor {
         Ok(())
     }
 
+    /// Decode a codebook-scheme payload and accumulate with the given
+    /// (μ, σ) — shared by the static 2-word side-info path above and the
+    /// pipeline's versioned 3-word path (which validates and strips the
+    /// version before delegating here, without cloning the payload).
+    fn decode_codebook_accumulate(
+        &self,
+        packet: &Packet,
+        mu: f32,
+        sigma: f32,
+        acc: &mut [f32],
+    ) -> Result<()> {
+        let d = packet.d as usize;
+        if acc.len() != d {
+            return Err(Error::Coding(format!(
+                "accumulator {} != packet d {d}", acc.len())));
+        }
+        let Kernel::Codebook { codebook, huffman, arith } = &self.kernel
+        else {
+            return Err(Error::Coding(format!(
+                "scheme {:?} is not codebook-backed", self.scheme)));
+        };
+        if !mu.is_finite() || !sigma.is_finite() {
+            return Err(Error::Coding(format!(
+                "non-finite side info (μ={mu}, σ={sigma})")));
+        }
+        let symbols = match self.wire {
+            WireCoder::Huffman => huffman.decode(&packet.payload, d)?,
+            WireCoder::Arithmetic => arith.decode(&packet.payload, d)?,
+        };
+        codebook.dequantize_accumulate(&symbols, mu, sigma, acc);
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Closed-loop pipeline: rate-targeted, per-round codebook control
+// ---------------------------------------------------------------------
+
+/// Rate-target configuration for the closed-loop pipeline.
+///
+/// `Off` (the default) reproduces the static §3.1 behavior exactly: one
+/// codebook designed against N(0,1) before round 0, no stats pass, no
+/// extra side information, no downlink traffic, no random draw — runs
+/// are byte-identical to the pre-pipeline code path.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum RateTarget {
+    /// static design; nothing adapts
+    #[default]
+    Off,
+    /// Closed-loop control (the constrained form (5) solved online):
+    /// dual ascent on λ every `adapt_every` rounds drives the *measured*
+    /// uplink bits/coordinate — ledger bits over transmitted
+    /// coordinates, headers, side info and tables included — toward
+    /// `bits_per_coord`.
+    Track {
+        /// target uplink bits per gradient coordinate
+        bits_per_coord: f64,
+        /// adaptation window length in rounds
+        adapt_every: usize,
+    },
+}
+
+impl RateTarget {
+    pub fn is_on(&self) -> bool {
+        !matches!(self, RateTarget::Off)
+    }
+
+    /// Stable row-key label for CSVs, `"off"` when disabled.
+    pub fn label(&self) -> String {
+        match *self {
+            RateTarget::Off => "off".into(),
+            RateTarget::Track { bits_per_coord, adapt_every } => {
+                format!("rt{bits_per_coord}w{adapt_every}")
+            }
+        }
+    }
+
+    /// Reject nonsensical targets and unsupported schemes up front, so a
+    /// bad configuration is a config error, not a silent no-op.
+    pub fn validate(&self, scheme: &CompressionScheme) -> Result<()> {
+        let RateTarget::Track { bits_per_coord, adapt_every } = *self else {
+            return Ok(());
+        };
+        if !(bits_per_coord > 0.0 && bits_per_coord.is_finite()) {
+            return Err(Error::Config(format!(
+                "rate target {bits_per_coord} must be finite and > 0")));
+        }
+        if adapt_every == 0 {
+            return Err(Error::Config(
+                "rate target needs adapt-every >= 1".into()));
+        }
+        match scheme {
+            CompressionScheme::RcFed { .. } => Ok(()),
+            other => Err(Error::Config(format!(
+                "rate targeting requires the rcfed scheme (λ is the \
+                 control variable); got {other:?}"))),
+        }
+    }
+}
+
+/// Dual-ascent step schedule: sign-adaptive — grow while the rate error
+/// keeps one sign (λ still marching toward the crossing), halve on a
+/// flip (bracketing the crossing).
+const STEP_INIT: f64 = 0.02;
+const STEP_GROW: f64 = 1.5;
+const STEP_SHRINK: f64 = 0.5;
+const STEP_MIN: f64 = 1e-3;
+const STEP_MAX: f64 = 0.25;
+/// Cap on buffered normalized samples per adaptation window.
+const MAX_WINDOW_SAMPLES: usize = 65_536;
+/// Per-update budget of the client-side stats pass.
+const SAMPLES_PER_UPDATE: usize = 2048;
+
+/// Wire cost of publishing one codebook version to one client: `2^b`
+/// levels + `2^b − 1` boundaries at f32, the version tag, the new
+/// multiplier, and the canonical code-length table clients need to
+/// entropy-encode against the new codebook (5 bits per symbol,
+/// byte-padded — the same format QSGD's travelling table uses; the
+/// empirical cell probabilities are not derivable from levels/bounds
+/// alone, so the table is genuine traffic).
+fn codebook_broadcast_bits(cb: &Codebook) -> u64 {
+    let n = cb.levels.len() as u64;
+    let table_bits = (5 * n).div_ceil(8) * 8;
+    32 * (n + cb.bounds.len() as u64) + 32 + 32 + table_bits
+}
+
+/// Closed-loop compression pipeline — the stateful replacement for
+/// threading a static [`Compressor`] through the round loop.
+///
+/// With [`RateTarget::Off`] it is a transparent wrapper: `compress` and
+/// `decompress_accumulate` delegate to the inner static compressor and
+/// every adaptive entry point is a no-op. With [`RateTarget::Track`] it
+/// closes the loop the paper leaves open (§3.1 designs once, before
+/// training; Mitchell et al. 2022 show the gradient distribution drifts
+/// over training):
+///
+/// 1. each round, clients hand back a strided sample of their
+///    *normalized* gradient coordinates ([`Self::grad_sample`] →
+///    [`Self::observe_samples`]; only samples from packets the server
+///    actually ingested count) and the round layer reports the uplink
+///    ledger's measured bits ([`Self::observe_round`]).
+///    **Accounting policy:** the stats subsample (≤ 2048 coords/update)
+///    is control-plane metadata piggybacked on the uplink and is *not*
+///    charged to the gradient bit ledger — the same modeling choice as
+///    the uncharged θ broadcast (the ledger is Fig. 1's gradient-uplink
+///    x-axis, not a full traffic model); at paper-scale `d` the sample
+///    is orders of magnitude below the payload it steers;
+/// 2. at each window end ([`Self::end_round`]) dual ascent moves λ by
+///    the measured bits/coordinate error against the target, and the
+///    RC-FED codebook is re-designed against an [`EmpiricalPdf`] of the
+///    window's samples — warm-started from the previous codebook and
+///    served through the process-wide design cache;
+/// 3. the new codebook is versioned: uplink packets carry the version
+///    as a third side-info word (32 bits, honestly charged) and stale
+///    versions are rejected on decode; the publish cost is returned to
+///    the caller, which charges it to the downlink ledger.
+pub struct CompressionPipeline {
+    compressor: Compressor,
+    target: RateTarget,
+    adaptive: bool,
+    version: u32,
+    lambda: f64,
+    /// windows adapted so far (part of the design-cache key)
+    adapt_step: u32,
+    step: f64,
+    prev_err: f64,
+    window_bits: u64,
+    window_coords: u64,
+    samples: Vec<f32>,
+    moments: Welford,
+    last_realized: f64,
+}
+
+impl CompressionPipeline {
+    /// Design the initial compressor and wire the controller. `target`
+    /// other than `Off` requires the RC-FED scheme (checked).
+    pub fn design(
+        scheme: CompressionScheme,
+        wire: WireCoder,
+        target: RateTarget,
+    ) -> Result<CompressionPipeline> {
+        target.validate(&scheme)?;
+        let lambda = match scheme {
+            CompressionScheme::RcFed { lambda, .. } => lambda,
+            _ => 0.0,
+        };
+        Ok(CompressionPipeline {
+            compressor: Compressor::design(scheme, wire)?,
+            target,
+            adaptive: target.is_on(),
+            version: 0,
+            lambda,
+            adapt_step: 0,
+            step: STEP_INIT,
+            prev_err: f64::NAN,
+            window_bits: 0,
+            window_coords: 0,
+            samples: Vec::new(),
+            moments: Welford::default(),
+            last_realized: f64::NAN,
+        })
+    }
+
+    /// Wrap an already-designed static compressor ([`RateTarget::Off`]).
+    pub fn from_compressor(compressor: Compressor) -> CompressionPipeline {
+        CompressionPipeline {
+            compressor,
+            target: RateTarget::Off,
+            adaptive: false,
+            version: 0,
+            lambda: 0.0,
+            adapt_step: 0,
+            step: STEP_INIT,
+            prev_err: f64::NAN,
+            window_bits: 0,
+            window_coords: 0,
+            samples: Vec::new(),
+            moments: Welford::default(),
+            last_realized: f64::NAN,
+        }
+    }
+
+    pub fn is_adaptive(&self) -> bool {
+        self.adaptive
+    }
+
+    pub fn target(&self) -> RateTarget {
+        self.target
+    }
+
+    /// Current multiplier (the initial λ until the first window closes).
+    pub fn lambda(&self) -> f64 {
+        self.lambda
+    }
+
+    /// Current codebook version (bumped on every redesign).
+    pub fn version(&self) -> u32 {
+        self.version
+    }
+
+    /// Measured uplink bits/coordinate of the last closed window (NaN
+    /// before the first window closes).
+    pub fn last_realized(&self) -> f64 {
+        self.last_realized
+    }
+
+    /// The inner compressor (design diagnostics, codebook access).
+    pub fn compressor(&self) -> &Compressor {
+        &self.compressor
+    }
+
+    /// Compress a flat gradient. Adaptive packets carry the codebook
+    /// version as one extra side-info word (exact as f32 for any
+    /// realistic version count); `Off` packets are byte-identical to the
+    /// static compressor's.
+    pub fn compress(
+        &self,
+        client_id: u32,
+        round: u32,
+        grad: &[f32],
+        rng: &mut Rng,
+    ) -> Result<Packet> {
+        let mut pkt = self.compressor.compress(client_id, round, grad, rng)?;
+        if self.adaptive {
+            pkt.side_info.push(self.version as f32);
+        }
+        Ok(pkt)
+    }
+
+    /// Client-side stats pass: a deterministic strided subsample of the
+    /// *normalized* gradient coordinates (what the quantizer actually
+    /// sees). Empty — and free — when the pipeline is not adaptive.
+    pub fn grad_sample(&self, grad: &[f32]) -> Vec<f32> {
+        if !self.adaptive || grad.is_empty() {
+            return Vec::new();
+        }
+        let (mu, sigma) = mean_std(grad);
+        self.sample_with(grad, mu, sigma)
+    }
+
+    /// Like [`Self::grad_sample`], but reusing the (μ, σ) the
+    /// compressor already wrote into `packet`'s side info — the client
+    /// hot path calls this to avoid a second O(d) moments pass over the
+    /// gradient it just compressed.
+    pub fn grad_sample_from(&self, grad: &[f32], packet: &Packet) -> Vec<f32> {
+        if !self.adaptive || grad.is_empty() || packet.side_info.len() < 2 {
+            return Vec::new();
+        }
+        self.sample_with(grad, packet.side_info[0], packet.side_info[1])
+    }
+
+    fn sample_with(&self, grad: &[f32], mu: f32, sigma: f32) -> Vec<f32> {
+        let s = sigma.max(crate::quant::codebook::SIGMA_FLOOR);
+        let stride = grad.len().div_ceil(SAMPLES_PER_UPDATE).max(1);
+        grad.iter().step_by(stride).map(|&g| (g - mu) / s).collect()
+    }
+
+    /// Fold one update's normalized sample into the window accumulator.
+    pub fn observe_samples(&mut self, sample: &[f32]) {
+        if !self.adaptive {
+            return;
+        }
+        for &z in sample {
+            if !z.is_finite() {
+                continue;
+            }
+            self.moments.push(z as f64);
+            if self.samples.len() < MAX_WINDOW_SAMPLES {
+                self.samples.push(z);
+            }
+        }
+    }
+
+    /// Report one round's uplink-ledger movement: `bits` as actually
+    /// charged by [`crate::coordinator::network::SimulatedNetwork`]
+    /// (headers, side info, tables, partial straggler prefixes — the
+    /// measured rate, not the design-time estimate), over `coords`
+    /// transmitted gradient coordinates.
+    pub fn observe_round(&mut self, bits: u64, coords: u64) {
+        if !self.adaptive {
+            return;
+        }
+        self.window_bits += bits;
+        self.window_coords += coords;
+    }
+
+    /// Close round `round` (0-based). On an adaptation-window boundary:
+    /// dual ascent on λ, empirical redesign, version bump. Returns the
+    /// per-client broadcast cost of the new codebook when one was
+    /// published, for the caller to charge to the downlink ledger.
+    pub fn end_round(&mut self, round: usize) -> Result<Option<u64>> {
+        let RateTarget::Track { bits_per_coord, adapt_every } = self.target
+        else {
+            return Ok(None);
+        };
+        if (round + 1) % adapt_every != 0 {
+            return Ok(None);
+        }
+        if self.window_coords == 0 || self.samples.is_empty() {
+            // nothing transmitted this window (e.g. a channel blackout):
+            // hold λ and keep accumulating into the next window
+            return Ok(None);
+        }
+        let realized = self.window_bits as f64 / self.window_coords as f64;
+        self.last_realized = realized;
+        // dual ascent on the rate constraint: λ ← [λ + η·(R − R*)]₊
+        let err = realized - bits_per_coord;
+        if self.prev_err.is_finite() {
+            self.step *= if err.signum() == self.prev_err.signum() {
+                STEP_GROW
+            } else {
+                STEP_SHRINK
+            };
+            self.step = self.step.clamp(STEP_MIN, STEP_MAX);
+        }
+        self.prev_err = err;
+        self.lambda = (self.lambda + self.step * err).max(0.0);
+
+        // re-design against the window's empirical pdf, warm-started
+        // from the codebook currently on the wire
+        let CompressionScheme::RcFed { bits, length_model, .. } =
+            self.compressor.scheme
+        else {
+            return Err(Error::Config(
+                "adaptive pipeline without an rcfed scheme".into()));
+        };
+        let samples = std::mem::take(&mut self.samples);
+        let moments = (
+            self.moments.mean(),
+            self.moments.stddev(),
+            self.moments.count(),
+        );
+        let pdf = EmpiricalPdf::from_samples(&samples);
+        self.adapt_step += 1;
+        let warm = self.compressor.codebook().cloned();
+        let (cb, rep) = designed_adaptive_codebook(
+            bits,
+            self.lambda,
+            length_model,
+            self.adapt_step,
+            moments,
+            &pdf,
+            warm.as_ref(),
+        )?;
+        let huffman = HuffmanCode::from_probs(&rep.probs)?;
+        let arith = ArithmeticCoder::from_probs(&rep.probs)?;
+        let broadcast = codebook_broadcast_bits(&cb);
+        self.compressor.kernel =
+            Kernel::Codebook { codebook: cb, huffman, arith };
+        self.compressor.design_mse = Some(rep.mse);
+        self.compressor.design_rate = Some(rep.huffman_rate);
+        self.version += 1;
+        self.window_bits = 0;
+        self.window_coords = 0;
+        self.moments = Welford::default();
+        Ok(Some(broadcast))
+    }
+
+    /// PS side: decode and accumulate. Adaptive packets must carry the
+    /// *current* codebook version — a stale packet decoded against a
+    /// newer codebook would silently reconstruct garbage, so it is
+    /// rejected as a recoverable `Err` instead.
+    pub fn decompress_accumulate(
+        &self,
+        packet: &Packet,
+        acc: &mut [f32],
+    ) -> Result<()> {
+        if !self.adaptive {
+            return self.compressor.decompress_accumulate(packet, acc);
+        }
+        if packet.side_info.len() != 3 {
+            return Err(Error::Coding(format!(
+                "versioned packet carries {} side-info values, expected \
+                 3 (μ, σ, version)",
+                packet.side_info.len()
+            )));
+        }
+        let (mu, sigma) = (packet.side_info[0], packet.side_info[1]);
+        let ver = packet.side_info[2];
+        if !(ver.is_finite() && ver >= 0.0 && ver.fract() == 0.0) {
+            return Err(Error::Coding(format!(
+                "malformed codebook version {ver}")));
+        }
+        if ver as u32 != self.version {
+            return Err(Error::Coding(format!(
+                "stale codebook version {ver} (current {})", self.version)));
+        }
+        self.compressor.decode_codebook_accumulate(packet, mu, sigma, acc)
+    }
+}
+
+/// PS-side decoding interface: the server is generic over this, so both
+/// the static [`Compressor`] (tests, direct harnesses) and the
+/// closed-loop [`CompressionPipeline`] (the round loop) can feed it.
+pub trait PacketDecoder {
+    fn decompress_accumulate(
+        &self,
+        packet: &Packet,
+        acc: &mut [f32],
+    ) -> Result<()>;
+}
+
+impl PacketDecoder for Compressor {
+    fn decompress_accumulate(
+        &self,
+        packet: &Packet,
+        acc: &mut [f32],
+    ) -> Result<()> {
+        Compressor::decompress_accumulate(self, packet, acc)
+    }
+}
+
+impl PacketDecoder for CompressionPipeline {
+    fn decompress_accumulate(
+        &self,
+        packet: &Packet,
+        acc: &mut [f32],
+    ) -> Result<()> {
+        CompressionPipeline::decompress_accumulate(self, packet, acc)
+    }
 }
 
 #[cfg(test)]
@@ -775,5 +1310,196 @@ mod tests {
             "rcfed_b3_l0.050"
         );
         assert_eq!(CompressionScheme::Qsgd { bits: 6 }.label(), "qsgd_b6");
+        assert_eq!(RateTarget::Off.label(), "off");
+        assert_eq!(
+            RateTarget::Track { bits_per_coord: 2.5, adapt_every: 4 }.label(),
+            "rt2.5w4"
+        );
+    }
+
+    fn rcfed_scheme() -> CompressionScheme {
+        CompressionScheme::RcFed {
+            bits: 3,
+            lambda: 0.05,
+            length_model: LengthModel::Huffman,
+        }
+    }
+
+    #[test]
+    fn off_pipeline_is_bit_identical_to_static_compressor() {
+        // the acceptance bar: RateTarget::Off must reproduce the static
+        // Compressor packet for packet, byte for byte
+        for scheme in [
+            rcfed_scheme(),
+            CompressionScheme::Lloyd { bits: 3 },
+            CompressionScheme::Qsgd { bits: 3 },
+            CompressionScheme::Fp32,
+        ] {
+            let stat =
+                Compressor::design(scheme, WireCoder::Huffman).unwrap();
+            let pipe = CompressionPipeline::design(
+                scheme, WireCoder::Huffman, RateTarget::Off)
+            .unwrap();
+            assert!(!pipe.is_adaptive());
+            let g = gaussian_grad(4096, 0.01, 0.02, 71);
+            // QSGD draws randomness: identical seeds on both sides
+            let mut r1 = Rng::new(72);
+            let mut r2 = Rng::new(72);
+            let p1 = stat.compress(1, 5, &g, &mut r1).unwrap();
+            let p2 = pipe.compress(1, 5, &g, &mut r2).unwrap();
+            assert_eq!(p1.to_bytes(), p2.to_bytes(), "{scheme:?}");
+            assert_eq!(p1.total_bits(), p2.total_bits());
+            // the stats pass is skipped entirely
+            assert!(pipe.grad_sample(&g).is_empty());
+            let mut a1 = vec![0f32; g.len()];
+            let mut a2 = vec![0f32; g.len()];
+            stat.decompress_accumulate(&p1, &mut a1).unwrap();
+            pipe.decompress_accumulate(&p2, &mut a2).unwrap();
+            assert_eq!(a1, a2);
+        }
+    }
+
+    #[test]
+    fn rate_target_validation() {
+        let track = RateTarget::Track { bits_per_coord: 2.0, adapt_every: 4 };
+        assert!(track.validate(&rcfed_scheme()).is_ok());
+        assert!(track
+            .validate(&CompressionScheme::Lloyd { bits: 3 })
+            .is_err());
+        assert!(RateTarget::Track { bits_per_coord: 0.0, adapt_every: 4 }
+            .validate(&rcfed_scheme())
+            .is_err());
+        assert!(RateTarget::Track { bits_per_coord: 2.0, adapt_every: 0 }
+            .validate(&rcfed_scheme())
+            .is_err());
+        assert!(RateTarget::Off
+            .validate(&CompressionScheme::Fp32)
+            .is_ok());
+        assert!(CompressionPipeline::design(
+            CompressionScheme::Fp32,
+            WireCoder::Huffman,
+            track
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn adaptive_packets_carry_version_and_reject_stale() {
+        let target = RateTarget::Track { bits_per_coord: 2.0, adapt_every: 1 };
+        let mut pipe = CompressionPipeline::design(
+            rcfed_scheme(), WireCoder::Huffman, target)
+        .unwrap();
+        let g = gaussian_grad(8192, 0.0, 0.5, 73);
+        let mut rng = Rng::new(74);
+        let v0 = pipe.compress(0, 0, &g, &mut rng).unwrap();
+        assert_eq!(v0.side_info.len(), 3, "version word missing");
+        assert_eq!(v0.side_info[2], 0.0);
+        let mut acc = vec![0f32; g.len()];
+        pipe.decompress_accumulate(&v0, &mut acc).unwrap();
+        // drive one adaptation window by hand: samples + ledger movement
+        let sample = pipe.grad_sample(&g);
+        assert!(!sample.is_empty());
+        // the hot-path variant reuses the packet's (μ, σ) bit-for-bit
+        assert_eq!(sample, pipe.grad_sample_from(&g, &v0));
+        pipe.observe_samples(&sample);
+        pipe.observe_round(v0.total_bits(), v0.d as u64);
+        let broadcast = pipe.end_round(0).unwrap();
+        assert!(broadcast.unwrap() > 0, "redesign must cost downlink bits");
+        assert_eq!(pipe.version(), 1);
+        // the old packet is now stale and must be rejected, not decoded
+        let err = pipe.decompress_accumulate(&v0, &mut acc);
+        assert!(err.is_err(), "stale version accepted");
+        // fresh packets carry — and pass — the new version
+        let v1 = pipe.compress(0, 1, &g, &mut rng).unwrap();
+        assert_eq!(v1.side_info[2], 1.0);
+        pipe.decompress_accumulate(&v1, &mut acc).unwrap();
+    }
+
+    #[test]
+    fn dual_ascent_moves_lambda_toward_the_target() {
+        // realized ≫ target must raise λ (cheaper codebook); a later
+        // window with realized ≪ target must lower it again
+        let target = RateTarget::Track { bits_per_coord: 2.0, adapt_every: 1 };
+        let mut pipe = CompressionPipeline::design(
+            rcfed_scheme(), WireCoder::Huffman, target)
+        .unwrap();
+        let g = gaussian_grad(16_384, 0.0, 1.0, 75);
+        let sample = pipe.grad_sample(&g);
+        let lam0 = pipe.lambda();
+        pipe.observe_samples(&sample);
+        pipe.observe_round(4 * 16_384, 16_384); // 4 bits/coord measured
+        pipe.end_round(0).unwrap();
+        assert!((pipe.last_realized() - 4.0).abs() < 1e-9);
+        let lam1 = pipe.lambda();
+        assert!(lam1 > lam0, "λ must rise: {lam0} -> {lam1}");
+        pipe.observe_samples(&sample);
+        pipe.observe_round(16_384 / 2, 16_384); // 0.5 bits/coord measured
+        pipe.end_round(1).unwrap();
+        assert!(pipe.lambda() < lam1, "λ must fall: {lam1} -> {}",
+                pipe.lambda());
+        // λ is a Lagrange multiplier: never negative
+        for round in 2..30 {
+            pipe.observe_samples(&sample);
+            pipe.observe_round(1, 16_384);
+            pipe.end_round(round).unwrap();
+            assert!(pipe.lambda() >= 0.0);
+        }
+    }
+
+    #[test]
+    fn all_constant_gradient_yields_decodable_packets() {
+        // regression (σ = 0 side-info path): `compress` normalizes by
+        // mean_std(grad); an all-constant gradient has σ = 0 and must
+        // still produce a finite, parse-able, decodable packet — for
+        // every scheme and for the versioned pipeline path
+        for scheme in [
+            rcfed_scheme(),
+            CompressionScheme::Lloyd { bits: 3 },
+            CompressionScheme::Nqfl { bits: 3 },
+            CompressionScheme::Qsgd { bits: 3 },
+            CompressionScheme::Uniform { bits: 3, clip: 4.0 },
+            CompressionScheme::Fp32,
+        ] {
+            for value in [0.0f32, 0.25, -3.5] {
+                let g = vec![value; 600];
+                let c =
+                    Compressor::design(scheme, WireCoder::Huffman).unwrap();
+                let mut rng = Rng::new(76);
+                let pkt = c.compress(0, 0, &g, &mut rng).unwrap();
+                assert!(
+                    pkt.side_info.iter().all(|x| x.is_finite()),
+                    "{scheme:?} value {value}: non-finite side info"
+                );
+                // through the real wire bytes
+                let parsed = Packet::parse(&pkt.to_bytes()).unwrap();
+                let mut acc = vec![0f32; g.len()];
+                c.decompress_accumulate(&parsed, &mut acc).unwrap();
+                assert!(
+                    acc.iter().all(|x| x.is_finite()),
+                    "{scheme:?} value {value}: NaN reconstruction"
+                );
+                // for the normalize-by-σ schemes, σ = 0 means every
+                // coordinate reconstructs to ≈ μ = value (exactly for
+                // fp32); QSGD is only unbiased, not exact, so it is
+                // covered by the finiteness assertions above
+                if !matches!(scheme, CompressionScheme::Qsgd { .. }) {
+                    for &x in &acc {
+                        assert!(
+                            (x - value).abs() < 1e-3,
+                            "{scheme:?}: {x} vs {value}"
+                        );
+                    }
+                }
+            }
+        }
+        // the adaptive stats pass must not divide by zero either
+        let pipe = CompressionPipeline::design(
+            rcfed_scheme(),
+            WireCoder::Huffman,
+            RateTarget::Track { bits_per_coord: 2.0, adapt_every: 1 },
+        )
+        .unwrap();
+        let sample = pipe.grad_sample(&[1.5f32; 300]);
+        assert!(sample.iter().all(|z| z.is_finite()));
     }
 }

@@ -20,11 +20,26 @@ pub struct RoundMetrics {
     pub wall_secs: f64,
 }
 
+/// One round of the adaptive pipeline's controller trace. Only recorded
+/// when rate targeting is on, so static runs carry — and emit — nothing.
+#[derive(Clone, Copy, Debug)]
+pub struct RateTraceRow {
+    /// multiplier λ in force during the round
+    pub lambda: f64,
+    /// measured uplink bits/coordinate of the last closed adaptation
+    /// window (NaN until the first window closes)
+    pub realized_bpc: f64,
+    /// downlink bits charged this round (codebook broadcasts)
+    pub bits_down: u64,
+}
+
 /// Accumulates the experiment's metric history and bit ledger.
 #[derive(Debug, Default)]
 pub struct MetricsLog {
     pub rounds: Vec<RoundMetrics>,
     bits_cum: u64,
+    bits_down_cum: u64,
+    rate: Vec<RateTraceRow>,
 }
 
 impl MetricsLog {
@@ -51,8 +66,28 @@ impl MetricsLog {
         });
     }
 
+    /// Record the controller trace for the round just pushed. Call once
+    /// per round, after [`push`](Self::push), only on adaptive runs —
+    /// the CSV schema grows the rate columns exactly when every round
+    /// has a trace row.
+    pub fn push_rate(&mut self, lambda: f64, realized_bpc: f64, bits_down: u64) {
+        self.bits_down_cum += bits_down;
+        self.rate.push(RateTraceRow { lambda, realized_bpc, bits_down });
+    }
+
+    /// Per-round controller trace (empty on static runs).
+    pub fn rate_trace(&self) -> &[RateTraceRow] {
+        &self.rate
+    }
+
     pub fn total_bits(&self) -> u64 {
         self.bits_cum
+    }
+
+    /// Cumulative downlink (codebook-broadcast) bits; zero on static
+    /// runs.
+    pub fn total_downlink_bits(&self) -> u64 {
+        self.bits_down_cum
     }
 
     pub fn total_gigabits(&self) -> f64 {
@@ -78,24 +113,50 @@ impl MetricsLog {
             .fold(f64::NAN, f64::max)
     }
 
-    /// Append all rounds to a CSV (schema: see header below).
+    /// Append all rounds to a CSV. The base schema is unchanged from the
+    /// static path; the controller columns (`lambda`, `realized_bpc`,
+    /// `bits_down`) appear only when a rate trace was recorded for every
+    /// round, so static-run CSVs stay byte-identical.
     pub fn write_csv(&self, path: &str, label: &str) -> Result<()> {
-        let mut w = CsvWriter::create(
-            path,
-            &["scheme", "round", "train_loss", "test_acc", "bits_up",
-              "bits_cum", "wall_secs"],
-        )?;
-        for r in &self.rounds {
-            crate::csv_row!(
-                w,
-                label,
-                r.round,
-                r.train_loss as f64,
-                r.test_accuracy,
-                r.bits_up,
-                r.bits_cum,
-                r.wall_secs
-            )?;
+        let with_rate =
+            !self.rate.is_empty() && self.rate.len() == self.rounds.len();
+        let mut header = vec![
+            "scheme", "round", "train_loss", "test_acc", "bits_up",
+            "bits_cum", "wall_secs",
+        ];
+        if with_rate {
+            header.extend_from_slice(&["lambda", "realized_bpc",
+                                       "bits_down"]);
+        }
+        let mut w = CsvWriter::create(path, &header)?;
+        for (i, r) in self.rounds.iter().enumerate() {
+            if with_rate {
+                let t = &self.rate[i];
+                crate::csv_row!(
+                    w,
+                    label,
+                    r.round,
+                    r.train_loss as f64,
+                    r.test_accuracy,
+                    r.bits_up,
+                    r.bits_cum,
+                    r.wall_secs,
+                    t.lambda,
+                    t.realized_bpc,
+                    t.bits_down
+                )?;
+            } else {
+                crate::csv_row!(
+                    w,
+                    label,
+                    r.round,
+                    r.train_loss as f64,
+                    r.test_accuracy,
+                    r.bits_up,
+                    r.bits_cum,
+                    r.wall_secs
+                )?;
+            }
         }
         w.flush()
     }
@@ -135,6 +196,37 @@ mod tests {
         m.write_csv(path.to_str().unwrap(), "test_scheme").unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         assert!(text.contains("test_scheme,0,"));
+        // the static schema carries no controller columns
+        assert!(
+            text.starts_with(
+                "scheme,round,train_loss,test_acc,bits_up,bits_cum,\
+                 wall_secs\n"
+            ),
+            "static header drifted: {text}"
+        );
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn rate_trace_gates_extra_csv_columns() {
+        let dir = std::env::temp_dir().join(format!(
+            "rcfed_metrics_rate_{}", std::process::id()));
+        let path = dir.join("rt.csv");
+        let mut m = MetricsLog::new();
+        m.push(0, 1.0, f64::NAN, 100, 0.01);
+        m.push_rate(0.05, f64::NAN, 0);
+        m.push(1, 0.9, 0.6, 90, 0.01);
+        m.push_rate(0.08, 2.4, 352);
+        assert_eq!(m.total_downlink_bits(), 352);
+        assert_eq!(m.rate_trace().len(), 2);
+        m.write_csv(path.to_str().unwrap(), "rcfed_b3").unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let header = text.lines().next().unwrap();
+        assert!(
+            header.ends_with("wall_secs,lambda,realized_bpc,bits_down"),
+            "rate columns missing: {header}"
+        );
+        assert_eq!(text.lines().count(), 3);
         std::fs::remove_dir_all(dir).ok();
     }
 }

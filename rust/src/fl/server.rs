@@ -5,7 +5,7 @@
 //! `θ_{t+1} = θ_t − η_t ḡ_t`. Learning-rate schedules include the
 //! Theorem-1 schedule `η_t = 2 / (ρ (t + γ))`.
 
-use crate::fl::compression::Compressor;
+use crate::fl::compression::PacketDecoder;
 use crate::fl::packet::Packet;
 use crate::util::{Error, Result};
 
@@ -66,16 +66,20 @@ impl Server {
     }
 
     /// Ingest one client packet (decode → de-normalize → accumulate).
-    pub fn receive(
+    /// Generic over the decoder: a static [`Compressor`] or the
+    /// closed-loop [`crate::fl::compression::CompressionPipeline`].
+    ///
+    /// [`Compressor`]: crate::fl::compression::Compressor
+    pub fn receive<D: PacketDecoder + ?Sized>(
         &mut self,
-        compressor: &Compressor,
+        decoder: &D,
         packet: &Packet,
     ) -> Result<()> {
         if packet.d as usize != self.dim() {
             return Err(Error::Coding(format!(
                 "packet d={} vs model d={}", packet.d, self.dim())));
         }
-        compressor.decompress_accumulate(packet, &mut self.acc)?;
+        decoder.decompress_accumulate(packet, &mut self.acc)?;
         self.received += 1;
         Ok(())
     }
@@ -84,13 +88,13 @@ impl Server {
     /// Corrupt buffers surface as recoverable `Err`s — the accumulator
     /// and `received` count are untouched on failure, so the caller can
     /// skip the client and the round stays unbiased over survivors.
-    pub fn receive_bytes(
+    pub fn receive_bytes<D: PacketDecoder + ?Sized>(
         &mut self,
-        compressor: &Compressor,
+        decoder: &D,
         bytes: &[u8],
     ) -> Result<()> {
         let packet = Packet::parse(bytes)?;
-        self.receive(compressor, &packet)
+        self.receive(decoder, &packet)
     }
 
     /// Packets successfully ingested since `begin_round`.
@@ -132,7 +136,7 @@ impl Server {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::fl::compression::{CompressionScheme, WireCoder};
+    use crate::fl::compression::{CompressionScheme, Compressor, WireCoder};
     use crate::util::rng::Rng;
 
     #[test]

@@ -62,7 +62,8 @@ pub mod prelude {
     pub use crate::coding::huffman::HuffmanCode;
     pub use crate::data::{DatasetConfig, FederatedDataset};
     pub use crate::fl::compression::{
-        designed_codebook, CompressionScheme, Compressor,
+        designed_codebook, CompressionPipeline, CompressionScheme,
+        Compressor, RateTarget,
     };
     pub use crate::quant::{
         codebook::Codebook, lloyd::LloydMax, rcq::RateConstrainedQuantizer,

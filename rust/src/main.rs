@@ -24,7 +24,7 @@ use rcfed::coordinator::network::ChannelSpec;
 use rcfed::coordinator::sweep::{run_sweep, SweepGrid};
 use rcfed::data::DatasetKind;
 use rcfed::fl::compression::{
-    designed_codebook, CompressionScheme, WireCoder,
+    designed_codebook, CompressionScheme, RateTarget, WireCoder,
 };
 use rcfed::fl::server::LrSchedule;
 use rcfed::quant::rcq::{LengthModel, RateConstrainedQuantizer};
@@ -64,11 +64,14 @@ fn print_usage() {
          rcfed|lloyd|nqfl|qsgd|uniform|fp32\n       \
          [--bits 3] [--lambda 0.05] [--rounds 100] [--clients-per-round 0]\n       \
          [--local-iters 1] [--batch 64] [--lr 0.01] [--seed 42]\n       \
-         [--backend native|pjrt] [--model mlp_synthcifar] [--out file.csv]\n\
+         [--backend native|pjrt] [--model mlp_synthcifar] [--out file.csv]\n       \
+         closed-loop rate control (rcfed only):\n       \
+         [--rate-target bits_per_coord] [--adapt-every 5]\n\
          sweep  same dataset flags; runs the full Fig. 1 grid through the\n       \
          sweep engine [--lambdas l1,l2] [--bits-list 3,6] [--seeds s1,s2]\n       \
          [--sweep-threads 0] [--json file.json]\n       \
-         scenario axes: [--loss-list p1,p2] [--deadline-list s1,s2]\n\n\
+         scenario axes: [--loss-list p1,p2] [--deadline-list s1,s2]\n       \
+         [--rate-target-list r1,r2 [--adapt-every 5]]\n\n\
          channel model (run + sweep; all default off/ideal):\n       \
          [--loss p] [--burst-loss p --burst-enter p --burst-exit p]\n       \
          [--corrupt p] [--corrupt-bits n] [--deadline secs]\n       \
@@ -157,6 +160,18 @@ fn parse_config(args: &Args) -> Result<ExperimentConfig> {
         "arithmetic" => WireCoder::Arithmetic,
         other => return Err(Error::Config(format!("bad --wire {other:?}"))),
     };
+    // closed-loop rate targeting: --rate-target turns the controller on
+    // (rcfed only, validated by the pipeline); --adapt-every sets the
+    // window length in rounds
+    let rate_target = args.f64_or("rate-target", f64::NAN)?;
+    let adapt_every = args.usize_or("adapt-every", 5)?;
+    if !rate_target.is_nan() {
+        cfg.rate_target = RateTarget::Track {
+            bits_per_coord: rate_target,
+            adapt_every,
+        };
+        cfg.rate_target.validate(&cfg.scheme)?;
+    }
     cfg.backend = match args.str_or("backend", "native").as_str() {
         "native" => BackendChoice::Native,
         "pjrt" => BackendChoice::Pjrt(args.str_or(
@@ -193,6 +208,16 @@ fn cmd_run(args: &Args) -> Result<()> {
     if cfg.channel.is_faulty() {
         println!("channel {:<14} {}", cfg.channel.label(), report.channel);
     }
+    if cfg.rate_target.is_on() {
+        println!(
+            "rate target {:<10} realized={:.3} b/coord downlink={:.6} Gb \
+             total={:.5} Gb",
+            cfg.rate_target.label(),
+            report.realized_bpc(),
+            report.downlink_bits as f64 / 1e9,
+            report.total_comm_bits() as f64 / 1e9
+        );
+    }
     if let Some(path) = out {
         report.metrics.write_csv(&path, &report.label)?;
         println!("wrote {path}");
@@ -208,11 +233,16 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let seeds = args.usize_list_or("seeds", &[])?;
     let loss_list = args.f64_list_or("loss-list", &[])?;
     let deadline_list = args.f64_list_or("deadline-list", &[])?;
+    let rate_target_list = args.f64_list_or("rate-target-list", &[])?;
+    let adapt_every = args.usize_or("adapt-every", 5)?;
     let sweep_threads = args.usize_or("sweep-threads", 0)?;
     let out = args.str_or("out", "results/sweep.csv");
     let json_out = args.get("json").map(|s| s.to_string());
     args.finish()?;
     let base_channel = base.channel;
+    // either the axis or a base-level --rate-target puts the sweep in
+    // closed-loop mode; both only steer rcfed cells
+    let rate_axis = !rate_target_list.is_empty() || base.rate_target.is_on();
 
     // declarative grid: RC-FED λ-curve + baselines, expanded and executed
     // by the sweep engine across a scoped worker pool with the shared
@@ -234,11 +264,16 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             grid.threads = (cores / inner_threads).max(1);
         }
     }
-    for &b in &bits {
-        grid = grid
-            .scheme(CompressionScheme::Lloyd { bits: b as u32 })
-            .scheme(CompressionScheme::Nqfl { bits: b as u32 })
-            .scheme(CompressionScheme::Qsgd { bits: b as u32 });
+    // the rate-target axis only steers rcfed (λ is the control
+    // variable), so a rate sweep drops the baseline schemes instead of
+    // crossing them into cells that can only fail validation
+    if !rate_axis {
+        for &b in &bits {
+            grid = grid
+                .scheme(CompressionScheme::Lloyd { bits: b as u32 })
+                .scheme(CompressionScheme::Nqfl { bits: b as u32 })
+                .scheme(CompressionScheme::Qsgd { bits: b as u32 });
+        }
     }
     let replicated = !seeds.is_empty();
     if replicated {
@@ -261,10 +296,17 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             grid = grid.channel(spec);
         }
     }
+    // rate-target axis: the static reference cell rides along so the
+    // closed-loop rows always have an off-row to compare against
+    if !rate_target_list.is_empty() {
+        grid = grid
+            .rate_target(RateTarget::Off)
+            .rate_target_axis(&rate_target_list, adapt_every.max(1));
+    }
 
     let report = run_sweep(&grid)?;
     for cell in &report.cells {
-        println!(
+        let mut line = format!(
             "{:<22} seed={:<6} channel={:<14} acc={:.4} uplink={:.5} Gb",
             cell.label,
             cell.seed,
@@ -272,6 +314,15 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             cell.report.final_accuracy,
             cell.report.uplink_gigabits()
         );
+        if rate_axis {
+            line.push_str(&format!(
+                " rate={:<10} realized={:.3} downlink={:.6} Gb",
+                cell.rate,
+                cell.report.realized_bpc(),
+                cell.report.downlink_bits as f64 / 1e9
+            ));
+        }
+        println!("{line}");
     }
     use rcfed::util::csv::CsvField;
     // schema grows key columns only for the axes actually in play, so
@@ -283,7 +334,13 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     if channel_axis {
         header.push("channel");
     }
+    if rate_axis {
+        header.push("rate_target");
+    }
     header.extend_from_slice(&["acc", "gigabits"]);
+    if rate_axis {
+        header.extend_from_slice(&["realized_bpc", "downlink_gigabits"]);
+    }
     report.write_csv_with(&out, &header, |c| {
         let mut row = vec![CsvField::from(c.label.clone())];
         if replicated {
@@ -292,8 +349,15 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         if channel_axis {
             row.push(CsvField::from(c.channel.clone()));
         }
+        if rate_axis {
+            row.push(CsvField::from(c.rate.clone()));
+        }
         row.push(CsvField::from(c.report.final_accuracy));
         row.push(CsvField::from(c.report.uplink_gigabits()));
+        if rate_axis {
+            row.push(CsvField::from(c.report.realized_bpc()));
+            row.push(CsvField::from(c.report.downlink_bits as f64 / 1e9));
+        }
         row
     })?;
     println!("{}", report.summary());

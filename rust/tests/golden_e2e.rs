@@ -83,6 +83,22 @@ fn fixed_seed_runs_match_the_committed_snapshot() {
     let path = golden_path();
     let update = std::env::var("RCFED_UPDATE_GOLDEN").is_ok();
     if update || !path.exists() {
+        // A missing snapshot must never *silently* pass in CI: a
+        // self-bootstrapped file trivially equals itself, so the
+        // regression gate would be a no-op on every fresh checkout.
+        // Locally the bootstrap is a convenience (generate → commit);
+        // under GitHub Actions it is a hard failure. (Keyed on
+        // GITHUB_ACTIONS rather than the generic CI variable so
+        // non-Actions harnesses that export CI=1 keep the seed
+        // behavior of bootstrapping on first run.)
+        if !update && std::env::var("GITHUB_ACTIONS").is_ok() {
+            panic!(
+                "golden snapshot {} is missing in CI — a self-bootstrapped \
+                 snapshot cannot gate anything. Run `cargo test -q` locally \
+                 (or RCFED_UPDATE_GOLDEN=1) and commit the generated file.",
+                path.display()
+            );
+        }
         std::fs::create_dir_all(path.parent().unwrap()).unwrap();
         std::fs::write(&path, &current).unwrap();
         eprintln!(

@@ -1,0 +1,143 @@
+//! Closed-loop rate-controller properties on the tiny config.
+//!
+//! The acceptance bar of the rate-targeted pipeline:
+//!
+//! * `RateTarget::Off` reproduces the static `Compressor` behavior
+//!   bit-for-bit — packets byte-identical, full-run reports unchanged
+//!   (the committed golden snapshot in `tests/golden_e2e.rs` pins the
+//!   same property against the pre-pipeline values);
+//! * with a target set, the controller brings the *measured* uplink
+//!   bits/coordinate (ledger bits over transmitted coordinates) within
+//!   5% of the target while accuracy stays close to the fixed-λ run;
+//! * reported communication totals include the downlink codebook
+//!   broadcasts the adaptation paid for.
+
+use rcfed::coordinator::experiment::{run_experiment, ExperimentConfig};
+use rcfed::fl::compression::{
+    CompressionPipeline, CompressionScheme, Compressor, RateTarget,
+    WireCoder,
+};
+use rcfed::quant::rcq::LengthModel;
+use rcfed::util::rng::Rng;
+
+fn rcfed() -> CompressionScheme {
+    CompressionScheme::RcFed {
+        bits: 3,
+        lambda: 0.05,
+        length_model: LengthModel::Huffman,
+    }
+}
+
+#[test]
+fn off_reproduces_the_static_compressor_bit_for_bit() {
+    // packet level: same gradient, same rng seed, identical wire bytes
+    let stat = Compressor::design(rcfed(), WireCoder::Huffman).unwrap();
+    let pipe = CompressionPipeline::design(
+        rcfed(), WireCoder::Huffman, RateTarget::Off)
+    .unwrap();
+    let mut g = vec![0f32; 2000];
+    Rng::new(3).fill_normal_f32(&mut g, 0.001, 0.02);
+    let p_stat = stat.compress(2, 7, &g, &mut Rng::new(4)).unwrap();
+    let p_pipe = pipe.compress(2, 7, &g, &mut Rng::new(4)).unwrap();
+    assert_eq!(p_stat.to_bytes(), p_pipe.to_bytes());
+    assert_eq!(p_stat.total_bits(), p_pipe.total_bits());
+
+    // run level: an explicit Off equals the default, pays no downlink,
+    // records no controller trace, and replays bit-exactly
+    let mut cfg = ExperimentConfig::tiny();
+    cfg.rounds = 8;
+    let a = run_experiment(&cfg).unwrap();
+    cfg.rate_target = RateTarget::Off;
+    let b = run_experiment(&cfg).unwrap();
+    assert_eq!(a.total_bits, b.total_bits);
+    assert_eq!(a.final_accuracy, b.final_accuracy);
+    assert_eq!(a.downlink_bits, 0);
+    assert_eq!(b.downlink_bits, 0);
+    assert!(a.metrics.rate_trace().is_empty());
+    for (ra, rb) in a.metrics.rounds.iter().zip(&b.metrics.rounds) {
+        assert_eq!(ra.bits_up, rb.bits_up);
+    }
+}
+
+#[test]
+fn controller_converges_within_5_percent_of_target() {
+    let target = 2.0;
+    let adapt_every = 2usize;
+    let mut cfg = ExperimentConfig::tiny();
+    cfg.rounds = 80;
+    cfg.eval_every = 10;
+    cfg.rate_target = RateTarget::Track {
+        bits_per_coord: target,
+        adapt_every,
+    };
+    let rep = run_experiment(&cfg).unwrap();
+
+    // one trace row per round; realized_bpc is refreshed on the rounds
+    // that close a window — average the last few closed windows so a
+    // single window's jitter cannot flake the property
+    let trace = rep.metrics.rate_trace();
+    assert_eq!(trace.len(), cfg.rounds);
+    let window_rates: Vec<f64> = trace
+        .iter()
+        .enumerate()
+        .filter(|(r, _)| (r + 1) % adapt_every == 0)
+        .map(|(_, t)| t.realized_bpc)
+        .filter(|x| x.is_finite())
+        .collect();
+    assert!(window_rates.len() >= 10, "controller never closed windows");
+    let tail = &window_rates[window_rates.len() - 5..];
+    let realized = tail.iter().sum::<f64>() / tail.len() as f64;
+    assert!(
+        (realized - target).abs() <= 0.05 * target,
+        "realized {realized:.3} b/coord not within 5% of target {target} \
+         (window tail {tail:?})"
+    );
+
+    // the controller actually moved λ off its initial value
+    let lambdas: Vec<f64> = trace.iter().map(|t| t.lambda).collect();
+    assert!(
+        (lambdas.last().unwrap() - lambdas.first().unwrap()).abs() > 1e-4,
+        "λ never moved: {:?}",
+        &lambdas[..4.min(lambdas.len())]
+    );
+
+    // honest totals: downlink broadcasts are counted and reported
+    assert!(rep.downlink_bits > 0, "no codebook broadcast charged");
+    assert_eq!(rep.total_comm_bits(), rep.total_bits + rep.downlink_bits);
+    assert_eq!(rep.metrics.total_downlink_bits(), rep.downlink_bits);
+
+    // accuracy does not collapse relative to the fixed-λ reference
+    let mut fixed = cfg.clone();
+    fixed.rate_target = RateTarget::Off;
+    let reference = run_experiment(&fixed).unwrap();
+    assert!(
+        rep.final_accuracy >= reference.final_accuracy - 0.05,
+        "adaptive acc {} vs fixed-λ acc {}",
+        rep.final_accuracy,
+        reference.final_accuracy
+    );
+}
+
+#[test]
+fn loose_target_relaxes_lambda_to_zero_cost() {
+    // a target far above the λ=0 rate: dual ascent must push λ to (or
+    // near) zero and keep the realized rate at the unconstrained level,
+    // never above the target
+    let mut cfg = ExperimentConfig::tiny();
+    cfg.rounds = 30;
+    cfg.eval_every = 0;
+    cfg.rate_target =
+        RateTarget::Track { bits_per_coord: 8.0, adapt_every: 2 };
+    let rep = run_experiment(&cfg).unwrap();
+    let realized = rep.realized_bpc();
+    assert!(realized.is_finite());
+    assert!(
+        realized < 8.0,
+        "unconstrained 3-bit rate {realized} above the loose target"
+    );
+    let final_lambda = rep.metrics.rate_trace().last().unwrap().lambda;
+    assert!(
+        final_lambda < 0.05,
+        "λ should relax toward 0 under a loose target, got {final_lambda}"
+    );
+}
