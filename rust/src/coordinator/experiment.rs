@@ -9,7 +9,8 @@ use std::rc::Rc;
 use crate::data::{DatasetConfig, DatasetKind, FederatedDataset};
 use crate::fl::client::Client;
 use crate::fl::compression::{
-    CompressionPipeline, CompressionScheme, RateTarget, WireCoder,
+    CompressionPipeline, CompressionScheme, RateAllocation, RateTarget,
+    RoundAdaptation, WireCoder,
 };
 use crate::fl::metrics::MetricsLog;
 use crate::fl::server::{LrSchedule, Server};
@@ -66,6 +67,10 @@ pub struct ExperimentConfig {
     /// closed-loop rate targeting ([`RateTarget::Off`] = the static
     /// §3.1 design, byte-identical to the pre-pipeline behavior)
     pub rate_target: RateTarget,
+    /// per-client rate allocation under a global round budget
+    /// ([`RateAllocation::Uniform`] = one shared codebook, byte-identical
+    /// to the pre-allocator behavior)
+    pub alloc: RateAllocation,
 }
 
 impl ExperimentConfig {
@@ -90,6 +95,7 @@ impl ExperimentConfig {
             threads: 0,
             channel: ChannelSpec::ideal(),
             rate_target: RateTarget::Off,
+            alloc: RateAllocation::Uniform,
         }
     }
 
@@ -113,6 +119,7 @@ impl ExperimentConfig {
             threads: 0,
             channel: ChannelSpec::ideal(),
             rate_target: RateTarget::Off,
+            alloc: RateAllocation::Uniform,
         }
     }
 
@@ -138,6 +145,7 @@ impl ExperimentConfig {
             threads: 0,
             channel: ChannelSpec::ideal(),
             rate_target: RateTarget::Off,
+            alloc: RateAllocation::Uniform,
         }
     }
 
@@ -166,6 +174,9 @@ pub struct ExperimentReport {
     pub wall_secs: f64,
     /// channel outcome counters (all-delivered under an ideal channel)
     pub channel: ChannelStats,
+    /// final per-client width histogram `(width, clients)` from the rate
+    /// allocator (empty for uniform-allocation runs)
+    pub alloc_hist: Vec<(u32, usize)>,
 }
 
 impl ExperimentReport {
@@ -187,6 +198,12 @@ impl ExperimentReport {
             .last()
             .map(|t| t.realized_bpc)
             .unwrap_or(f64::NAN)
+    }
+
+    /// Gini coefficient of the final per-client width allocation (NaN
+    /// for uniform-allocation runs).
+    pub fn alloc_gini(&self) -> f64 {
+        self.metrics.final_alloc_gini()
     }
 }
 
@@ -238,8 +255,8 @@ pub fn run_experiment_on(
     }
     config.channel.validate()?;
     let total_timer = Timer::start();
-    let mut pipeline = CompressionPipeline::design(
-        config.scheme, config.wire, config.rate_target)?;
+    let mut pipeline = CompressionPipeline::design_alloc(
+        config.scheme, config.wire, config.rate_target, config.alloc)?;
     let label = config.scheme.label();
 
     // clients (deterministic per-client seeds)
@@ -274,7 +291,18 @@ pub fn run_experiment_on(
                   &backend, run_round_serial::<PjrtModel>)?
         }
     };
-    if report.downlink_bits > 0 {
+    if config.alloc.is_on() {
+        crate::info!(
+            "{label}: acc={:.4} uplink={:.4} Gb + downlink={:.6} Gb \
+             (alloc {}, gini {:.3}) in {:.1}s",
+            report.final_accuracy,
+            report.uplink_gigabits(),
+            report.downlink_bits as f64 / 1e9,
+            config.alloc.label(),
+            report.alloc_gini(),
+            total_timer.secs()
+        );
+    } else if report.downlink_bits > 0 {
         crate::info!(
             "{label}: acc={:.4} uplink={:.4} Gb + downlink={:.6} Gb \
              (λ={:.4}, realized {:.3} b/coord) in {:.1}s",
@@ -335,6 +363,14 @@ fn drive<B: Backend>(
     );
     let mut metrics = MetricsLog::new();
     let k_all = clients.len();
+    // bind the rate allocator (if any) to this population: the channel
+    // model's per-client bandwidth factors seed the initial water-fill
+    // (a free no-op under Alloc::Uniform)
+    if pipeline.is_allocated() {
+        let factors: Vec<f64> =
+            (0..k_all).map(|c| network.client_bandwidth_factor(c)).collect();
+        pipeline.bind_clients(k_all, &factors)?;
+    }
     let k_round = if config.clients_per_round == 0 {
         k_all
     } else {
@@ -375,10 +411,10 @@ fn drive<B: Backend>(
                 Delivery::Delivered { .. } => {
                     // intact delivery decodes, or the run is broken
                     server.receive(&*pipeline, &up.packet)?;
-                    // the stats sample rides with the packet, so only
-                    // packets the server actually ingested contribute
-                    // to the design pdf
-                    pipeline.observe_samples(&up.sample);
+                    // the stats sample (and the allocator's per-client
+                    // energy) ride with the packet, so only packets the
+                    // server actually ingested steer either controller
+                    pipeline.observe_delivery(&up.packet, &up.sample);
                     survivors += 1;
                     loss_acc += up.mean_loss as f64;
                 }
@@ -387,7 +423,7 @@ fn drive<B: Backend>(
                     // channel noise, not run errors
                     match server.receive_bytes(&*pipeline, &bytes) {
                         Ok(()) => {
-                            pipeline.observe_samples(&up.sample);
+                            pipeline.observe_delivery(&up.packet, &up.sample);
                             survivors += 1;
                             loss_acc += up.mean_loss as f64;
                         }
@@ -422,21 +458,36 @@ fn drive<B: Backend>(
             // the channel wiped the round out: θ holds, schedule advances
             server.skip_round();
         }
-        // closed-loop adaptation between rounds: feed the controller the
-        // ledger's measured bits; at window ends it moves λ and
-        // re-designs, and the new codebook is broadcast to every client
-        // (any of them may be sampled next round — stale versions are
-        // rejected on decode), charged to the downlink ledger
+        // adaptation between rounds: feed the controller the ledger's
+        // measured bits; at window ends the Track loop moves λ and
+        // re-designs (one codebook broadcast to every client — any of
+        // them may be sampled next round), while the rate allocator
+        // re-solves the per-client widths (each *changed* client is
+        // unicast its new codebook). Stale versions are rejected on
+        // decode; every publication is charged to the downlink ledger.
         pipeline.observe_round(network.bits_this_round(), coords_sent);
-        if let Some(broadcast) = pipeline.end_round(round)? {
-            network.broadcast(broadcast, k_all);
-            crate::debug!(
-                "round {round}: codebook v{} published (λ={:.4}, \
-                 realized {:.3} b/coord)",
-                pipeline.version(),
-                pipeline.lambda(),
-                pipeline.last_realized()
-            );
+        match pipeline.end_round(round)? {
+            RoundAdaptation::None => {}
+            RoundAdaptation::Broadcast { bits_per_client } => {
+                network.broadcast(bits_per_client, k_all);
+                crate::debug!(
+                    "round {round}: codebook v{} published (λ={:.4}, \
+                     realized {:.3} b/coord)",
+                    pipeline.version(),
+                    pipeline.lambda(),
+                    pipeline.last_realized()
+                );
+            }
+            RoundAdaptation::PerClient { publications } => {
+                let moved = publications.len();
+                for (client, bits) in publications {
+                    network.unicast(client as usize, bits);
+                }
+                crate::debug!(
+                    "round {round}: allocation re-solved, {moved} clients \
+                     moved width"
+                );
+            }
         }
         let train_loss = if survivors > 0 {
             (loss_acc / survivors as f64) as f32
@@ -466,6 +517,13 @@ fn drive<B: Backend>(
                 network.downlink_bits_this_round(),
             );
         }
+        if let Some(snap) = pipeline.alloc_snapshot() {
+            metrics.push_alloc(
+                snap.gini,
+                snap.mean_bits,
+                network.downlink_bits_this_round(),
+            );
+        }
         if is_eval {
             crate::debug!(
                 "round {round}: loss={train_loss:.4} acc={acc:.4} \
@@ -483,6 +541,7 @@ fn drive<B: Backend>(
         downlink_bits: network.downlink_bits(),
         wall_secs: total_timer.secs(),
         channel: network.stats,
+        alloc_hist: pipeline.alloc_histogram(),
         metrics,
     })
 }
@@ -686,6 +745,76 @@ mod tests {
         assert_eq!(a.metrics.rate_trace().len(), 12);
         assert_eq!(a.metrics.total_downlink_bits(), a.downlink_bits);
         assert!(a.realized_bpc().is_finite());
+    }
+
+    #[test]
+    fn uniform_allocation_is_default_and_identical() {
+        let cfg = ExperimentConfig::tiny();
+        assert_eq!(cfg.alloc, RateAllocation::Uniform);
+        let a = run_experiment(&cfg).unwrap();
+        let mut explicit = cfg.clone();
+        explicit.alloc = RateAllocation::Uniform;
+        let b = run_experiment(&explicit).unwrap();
+        assert_eq!(a.total_bits, b.total_bits);
+        assert_eq!(a.final_accuracy, b.final_accuracy);
+        assert_eq!(a.downlink_bits, 0);
+        assert!(a.alloc_hist.is_empty());
+        assert!(a.alloc_gini().is_nan());
+        assert!(a.metrics.alloc_trace().is_empty());
+    }
+
+    #[test]
+    fn waterfill_run_is_deterministic_and_pays_per_client_downlink() {
+        let mut cfg = ExperimentConfig::tiny();
+        cfg.rounds = 12;
+        cfg.eval_every = 4;
+        cfg.channel = crate::coordinator::network::ChannelSpec {
+            uplink_bps: 1e6,
+            bandwidth_spread: 0.5,
+            ..crate::coordinator::network::ChannelSpec::ideal()
+        };
+        cfg.alloc = RateAllocation::WaterFill {
+            budget_bpc: 2.5,
+            adapt_every: 3,
+            min_bits: 1,
+            max_bits: 6,
+        };
+        let a = run_experiment(&cfg).unwrap();
+        let b = run_experiment(&cfg).unwrap();
+        assert_eq!(a.total_bits, b.total_bits);
+        assert_eq!(a.downlink_bits, b.downlink_bits);
+        assert_eq!(a.final_accuracy, b.final_accuracy);
+        // one alloc-trace row per round, and the final histogram covers
+        // every client
+        assert_eq!(a.metrics.alloc_trace().len(), 12);
+        let clients: usize = a.alloc_hist.iter().map(|&(_, n)| n).sum();
+        assert_eq!(clients, cfg.dataset.num_clients);
+        // the heterogeneous channel skews the very first assignment, so
+        // the width spread shows up in the Gini column
+        assert!(a.alloc_gini() >= 0.0, "gini {}", a.alloc_gini());
+        assert_eq!(a.metrics.total_downlink_bits(), a.downlink_bits);
+        assert_eq!(a.total_comm_bits(), a.total_bits + a.downlink_bits);
+        // allocation without a rate target records no λ trace
+        assert!(a.metrics.rate_trace().is_empty());
+    }
+
+    #[test]
+    fn waterfill_on_qsgd_or_with_rate_target_is_rejected() {
+        let wf = RateAllocation::WaterFill {
+            budget_bpc: 2.5,
+            adapt_every: 2,
+            min_bits: 1,
+            max_bits: 6,
+        };
+        let mut cfg = ExperimentConfig::tiny();
+        cfg.scheme = CompressionScheme::Qsgd { bits: 3 };
+        cfg.alloc = wf;
+        assert!(run_experiment(&cfg).is_err());
+        let mut both = ExperimentConfig::tiny();
+        both.rate_target =
+            RateTarget::Track { bits_per_coord: 2.0, adapt_every: 2 };
+        both.alloc = wf;
+        assert!(run_experiment(&both).is_err());
     }
 
     #[test]

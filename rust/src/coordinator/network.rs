@@ -296,6 +296,9 @@ pub struct SimulatedNetwork {
     /// adaptive pipeline; zero for static runs)
     downlink_bits: u64,
     round_downlink_bits: Vec<u64>,
+    /// per-client unicast downlink (the rate allocator's per-client
+    /// codebook publications)
+    per_client_down_bits: Vec<u64>,
     /// the channel configuration this network simulates
     pub spec: ChannelSpec,
     /// per-client bandwidth factor (empty when `uplink_bps == 0`)
@@ -350,6 +353,7 @@ impl SimulatedNetwork {
             round_bits: Vec::new(),
             downlink_bits: 0,
             round_downlink_bits: Vec::new(),
+            per_client_down_bits: vec![0; num_clients],
             spec,
             client_factor,
             rng: Rng::new(seed ^ 0x6E65_7477_6F72_6Bu64), // "network"
@@ -365,6 +369,13 @@ impl SimulatedNetwork {
         }
         let f = self.client_factor.get(client).copied().unwrap_or(1.0);
         Some(self.spec.uplink_bps * f)
+    }
+
+    /// Relative uplink-bandwidth factor of `client` (1.0 under a
+    /// homogeneous or infinite-bandwidth model) — the heterogeneity
+    /// prior the rate allocator water-fills against.
+    pub fn client_bandwidth_factor(&self, client: usize) -> f64 {
+        self.client_factor.get(client).copied().unwrap_or(1.0)
     }
 
     /// Simulated transmit duration of `bits` from `client`.
@@ -524,12 +535,34 @@ impl SimulatedNetwork {
     /// only the accounting matters here.
     pub fn broadcast(&mut self, bits_per_client: u64, clients: usize) -> u64 {
         let bits = bits_per_client * clients as u64;
+        self.charge_downlink(bits);
+        bits
+    }
+
+    /// Charge a server→client *unicast* of `bits` to one receiver on the
+    /// downlink ledger — the rate allocator's per-client codebook
+    /// publications go through here, so only the clients whose width
+    /// actually moved are charged (a broadcast would overcount).
+    pub fn unicast(&mut self, client: usize, bits: u64) -> u64 {
+        if client < self.per_client_down_bits.len() {
+            self.per_client_down_bits[client] += bits;
+        }
+        self.charge_downlink(bits);
+        bits
+    }
+
+    fn charge_downlink(&mut self, bits: u64) {
         self.downlink_bits += bits;
         if self.round_downlink_bits.is_empty() {
             self.round_downlink_bits.push(0);
         }
         *self.round_downlink_bits.last_mut().unwrap() += bits;
-        bits
+    }
+
+    /// Cumulative downlink bits unicast to `client` (codebook
+    /// publications from the rate allocator; zero otherwise).
+    pub fn client_downlink_bits(&self, client: usize) -> u64 {
+        self.per_client_down_bits.get(client).copied().unwrap_or(0)
     }
 
     /// Mark the start of a round (opens fresh round buckets on both
@@ -631,6 +664,53 @@ mod tests {
         let mut fresh = SimulatedNetwork::new(2);
         fresh.broadcast(100, 2);
         assert_eq!(fresh.downlink_bits_this_round(), 200);
+    }
+
+    #[test]
+    fn unicast_charges_one_receiver_on_the_downlink_ledger() {
+        let mut n = SimulatedNetwork::new(3);
+        n.begin_round();
+        assert_eq!(n.unicast(1, 500), 500);
+        assert_eq!(n.unicast(1, 200), 200);
+        assert_eq!(n.unicast(2, 100), 100);
+        assert_eq!(n.downlink_bits(), 800);
+        assert_eq!(n.downlink_bits_this_round(), 800);
+        assert_eq!(n.client_downlink_bits(0), 0);
+        assert_eq!(n.client_downlink_bits(1), 700);
+        assert_eq!(n.client_downlink_bits(2), 100);
+        // never leaks into the uplink ledger
+        assert_eq!(n.total_bits(), 0);
+        // out-of-range receivers still charge the aggregate ledger
+        n.unicast(99, 50);
+        assert_eq!(n.downlink_bits(), 850);
+        // a unicast before any begin_round opens round 0 implicitly
+        let mut fresh = SimulatedNetwork::new(2);
+        fresh.unicast(0, 40);
+        assert_eq!(fresh.downlink_bits_this_round(), 40);
+    }
+
+    #[test]
+    fn bandwidth_factors_default_to_one() {
+        let flat = SimulatedNetwork::new(4);
+        for c in 0..4 {
+            assert_eq!(flat.client_bandwidth_factor(c), 1.0);
+        }
+        let spec = ChannelSpec {
+            uplink_bps: 1e6,
+            bandwidth_spread: 0.5,
+            ..ChannelSpec::ideal()
+        };
+        let het = SimulatedNetwork::with_spec(8, spec, 21);
+        let mut distinct = false;
+        for c in 0..8 {
+            let f = het.client_bandwidth_factor(c);
+            assert!((0.5..=1.5).contains(&f));
+            assert_eq!(het.client_bps(c), Some(1e6 * f));
+            if (f - 1.0).abs() > 1e-3 {
+                distinct = true;
+            }
+        }
+        assert!(distinct);
     }
 
     #[test]

@@ -31,7 +31,7 @@ use crate::coordinator::network::ChannelSpec;
 use crate::data::FederatedDataset;
 use crate::fl::compression::{
     design_cache_stats, designed_codebook, CompressionScheme,
-    DesignCacheStats, RateTarget,
+    DesignCacheStats, RateAllocation, RateTarget,
 };
 use crate::quant::codebook::Codebook;
 use crate::quant::rcq::LengthModel;
@@ -119,6 +119,10 @@ pub struct SweepGrid {
     /// `Off`): crosses every cell with each closed-loop target, so
     /// target-rate curves are first-class sweep dimensions too
     pub rate_targets: Vec<RateTarget>,
+    /// per-client allocation axis (empty ⇒ each base's own mode,
+    /// normally `Uniform`): crosses every cell with each allocation, so
+    /// budget curves are first-class sweep dimensions too
+    pub allocs: Vec<RateAllocation>,
     /// sweep worker threads (0 ⇒ hardware)
     pub threads: usize,
     /// scheduler threads *inside* each cell. Defaults to 1: the sweep
@@ -135,6 +139,7 @@ impl SweepGrid {
             seeds: Vec::new(),
             channels: Vec::new(),
             rate_targets: Vec::new(),
+            allocs: Vec::new(),
             threads: 0,
             inner_threads: 1,
         }
@@ -240,6 +245,35 @@ impl SweepGrid {
         self
     }
 
+    /// Add one allocation-mode axis value.
+    pub fn alloc(mut self, alloc: RateAllocation) -> Self {
+        self.allocs.push(alloc);
+        self
+    }
+
+    /// Scenario axis over per-client allocation budgets (encoded
+    /// bits/coordinate averaged over the round's clients), all at one
+    /// adaptation-window length and width range. An explicit `Uniform`
+    /// cell is *not* added — chain `.alloc(RateAllocation::Uniform)` for
+    /// the shared-codebook reference point.
+    pub fn budget_axis(
+        mut self,
+        budgets: &[f64],
+        adapt_every: usize,
+        min_bits: u32,
+        max_bits: u32,
+    ) -> Self {
+        for &budget_bpc in budgets {
+            self.allocs.push(RateAllocation::WaterFill {
+                budget_bpc,
+                adapt_every,
+                min_bits,
+                max_bits,
+            });
+        }
+        self
+    }
+
     /// Sweep worker threads (0 ⇒ hardware).
     pub fn threads(mut self, threads: usize) -> Self {
         self.threads = threads;
@@ -248,7 +282,7 @@ impl SweepGrid {
 
     /// Expand the grid into per-cell configs with deterministic per-cell
     /// seeds, in declaration order (bases → seeds → channels →
-    /// rate targets → schemes).
+    /// rate targets → allocations → schemes).
     pub fn expand(&self) -> Vec<SweepCell> {
         let mut cells = Vec::new();
         for (base_index, base) in self.bases.iter().enumerate() {
@@ -268,26 +302,35 @@ impl SweepGrid {
             } else {
                 self.rate_targets.clone()
             };
+            let allocs: Vec<RateAllocation> = if self.allocs.is_empty() {
+                vec![base.alloc]
+            } else {
+                self.allocs.clone()
+            };
             for &seed in &seeds {
                 for &channel in &channels {
                     for &rate_target in &rate_targets {
-                        for &scheme in &self.schemes {
-                            let mut config = base.clone();
-                            config.scheme = scheme;
-                            config.seed = seed;
-                            config.channel = channel;
-                            config.rate_target = rate_target;
-                            config.threads = self.inner_threads;
-                            cells.push(SweepCell {
-                                index: cells.len(),
-                                base_index,
-                                label: scheme.label(),
-                                dataset: base.dataset.kind.name(),
-                                seed,
-                                channel: channel.label(),
-                                rate: rate_target.label(),
-                                config,
-                            });
+                        for &alloc in &allocs {
+                            for &scheme in &self.schemes {
+                                let mut config = base.clone();
+                                config.scheme = scheme;
+                                config.seed = seed;
+                                config.channel = channel;
+                                config.rate_target = rate_target;
+                                config.alloc = alloc;
+                                config.threads = self.inner_threads;
+                                cells.push(SweepCell {
+                                    index: cells.len(),
+                                    base_index,
+                                    label: scheme.label(),
+                                    dataset: base.dataset.kind.name(),
+                                    seed,
+                                    channel: channel.label(),
+                                    rate: rate_target.label(),
+                                    alloc: alloc.label(),
+                                    config,
+                                });
+                            }
                         }
                     }
                 }
@@ -311,6 +354,8 @@ pub struct SweepCell {
     pub channel: String,
     /// rate-target label (`"off"` for the static design)
     pub rate: String,
+    /// allocation label (`"uniform"` for the shared codebook)
+    pub alloc: String,
     pub config: ExperimentConfig,
 }
 
@@ -323,6 +368,8 @@ pub struct SweepCellResult {
     pub channel: String,
     /// rate-target label (`"off"` for the static design)
     pub rate: String,
+    /// allocation label (`"uniform"` for the shared codebook)
+    pub alloc: String,
     pub scheme: CompressionScheme,
     pub report: ExperimentReport,
 }
@@ -335,6 +382,7 @@ pub struct SweepCellFailure {
     pub seed: u64,
     pub channel: String,
     pub rate: String,
+    pub alloc: String,
     pub error: String,
 }
 
@@ -380,15 +428,16 @@ pub fn run_sweep(grid: &SweepGrid) -> Result<SweepReport> {
                 seed: cell.seed,
                 channel: cell.channel,
                 rate: cell.rate,
+                alloc: cell.alloc,
                 scheme: cell.config.scheme,
                 report,
             }),
             Err(e) => {
                 crate::warn!(
                     "sweep cell {} (dataset {}, seed {}, channel {}, \
-                     rate {}) failed: {e}",
+                     rate {}, alloc {}) failed: {e}",
                     cell.label, cell.dataset, cell.seed, cell.channel,
-                    cell.rate
+                    cell.rate, cell.alloc
                 );
                 failures.push(SweepCellFailure {
                     label: cell.label,
@@ -396,6 +445,7 @@ pub fn run_sweep(grid: &SweepGrid) -> Result<SweepReport> {
                     seed: cell.seed,
                     channel: cell.channel,
                     rate: cell.rate,
+                    alloc: cell.alloc,
                     error: e.to_string(),
                 });
             }
@@ -449,10 +499,13 @@ impl SweepReport {
         };
         let multi_channel =
             distinct(self.cells.iter().map(|c| c.channel.as_str()).collect());
-        // rate columns appear as soon as any cell ran the closed loop —
-        // all-static grids keep the exact pre-pipeline schema bytes
+        // rate/alloc columns appear as soon as any cell ran the closed
+        // loop or a per-client allocation — all-static grids keep the
+        // exact pre-pipeline schema bytes
         let with_rate = self.cells.iter().any(|c| c.rate != "off")
             || self.failures.iter().any(|f| f.rate != "off");
+        let with_alloc = self.cells.iter().any(|c| c.alloc != "uniform")
+            || self.failures.iter().any(|f| f.alloc != "uniform");
         let mut header: Vec<&str> = vec![Self::CSV_HEADER[0]];
         if multi_dataset {
             header.push("dataset");
@@ -466,9 +519,18 @@ impl SweepReport {
         if with_rate {
             header.push("rate_target");
         }
+        if with_alloc {
+            header.push("alloc");
+        }
         header.extend_from_slice(&Self::CSV_HEADER[1..]);
         if with_rate {
             header.extend_from_slice(&["realized_bpc", "downlink_gigabits"]);
+        }
+        if with_alloc {
+            header.push("alloc_gini");
+            if !with_rate {
+                header.push("downlink_gigabits");
+            }
         }
         let mut w = CsvWriter::create(path, &header)?;
         for c in &self.cells {
@@ -485,6 +547,9 @@ impl SweepReport {
             if with_rate {
                 row.push(CsvField::from(c.rate.clone()));
             }
+            if with_alloc {
+                row.push(CsvField::from(c.alloc.clone()));
+            }
             row.push(CsvField::from(c.report.final_accuracy));
             row.push(CsvField::from(c.report.best_accuracy));
             row.push(CsvField::from(c.report.uplink_gigabits()));
@@ -494,6 +559,14 @@ impl SweepReport {
                 row.push(CsvField::from(
                     c.report.downlink_bits as f64 / 1e9,
                 ));
+            }
+            if with_alloc {
+                row.push(CsvField::from(c.report.alloc_gini()));
+                if !with_rate {
+                    row.push(CsvField::from(
+                        c.report.downlink_bits as f64 / 1e9,
+                    ));
+                }
             }
             w.row(&row)?;
         }
@@ -535,6 +608,8 @@ impl SweepReport {
             || self.failures.iter().any(|f| f.channel != "ideal");
         let with_rate = self.cells.iter().any(|c| c.rate != "off")
             || self.failures.iter().any(|f| f.rate != "off");
+        let with_alloc = self.cells.iter().any(|c| c.alloc != "uniform")
+            || self.failures.iter().any(|f| f.alloc != "uniform");
         let cells: Vec<Json> = self
             .cells
             .iter()
@@ -553,6 +628,34 @@ impl SweepReport {
                     fields.push((
                         "downlink_bits",
                         num(c.report.downlink_bits as f64),
+                    ));
+                }
+                if with_alloc {
+                    fields.push(("alloc", s(&c.alloc)));
+                    fields.push((
+                        "alloc_gini",
+                        num_or_null(c.report.alloc_gini()),
+                    ));
+                    if !with_rate {
+                        fields.push((
+                            "downlink_bits",
+                            num(c.report.downlink_bits as f64),
+                        ));
+                    }
+                    fields.push((
+                        "alloc_hist",
+                        Json::Arr(
+                            c.report
+                                .alloc_hist
+                                .iter()
+                                .map(|&(w, n)| {
+                                    obj(vec![
+                                        ("bits", num(w as f64)),
+                                        ("clients", num(n as f64)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
                     ));
                 }
                 if with_channel {
@@ -594,6 +697,9 @@ impl SweepReport {
                 ];
                 if with_rate {
                     fields.push(("rate_target", s(&f.rate)));
+                }
+                if with_alloc {
+                    fields.push(("alloc", s(&f.alloc)));
                 }
                 if with_channel {
                     fields.push(("channel", s(&f.channel)));
@@ -877,6 +983,64 @@ mod tests {
         plain.threads = 1;
         let plain_report = run_sweep(&plain).unwrap();
         assert_eq!(plain_report.cells[0].rate, "off");
+    }
+
+    #[test]
+    fn alloc_axis_crosses_and_reports_gated_columns() {
+        use crate::fl::compression::RateAllocation;
+        let mut base = tiny_base();
+        base.rounds = 6;
+        let grid = SweepGrid::new(base)
+            .scheme(CompressionScheme::Lloyd { bits: 3 })
+            .alloc(RateAllocation::Uniform)
+            .budget_axis(&[2.2], 2, 1, 6);
+        let cells = grid.expand();
+        assert_eq!(cells.len(), 2); // uniform + one budget
+        assert_eq!(cells[0].alloc, "uniform");
+        assert_eq!(cells[1].alloc, "wf2.2w2b1-6");
+        assert_eq!(
+            cells[1].config.alloc,
+            RateAllocation::WaterFill {
+                budget_bpc: 2.2,
+                adapt_every: 2,
+                min_bits: 1,
+                max_bits: 6,
+            }
+        );
+        let mut grid = grid;
+        grid.threads = 1;
+        let report = run_sweep(&grid).unwrap();
+        assert_eq!(report.cells.len(), 2);
+        assert!(report.cells[0].report.alloc_hist.is_empty());
+        assert!(!report.cells[1].report.alloc_hist.is_empty());
+        let dir = std::env::temp_dir()
+            .join(format!("rcfed_sweep_alloc_{}", std::process::id()));
+        let csv_path = dir.join("alloc.csv");
+        let json_path = dir.join("alloc.json");
+        report.write_csv(csv_path.to_str().unwrap()).unwrap();
+        report.write_json(json_path.to_str().unwrap()).unwrap();
+        let csv = std::fs::read_to_string(&csv_path).unwrap();
+        assert!(
+            csv.starts_with("scheme,alloc,final_acc"),
+            "alloc key column missing: {csv}"
+        );
+        assert!(
+            csv.lines().next().unwrap().ends_with(
+                "wall_secs,alloc_gini,downlink_gigabits"
+            ),
+            "alloc metric columns missing: {csv}"
+        );
+        let json = std::fs::read_to_string(&json_path).unwrap();
+        let v = crate::util::json::Json::parse(&json).unwrap();
+        let jcells = v.req("cells").unwrap().as_arr().unwrap();
+        assert!(jcells[0].get("alloc").is_some());
+        assert!(jcells[1].get("alloc_hist").is_some());
+        std::fs::remove_dir_all(dir).ok();
+        // a grid without the axis stays alloc-free (no schema drift)
+        let plain = SweepGrid::new(tiny_base())
+            .scheme(CompressionScheme::Fp32)
+            .expand();
+        assert_eq!(plain[0].alloc, "uniform");
     }
 
     #[test]

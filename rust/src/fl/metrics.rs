@@ -33,6 +33,19 @@ pub struct RateTraceRow {
     pub bits_down: u64,
 }
 
+/// One round of the rate allocator's trace. Only recorded when a
+/// per-client allocation is active, so uniform runs carry — and emit —
+/// nothing.
+#[derive(Clone, Copy, Debug)]
+pub struct AllocTraceRow {
+    /// Gini coefficient of the per-client codebook widths (0 = uniform)
+    pub gini: f64,
+    /// mean assigned width in bits
+    pub mean_bits: f64,
+    /// downlink bits charged this round (per-client codebook unicasts)
+    pub bits_down: u64,
+}
+
 /// Accumulates the experiment's metric history and bit ledger.
 #[derive(Debug, Default)]
 pub struct MetricsLog {
@@ -40,6 +53,7 @@ pub struct MetricsLog {
     bits_cum: u64,
     bits_down_cum: u64,
     rate: Vec<RateTraceRow>,
+    alloc: Vec<AllocTraceRow>,
 }
 
 impl MetricsLog {
@@ -78,6 +92,25 @@ impl MetricsLog {
     /// Per-round controller trace (empty on static runs).
     pub fn rate_trace(&self) -> &[RateTraceRow] {
         &self.rate
+    }
+
+    /// Record the allocation trace for the round just pushed. Call once
+    /// per round, after [`push`](Self::push), only when a per-client
+    /// allocation is active — the CSV schema grows the allocation
+    /// columns exactly when every round has a trace row.
+    pub fn push_alloc(&mut self, gini: f64, mean_bits: f64, bits_down: u64) {
+        self.bits_down_cum += bits_down;
+        self.alloc.push(AllocTraceRow { gini, mean_bits, bits_down });
+    }
+
+    /// Per-round allocation trace (empty on uniform runs).
+    pub fn alloc_trace(&self) -> &[AllocTraceRow] {
+        &self.alloc
+    }
+
+    /// Gini coefficient of the final allocation (NaN on uniform runs).
+    pub fn final_alloc_gini(&self) -> f64 {
+        self.alloc.last().map(|a| a.gini).unwrap_or(f64::NAN)
     }
 
     pub fn total_bits(&self) -> u64 {
@@ -120,12 +153,22 @@ impl MetricsLog {
     pub fn write_csv(&self, path: &str, label: &str) -> Result<()> {
         let with_rate =
             !self.rate.is_empty() && self.rate.len() == self.rounds.len();
+        // exclusive with the rate columns (the pipeline validates the two
+        // controllers apart; if a caller still populates both traces, the
+        // rate columns win and header/rows stay consistent)
+        let with_alloc = !with_rate
+            && !self.alloc.is_empty()
+            && self.alloc.len() == self.rounds.len();
         let mut header = vec![
             "scheme", "round", "train_loss", "test_acc", "bits_up",
             "bits_cum", "wall_secs",
         ];
         if with_rate {
             header.extend_from_slice(&["lambda", "realized_bpc",
+                                       "bits_down"]);
+        }
+        if with_alloc {
+            header.extend_from_slice(&["alloc_gini", "alloc_mean_bits",
                                        "bits_down"]);
         }
         let mut w = CsvWriter::create(path, &header)?;
@@ -143,6 +186,21 @@ impl MetricsLog {
                     r.wall_secs,
                     t.lambda,
                     t.realized_bpc,
+                    t.bits_down
+                )?;
+            } else if with_alloc {
+                let t = &self.alloc[i];
+                crate::csv_row!(
+                    w,
+                    label,
+                    r.round,
+                    r.train_loss as f64,
+                    r.test_accuracy,
+                    r.bits_up,
+                    r.bits_cum,
+                    r.wall_secs,
+                    t.gini,
+                    t.mean_bits,
                     t.bits_down
                 )?;
             } else {
@@ -205,6 +263,32 @@ mod tests {
             "static header drifted: {text}"
         );
         std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn alloc_trace_gates_extra_csv_columns() {
+        let dir = std::env::temp_dir().join(format!(
+            "rcfed_metrics_alloc_{}", std::process::id()));
+        let path = dir.join("al.csv");
+        let mut m = MetricsLog::new();
+        m.push(0, 1.0, f64::NAN, 100, 0.01);
+        m.push_alloc(0.0, 3.0, 0);
+        m.push(1, 0.9, 0.6, 90, 0.01);
+        m.push_alloc(0.25, 3.0, 1200);
+        assert_eq!(m.total_downlink_bits(), 1200);
+        assert_eq!(m.alloc_trace().len(), 2);
+        assert!((m.final_alloc_gini() - 0.25).abs() < 1e-12);
+        m.write_csv(path.to_str().unwrap(), "rcfed_b3").unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let header = text.lines().next().unwrap();
+        assert!(
+            header.ends_with("wall_secs,alloc_gini,alloc_mean_bits,bits_down"),
+            "allocation columns missing: {header}"
+        );
+        assert_eq!(text.lines().count(), 3);
+        std::fs::remove_dir_all(dir).ok();
+        // uniform runs carry no trace and no gini
+        assert!(MetricsLog::new().final_alloc_gini().is_nan());
     }
 
     #[test]

@@ -77,6 +77,31 @@ impl Packet {
             + self.payload_bits
     }
 
+    /// The codebook/allocation version carried as the third side-info
+    /// word by the adaptive pipeline and the per-client rate allocator,
+    /// validated (finite, non-negative, integral — a corrupted packet
+    /// can carry any f32 here). `Err` when the word is missing or
+    /// malformed; the decode layers treat that as a recoverable reject.
+    pub fn side_version(&self) -> Result<u32> {
+        let Some(&ver) = self.side_info.get(2) else {
+            return Err(Error::Coding(format!(
+                "packet carries {} side-info values, no version word",
+                self.side_info.len()
+            )));
+        };
+        // range check in f64: `u32::MAX as f32` rounds up to 2^32, which
+        // would let a word of exactly 2^32 saturate instead of erroring
+        if !(ver.is_finite()
+            && ver >= 0.0
+            && ver.fract() == 0.0
+            && (ver as f64) < 4_294_967_296.0)
+        {
+            return Err(Error::Coding(format!(
+                "malformed codebook version {ver}")));
+        }
+        Ok(ver as u32)
+    }
+
     /// Serialize to actual bytes (header + side info + padded payload).
     pub fn to_bytes(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(32 + self.payload.len());
@@ -198,6 +223,19 @@ mod tests {
         let mut short = bytes;
         short.truncate(25); // side info promised but missing
         assert!(Packet::from_bytes(&short).is_err());
+    }
+
+    #[test]
+    fn side_version_validates_the_third_word() {
+        let mut p = sample();
+        // only (μ, σ): no version word
+        assert!(p.side_version().is_err());
+        p.side_info.push(3.0);
+        assert_eq!(p.side_version().unwrap(), 3);
+        for bad in [f32::NAN, f32::INFINITY, -1.0, 2.5] {
+            p.side_info[2] = bad;
+            assert!(p.side_version().is_err(), "version {bad} accepted");
+        }
     }
 
     #[test]

@@ -24,7 +24,8 @@ use rcfed::coordinator::network::ChannelSpec;
 use rcfed::coordinator::sweep::{run_sweep, SweepGrid};
 use rcfed::data::DatasetKind;
 use rcfed::fl::compression::{
-    designed_codebook, CompressionScheme, RateTarget, WireCoder,
+    designed_codebook, CompressionScheme, RateAllocation, RateTarget,
+    WireCoder,
 };
 use rcfed::fl::server::LrSchedule;
 use rcfed::quant::rcq::{LengthModel, RateConstrainedQuantizer};
@@ -66,12 +67,16 @@ fn print_usage() {
          [--local-iters 1] [--batch 64] [--lr 0.01] [--seed 42]\n       \
          [--backend native|pjrt] [--model mlp_synthcifar] [--out file.csv]\n       \
          closed-loop rate control (rcfed only):\n       \
-         [--rate-target bits_per_coord] [--adapt-every 5]\n\
+         [--rate-target bits_per_coord] [--adapt-every 5]\n       \
+         per-client rate allocation (codebook schemes):\n       \
+         [--alloc uniform|waterfill] [--budget bits_per_coord]\n       \
+         [--min-bits 1] [--max-bits 6] [--adapt-every 5]\n\
          sweep  same dataset flags; runs the full Fig. 1 grid through the\n       \
          sweep engine [--lambdas l1,l2] [--bits-list 3,6] [--seeds s1,s2]\n       \
          [--sweep-threads 0] [--json file.json]\n       \
          scenario axes: [--loss-list p1,p2] [--deadline-list s1,s2]\n       \
-         [--rate-target-list r1,r2 [--adapt-every 5]]\n\n\
+         [--rate-target-list r1,r2 [--adapt-every 5]]\n       \
+         [--budget-list b1,b2 [--min-bits 1 --max-bits 6]]\n\n\
          channel model (run + sweep; all default off/ideal):\n       \
          [--loss p] [--burst-loss p --burst-enter p --burst-exit p]\n       \
          [--corrupt p] [--corrupt-bits n] [--deadline secs]\n       \
@@ -172,6 +177,46 @@ fn parse_config(args: &Args) -> Result<ExperimentConfig> {
         };
         cfg.rate_target.validate(&cfg.scheme)?;
     }
+    // per-client rate allocation: --budget (encoded bits/coordinate,
+    // averaged over the round's clients) turns water-filling on; --alloc
+    // makes the mode explicit. Shares --adapt-every with the rate
+    // controller (the two are mutually exclusive, validated below).
+    let budget = args.f64_or("budget", f64::NAN)?;
+    let min_bits = args.usize_or("min-bits", 1)? as u32;
+    let max_bits = args.usize_or("max-bits", 6)? as u32;
+    let alloc_mode = args.str_or("alloc", "uniform");
+    match alloc_mode.as_str() {
+        "waterfill" | "wf" => {
+            if budget.is_nan() {
+                return Err(Error::Config(
+                    "--alloc waterfill needs --budget bits_per_coord".into(),
+                ));
+            }
+            cfg.alloc = RateAllocation::WaterFill {
+                budget_bpc: budget,
+                adapt_every,
+                min_bits,
+                max_bits,
+            };
+        }
+        "uniform" => {
+            // a budget alone implies water-filling — but an *explicit*
+            // --alloc uniform is a requested baseline and must win, so
+            // only the defaulted mode is promoted
+            if !budget.is_nan() && args.get("alloc").is_none() {
+                cfg.alloc = RateAllocation::WaterFill {
+                    budget_bpc: budget,
+                    adapt_every,
+                    min_bits,
+                    max_bits,
+                };
+            }
+        }
+        other => {
+            return Err(Error::Config(format!("bad --alloc {other:?}")))
+        }
+    }
+    cfg.alloc.validate(&cfg.scheme, &cfg.rate_target)?;
     cfg.backend = match args.str_or("backend", "native").as_str() {
         "native" => BackendChoice::Native,
         "pjrt" => BackendChoice::Pjrt(args.str_or(
@@ -218,6 +263,22 @@ fn cmd_run(args: &Args) -> Result<()> {
             report.total_comm_bits() as f64 / 1e9
         );
     }
+    if cfg.alloc.is_on() {
+        let hist: Vec<String> = report
+            .alloc_hist
+            .iter()
+            .map(|&(b, n)| format!("b{b}:{n}"))
+            .collect();
+        println!(
+            "allocation {:<14} gini={:.3} widths=[{}] downlink={:.6} Gb \
+             total={:.5} Gb",
+            cfg.alloc.label(),
+            report.alloc_gini(),
+            hist.join(" "),
+            report.downlink_bits as f64 / 1e9,
+            report.total_comm_bits() as f64 / 1e9
+        );
+    }
     if let Some(path) = out {
         report.metrics.write_csv(&path, &report.label)?;
         println!("wrote {path}");
@@ -234,7 +295,10 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let loss_list = args.f64_list_or("loss-list", &[])?;
     let deadline_list = args.f64_list_or("deadline-list", &[])?;
     let rate_target_list = args.f64_list_or("rate-target-list", &[])?;
+    let budget_list = args.f64_list_or("budget-list", &[])?;
     let adapt_every = args.usize_or("adapt-every", 5)?;
+    let min_bits = args.usize_or("min-bits", 1)? as u32;
+    let max_bits = args.usize_or("max-bits", 6)? as u32;
     let sweep_threads = args.usize_or("sweep-threads", 0)?;
     let out = args.str_or("out", "results/sweep.csv");
     let json_out = args.get("json").map(|s| s.to_string());
@@ -243,6 +307,18 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     // either the axis or a base-level --rate-target puts the sweep in
     // closed-loop mode; both only steer rcfed cells
     let rate_axis = !rate_target_list.is_empty() || base.rate_target.is_on();
+    // likewise for the per-client allocation axis
+    let alloc_axis = !budget_list.is_empty() || base.alloc.is_on();
+    // the two controllers are mutually exclusive per cell; crossing the
+    // axes would fill a third of the grid with cells that can only fail
+    // validation, so reject the combination up front
+    if rate_axis && alloc_axis {
+        return Err(Error::Config(
+            "--rate-target[-list] and --alloc/--budget[-list] cannot be \
+             combined; run one controller at a time"
+                .into(),
+        ));
+    }
 
     // declarative grid: RC-FED λ-curve + baselines, expanded and executed
     // by the sweep engine across a scoped worker pool with the shared
@@ -266,13 +342,17 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     }
     // the rate-target axis only steers rcfed (λ is the control
     // variable), so a rate sweep drops the baseline schemes instead of
-    // crossing them into cells that can only fail validation
+    // crossing them into cells that can only fail validation; the
+    // allocation axis steers any designed-codebook scheme, so it only
+    // drops QSGD (no codebook to allocate)
     if !rate_axis {
         for &b in &bits {
             grid = grid
                 .scheme(CompressionScheme::Lloyd { bits: b as u32 })
-                .scheme(CompressionScheme::Nqfl { bits: b as u32 })
-                .scheme(CompressionScheme::Qsgd { bits: b as u32 });
+                .scheme(CompressionScheme::Nqfl { bits: b as u32 });
+            if !alloc_axis {
+                grid = grid.scheme(CompressionScheme::Qsgd { bits: b as u32 });
+            }
         }
     }
     let replicated = !seeds.is_empty();
@@ -303,6 +383,16 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             .rate_target(RateTarget::Off)
             .rate_target_axis(&rate_target_list, adapt_every.max(1));
     }
+    // allocation axis: the uniform reference cell rides along so budget
+    // rows always have a shared-codebook row to compare against
+    if !budget_list.is_empty() {
+        grid = grid.alloc(RateAllocation::Uniform).budget_axis(
+            &budget_list,
+            adapt_every.max(1),
+            min_bits,
+            max_bits,
+        );
+    }
 
     let report = run_sweep(&grid)?;
     for cell in &report.cells {
@@ -322,6 +412,14 @@ fn cmd_sweep(args: &Args) -> Result<()> {
                 cell.report.downlink_bits as f64 / 1e9
             ));
         }
+        if alloc_axis {
+            line.push_str(&format!(
+                " alloc={:<14} gini={:.3} downlink={:.6} Gb",
+                cell.alloc,
+                cell.report.alloc_gini(),
+                cell.report.downlink_bits as f64 / 1e9
+            ));
+        }
         println!("{line}");
     }
     use rcfed::util::csv::CsvField;
@@ -337,9 +435,18 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     if rate_axis {
         header.push("rate_target");
     }
+    if alloc_axis {
+        header.push("alloc");
+    }
     header.extend_from_slice(&["acc", "gigabits"]);
     if rate_axis {
         header.extend_from_slice(&["realized_bpc", "downlink_gigabits"]);
+    }
+    if alloc_axis {
+        header.push("alloc_gini");
+        if !rate_axis {
+            header.push("downlink_gigabits");
+        }
     }
     report.write_csv_with(&out, &header, |c| {
         let mut row = vec![CsvField::from(c.label.clone())];
@@ -352,11 +459,22 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         if rate_axis {
             row.push(CsvField::from(c.rate.clone()));
         }
+        if alloc_axis {
+            row.push(CsvField::from(c.alloc.clone()));
+        }
         row.push(CsvField::from(c.report.final_accuracy));
         row.push(CsvField::from(c.report.uplink_gigabits()));
         if rate_axis {
             row.push(CsvField::from(c.report.realized_bpc()));
             row.push(CsvField::from(c.report.downlink_bits as f64 / 1e9));
+        }
+        if alloc_axis {
+            row.push(CsvField::from(c.report.alloc_gini()));
+            if !rate_axis {
+                row.push(CsvField::from(
+                    c.report.downlink_bits as f64 / 1e9,
+                ));
+            }
         }
         row
     })?;

@@ -55,7 +55,25 @@ impl EmpiricalPdf {
         self.sorted.partition_point(|&z| z <= x)
     }
 
+    /// Ranks of the half-open cell `(a, b]`, with `ra <= rb` guaranteed.
+    /// A degenerate or inverted interval (`a >= b`, including NaN bounds,
+    /// as fed by transient design iterates whose boundaries fold over)
+    /// carries zero mass: both ranks collapse so every partial moment is
+    /// exactly 0 instead of a `usize` wrap (garbage in release, panic in
+    /// debug).
+    fn interval_ranks(&self, a: f64, b: f64) -> (usize, usize) {
+        if a.is_nan() || b.is_nan() || a >= b {
+            let r = self.rank(a.min(b));
+            return (r, r);
+        }
+        let (ra, rb) = (self.rank(a), self.rank(b));
+        (ra, rb.max(ra))
+    }
+
     pub fn quantile(&self, q: f64) -> f64 {
+        // guard against NaN / out-of-range q: NaN and q < 0 clamp to the
+        // minimum sample, q > 1 to the maximum
+        let q = if q.is_nan() { 0.0 } else { q.clamp(0.0, 1.0) };
         let n = self.sorted.len();
         let i = ((q * n as f64) as usize).min(n - 1);
         self.sorted[i]
@@ -64,17 +82,17 @@ impl EmpiricalPdf {
 
 impl SourcePdf for EmpiricalPdf {
     fn prob(&self, a: f64, b: f64) -> f64 {
-        let (ra, rb) = (self.rank(a), self.rank(b));
-        (rb - ra) as f64 / self.sorted.len() as f64
+        let (ra, rb) = self.interval_ranks(a, b);
+        rb.saturating_sub(ra) as f64 / self.sorted.len() as f64
     }
 
     fn partial_mean(&self, a: f64, b: f64) -> f64 {
-        let (ra, rb) = (self.rank(a), self.rank(b));
+        let (ra, rb) = self.interval_ranks(a, b);
         (self.prefix_z[rb] - self.prefix_z[ra]) / self.sorted.len() as f64
     }
 
     fn partial_second(&self, a: f64, b: f64) -> f64 {
-        let (ra, rb) = (self.rank(a), self.rank(b));
+        let (ra, rb) = self.interval_ranks(a, b);
         (self.prefix_z2[rb] - self.prefix_z2[ra]) / self.sorted.len() as f64
     }
 
@@ -145,5 +163,35 @@ mod tests {
         assert_eq!(p.quantile(0.0), 0.0);
         assert_eq!(p.quantile(0.5), 50.0);
         assert_eq!(p.quantile(1.0), 99.0);
+    }
+
+    #[test]
+    fn inverted_and_degenerate_intervals_carry_zero_mass() {
+        // regression: (rb - ra) was computed on usize, so an inverted
+        // interval wrapped in release builds and panicked in debug
+        let samples = [1.0f32, 2.0, 3.0, 4.0];
+        let p = EmpiricalPdf::from_samples(&samples);
+        for (a, b) in [(3.0, 1.0), (2.0, 2.0), (4.0, -1.0), (10.0, 5.0)] {
+            assert_eq!(p.prob(a, b), 0.0, "prob({a}, {b})");
+            assert_eq!(p.partial_mean(a, b), 0.0, "mean({a}, {b})");
+            assert_eq!(p.partial_second(a, b), 0.0, "second({a}, {b})");
+        }
+        // NaN bounds are degenerate, not a panic
+        assert_eq!(p.prob(f64::NAN, 2.0), 0.0);
+        assert_eq!(p.prob(1.0, f64::NAN), 0.0);
+        assert_eq!(p.partial_mean(f64::NAN, f64::NAN), 0.0);
+        // the fix must not change well-formed intervals
+        assert!((p.prob(1.0, 3.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantile_guards_bad_input() {
+        let samples = [1.0f32, 2.0, 3.0, 4.0];
+        let p = EmpiricalPdf::from_samples(&samples);
+        assert_eq!(p.quantile(-0.5), 1.0);
+        assert_eq!(p.quantile(f64::NAN), 1.0);
+        assert_eq!(p.quantile(2.0), 4.0);
+        assert_eq!(p.quantile(f64::INFINITY), 4.0);
+        assert_eq!(p.quantile(f64::NEG_INFINITY), 1.0);
     }
 }

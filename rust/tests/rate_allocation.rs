@@ -1,0 +1,193 @@
+//! Heterogeneity-aware per-client rate allocation: acceptance tests.
+//!
+//! The bar set by the allocation issue:
+//!
+//! * `RateAllocation::Uniform` (the default) is byte-identical to the
+//!   pre-allocator pipeline on the tiny config — same per-round bits,
+//!   same accuracy, no downlink, no extra columns (the committed golden
+//!   snapshot in `tests/golden_e2e.rs` pins the same property against
+//!   absolute values);
+//! * a `WaterFill` run under a heterogeneous `ChannelSpec` achieves
+//!   strictly lower aggregate distortion than `Uniform` while spending
+//!   no more measured uplink bits: the budget buys the energetic
+//!   clients wide codebooks and parks the quiescent ones on cheap
+//!   narrow ones.
+
+use rcfed::coordinator::experiment::{run_experiment, ExperimentConfig};
+use rcfed::coordinator::network::{ChannelSpec, SimulatedNetwork};
+use rcfed::fl::compression::{
+    designed_codebook, CompressionPipeline, CompressionScheme,
+    RateAllocation, RateTarget, RoundAdaptation, WireCoder,
+};
+use rcfed::quant::rcq::LengthModel;
+use rcfed::util::rng::Rng;
+
+fn rcfed() -> CompressionScheme {
+    CompressionScheme::RcFed {
+        bits: 3,
+        lambda: 0.05,
+        length_model: LengthModel::Huffman,
+    }
+}
+
+/// Deterministic per-(client, round) gradient with client-specific
+/// energy — the heterogeneity the allocator exploits.
+fn client_grad(client: usize, round: usize, sigma: f32, d: usize) -> Vec<f32> {
+    let mut g = vec![0f32; d];
+    let seed = 7_000 + 31 * client as u64 + 977 * round as u64;
+    Rng::new(seed).fill_normal_f32(&mut g, 0.0, sigma);
+    g
+}
+
+/// Compress + decode every client once; returns (total uplink bits,
+/// aggregate squared reconstruction error).
+fn run_round(
+    pipe: &mut CompressionPipeline,
+    sigmas: &[f32],
+    round: usize,
+    d: usize,
+) -> (u64, f64) {
+    let mut rng = Rng::new(55);
+    let mut bits = 0u64;
+    let mut dist = 0f64;
+    for (c, &sigma) in sigmas.iter().enumerate() {
+        let g = client_grad(c, round, sigma, d);
+        let pkt = pipe.compress(c as u32, round as u32, &g, &mut rng).unwrap();
+        bits += pkt.total_bits();
+        let mut acc = vec![0f32; d];
+        pipe.decompress_accumulate(&pkt, &mut acc).unwrap();
+        dist += g
+            .iter()
+            .zip(&acc)
+            .map(|(&x, &y)| ((x - y) as f64).powi(2))
+            .sum::<f64>();
+        pipe.observe_delivery(&pkt, &[]);
+    }
+    (bits, dist)
+}
+
+#[test]
+fn waterfill_beats_uniform_distortion_at_no_more_bits() {
+    let d = 16_384usize;
+    // strongly heterogeneous gradient energies across 8 clients
+    let sigmas: [f32; 8] = [0.01, 0.02, 0.05, 0.1, 0.3, 0.6, 1.2, 2.5];
+
+    // heterogeneous channel: per-client bandwidth factors drawn by the
+    // deterministic channel model
+    let spec = ChannelSpec {
+        uplink_bps: 1e6,
+        bandwidth_spread: 0.4,
+        ..ChannelSpec::ideal()
+    };
+    let network = SimulatedNetwork::with_spec(sigmas.len(), spec, 17);
+    let factors: Vec<f64> = (0..sigmas.len())
+        .map(|c| network.client_bandwidth_factor(c))
+        .collect();
+
+    // the budget: slightly under the uniform b=3 design rate, so the
+    // water-filled assignment is constrained to *no more* encoded bits
+    // than the shared-codebook baseline spends
+    let (_, rep) = designed_codebook(rcfed()).unwrap();
+    let budget = 0.97 * rep.huffman_rate;
+
+    let mut uniform = CompressionPipeline::design(
+        rcfed(), WireCoder::Huffman, RateTarget::Off)
+    .unwrap();
+    let mut wf = CompressionPipeline::design_alloc(
+        rcfed(),
+        WireCoder::Huffman,
+        RateTarget::Off,
+        RateAllocation::WaterFill {
+            budget_bpc: budget,
+            adapt_every: 1,
+            min_bits: 1,
+            max_bits: 6,
+        },
+    )
+    .unwrap();
+    wf.bind_clients(sigmas.len(), &factors).unwrap();
+
+    // window 1: both pipelines see identical gradients; the allocator
+    // observes the per-client energies and re-solves at the window end
+    run_round(&mut uniform, &sigmas, 0, d);
+    run_round(&mut wf, &sigmas, 0, d);
+    assert_eq!(uniform.end_round(0).unwrap(), RoundAdaptation::None);
+    match wf.end_round(0).unwrap() {
+        RoundAdaptation::PerClient { publications } => {
+            assert!(!publications.is_empty(), "allocation never moved");
+        }
+        other => panic!("expected per-client publications, got {other:?}"),
+    }
+    // energy-aware assignment: the most energetic client out-bids the
+    // most quiescent one
+    let w_lo = wf.client_width(0).unwrap();
+    let w_hi = wf.client_width(sigmas.len() - 1).unwrap();
+    assert!(w_hi > w_lo, "widths {w_lo} vs {w_hi}");
+
+    // window 2 is the measurement: same gradients through both
+    let (uni_bits, uni_dist) = run_round(&mut uniform, &sigmas, 1, d);
+    let (wf_bits, wf_dist) = run_round(&mut wf, &sigmas, 1, d);
+    assert!(
+        wf_bits <= uni_bits,
+        "water-filling exceeded the uniform spend: {wf_bits} vs {uni_bits}"
+    );
+    assert!(
+        wf_dist < 0.5 * uni_dist,
+        "no distortion win at equal bits: wf {wf_dist} vs uniform {uni_dist}"
+    );
+}
+
+#[test]
+fn uniform_allocation_replays_the_tiny_config_bit_for_bit() {
+    // run level: the default (no alloc field touched) and an explicit
+    // Uniform produce identical ledgers and metrics, and neither pays
+    // downlink — the committed golden snapshot pins the same trajectory
+    // against absolute values
+    let base = ExperimentConfig::tiny();
+    assert_eq!(base.alloc, RateAllocation::Uniform);
+    let a = run_experiment(&base).unwrap();
+    let mut explicit = base.clone();
+    explicit.alloc = RateAllocation::Uniform;
+    let b = run_experiment(&explicit).unwrap();
+    assert_eq!(a.total_bits, b.total_bits);
+    assert_eq!(a.final_accuracy, b.final_accuracy);
+    assert_eq!(a.downlink_bits, 0);
+    assert_eq!(b.downlink_bits, 0);
+    for (ra, rb) in a.metrics.rounds.iter().zip(&b.metrics.rounds) {
+        assert_eq!(ra.bits_up, rb.bits_up);
+    }
+    assert!(a.metrics.alloc_trace().is_empty());
+    assert!(a.alloc_hist.is_empty());
+}
+
+#[test]
+fn waterfill_experiment_end_to_end_under_heterogeneous_channel() {
+    // the full round loop: allocation bound to the channel's bandwidth
+    // factors, per-client publications charged to the downlink ledger,
+    // deterministic replay
+    let mut cfg = ExperimentConfig::tiny();
+    cfg.rounds = 10;
+    cfg.eval_every = 5;
+    cfg.channel = ChannelSpec {
+        uplink_bps: 1e6,
+        bandwidth_spread: 0.5,
+        ..ChannelSpec::ideal()
+    };
+    cfg.alloc = RateAllocation::WaterFill {
+        budget_bpc: 2.4,
+        adapt_every: 2,
+        min_bits: 1,
+        max_bits: 6,
+    };
+    let a = run_experiment(&cfg).unwrap();
+    let b = run_experiment(&cfg).unwrap();
+    assert_eq!(a.total_bits, b.total_bits);
+    assert_eq!(a.downlink_bits, b.downlink_bits);
+    assert_eq!(a.final_accuracy, b.final_accuracy);
+    assert_eq!(a.metrics.alloc_trace().len(), cfg.rounds);
+    let covered: usize = a.alloc_hist.iter().map(|&(_, n)| n).sum();
+    assert_eq!(covered, cfg.dataset.num_clients);
+    // the run still learns through per-client codebooks
+    assert!(a.final_accuracy > 0.3, "acc collapsed: {}", a.final_accuracy);
+    assert_eq!(a.total_comm_bits(), a.total_bits + a.downlink_bits);
+}
