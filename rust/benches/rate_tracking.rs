@@ -12,7 +12,7 @@
 
 use rcfed::coordinator::experiment::{run_experiment, ExperimentConfig};
 use rcfed::coordinator::sweep::{run_sweep, SweepGrid};
-use rcfed::fl::compression::{CompressionScheme, RateTarget};
+use rcfed::fl::compression::{CompressionScheme, RateTarget, TransformCfg};
 use rcfed::quant::rcq::LengthModel;
 
 fn main() {
@@ -85,4 +85,34 @@ fn main() {
     );
     println!("{}", report.summary());
     println!("wrote results/rate_tracking.csv, results/rate_tracking.json");
+
+    // E11 — transform axis: dense vs error-feedback vs topk+ef at a
+    // fixed quantizer, through the same sweep engine (the `transform`
+    // and `sparsity` columns are gated in, everything else unchanged)
+    let mut tbase = ExperimentConfig::tiny();
+    tbase.rounds = rounds;
+    tbase.eval_every = 10;
+    let tgrid = SweepGrid::new(tbase)
+        .scheme(rcfed)
+        .transform(TransformCfg::identity())
+        .transform(TransformCfg::identity().with_ef())
+        .topk_axis(&[0.2, 0.1, 0.05], true);
+    println!("\n=== E11 — transform stage: error feedback + top-k ===");
+    let treport = run_sweep(&tgrid).expect("transform sweep failed");
+    println!(
+        "{:<32} {:<12} {:>9} {:>12} {:>9}",
+        "scheme", "transform", "final_acc", "uplink_Gb", "sparsity"
+    );
+    for cell in &treport.cells {
+        println!(
+            "{:<32} {:<12} {:>9.4} {:>12.5} {:>9.3}",
+            cell.label,
+            cell.transform,
+            cell.report.final_accuracy,
+            cell.report.uplink_gigabits(),
+            cell.report.metrics.final_sparsity()
+        );
+    }
+    treport.write_csv("results/transform_stage.csv").expect("csv");
+    println!("wrote results/transform_stage.csv");
 }

@@ -10,7 +10,7 @@ use crate::data::{DatasetConfig, DatasetKind, FederatedDataset};
 use crate::fl::client::Client;
 use crate::fl::compression::{
     CompressionPipeline, CompressionScheme, RateAllocation, RateTarget,
-    RoundAdaptation, WireCoder,
+    RoundAdaptation, TransformCfg, WireCoder,
 };
 use crate::fl::metrics::MetricsLog;
 use crate::fl::server::{LrSchedule, Server};
@@ -71,16 +71,20 @@ pub struct ExperimentConfig {
     /// ([`RateAllocation::Uniform`] = one shared codebook, byte-identical
     /// to the pre-allocator behavior)
     pub alloc: RateAllocation,
+    /// transform stage ahead of quantization: identity (the default,
+    /// byte-identical to the pre-codec behavior), error feedback and/or
+    /// top-k sparsification
+    pub transform: TransformCfg,
 }
 
 impl ExperimentConfig {
-    /// Paper §5 CIFAR-10 protocol: K=10 clients, Dirichlet β=0.5,
-    /// 100 rounds, e=1, batch 64. The paper uses η=0.01 with ResNet-18;
-    /// our MLP substitute reaches the same mid-training accuracy band at
-    /// η=0.02 (EXPERIMENTS.md §Substitutions).
-    pub fn synth_cifar() -> ExperimentConfig {
+    /// The shared preset base: every field that is identical across the
+    /// named presets lives here exactly once, so a new config axis
+    /// cannot silently drift between them — presets override only what
+    /// differs, via struct-update syntax.
+    fn preset_base(dataset: DatasetConfig) -> ExperimentConfig {
         ExperimentConfig {
-            dataset: DatasetConfig::synth_cifar(),
+            dataset,
             backend: BackendChoice::Native,
             scheme: CompressionScheme::Lloyd { bits: 3 },
             wire: WireCoder::Huffman,
@@ -96,7 +100,16 @@ impl ExperimentConfig {
             channel: ChannelSpec::ideal(),
             rate_target: RateTarget::Off,
             alloc: RateAllocation::Uniform,
+            transform: TransformCfg::default(),
         }
+    }
+
+    /// Paper §5 CIFAR-10 protocol: K=10 clients, Dirichlet β=0.5,
+    /// 100 rounds, e=1, batch 64. The paper uses η=0.01 with ResNet-18;
+    /// our MLP substitute reaches the same mid-training accuracy band at
+    /// η=0.02 (EXPERIMENTS.md §Substitutions).
+    pub fn synth_cifar() -> ExperimentConfig {
+        Self::preset_base(DatasetConfig::synth_cifar())
     }
 
     /// Paper §5 FEMNIST protocol: 3550 devices, 500 sampled per round,
@@ -104,49 +117,33 @@ impl ExperimentConfig {
     /// down for CPU budgets (see EXPERIMENTS.md).
     pub fn synth_femnist() -> ExperimentConfig {
         ExperimentConfig {
-            dataset: DatasetConfig::synth_femnist(),
-            backend: BackendChoice::Native,
-            scheme: CompressionScheme::Lloyd { bits: 3 },
-            wire: WireCoder::Huffman,
-            rounds: 100,
             clients_per_round: 500,
             local_iters: 2,
             batch: 32,
-            lr: LrSchedule::Const(0.02),
-            seed: 42,
-            eval_every: 5,
-            eval_batches: 0,
-            threads: 0,
-            channel: ChannelSpec::ideal(),
-            rate_target: RateTarget::Off,
-            alloc: RateAllocation::Uniform,
+            ..Self::preset_base(DatasetConfig::synth_femnist())
         }
     }
 
     /// Fast configuration for tests and the quickstart example.
     pub fn tiny() -> ExperimentConfig {
         ExperimentConfig {
-            dataset: DatasetConfig::tiny(),
-            backend: BackendChoice::Native,
             scheme: CompressionScheme::RcFed {
                 bits: 3,
                 lambda: 0.05,
                 length_model: crate::quant::rcq::LengthModel::Huffman,
             },
-            wire: WireCoder::Huffman,
             rounds: 30,
-            clients_per_round: 0,
-            local_iters: 1,
             batch: 16,
             lr: LrSchedule::Const(0.05),
-            seed: 42,
-            eval_every: 5,
-            eval_batches: 0,
-            threads: 0,
-            channel: ChannelSpec::ideal(),
-            rate_target: RateTarget::Off,
-            alloc: RateAllocation::Uniform,
+            ..Self::preset_base(DatasetConfig::tiny())
         }
+    }
+
+    /// Row-key label: the scheme label plus the transform suffix (empty
+    /// for identity) — the ONE composition every report/CSV key uses, so
+    /// per-round metric labels and sweep row keys cannot drift apart.
+    pub fn label(&self) -> String {
+        format!("{}{}", self.scheme.label(), self.transform.suffix())
     }
 
     fn native_backend(&self) -> NativeMlp {
@@ -255,9 +252,11 @@ pub fn run_experiment_on(
     }
     config.channel.validate()?;
     let total_timer = Timer::start();
-    let mut pipeline = CompressionPipeline::design_alloc(
-        config.scheme, config.wire, config.rate_target, config.alloc)?;
-    let label = config.scheme.label();
+    let mut pipeline = CompressionPipeline::design_full(
+        config.scheme, config.wire, config.rate_target, config.alloc,
+        config.transform)?;
+    // identity transforms suffix nothing, keeping every pre-codec label
+    let label = config.label();
 
     // clients (deterministic per-client seeds)
     let mut clients: Vec<Client> = ds
@@ -524,6 +523,27 @@ fn drive<B: Backend>(
                 network.downlink_bits_this_round(),
             );
         }
+        if config.transform.is_active() {
+            // mean over this round's *computed* updates (EF banks its
+            // residual client-side whether or not the packet survived,
+            // so the trace reflects every compress, not just survivors)
+            let (mut ef, mut sp) = (0f64, 0f64);
+            let (mut n_ef, mut n_sp) = (0usize, 0usize);
+            for up in &updates {
+                if up.ef_norm.is_finite() {
+                    ef += up.ef_norm;
+                    n_ef += 1;
+                }
+                if up.sparsity.is_finite() {
+                    sp += up.sparsity;
+                    n_sp += 1;
+                }
+            }
+            metrics.push_transform(
+                if n_ef > 0 { ef / n_ef as f64 } else { f64::NAN },
+                if n_sp > 0 { sp / n_sp as f64 } else { f64::NAN },
+            );
+        }
         if is_eval {
             crate::debug!(
                 "round {round}: loss={train_loss:.4} acc={acc:.4} \
@@ -533,7 +553,7 @@ fn drive<B: Backend>(
         }
     }
     Ok(ExperimentReport {
-        label: config.scheme.label(),
+        label: config.label(),
         final_accuracy: metrics.final_accuracy(),
         best_accuracy: metrics.best_accuracy(),
         num_params: d,

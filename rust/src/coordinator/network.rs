@@ -621,6 +621,7 @@ mod tests {
             payload: vec![0; payload_bits.div_ceil(8) as usize],
             payload_bits,
             table_bits: 0,
+            index_bits: 0,
         }
     }
 

@@ -31,7 +31,7 @@ use crate::coordinator::network::ChannelSpec;
 use crate::data::FederatedDataset;
 use crate::fl::compression::{
     design_cache_stats, designed_codebook, CompressionScheme,
-    DesignCacheStats, RateAllocation, RateTarget,
+    DesignCacheStats, RateAllocation, RateTarget, Transform, TransformCfg,
 };
 use crate::quant::codebook::Codebook;
 use crate::quant::rcq::LengthModel;
@@ -123,6 +123,10 @@ pub struct SweepGrid {
     /// normally `Uniform`): crosses every cell with each allocation, so
     /// budget curves are first-class sweep dimensions too
     pub allocs: Vec<RateAllocation>,
+    /// transform-stage axis (empty ⇒ each base's own transform, normally
+    /// identity): crosses every cell with each error-feedback /
+    /// sparsification configuration
+    pub transforms: Vec<TransformCfg>,
     /// sweep worker threads (0 ⇒ hardware)
     pub threads: usize,
     /// scheduler threads *inside* each cell. Defaults to 1: the sweep
@@ -140,6 +144,7 @@ impl SweepGrid {
             channels: Vec::new(),
             rate_targets: Vec::new(),
             allocs: Vec::new(),
+            transforms: Vec::new(),
             threads: 0,
             inner_threads: 1,
         }
@@ -274,6 +279,26 @@ impl SweepGrid {
         self
     }
 
+    /// Add one transform-stage axis value.
+    pub fn transform(mut self, transform: TransformCfg) -> Self {
+        self.transforms.push(transform);
+        self
+    }
+
+    /// Scenario axis over top-k sparsification ratios, optionally with
+    /// error feedback on every axis cell. An identity reference cell is
+    /// *not* added — chain `.transform(TransformCfg::identity())` (or
+    /// `.identity().with_ef()`) for the dense comparison point.
+    pub fn topk_axis(mut self, ratios: &[f64], error_feedback: bool) -> Self {
+        for &ratio in ratios {
+            self.transforms.push(TransformCfg {
+                kind: Transform::TopK { ratio },
+                error_feedback,
+            });
+        }
+        self
+    }
+
     /// Sweep worker threads (0 ⇒ hardware).
     pub fn threads(mut self, threads: usize) -> Self {
         self.threads = threads;
@@ -282,7 +307,7 @@ impl SweepGrid {
 
     /// Expand the grid into per-cell configs with deterministic per-cell
     /// seeds, in declaration order (bases → seeds → channels →
-    /// rate targets → allocations → schemes).
+    /// rate targets → allocations → transforms → schemes).
     pub fn expand(&self) -> Vec<SweepCell> {
         let mut cells = Vec::new();
         for (base_index, base) in self.bases.iter().enumerate() {
@@ -307,29 +332,39 @@ impl SweepGrid {
             } else {
                 self.allocs.clone()
             };
+            let transforms: Vec<TransformCfg> = if self.transforms.is_empty()
+            {
+                vec![base.transform]
+            } else {
+                self.transforms.clone()
+            };
             for &seed in &seeds {
                 for &channel in &channels {
                     for &rate_target in &rate_targets {
                         for &alloc in &allocs {
-                            for &scheme in &self.schemes {
-                                let mut config = base.clone();
-                                config.scheme = scheme;
-                                config.seed = seed;
-                                config.channel = channel;
-                                config.rate_target = rate_target;
-                                config.alloc = alloc;
-                                config.threads = self.inner_threads;
-                                cells.push(SweepCell {
-                                    index: cells.len(),
-                                    base_index,
-                                    label: scheme.label(),
-                                    dataset: base.dataset.kind.name(),
-                                    seed,
-                                    channel: channel.label(),
-                                    rate: rate_target.label(),
-                                    alloc: alloc.label(),
-                                    config,
-                                });
+                            for &transform in &transforms {
+                                for &scheme in &self.schemes {
+                                    let mut config = base.clone();
+                                    config.scheme = scheme;
+                                    config.seed = seed;
+                                    config.channel = channel;
+                                    config.rate_target = rate_target;
+                                    config.alloc = alloc;
+                                    config.transform = transform;
+                                    config.threads = self.inner_threads;
+                                    cells.push(SweepCell {
+                                        index: cells.len(),
+                                        base_index,
+                                        label: config.label(),
+                                        dataset: base.dataset.kind.name(),
+                                        seed,
+                                        channel: channel.label(),
+                                        rate: rate_target.label(),
+                                        alloc: alloc.label(),
+                                        transform: transform.label(),
+                                        config,
+                                    });
+                                }
                             }
                         }
                     }
@@ -356,6 +391,8 @@ pub struct SweepCell {
     pub rate: String,
     /// allocation label (`"uniform"` for the shared codebook)
     pub alloc: String,
+    /// transform label (`"id"` for the identity stage)
+    pub transform: String,
     pub config: ExperimentConfig,
 }
 
@@ -370,6 +407,8 @@ pub struct SweepCellResult {
     pub rate: String,
     /// allocation label (`"uniform"` for the shared codebook)
     pub alloc: String,
+    /// transform label (`"id"` for the identity stage)
+    pub transform: String,
     pub scheme: CompressionScheme,
     pub report: ExperimentReport,
 }
@@ -383,6 +422,7 @@ pub struct SweepCellFailure {
     pub channel: String,
     pub rate: String,
     pub alloc: String,
+    pub transform: String,
     pub error: String,
 }
 
@@ -429,15 +469,16 @@ pub fn run_sweep(grid: &SweepGrid) -> Result<SweepReport> {
                 channel: cell.channel,
                 rate: cell.rate,
                 alloc: cell.alloc,
+                transform: cell.transform,
                 scheme: cell.config.scheme,
                 report,
             }),
             Err(e) => {
                 crate::warn!(
                     "sweep cell {} (dataset {}, seed {}, channel {}, \
-                     rate {}, alloc {}) failed: {e}",
+                     rate {}, alloc {}, transform {}) failed: {e}",
                     cell.label, cell.dataset, cell.seed, cell.channel,
-                    cell.rate, cell.alloc
+                    cell.rate, cell.alloc, cell.transform
                 );
                 failures.push(SweepCellFailure {
                     label: cell.label,
@@ -446,6 +487,7 @@ pub fn run_sweep(grid: &SweepGrid) -> Result<SweepReport> {
                     channel: cell.channel,
                     rate: cell.rate,
                     alloc: cell.alloc,
+                    transform: cell.transform,
                     error: e.to_string(),
                 });
             }
@@ -506,6 +548,8 @@ impl SweepReport {
             || self.failures.iter().any(|f| f.rate != "off");
         let with_alloc = self.cells.iter().any(|c| c.alloc != "uniform")
             || self.failures.iter().any(|f| f.alloc != "uniform");
+        let with_transform = self.cells.iter().any(|c| c.transform != "id")
+            || self.failures.iter().any(|f| f.transform != "id");
         let mut header: Vec<&str> = vec![Self::CSV_HEADER[0]];
         if multi_dataset {
             header.push("dataset");
@@ -522,6 +566,9 @@ impl SweepReport {
         if with_alloc {
             header.push("alloc");
         }
+        if with_transform {
+            header.push("transform");
+        }
         header.extend_from_slice(&Self::CSV_HEADER[1..]);
         if with_rate {
             header.extend_from_slice(&["realized_bpc", "downlink_gigabits"]);
@@ -531,6 +578,9 @@ impl SweepReport {
             if !with_rate {
                 header.push("downlink_gigabits");
             }
+        }
+        if with_transform {
+            header.push("sparsity");
         }
         let mut w = CsvWriter::create(path, &header)?;
         for c in &self.cells {
@@ -550,6 +600,9 @@ impl SweepReport {
             if with_alloc {
                 row.push(CsvField::from(c.alloc.clone()));
             }
+            if with_transform {
+                row.push(CsvField::from(c.transform.clone()));
+            }
             row.push(CsvField::from(c.report.final_accuracy));
             row.push(CsvField::from(c.report.best_accuracy));
             row.push(CsvField::from(c.report.uplink_gigabits()));
@@ -567,6 +620,9 @@ impl SweepReport {
                         c.report.downlink_bits as f64 / 1e9,
                     ));
                 }
+            }
+            if with_transform {
+                row.push(CsvField::from(c.report.metrics.final_sparsity()));
             }
             w.row(&row)?;
         }
@@ -610,6 +666,8 @@ impl SweepReport {
             || self.failures.iter().any(|f| f.rate != "off");
         let with_alloc = self.cells.iter().any(|c| c.alloc != "uniform")
             || self.failures.iter().any(|f| f.alloc != "uniform");
+        let with_transform = self.cells.iter().any(|c| c.transform != "id")
+            || self.failures.iter().any(|f| f.transform != "id");
         let cells: Vec<Json> = self
             .cells
             .iter()
@@ -658,6 +716,13 @@ impl SweepReport {
                         ),
                     ));
                 }
+                if with_transform {
+                    fields.push(("transform", s(&c.transform)));
+                    fields.push((
+                        "sparsity",
+                        num_or_null(c.report.metrics.final_sparsity()),
+                    ));
+                }
                 if with_channel {
                     let st = &c.report.channel;
                     fields.push(("channel", s(&c.channel)));
@@ -700,6 +765,9 @@ impl SweepReport {
                 }
                 if with_alloc {
                     fields.push(("alloc", s(&f.alloc)));
+                }
+                if with_transform {
+                    fields.push(("transform", s(&f.transform)));
                 }
                 if with_channel {
                     fields.push(("channel", s(&f.channel)));
@@ -1041,6 +1109,63 @@ mod tests {
             .scheme(CompressionScheme::Fp32)
             .expand();
         assert_eq!(plain[0].alloc, "uniform");
+    }
+
+    #[test]
+    fn transform_axis_crosses_and_reports_gated_columns() {
+        use crate::fl::compression::TransformCfg;
+        let mut base = tiny_base();
+        base.rounds = 4;
+        base.eval_every = 2;
+        let grid = SweepGrid::new(base)
+            .scheme(CompressionScheme::Lloyd { bits: 3 })
+            .transform(TransformCfg::identity())
+            .topk_axis(&[0.1], true);
+        let cells = grid.expand();
+        assert_eq!(cells.len(), 2); // identity + one topk+ef
+        assert_eq!(cells[0].transform, "id");
+        assert_eq!(cells[0].label, "lloyd_b3");
+        assert_eq!(cells[1].transform, "topk0.1+ef");
+        assert_eq!(cells[1].label, "lloyd_b3_topk0.1_ef");
+        assert!(cells[1].config.transform.error_feedback);
+        let mut grid = grid;
+        grid.threads = 1;
+        let report = run_sweep(&grid).unwrap();
+        assert_eq!(report.cells.len(), 2);
+        // the sparse cell must spend fewer uplink bits than the dense one
+        assert!(
+            report.cells[1].report.total_bits
+                < report.cells[0].report.total_bits,
+            "topk {} vs dense {}",
+            report.cells[1].report.total_bits,
+            report.cells[0].report.total_bits
+        );
+        let dir = std::env::temp_dir()
+            .join(format!("rcfed_sweep_transform_{}", std::process::id()));
+        let csv_path = dir.join("transform.csv");
+        let json_path = dir.join("transform.json");
+        report.write_csv(csv_path.to_str().unwrap()).unwrap();
+        report.write_json(json_path.to_str().unwrap()).unwrap();
+        let csv = std::fs::read_to_string(&csv_path).unwrap();
+        assert!(
+            csv.starts_with("scheme,transform,final_acc"),
+            "transform key column missing: {csv}"
+        );
+        assert!(
+            csv.lines().next().unwrap().ends_with("wall_secs,sparsity"),
+            "sparsity metric column missing: {csv}"
+        );
+        let json = std::fs::read_to_string(&json_path).unwrap();
+        let v = crate::util::json::Json::parse(&json).unwrap();
+        let jcells = v.req("cells").unwrap().as_arr().unwrap();
+        assert!(jcells[0].get("transform").is_some());
+        assert!(jcells[1].get("sparsity").is_some());
+        std::fs::remove_dir_all(dir).ok();
+        // a grid without the axis stays transform-free (no schema drift)
+        let plain = SweepGrid::new(tiny_base())
+            .scheme(CompressionScheme::Fp32)
+            .expand();
+        assert_eq!(plain[0].transform, "id");
     }
 
     #[test]

@@ -8,7 +8,7 @@
 //! covers). The effective gradient is what gets compressed.
 
 use crate::data::Shard;
-use crate::fl::compression::CompressionPipeline;
+use crate::fl::compression::{CompressionPipeline, TransformState};
 use crate::fl::packet::Packet;
 use crate::model::Backend;
 use crate::util::rng::Rng;
@@ -19,6 +19,9 @@ pub struct Client {
     pub id: u32,
     pub shard: Shard,
     rng: Rng,
+    /// per-client transform state (error-feedback residual etc.) —
+    /// survives rounds, untouched by packet loss downstream
+    codec: TransformState,
     // scratch buffers reused across rounds (hot path: no allocation)
     grad: Vec<f32>,
     local: Vec<f32>,
@@ -33,6 +36,12 @@ pub struct ClientUpdate {
     /// strided sample of the normalized effective gradient for the
     /// pipeline's stats pass (empty when rate targeting is off)
     pub sample: Vec<f32>,
+    /// ‖residual‖₂ after this round's compress (NaN when error feedback
+    /// is off)
+    pub ef_norm: f64,
+    /// transmitted-coordinate fraction (1 for dense schemes, NaN when
+    /// the transform stage is inactive)
+    pub sparsity: f64,
 }
 
 impl Client {
@@ -41,6 +50,7 @@ impl Client {
             id,
             shard,
             rng: Rng::new(seed ^ (id as u64).wrapping_mul(0x9E3779B97F4A7C15)),
+            codec: TransformState::new(),
             grad: Vec::new(),
             local: Vec::new(),
             xs: Vec::new(),
@@ -86,14 +96,21 @@ impl Client {
         {
             *g = (p0 - pl) * inv_lr;
         }
-        let packet =
-            pipeline.compress(self.id, round, &self.grad, &mut self.rng)?;
-        // stats sample reuses the (μ, σ) the compressor just computed
-        let sample = pipeline.grad_sample_from(&self.grad, &packet);
+        let packet = pipeline.compress_with(
+            &mut self.codec, self.id, round, &self.grad, &mut self.rng)?;
+        // stats sample: the staged path captured a working-set sample
+        // when a transform is active; otherwise reuse the (μ, σ) the
+        // compressor just computed over the dense gradient
+        let sample = match self.codec.take_sample() {
+            Some(sample) => sample,
+            None => pipeline.grad_sample_from(&self.grad, &packet),
+        };
         Ok(ClientUpdate {
             packet,
             mean_loss: (loss_acc / local_iters.max(1) as f64) as f32,
             sample,
+            ef_norm: self.codec.last_ef_norm,
+            sparsity: self.codec.last_sparsity,
         })
     }
 
@@ -101,6 +118,11 @@ impl Client {
     /// quantization-error diagnostics.
     pub fn last_gradient(&self) -> &[f32] {
         &self.grad
+    }
+
+    /// The client's transform state (EF residual diagnostics).
+    pub fn codec_state(&self) -> &TransformState {
+        &self.codec
     }
 }
 

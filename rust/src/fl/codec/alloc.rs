@@ -1,0 +1,777 @@
+//! Heterogeneity-aware per-client rate allocation (water-filling a
+//! global uplink budget across clients), sitting on top of the staged
+//! quantize/code path.
+
+use crate::coding::arithmetic::ArithmeticCoder;
+use crate::coding::huffman::HuffmanCode;
+use crate::fl::packet::Packet;
+use crate::quant::codebook::Codebook;
+use crate::util::rng::Rng;
+use crate::util::{Error, Result};
+
+use super::design::{codebook_broadcast_bits, designed_codebook};
+use super::pipeline::RateTarget;
+use super::quantize::{encode_staged, CodebookCodec, QuantBackend};
+use super::scheme::{CompressionScheme, WireCoder};
+use super::transform::{TransformCfg, TransformState};
+
+/// Per-client rate-allocation mode.
+///
+/// `Uniform` (the default) keeps today's behavior exactly: every client
+/// encodes against the single shared codebook, no extra side
+/// information, no allocation state, no downlink traffic — runs are
+/// byte-identical to the pre-allocator code path.
+///
+/// `WaterFill` splits a global per-round uplink budget *across* clients
+/// (the per-client/per-group precision assignment of FedFQ, and the
+/// rate–distortion budget framing of Mitchell et al. 2022): each client
+/// gets its own codebook bit-width, solved by greedy water-filling over
+/// the clients' observed gradient second moments and their
+/// [`crate::coordinator::network::ChannelSpec`] bandwidth factors, and
+/// re-solved every `adapt_every` rounds as gradient energies drift.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum RateAllocation {
+    /// one shared codebook for every client (the §3.1 baseline)
+    #[default]
+    Uniform,
+    /// water-filling under a global round budget
+    WaterFill {
+        /// round uplink budget, expressed as the expected *encoded*
+        /// payload bits per gradient coordinate averaged over the
+        /// round's clients (the encoded rate — not the nominal width —
+        /// is what RC-FED constrains). The solver enforces
+        /// `mean_c rate(b_c) <= budget_bpc` over the client population,
+        /// so a uniformly sampled round meets the budget in expectation
+        /// (exactly under full participation).
+        budget_bpc: f64,
+        /// re-solve the allocation every this many rounds
+        adapt_every: usize,
+        /// smallest grantable codebook width (bits)
+        min_bits: u32,
+        /// largest grantable codebook width (bits)
+        max_bits: u32,
+    },
+}
+
+impl RateAllocation {
+    pub fn is_on(&self) -> bool {
+        !matches!(self, RateAllocation::Uniform)
+    }
+
+    /// Stable row-key label for CSVs, `"uniform"` when disabled.
+    pub fn label(&self) -> String {
+        match *self {
+            RateAllocation::Uniform => "uniform".into(),
+            RateAllocation::WaterFill {
+                budget_bpc, adapt_every, min_bits, max_bits,
+            } => {
+                format!("wf{budget_bpc}w{adapt_every}b{min_bits}-{max_bits}")
+            }
+        }
+    }
+
+    /// Reject nonsensical budgets and unsupported scheme/controller
+    /// combinations up front, so a bad configuration is a config error,
+    /// not a silent no-op.
+    pub fn validate(
+        &self,
+        scheme: &CompressionScheme,
+        target: &RateTarget,
+    ) -> Result<()> {
+        let RateAllocation::WaterFill {
+            budget_bpc, adapt_every, min_bits, max_bits,
+        } = *self
+        else {
+            return Ok(());
+        };
+        if !(budget_bpc > 0.0 && budget_bpc.is_finite()) {
+            return Err(Error::Config(format!(
+                "allocation budget {budget_bpc} must be finite and > 0")));
+        }
+        if adapt_every == 0 {
+            return Err(Error::Config(
+                "allocation needs adapt-every >= 1".into()));
+        }
+        if !(1..=8).contains(&min_bits) || !(1..=8).contains(&max_bits)
+            || min_bits > max_bits
+        {
+            return Err(Error::Config(format!(
+                "allocation width range {min_bits}..={max_bits} must \
+                 satisfy 1 <= min <= max <= 8 (symbols are u8)")));
+        }
+        match scheme {
+            CompressionScheme::Qsgd { .. } | CompressionScheme::Fp32 => {
+                return Err(Error::Config(format!(
+                    "rate allocation needs a designed-codebook scheme \
+                     (rcfed|lloyd|nqfl|uniform); got {scheme:?}")));
+            }
+            _ => {}
+        }
+        if target.is_on() {
+            return Err(Error::Config(
+                "rate allocation and closed-loop rate targeting both \
+                 steer the codebook; run one controller at a time".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Allocation diagnostics for one round, surfaced into the metrics log
+/// and sweep reports.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AllocSnapshot {
+    /// Gini coefficient of the current per-client widths
+    pub gini: f64,
+    /// mean assigned width (bits)
+    pub mean_bits: f64,
+    /// narrowest / widest assigned widths
+    pub min_bits: u32,
+    pub max_bits: u32,
+}
+
+/// One designed operating point of the allocator's width ladder: the
+/// universal N(0,1) design of the base scheme rebound to `width` bits,
+/// with its wire codes and the design statistics the solver needs.
+struct WidthDesign {
+    width: u32,
+    codebook: Codebook,
+    huffman: HuffmanCode,
+    arith: ArithmeticCoder,
+    /// design MSE on the normalized source (scales by σ_c² per client)
+    mse: f64,
+    /// expected encoded bits/coordinate under the configured wire coder
+    rate: f64,
+    /// downlink cost of publishing this codebook to one client
+    broadcast_bits: u64,
+}
+
+impl WidthDesign {
+    fn codec(&self, wire: WireCoder) -> CodebookCodec<'_> {
+        CodebookCodec {
+            codebook: &self.codebook,
+            huffman: &self.huffman,
+            arith: &self.arith,
+            wire,
+        }
+    }
+}
+
+/// One candidate width upgrade in the greedy water-filling heap, ordered
+/// by distortion-reduction per budget bit (ties broken toward the lower
+/// client index, so the solve is deterministic).
+#[derive(Clone, Copy)]
+struct Upgrade {
+    ratio: f64,
+    client: usize,
+    /// ladder index the client would move to
+    next: usize,
+}
+
+impl PartialEq for Upgrade {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+impl Eq for Upgrade {}
+impl PartialOrd for Upgrade {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Upgrade {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.ratio
+            .total_cmp(&other.ratio)
+            .then_with(|| other.client.cmp(&self.client))
+    }
+}
+
+/// Heterogeneity-aware per-client rate allocator (the `WaterFill` mode
+/// of [`RateAllocation`]).
+///
+/// The allocator turns the pipeline's single-shared-codebook assumption
+/// into a per-client one:
+///
+/// * every width in `[min_bits, max_bits]` is designed once against the
+///   universal N(0,1) model and served from the process-wide design
+///   cache — an allocated width-`b` codebook is *identical* to the
+///   static width-`b` design, so allocation shares cache entries with
+///   static sweeps instead of needing private keys;
+/// * each adaptation window it water-fills the budget greedily: start
+///   every client at `min_bits`, then repeatedly grant the width
+///   upgrade with the best marginal distortion reduction per encoded
+///   bit, where client `c`'s priority is `E_c · f_c` (`E_c` its observed
+///   per-coordinate gradient second moment, `f_c` its channel bandwidth
+///   factor — fast, energetic clients earn wide codebooks, slow or
+///   quiescent ones cheap narrow ones);
+/// * per-client codebook *versions* travel as the third side-info word
+///   of every packet; the PS rejects packets whose version does not
+///   match the sender's current assignment, and only clients whose
+///   width actually changed are charged a codebook publication on the
+///   downlink ledger.
+///
+/// A transform stage composes per client: the allocator quantizes the
+/// transformed working set against the sender's assigned codebook; the
+/// budget solve keeps its dense-rate semantics while the measured
+/// ledger (and `realized_bpc`) reflect the index+value bits actually
+/// sent.
+pub struct RateAllocator {
+    base: CompressionScheme,
+    wire: WireCoder,
+    transform: TransformCfg,
+    budget_bpc: f64,
+    adapt_every: usize,
+    min_bits: u32,
+    /// width ladder, ascending `min_bits..=max_bits`
+    table: Vec<WidthDesign>,
+    /// per-client assigned widths (empty until [`Self::bind`])
+    pub(crate) widths: Vec<u32>,
+    /// per-client codebook versions (bumped when a client's width moves)
+    versions: Vec<u32>,
+    /// per-client bandwidth factors, normalized to mean 1
+    factors: Vec<f64>,
+    /// per-client second-moment accumulators of the *current* window
+    /// (sum, count), folded into `energy_last` at each window end
+    energy_sum: Vec<f64>,
+    energy_n: Vec<u64>,
+    /// latest per-window energy estimate per client (flat prior 1.0;
+    /// clients unseen in a window keep their previous estimate) — a
+    /// windowed tracker, so the allocation follows gradient-energy
+    /// drift instead of averaging over the whole run
+    energy_last: Vec<f64>,
+    /// packets observed in the current adaptation window
+    window_obs: u64,
+}
+
+impl RateAllocator {
+    pub(crate) fn design(
+        scheme: CompressionScheme,
+        wire: WireCoder,
+        transform: TransformCfg,
+        budget_bpc: f64,
+        adapt_every: usize,
+        min_bits: u32,
+        max_bits: u32,
+    ) -> Result<RateAllocator> {
+        let mut table = Vec::with_capacity((max_bits - min_bits + 1) as usize);
+        for width in min_bits..=max_bits {
+            let (codebook, rep) = designed_codebook(scheme.with_bits(width))?;
+            let huffman = HuffmanCode::from_probs(&rep.probs)?;
+            let arith = ArithmeticCoder::from_probs(&rep.probs)?;
+            let rate = match wire {
+                WireCoder::Huffman => rep.huffman_rate,
+                WireCoder::Arithmetic => rep.entropy_bits,
+            };
+            let broadcast_bits = codebook_broadcast_bits(&codebook);
+            table.push(WidthDesign {
+                width,
+                codebook,
+                huffman,
+                arith,
+                mse: rep.mse,
+                rate,
+                broadcast_bits,
+            });
+        }
+        if budget_bpc < table[0].rate {
+            return Err(Error::Config(format!(
+                "allocation budget {budget_bpc} bits/coord is below the \
+                 min-width (b={min_bits}) encoded rate {:.4}",
+                table[0].rate
+            )));
+        }
+        Ok(RateAllocator {
+            base: scheme,
+            wire,
+            transform,
+            budget_bpc,
+            adapt_every,
+            min_bits,
+            table,
+            widths: Vec::new(),
+            versions: Vec::new(),
+            factors: Vec::new(),
+            energy_sum: Vec::new(),
+            energy_n: Vec::new(),
+            energy_last: Vec::new(),
+            window_obs: 0,
+        })
+    }
+
+    fn design_of(&self, width: u32) -> Result<&WidthDesign> {
+        self.table
+            .get(width.checked_sub(self.min_bits).map_or(usize::MAX, |i| {
+                i as usize
+            }))
+            .ok_or_else(|| {
+                Error::Coding(format!(
+                    "width {width} outside the allocation ladder \
+                     [{}..={}]",
+                    self.min_bits,
+                    self.table.last().map(|d| d.width).unwrap_or(0)
+                ))
+            })
+    }
+
+    /// Bind the allocator to a client population: record the per-client
+    /// bandwidth factors and solve the initial allocation (flat energy
+    /// prior `E_c = 1`, so the first assignment skews by bandwidth only
+    /// — exactly what is known before any gradient is seen). The initial
+    /// codebooks are part of training setup and are not charged to the
+    /// downlink, matching the uncharged initial §3.1 broadcast.
+    pub(crate) fn bind(
+        &mut self,
+        num_clients: usize,
+        factors: &[f64],
+    ) -> Result<()> {
+        if num_clients == 0 {
+            return Err(Error::Config(
+                "rate allocation needs at least one client".into()));
+        }
+        let mean = if factors.is_empty() {
+            1.0
+        } else {
+            factors.iter().sum::<f64>() / factors.len() as f64
+        };
+        self.factors = (0..num_clients)
+            .map(|c| {
+                let f = factors.get(c).copied().unwrap_or(mean);
+                if mean > 0.0 && f > 0.0 {
+                    f / mean
+                } else {
+                    1.0
+                }
+            })
+            .collect();
+        self.energy_sum = vec![0.0; num_clients];
+        self.energy_n = vec![0; num_clients];
+        self.energy_last = vec![1.0; num_clients];
+        self.versions = vec![0; num_clients];
+        self.window_obs = 0;
+        let priority = self.factors.clone();
+        self.widths = self.solve(&priority);
+        Ok(())
+    }
+
+    pub(crate) fn bound(&self) -> bool {
+        !self.widths.is_empty()
+    }
+
+    /// Greedy water-filling: start every client at the ladder floor,
+    /// then grant one-step width upgrades in order of marginal
+    /// distortion reduction per encoded budget bit until the budget is
+    /// exhausted. The marginal gains `p_c · (mse_i − mse_{i+1})` are
+    /// decreasing along each client's ladder (the design MSE roughly
+    /// quarters per bit), so the greedy solution is the integer
+    /// water-filling optimum up to the final partial increment.
+    fn solve(&self, priority: &[f64]) -> Vec<u32> {
+        let k = priority.len();
+        let budget_total = self.budget_bpc * k as f64;
+        let mut widths = vec![self.min_bits; k];
+        let mut spent = self.table[0].rate * k as f64;
+        let mut heap = std::collections::BinaryHeap::with_capacity(k);
+        let upgrade = |client: usize, next: usize| -> Upgrade {
+            let gain = (self.table[next - 1].mse - self.table[next].mse)
+                .max(0.0)
+                * priority[client].max(1e-12);
+            let cost =
+                (self.table[next].rate - self.table[next - 1].rate).max(1e-9);
+            Upgrade { ratio: gain / cost, client, next }
+        };
+        if self.table.len() > 1 {
+            for c in 0..k {
+                heap.push(upgrade(c, 1));
+            }
+        }
+        while let Some(u) = heap.pop() {
+            let cost = (self.table[u.next].rate
+                - self.table[u.next - 1].rate)
+                .max(1e-9);
+            if spent + cost > budget_total + 1e-9 {
+                // this client's next step no longer fits; a narrower
+                // step from another client still might
+                continue;
+            }
+            spent += cost;
+            widths[u.client] = self.table[u.next].width;
+            if u.next + 1 < self.table.len() {
+                heap.push(upgrade(u.client, u.next + 1));
+            }
+        }
+        widths
+    }
+
+    /// Fold one ingested packet's (μ, σ) into the sender's energy
+    /// accumulator. Only packets the server actually decoded count, so
+    /// lost/corrupt uplinks cannot steer the allocation.
+    pub(crate) fn observe_packet(&mut self, packet: &Packet) {
+        let c = packet.client_id as usize;
+        if c >= self.energy_sum.len() || packet.side_info.len() < 2 {
+            return;
+        }
+        let sigma = packet.side_info[1] as f64;
+        if !sigma.is_finite() {
+            return;
+        }
+        self.energy_sum[c] += sigma * sigma;
+        self.energy_n[c] += 1;
+        self.window_obs += 1;
+    }
+
+    /// Close round `round` (0-based). On an adaptation-window boundary,
+    /// re-solve the allocation against the observed energies; returns
+    /// the per-client publication costs when any width moved. A window
+    /// in which no packet was ingested (channel blackout) holds the
+    /// current allocation.
+    pub(crate) fn end_round(&mut self, round: usize) -> Option<Vec<(u32, u64)>> {
+        if (round + 1) % self.adapt_every != 0 || !self.bound() {
+            return None;
+        }
+        if self.window_obs == 0 {
+            return None;
+        }
+        self.window_obs = 0;
+        // fold the window's observations into the per-client estimate
+        // (unseen clients keep their previous one) and reset the window
+        for ((last, sum), n) in self
+            .energy_last
+            .iter_mut()
+            .zip(self.energy_sum.iter_mut())
+            .zip(self.energy_n.iter_mut())
+        {
+            if *n > 0 {
+                *last = *sum / *n as f64;
+                *sum = 0.0;
+                *n = 0;
+            }
+        }
+        let priority: Vec<f64> = self
+            .factors
+            .iter()
+            .zip(self.energy_last.iter())
+            .map(|(&f, &e)| e * f)
+            .collect();
+        let new = self.solve(&priority);
+        if new == self.widths {
+            return None;
+        }
+        let mut publications = Vec::new();
+        for (c, (&w_new, w_old)) in
+            new.iter().zip(self.widths.iter()).enumerate()
+        {
+            if w_new != *w_old {
+                self.versions[c] += 1;
+                let bits = self
+                    .design_of(w_new)
+                    .map(|d| d.broadcast_bits)
+                    .unwrap_or(0);
+                publications.push((c as u32, bits));
+            }
+        }
+        self.widths = new;
+        Some(publications)
+    }
+
+    /// Compress a flat gradient against the sender's assigned codebook.
+    /// Packets carry the client's allocation version as a third
+    /// side-info word and the assigned width in the `bits_per_symbol`
+    /// header field. The transform stage (if any) runs against the
+    /// caller's per-client state.
+    pub(crate) fn compress_with(
+        &self,
+        state: &mut TransformState,
+        client_id: u32,
+        round: u32,
+        grad: &[f32],
+        rng: &mut Rng,
+    ) -> Result<Packet> {
+        let width =
+            self.widths.get(client_id as usize).copied().ok_or_else(|| {
+                Error::Config(format!(
+                    "client {client_id} outside the bound allocation \
+                     ({} clients); was bind_clients called?",
+                    self.widths.len()
+                ))
+            })?;
+        let design = self.design_of(width)?;
+        if self.transform.is_active() {
+            let backend = QuantBackend::Codebook(design.codec(self.wire));
+            let mut pkt = encode_staged(
+                &backend,
+                self.transform,
+                state,
+                client_id,
+                round,
+                grad,
+                rng,
+                self.base.tag(),
+                width as u8,
+                false,
+            )?;
+            pkt.side_info.push(self.versions[client_id as usize] as f32);
+            return Ok(pkt);
+        }
+        let (mu, sigma, payload, payload_bits) =
+            design.codec(self.wire).encode(grad)?;
+        Ok(Packet {
+            client_id,
+            round,
+            scheme: self.base.tag(),
+            bits_per_symbol: width as u8,
+            d: grad.len() as u32,
+            side_info: vec![
+                mu,
+                sigma,
+                self.versions[client_id as usize] as f32,
+            ],
+            payload,
+            payload_bits,
+            table_bits: 0, // universal design-time codes (§3.1)
+            index_bits: 0,
+        })
+    }
+
+    /// PS side: decode against the *sender's* codebook (width from the
+    /// packet header, checked against the current assignment) and
+    /// accumulate. Stale allocation versions are rejected as recoverable
+    /// `Err`s — a packet encoded under an old width would otherwise
+    /// silently reconstruct garbage.
+    pub(crate) fn decompress_accumulate(
+        &self,
+        packet: &Packet,
+        acc: &mut [f32],
+    ) -> Result<()> {
+        let d = packet.d as usize;
+        if acc.len() != d {
+            return Err(Error::Coding(format!(
+                "accumulator {} != packet d {d}", acc.len())));
+        }
+        if packet.side_info.len() != 3 {
+            return Err(Error::Coding(format!(
+                "allocated packet carries {} side-info values, expected \
+                 3 (μ, σ, version)",
+                packet.side_info.len()
+            )));
+        }
+        let c = packet.client_id as usize;
+        let Some(&expected_version) = self.versions.get(c) else {
+            return Err(Error::Coding(format!(
+                "client {} outside the bound allocation", packet.client_id
+            )));
+        };
+        let version = packet.side_version()?;
+        if version != expected_version {
+            return Err(Error::Coding(format!(
+                "stale allocation version {version} from client {} \
+                 (current {expected_version})",
+                packet.client_id
+            )));
+        }
+        let width = packet.bits_per_symbol as u32;
+        if self.widths[c] != width {
+            return Err(Error::Coding(format!(
+                "client {} sent width {width}, allocation says {}",
+                packet.client_id, self.widths[c]
+            )));
+        }
+        let design = self.design_of(width)?;
+        let (mu, sigma) = (packet.side_info[0], packet.side_info[1]);
+        let codec = design.codec(self.wire);
+        if self.transform.is_sparse() {
+            codec.decode_sparse_accumulate(packet, mu, sigma, acc)
+        } else {
+            codec.decode_accumulate(packet, mu, sigma, acc)
+        }
+    }
+
+    /// Current width histogram `(width, clients)`, ascending.
+    pub(crate) fn histogram(&self) -> Vec<(u32, usize)> {
+        self.table
+            .iter()
+            .map(|d| {
+                (
+                    d.width,
+                    self.widths.iter().filter(|&&w| w == d.width).count(),
+                )
+            })
+            .filter(|&(_, n)| n > 0)
+            .collect()
+    }
+
+    pub(crate) fn mean_bits(&self) -> f64 {
+        if self.widths.is_empty() {
+            return f64::NAN;
+        }
+        self.widths.iter().map(|&w| w as f64).sum::<f64>()
+            / self.widths.len() as f64
+    }
+
+    /// Gini coefficient of the assigned widths — 0 for a uniform
+    /// allocation, growing as the budget concentrates on few clients.
+    pub(crate) fn gini(&self) -> f64 {
+        let n = self.widths.len();
+        if n == 0 {
+            return 0.0;
+        }
+        let mut xs: Vec<f64> = self.widths.iter().map(|&w| w as f64).collect();
+        xs.sort_by(f64::total_cmp);
+        let sum: f64 = xs.iter().sum();
+        if sum <= 0.0 {
+            return 0.0;
+        }
+        let weighted: f64 = xs
+            .iter()
+            .enumerate()
+            .map(|(i, &x)| (i as f64 + 1.0) * x)
+            .sum();
+        (2.0 * weighted) / (n as f64 * sum) - (n as f64 + 1.0) / n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::pipeline::{CompressionPipeline, RoundAdaptation};
+    use super::*;
+    use crate::quant::rcq::LengthModel;
+
+    fn gaussian_grad(n: usize, mu: f32, sigma: f32, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        let mut g = vec![0f32; n];
+        rng.fill_normal_f32(&mut g, mu, sigma);
+        g
+    }
+
+    fn rcfed_scheme() -> CompressionScheme {
+        CompressionScheme::RcFed {
+            bits: 3,
+            lambda: 0.05,
+            length_model: LengthModel::Huffman,
+        }
+    }
+
+    fn waterfill(budget: f64) -> RateAllocation {
+        RateAllocation::WaterFill {
+            budget_bpc: budget,
+            adapt_every: 1,
+            min_bits: 1,
+            max_bits: 6,
+        }
+    }
+
+    // `allocation_validation` lives in `tests/rate_allocation.rs`
+    // (public API only), next to the other allocator acceptance tests.
+
+    #[test]
+    fn uniform_allocation_is_bit_identical_to_the_plain_pipeline() {
+        let plain = CompressionPipeline::design(
+            rcfed_scheme(), WireCoder::Huffman, RateTarget::Off)
+        .unwrap();
+        let mut alloc = CompressionPipeline::design_alloc(
+            rcfed_scheme(),
+            WireCoder::Huffman,
+            RateTarget::Off,
+            RateAllocation::Uniform,
+        )
+        .unwrap();
+        assert!(!alloc.is_allocated());
+        // binding is a free no-op without an allocation
+        alloc.bind_clients(4, &[1.0; 4]).unwrap();
+        assert!(alloc.alloc_snapshot().is_none());
+        assert!(alloc.alloc_histogram().is_empty());
+        let g = gaussian_grad(4096, 0.0, 0.5, 91);
+        let mut r1 = Rng::new(92);
+        let mut r2 = Rng::new(92);
+        let p1 = plain.compress(0, 3, &g, &mut r1).unwrap();
+        let p2 = alloc.compress(0, 3, &g, &mut r2).unwrap();
+        assert_eq!(p1.to_bytes(), p2.to_bytes());
+        assert_eq!(alloc.end_round(0).unwrap(), RoundAdaptation::None);
+    }
+
+    #[test]
+    fn waterfill_assigns_wider_codebooks_to_energetic_clients() {
+        let mut pipe = CompressionPipeline::design_alloc(
+            rcfed_scheme(),
+            WireCoder::Huffman,
+            RateTarget::Off,
+            waterfill(2.5),
+        )
+        .unwrap();
+        assert!(pipe.is_allocated());
+        // compressing before bind_clients is a config error, not a panic
+        let g = gaussian_grad(2048, 0.0, 1.0, 93);
+        let mut rng = Rng::new(94);
+        assert!(pipe.compress(0, 0, &g, &mut rng).is_err());
+        pipe.bind_clients(4, &[1.0; 4]).unwrap();
+        // flat priors + flat bandwidth ⇒ near-uniform initial allocation
+        let snap = pipe.alloc_snapshot().unwrap();
+        assert!(snap.max_bits - snap.min_bits <= 1, "{snap:?}");
+
+        // one window of heterogeneous energies: client 3 ≫ the rest
+        let sigmas = [0.01f32, 0.01, 0.01, 2.0];
+        for (c, &s) in sigmas.iter().enumerate() {
+            let mut grad = vec![0f32; 2048];
+            Rng::new(100 + c as u64).fill_normal_f32(&mut grad, 0.0, s);
+            let pkt = pipe.compress(c as u32, 0, &grad, &mut rng).unwrap();
+            assert_eq!(pkt.side_info.len(), 3, "version word missing");
+            let mut acc = vec![0f32; grad.len()];
+            pipe.decompress_accumulate(&pkt, &mut acc).unwrap();
+            pipe.observe_delivery(&pkt, &[]);
+        }
+        let stale_probe = pipe.compress(3, 0, &g, &mut rng).unwrap();
+        match pipe.end_round(0).unwrap() {
+            RoundAdaptation::PerClient { publications } => {
+                assert!(!publications.is_empty());
+                assert!(publications.iter().all(|&(_, bits)| bits > 0));
+            }
+            other => panic!("expected per-client publications, got {other:?}"),
+        }
+        // the energetic client earns the widest codebook
+        let w3 = pipe.client_width(3).unwrap();
+        for c in 0..3 {
+            assert!(
+                pipe.client_width(c).unwrap() < w3,
+                "client {c} width {} vs energetic client {w3}",
+                pipe.client_width(c).unwrap()
+            );
+        }
+        let snap = pipe.alloc_snapshot().unwrap();
+        assert!(snap.gini > 0.0, "skewed allocation must show in Gini");
+        assert!(!pipe.alloc_histogram().is_empty());
+        // packets from before the re-allocation are stale and rejected
+        let mut acc = vec![0f32; g.len()];
+        assert!(pipe.decompress_accumulate(&stale_probe, &mut acc).is_err());
+        // fresh packets carry — and pass — the sender's new version
+        let fresh = pipe.compress(3, 1, &g, &mut rng).unwrap();
+        pipe.decompress_accumulate(&fresh, &mut acc).unwrap();
+        // a wrong-width packet (header tampered) is rejected
+        let mut forged = fresh.clone();
+        forged.bits_per_symbol = pipe.client_width(0).unwrap() as u8;
+        assert!(pipe.decompress_accumulate(&forged, &mut acc).is_err());
+    }
+
+    // `waterfill_respects_the_budget_and_bandwidth_priors` and the
+    // allocated-top-k roundtrip live in `tests/rate_allocation.rs`
+    // (public API only).
+
+    #[test]
+    fn allocation_blackout_window_holds_the_assignment() {
+        // the allocator's own blackout guard: a window with no ingested
+        // packet must hold widths, versions and publish nothing
+        let mut pipe = CompressionPipeline::design_alloc(
+            rcfed_scheme(),
+            WireCoder::Huffman,
+            RateTarget::Off,
+            waterfill(2.5),
+        )
+        .unwrap();
+        pipe.bind_clients(3, &[1.0; 3]).unwrap();
+        let before: Vec<u32> =
+            (0..3).map(|c| pipe.client_width(c).unwrap()).collect();
+        assert_eq!(pipe.end_round(0).unwrap(), RoundAdaptation::None);
+        let after: Vec<u32> =
+            (0..3).map(|c| pipe.client_width(c).unwrap()).collect();
+        assert_eq!(before, after);
+    }
+
+}

@@ -1,0 +1,662 @@
+//! The static [`Compressor`]: one designed quantize/code backend plus a
+//! transform configuration, bound at construction (the "computed once at
+//! the beginning of the training phase" property of §3.1).
+
+use crate::coding::arithmetic::ArithmeticCoder;
+use crate::coding::huffman::HuffmanCode;
+use crate::fl::packet::{Packet, SchemeTag};
+use crate::quant::codebook::Codebook;
+use crate::quant::qsgd::Qsgd;
+use crate::util::rng::Rng;
+use crate::util::{Error, Result};
+
+use super::design::designed_codebook;
+use super::quantize::{
+    decode_sparse_fp32, encode_staged, qsgd_encode, CodebookCodec, Kernel,
+    QuantBackend,
+};
+use super::scheme::{CompressionScheme, WireCoder};
+use super::transform::{TransformCfg, TransformState};
+
+/// A ready-to-use compressor (design done once at construction).
+pub struct Compressor {
+    pub scheme: CompressionScheme,
+    pub wire: WireCoder,
+    /// the transform stage ahead of quantization (identity by default)
+    pub transform: TransformCfg,
+    pub(crate) kernel: Kernel,
+    /// design-time diagnostics for codebook schemes
+    pub design_mse: Option<f64>,
+    pub design_rate: Option<f64>,
+}
+
+impl Compressor {
+    /// Design the quantizer + wire code against the universal N(0,1)
+    /// model (§3.1). Deterministic; no data needed. Codebook schemes are
+    /// served from the process-wide design cache (see
+    /// [`designed_codebook`]), so repeated sweep cells reuse the
+    /// expensive Lloyd/RC alternation instead of re-running it.
+    pub fn design(scheme: CompressionScheme, wire: WireCoder) -> Result<Compressor> {
+        Compressor::design_with_transform(
+            scheme, wire, TransformCfg::default())
+    }
+
+    /// Like [`Self::design`], with an explicit transform stage.
+    /// `TransformCfg::identity()` is byte-identical to [`Self::design`].
+    pub fn design_with_transform(
+        scheme: CompressionScheme,
+        wire: WireCoder,
+        transform: TransformCfg,
+    ) -> Result<Compressor> {
+        transform.validate(&scheme)?;
+        let (kernel, mse, rate) = match scheme {
+            CompressionScheme::Qsgd { bits } => {
+                (Kernel::Qsgd(Qsgd::new(bits)), None, None)
+            }
+            CompressionScheme::Fp32 => (Kernel::Fp32, None, None),
+            _ => {
+                let (cb, rep) = designed_codebook(scheme)?;
+                let huffman = HuffmanCode::from_probs(&rep.probs)?;
+                let arith = ArithmeticCoder::from_probs(&rep.probs)?;
+                (
+                    Kernel::Codebook { codebook: cb, huffman, arith },
+                    Some(rep.mse),
+                    Some(rep.huffman_rate),
+                )
+            }
+        };
+        Ok(Compressor {
+            scheme,
+            wire,
+            transform,
+            kernel,
+            design_mse: mse,
+            design_rate: rate,
+        })
+    }
+
+    /// The designed codebook (None for QSGD/Fp32).
+    pub fn codebook(&self) -> Option<&Codebook> {
+        match &self.kernel {
+            Kernel::Codebook { codebook, .. } => Some(codebook),
+            _ => None,
+        }
+    }
+
+    /// Borrowed quantize-backend view for the staged encoder.
+    pub(crate) fn backend(&self) -> QuantBackend<'_> {
+        match &self.kernel {
+            Kernel::Codebook { codebook, huffman, arith } => {
+                QuantBackend::Codebook(CodebookCodec {
+                    codebook,
+                    huffman,
+                    arith,
+                    wire: self.wire,
+                })
+            }
+            Kernel::Qsgd(q) => QuantBackend::Qsgd(q),
+            Kernel::Fp32 => QuantBackend::Fp32,
+        }
+    }
+
+    /// Compress a flat gradient into an uplink packet. `rng` drives
+    /// QSGD's stochastic rounding (unused by deterministic schemes).
+    /// With an active non-EF transform this runs the staged path on a
+    /// throwaway state; error feedback *requires* per-client state, so
+    /// it must go through [`Self::compress_with`].
+    pub fn compress(
+        &self,
+        client_id: u32,
+        round: u32,
+        grad: &[f32],
+        rng: &mut Rng,
+    ) -> Result<Packet> {
+        if self.transform.is_active() {
+            if self.transform.error_feedback {
+                return Err(Error::Config(
+                    "error feedback carries per-client state; call \
+                     compress_with"
+                        .into(),
+                ));
+            }
+            let mut tmp = TransformState::new();
+            return self.compress_with(&mut tmp, client_id, round, grad, rng);
+        }
+        self.compress_dense(client_id, round, grad, rng)
+    }
+
+    /// Compress through the full staged path, threading the caller's
+    /// per-client [`TransformState`]. Identical to [`Self::compress`]
+    /// when the transform is inactive (the state is untouched).
+    pub fn compress_with(
+        &self,
+        state: &mut TransformState,
+        client_id: u32,
+        round: u32,
+        grad: &[f32],
+        rng: &mut Rng,
+    ) -> Result<Packet> {
+        self.compress_with_sample(state, client_id, round, grad, rng, false)
+    }
+
+    /// [`Self::compress_with`] plus the adaptive controller's stats
+    /// capture (the sample lands in `state`; see
+    /// [`TransformState::take_sample`]).
+    pub(crate) fn compress_with_sample(
+        &self,
+        state: &mut TransformState,
+        client_id: u32,
+        round: u32,
+        grad: &[f32],
+        rng: &mut Rng,
+        capture_sample: bool,
+    ) -> Result<Packet> {
+        if !self.transform.is_active() {
+            return self.compress_dense(client_id, round, grad, rng);
+        }
+        encode_staged(
+            &self.backend(),
+            self.transform,
+            state,
+            client_id,
+            round,
+            grad,
+            rng,
+            self.scheme.tag(),
+            self.scheme.bits() as u8,
+            capture_sample,
+        )
+    }
+
+    /// The legacy dense hot path — byte-identical to the pre-codec
+    /// module for every scheme.
+    fn compress_dense(
+        &self,
+        client_id: u32,
+        round: u32,
+        grad: &[f32],
+        rng: &mut Rng,
+    ) -> Result<Packet> {
+        match &self.kernel {
+            Kernel::Codebook { codebook, huffman, arith } => {
+                let codec = CodebookCodec {
+                    codebook,
+                    huffman,
+                    arith,
+                    wire: self.wire,
+                };
+                let (mu, sigma, payload, payload_bits) = codec.encode(grad)?;
+                Ok(Packet {
+                    client_id,
+                    round,
+                    scheme: self.scheme.tag(),
+                    bits_per_symbol: self.scheme.bits() as u8,
+                    d: grad.len() as u32,
+                    side_info: vec![mu, sigma],
+                    payload,
+                    payload_bits,
+                    table_bits: 0, // universal design-time code (§3.1)
+                    index_bits: 0,
+                })
+            }
+            Kernel::Qsgd(q) => {
+                let e = qsgd_encode(q, grad, rng)?;
+                Ok(Packet {
+                    client_id,
+                    round,
+                    scheme: SchemeTag::Qsgd,
+                    bits_per_symbol: self.scheme.bits() as u8,
+                    d: grad.len() as u32,
+                    // one 32-bit ‖v‖ per bucket — bucketing's real cost
+                    side_info: e.msg.norms,
+                    payload: e.payload,
+                    payload_bits: e.payload_bits,
+                    table_bits: e.table_bits,
+                    index_bits: 0,
+                })
+            }
+            Kernel::Fp32 => {
+                let mut payload = Vec::with_capacity(grad.len() * 4);
+                for &x in grad {
+                    payload.extend_from_slice(&x.to_le_bytes());
+                }
+                Ok(Packet {
+                    client_id,
+                    round,
+                    scheme: SchemeTag::Fp32,
+                    bits_per_symbol: 32,
+                    d: grad.len() as u32,
+                    side_info: vec![],
+                    payload,
+                    payload_bits: grad.len() as u64 * 32,
+                    table_bits: 0,
+                    index_bits: 0,
+                })
+            }
+        }
+    }
+
+    /// PS side: decode a packet and accumulate the reconstructed gradient
+    /// into `acc` (eq. (11) then the sum of §3.4).
+    pub fn decompress_accumulate(
+        &self,
+        packet: &Packet,
+        acc: &mut [f32],
+    ) -> Result<()> {
+        let d = packet.d as usize;
+        if acc.len() != d {
+            return Err(Error::Coding(format!(
+                "accumulator {} != packet d {d}", acc.len())));
+        }
+        match &self.kernel {
+            Kernel::Codebook { .. } => {
+                // (μ, σ) side info — a corrupted packet can carry any
+                // count or value, so validate before touching it
+                if packet.side_info.len() != 2 {
+                    return Err(Error::Coding(format!(
+                        "codebook packet carries {} side-info values, \
+                         expected 2 (μ, σ)",
+                        packet.side_info.len()
+                    )));
+                }
+                let (mu, sigma) = (packet.side_info[0], packet.side_info[1]);
+                self.decode_codebook_accumulate(packet, mu, sigma, acc)?;
+            }
+            Kernel::Qsgd(q) => {
+                // read the code-length table from the payload head, then
+                // decode the symbol stream with the rebuilt canonical code
+                let table_bytes = (5 * q.num_symbols()).div_ceil(8);
+                if packet.payload.len() < table_bytes {
+                    return Err(Error::Coding("qsgd packet too short".into()));
+                }
+                let mut r =
+                    crate::coding::bitio::BitReader::new(&packet.payload);
+                let lens: Vec<u32> = (0..q.num_symbols())
+                    .map(|_| r.read(5) as u32)
+                    .collect();
+                let code = HuffmanCode::from_lengths(&lens)?;
+                let symbols =
+                    code.decode(&packet.payload[table_bytes..], d)?;
+                if packet.side_info.len() != q.num_buckets(d) {
+                    return Err(Error::Coding(format!(
+                        "qsgd: {} norms for {} buckets",
+                        packet.side_info.len(),
+                        q.num_buckets(d)
+                    )));
+                }
+                if !packet.side_info.iter().all(|n| n.is_finite()) {
+                    return Err(Error::Coding(
+                        "qsgd: non-finite bucket norm".into()));
+                }
+                let msg = crate::quant::qsgd::QsgdMessage {
+                    norms: packet.side_info.clone(),
+                    symbols,
+                };
+                q.decode_accumulate(&msg, acc);
+            }
+            Kernel::Fp32 => {
+                if self.transform.is_sparse() {
+                    decode_sparse_fp32(packet, acc)?;
+                    return Ok(());
+                }
+                // a truncated/corrupted packet may carry fewer payload
+                // bytes than its claimed dimension needs
+                if packet.payload.len() < 4 * d {
+                    return Err(Error::Coding(format!(
+                        "fp32 payload {} bytes < 4·d = {}",
+                        packet.payload.len(),
+                        4 * d
+                    )));
+                }
+                for (i, a) in acc.iter_mut().enumerate() {
+                    let off = i * 4;
+                    *a += f32::from_le_bytes(
+                        packet.payload[off..off + 4].try_into().unwrap(),
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Decode a codebook-scheme payload and accumulate with the given
+    /// (μ, σ) — shared by the static 2-word side-info path above and the
+    /// pipeline's versioned 3-word path (which validates and strips the
+    /// version before delegating here, without cloning the payload).
+    /// Sparse (top-k) packets route through the index-block decoder.
+    pub(crate) fn decode_codebook_accumulate(
+        &self,
+        packet: &Packet,
+        mu: f32,
+        sigma: f32,
+        acc: &mut [f32],
+    ) -> Result<()> {
+        let d = packet.d as usize;
+        if acc.len() != d {
+            return Err(Error::Coding(format!(
+                "accumulator {} != packet d {d}", acc.len())));
+        }
+        let Kernel::Codebook { codebook, huffman, arith } = &self.kernel
+        else {
+            return Err(Error::Coding(format!(
+                "scheme {:?} is not codebook-backed", self.scheme)));
+        };
+        let codec = CodebookCodec { codebook, huffman, arith, wire: self.wire };
+        if self.transform.is_sparse() {
+            codec.decode_sparse_accumulate(packet, mu, sigma, acc)
+        } else {
+            codec.decode_accumulate(packet, mu, sigma, acc)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::rcq::LengthModel;
+
+    fn gaussian_grad(n: usize, mu: f32, sigma: f32, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        let mut g = vec![0f32; n];
+        rng.fill_normal_f32(&mut g, mu, sigma);
+        g
+    }
+
+    #[test]
+    fn rcfed_compress_decompress_roundtrip() {
+        let c = Compressor::design(
+            CompressionScheme::RcFed {
+                bits: 3,
+                lambda: 0.05,
+                length_model: LengthModel::Huffman,
+            },
+            WireCoder::Huffman,
+        )
+        .unwrap();
+        let g = gaussian_grad(10_000, 0.01, 0.002, 1);
+        let mut rng = Rng::new(2);
+        let pkt = c.compress(0, 0, &g, &mut rng).unwrap();
+        let mut acc = vec![0f32; g.len()];
+        c.decompress_accumulate(&pkt, &mut acc).unwrap();
+        // reconstruction must track the gradient to within ~quantizer MSE
+        let sigma = 0.002f64;
+        let mse: f64 = g
+            .iter()
+            .zip(&acc)
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            / g.len() as f64;
+        let design = c.design_mse.unwrap() * sigma * sigma;
+        assert!(mse < 4.0 * design, "mse={mse} design={design}");
+    }
+
+    #[test]
+    fn payload_bits_match_design_rate() {
+        let c = Compressor::design(
+            CompressionScheme::Lloyd { bits: 3 },
+            WireCoder::Huffman,
+        )
+        .unwrap();
+        let g = gaussian_grad(50_000, 0.0, 1.0, 3);
+        let mut rng = Rng::new(4);
+        let pkt = c.compress(0, 0, &g, &mut rng).unwrap();
+        let bps = pkt.payload_bits as f64 / g.len() as f64;
+        let design = c.design_rate.unwrap();
+        assert!((bps - design).abs() < 0.05, "bps={bps} design={design}");
+    }
+
+    #[test]
+    fn rcfed_cheaper_than_lloyd_at_same_bits() {
+        // the paper's headline mechanism: rate constraint lowers the
+        // encoded bits/symbol at equal b
+        let rc = Compressor::design(
+            CompressionScheme::RcFed {
+                bits: 3,
+                lambda: 0.1,
+                length_model: LengthModel::Huffman,
+            },
+            WireCoder::Huffman,
+        )
+        .unwrap();
+        let ll = Compressor::design(
+            CompressionScheme::Lloyd { bits: 3 },
+            WireCoder::Huffman,
+        )
+        .unwrap();
+        let g = gaussian_grad(50_000, 0.0, 1.0, 5);
+        let mut rng = Rng::new(6);
+        let b_rc = rc.compress(0, 0, &g, &mut rng).unwrap().total_bits();
+        let b_ll = ll.compress(0, 0, &g, &mut rng).unwrap().total_bits();
+        assert!(b_rc < b_ll, "rcfed {b_rc} vs lloyd {b_ll}");
+    }
+
+    #[test]
+    fn fp32_is_lossless() {
+        let c = Compressor::design(CompressionScheme::Fp32, WireCoder::Huffman)
+            .unwrap();
+        let g = gaussian_grad(100, 0.0, 1.0, 7);
+        let mut rng = Rng::new(8);
+        let pkt = c.compress(0, 0, &g, &mut rng).unwrap();
+        assert_eq!(pkt.payload_bits, 3200);
+        let mut acc = vec![0f32; g.len()];
+        c.decompress_accumulate(&pkt, &mut acc).unwrap();
+        assert_eq!(acc, g);
+    }
+
+    #[test]
+    fn arithmetic_wire_is_at_most_huffman() {
+        let g = gaussian_grad(50_000, 0.0, 1.0, 9);
+        let mut rng = Rng::new(10);
+        let h = Compressor::design(
+            CompressionScheme::RcFed {
+                bits: 3,
+                lambda: 0.05,
+                length_model: LengthModel::Huffman,
+            },
+            WireCoder::Huffman,
+        )
+        .unwrap();
+        let a = Compressor::design(
+            CompressionScheme::RcFed {
+                bits: 3,
+                lambda: 0.05,
+                length_model: LengthModel::Huffman,
+            },
+            WireCoder::Arithmetic,
+        )
+        .unwrap();
+        let bh = h.compress(0, 0, &g, &mut rng).unwrap().payload_bits;
+        let ba = a.compress(0, 0, &g, &mut rng).unwrap().payload_bits;
+        assert!(ba <= bh + 64, "arith {ba} vs huffman {bh}");
+        // and arithmetic wire still roundtrips
+        let pkt = a.compress(0, 0, &g, &mut rng).unwrap();
+        let mut acc = vec![0f32; g.len()];
+        a.decompress_accumulate(&pkt, &mut acc).unwrap();
+        let mse: f64 = g.iter().zip(&acc)
+            .map(|(&x, &y)| ((x - y) as f64).powi(2)).sum::<f64>()
+            / g.len() as f64;
+        assert!(mse < 0.1);
+    }
+
+    #[test]
+    fn qsgd_roundtrip_with_inline_table() {
+        // Bucketed QSGD variance is ~(√bucket/s)·‖v‖² per bucket, so at
+        // b=7 (s=127) the reconstruction correlates strongly; at b=3 it
+        // is noisier but clearly aligned (unbiasedness is asserted in
+        // `qsgd_unbiased_through_the_wire`).
+        let g = gaussian_grad(8192, 0.0, 0.5, 11);
+        let mut rng = Rng::new(12);
+        for (bits, min_cos) in [(7u32, 0.9), (3, 0.4)] {
+            let c = Compressor::design(
+                CompressionScheme::Qsgd { bits },
+                WireCoder::Huffman,
+            )
+            .unwrap();
+            let pkt = c.compress(3, 9, &g, &mut rng).unwrap();
+            // one 32-bit norm per 512-coordinate bucket
+            assert_eq!(pkt.side_info.len(), 8192 / 512);
+            assert!(pkt.table_bits > 0 && pkt.table_bits % 8 == 0);
+            let mut acc = vec![0f32; g.len()];
+            c.decompress_accumulate(&pkt, &mut acc).unwrap();
+            let dot: f64 =
+                g.iter().zip(&acc).map(|(&a, &b)| (a * b) as f64).sum();
+            let na: f64 = g.iter().map(|&a| (a * a) as f64).sum();
+            let nb: f64 = acc.iter().map(|&b| (b * b) as f64).sum();
+            let cos = dot / (na.sqrt() * nb.sqrt());
+            assert!(cos > min_cos, "b={bits} cosine {cos}");
+        }
+    }
+
+    #[test]
+    fn qsgd_unbiased_through_the_wire() {
+        let c = Compressor::design(
+            CompressionScheme::Qsgd { bits: 2 },
+            WireCoder::Huffman,
+        )
+        .unwrap();
+        let g = vec![0.25f32, -0.5, 0.75, -0.1];
+        let mut rng = Rng::new(13);
+        let mut mean = vec![0f64; g.len()];
+        let trials = 4000;
+        for _ in 0..trials {
+            let pkt = c.compress(0, 0, &g, &mut rng).unwrap();
+            let mut acc = vec![0f32; g.len()];
+            c.decompress_accumulate(&pkt, &mut acc).unwrap();
+            for (m, &a) in mean.iter_mut().zip(&acc) {
+                *m += a as f64 / trials as f64;
+            }
+        }
+        for (i, (&want, &got)) in g.iter().zip(&mean).enumerate() {
+            assert!((want as f64 - got).abs() < 0.02, "coord {i}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn compressor_design_goes_through_the_cache() {
+        use super::super::design::design_cache_stats;
+        let scheme = CompressionScheme::Lloyd { bits: 6 };
+        // prime the key, then measure a full Compressor::design
+        designed_codebook(scheme).unwrap();
+        let before = design_cache_stats();
+        let c = Compressor::design(scheme, WireCoder::Huffman).unwrap();
+        let delta = design_cache_stats().since(&before);
+        assert!(delta.hits >= 1, "Compressor::design bypassed the cache");
+        assert!(c.codebook().is_some());
+    }
+
+    #[test]
+    fn topk_compressor_roundtrips_and_charges_index_bits() {
+        let dense = Compressor::design(
+            CompressionScheme::Lloyd { bits: 3 },
+            WireCoder::Huffman,
+        )
+        .unwrap();
+        let sparse = Compressor::design_with_transform(
+            CompressionScheme::Lloyd { bits: 3 },
+            WireCoder::Huffman,
+            TransformCfg::topk(0.1),
+        )
+        .unwrap();
+        let g = gaussian_grad(4096, 0.0, 1.0, 21);
+        let mut rng = Rng::new(22);
+        let pd = dense.compress(0, 0, &g, &mut rng).unwrap();
+        let ps = sparse.compress(0, 0, &g, &mut rng).unwrap();
+        let k = 410; // ceil(0.1 · 4096)
+        assert_eq!(ps.d, 4096);
+        assert!(ps.index_bits >= 32 + (k as u64 * 12),
+                "index bits {}", ps.index_bits);
+        assert!(ps.total_bits() < pd.total_bits(),
+                "topk {} vs dense {}", ps.total_bits(), pd.total_bits());
+        // through the real wire bytes
+        let parsed = Packet::parse(&ps.to_bytes()).unwrap();
+        let mut acc = vec![0f32; g.len()];
+        sparse.decompress_accumulate(&parsed, &mut acc).unwrap();
+        // only kept coordinates are touched, and the reconstruction
+        // aligns with the gradient's largest entries
+        let dot: f64 =
+            g.iter().zip(&acc).map(|(&a, &b)| (a * b) as f64).sum();
+        assert!(dot > 0.0, "anti-correlated sparse reconstruction");
+    }
+
+    #[test]
+    fn all_constant_gradient_yields_decodable_packets() {
+        use super::super::pipeline::{CompressionPipeline, RateTarget};
+        let rcfed = CompressionScheme::RcFed {
+            bits: 3,
+            lambda: 0.05,
+            length_model: LengthModel::Huffman,
+        };
+        // regression (σ = 0 side-info path): `compress` normalizes by
+        // mean_std(grad); an all-constant gradient has σ = 0 and must
+        // still produce a finite, parse-able, decodable packet — for
+        // every scheme and for the versioned pipeline path
+        for scheme in [
+            rcfed,
+            CompressionScheme::Lloyd { bits: 3 },
+            CompressionScheme::Nqfl { bits: 3 },
+            CompressionScheme::Qsgd { bits: 3 },
+            CompressionScheme::Uniform { bits: 3, clip: 4.0 },
+            CompressionScheme::Fp32,
+        ] {
+            for value in [0.0f32, 0.25, -3.5] {
+                let g = vec![value; 600];
+                let c =
+                    Compressor::design(scheme, WireCoder::Huffman).unwrap();
+                let mut rng = Rng::new(76);
+                let pkt = c.compress(0, 0, &g, &mut rng).unwrap();
+                assert!(
+                    pkt.side_info.iter().all(|x| x.is_finite()),
+                    "{scheme:?} value {value}: non-finite side info"
+                );
+                // through the real wire bytes
+                let parsed = Packet::parse(&pkt.to_bytes()).unwrap();
+                let mut acc = vec![0f32; g.len()];
+                c.decompress_accumulate(&parsed, &mut acc).unwrap();
+                assert!(
+                    acc.iter().all(|x| x.is_finite()),
+                    "{scheme:?} value {value}: NaN reconstruction"
+                );
+                // for the normalize-by-σ schemes, σ = 0 means every
+                // coordinate reconstructs to ≈ μ = value (exactly for
+                // fp32); QSGD is only unbiased, not exact, so it is
+                // covered by the finiteness assertions above
+                if !matches!(scheme, CompressionScheme::Qsgd { .. }) {
+                    for &x in &acc {
+                        assert!(
+                            (x - value).abs() < 1e-3,
+                            "{scheme:?}: {x} vs {value}"
+                        );
+                    }
+                }
+            }
+        }
+        // the adaptive stats pass must not divide by zero either
+        let pipe = CompressionPipeline::design(
+            rcfed,
+            WireCoder::Huffman,
+            RateTarget::Track { bits_per_coord: 2.0, adapt_every: 1 },
+        )
+        .unwrap();
+        let sample = pipe.grad_sample(&[1.5f32; 300]);
+        assert!(sample.iter().all(|z| z.is_finite()));
+    }
+
+    #[test]
+    fn ef_requires_stateful_compress() {
+        let c = Compressor::design_with_transform(
+            CompressionScheme::Lloyd { bits: 3 },
+            WireCoder::Huffman,
+            TransformCfg::identity().with_ef(),
+        )
+        .unwrap();
+        let g = gaussian_grad(256, 0.0, 1.0, 23);
+        let mut rng = Rng::new(24);
+        assert!(c.compress(0, 0, &g, &mut rng).is_err());
+        let mut state = TransformState::new();
+        let pkt = c.compress_with(&mut state, 0, 0, &g, &mut rng).unwrap();
+        assert_eq!(pkt.index_bits, 0, "dense EF has zero wire effect");
+        assert!(state.last_ef_norm > 0.0);
+        let mut acc = vec![0f32; g.len()];
+        c.decompress_accumulate(&pkt, &mut acc).unwrap();
+    }
+}

@@ -1,0 +1,369 @@
+//! Process-wide codebook design cache + the design entry points.
+//!
+//! Every codebook scheme is designed against the *universal* N(0,1) model
+//! (§3.1), so the designed codebook is a pure function of the scheme
+//! hyper-parameters. A multi-experiment sweep (coordinator::sweep) would
+//! otherwise re-run the expensive Lloyd/RC alternation — Huffman rebuild
+//! per iteration × up to 300 iterations, × 24 bisection steps under
+//! `design_for_target_rate` — once per sweep cell. The cache keys the
+//! finished (codebook, report) pair on the scheme tag, bit-width,
+//! quantized λ and length model, behind `OnceLock<Mutex<HashMap>>`, and
+//! counts hits/misses so sweep reports can prove reuse.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use crate::coding::huffman::HuffmanCode;
+use crate::quant::codebook::Codebook;
+use crate::quant::lloyd::LloydMax;
+use crate::quant::nqfl::nqfl_codebook;
+use crate::quant::rcq::{LengthModel, RateConstrainedQuantizer};
+use crate::quant::uniform::uniform_codebook;
+use crate::quant::DesignReport;
+use crate::stats::empirical::EmpiricalPdf;
+use crate::stats::entropy::entropy_bits;
+use crate::stats::gaussian::StdGaussian;
+use crate::util::{Error, Result};
+
+use super::scheme::CompressionScheme;
+
+/// λ/clip resolution of the cache key (1e-9): designs whose multipliers
+/// differ by less than this are numerically indistinguishable.
+fn quantize_key_f64(x: f64) -> i64 {
+    (x * 1e9).round() as i64
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+enum DesignKey {
+    RcFed { bits: u32, lambda_q: i64, huffman_lengths: bool },
+    Lloyd { bits: u32 },
+    Nqfl { bits: u32 },
+    Uniform { bits: u32, clip_q: i64 },
+    /// One adaptation window of the closed-loop pipeline: λ after the
+    /// dual-ascent step, the window ordinal, the quantized moments of
+    /// the window's sample set and a fingerprint of the warm-start
+    /// codebook. Unlike the universal keys the empirical design target
+    /// is not derivable from the key alone — it rides along into
+    /// [`designed_adaptive_codebook`] and is only consulted on a miss;
+    /// the moment + warm fingerprints make two cells that agree on the
+    /// whole key deterministic replays of the same run state (same
+    /// seed, same windows, same design inputs), so sharing one design
+    /// is sound even across concurrent sweep workers.
+    Adaptive {
+        bits: u32,
+        lambda_q: i64,
+        step: u32,
+        mean_q: i64,
+        std_q: i64,
+        count: u64,
+        warm_fp: u64,
+        huffman_lengths: bool,
+    },
+}
+
+/// Order-sensitive FNV-1a over a codebook's f32 bit patterns — a cheap
+/// fingerprint that distinguishes warm-start inputs inside
+/// [`DesignKey::Adaptive`], so two sweep cells whose controllers happen
+/// to agree on (λ, window, moments) but arrive with different previous
+/// codebooks cannot collide on one cache slot.
+fn codebook_fingerprint(cb: &Codebook) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for x in cb.levels.iter().chain(&cb.bounds) {
+        h ^= x.to_bits() as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+#[derive(Clone)]
+struct CachedDesign {
+    codebook: Codebook,
+    report: DesignReport,
+}
+
+/// Per-key slot: the map only guards slot creation, so concurrent first
+/// lookups of the *same* key block on one design (no duplicate work, one
+/// deterministic miss) while different keys design in parallel. Errors
+/// are cached as strings — the design is deterministic, so a failure is
+/// permanent for its key.
+type DesignSlot =
+    std::sync::Arc<OnceLock<std::result::Result<CachedDesign, String>>>;
+
+static DESIGN_CACHE: OnceLock<Mutex<HashMap<DesignKey, DesignSlot>>> =
+    OnceLock::new();
+static CACHE_HITS: AtomicU64 = AtomicU64::new(0);
+static CACHE_MISSES: AtomicU64 = AtomicU64::new(0);
+
+/// Cumulative process-wide design-cache counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DesignCacheStats {
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl DesignCacheStats {
+    /// Counter movement since an earlier snapshot.
+    pub fn since(&self, earlier: &DesignCacheStats) -> DesignCacheStats {
+        DesignCacheStats {
+            hits: self.hits.saturating_sub(earlier.hits),
+            misses: self.misses.saturating_sub(earlier.misses),
+        }
+    }
+}
+
+impl std::fmt::Display for DesignCacheStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} hits / {} misses", self.hits, self.misses)
+    }
+}
+
+/// Snapshot the process-wide design-cache counters.
+pub fn design_cache_stats() -> DesignCacheStats {
+    DesignCacheStats {
+        hits: CACHE_HITS.load(Ordering::Relaxed),
+        misses: CACHE_MISSES.load(Ordering::Relaxed),
+    }
+}
+
+fn design_key(scheme: &CompressionScheme) -> Option<DesignKey> {
+    match *scheme {
+        CompressionScheme::RcFed { bits, lambda, length_model } => {
+            Some(DesignKey::RcFed {
+                bits,
+                lambda_q: quantize_key_f64(lambda),
+                huffman_lengths: length_model == LengthModel::Huffman,
+            })
+        }
+        CompressionScheme::Lloyd { bits } => Some(DesignKey::Lloyd { bits }),
+        CompressionScheme::Nqfl { bits } => Some(DesignKey::Nqfl { bits }),
+        CompressionScheme::Uniform { bits, clip } => {
+            Some(DesignKey::Uniform { bits, clip_q: quantize_key_f64(clip) })
+        }
+        CompressionScheme::Qsgd { .. } | CompressionScheme::Fp32 => None,
+    }
+}
+
+/// Run the actual design for a codebook scheme (no caching).
+fn design_codebook_uncached(
+    scheme: &CompressionScheme,
+) -> Result<(Codebook, DesignReport)> {
+    match *scheme {
+        CompressionScheme::RcFed { bits, lambda, length_model } => {
+            let rc = RateConstrainedQuantizer {
+                lambda,
+                length_model,
+                ..Default::default()
+            };
+            rc.design(&StdGaussian, bits)
+        }
+        CompressionScheme::Lloyd { bits } => {
+            LloydMax::default().design(&StdGaussian, bits)
+        }
+        CompressionScheme::Nqfl { bits } => {
+            let cb = nqfl_codebook(bits)?;
+            closed_form_report(cb)
+        }
+        CompressionScheme::Uniform { bits, clip } => {
+            let cb = uniform_codebook(bits, clip)?;
+            closed_form_report(cb)
+        }
+        CompressionScheme::Qsgd { .. } | CompressionScheme::Fp32 => {
+            Err(Error::Quant(format!(
+                "scheme {scheme:?} has no designed codebook")))
+        }
+    }
+}
+
+/// Evaluate a closed-form codebook (NQFL / Uniform) against N(0,1) into
+/// the same report shape the iterative designers produce.
+fn closed_form_report(cb: Codebook) -> Result<(Codebook, DesignReport)> {
+    let (mse, probs) = crate::quant::evaluate(&StdGaussian, &cb);
+    let huffman = HuffmanCode::from_probs(&probs)?;
+    let report = DesignReport {
+        mse,
+        entropy_bits: entropy_bits(&probs),
+        huffman_rate: huffman.expected_length(&probs),
+        probs,
+        iterations: 1,
+    };
+    Ok((cb, report))
+}
+
+/// Serve one design key from the process-wide cache, running `design`
+/// only on a miss. The map lock covers only slot lookup/creation, never
+/// the design itself: exactly one caller per key runs it; racers block
+/// on the slot and then read the finished value, so hit/miss counts are
+/// deterministic.
+fn cached_design<F>(
+    key: DesignKey,
+    design: F,
+) -> Result<(Codebook, DesignReport)>
+where
+    F: FnOnce() -> Result<(Codebook, DesignReport)>,
+{
+    let cache = DESIGN_CACHE.get_or_init(Default::default);
+    let slot: DesignSlot = {
+        // A sweep worker that panics while holding this lock poisons the
+        // mutex; recovering is sound because the critical section only
+        // inserts a fresh slot (the map cannot be left half-mutated), and
+        // it keeps one panicked cell from aborting every later run in the
+        // process.
+        let mut map = cache.lock().unwrap_or_else(|e| e.into_inner());
+        map.entry(key).or_default().clone()
+    };
+    let mut designed_here = false;
+    let value = slot.get_or_init(|| {
+        designed_here = true;
+        design()
+            .map(|(codebook, report)| CachedDesign { codebook, report })
+            .map_err(|e| e.to_string())
+    });
+    if designed_here {
+        CACHE_MISSES.fetch_add(1, Ordering::Relaxed);
+    } else {
+        CACHE_HITS.fetch_add(1, Ordering::Relaxed);
+    }
+    match value {
+        Ok(cached) => Ok((cached.codebook.clone(), cached.report.clone())),
+        Err(msg) => Err(Error::Quant(msg.clone())),
+    }
+}
+
+/// Designed codebook + report for a codebook-backed scheme, served from
+/// the process-wide design cache. Errors for QSGD/Fp32 (no codebook).
+///
+/// Only the universal N(0,1) design target (§3.1) goes through this
+/// path; per-client empirical designs (`LloydMax::design(&EmpiricalPdf,
+/// …)`) are data-dependent and must stay uncached.
+pub fn designed_codebook(
+    scheme: CompressionScheme,
+) -> Result<(Codebook, DesignReport)> {
+    let Some(key) = design_key(&scheme) else {
+        return Err(Error::Quant(format!(
+            "scheme {scheme:?} has no designed codebook")));
+    };
+    cached_design(key, || design_codebook_uncached(&scheme))
+}
+
+/// Designed codebook + report for one adaptation window of the
+/// [`super::pipeline::CompressionPipeline`], served from the same
+/// process-wide cache under a [`DesignKey::Adaptive`] key.
+///
+/// `moments` are `(mean, std, count)` of the window's normalized sample
+/// set; `warm` seeds the alternation with the previous window's
+/// codebook (see [`RateConstrainedQuantizer::design_warm`]).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn designed_adaptive_codebook(
+    bits: u32,
+    lambda: f64,
+    length_model: LengthModel,
+    step: u32,
+    moments: (f64, f64, u64),
+    pdf: &EmpiricalPdf,
+    warm: Option<&Codebook>,
+) -> Result<(Codebook, DesignReport)> {
+    let key = DesignKey::Adaptive {
+        bits,
+        lambda_q: quantize_key_f64(lambda),
+        step,
+        mean_q: quantize_key_f64(moments.0),
+        std_q: quantize_key_f64(moments.1),
+        count: moments.2,
+        warm_fp: warm.map(codebook_fingerprint).unwrap_or(0),
+        huffman_lengths: length_model == LengthModel::Huffman,
+    };
+    cached_design(key, || {
+        let rc = RateConstrainedQuantizer {
+            lambda,
+            length_model,
+            ..Default::default()
+        };
+        rc.design_warm(pdf, bits, warm)
+    })
+}
+
+/// Wire cost of publishing one codebook version to one client: `2^b`
+/// levels + `2^b − 1` boundaries at f32, the version tag, the new
+/// multiplier, and the canonical code-length table clients need to
+/// entropy-encode against the new codebook (5 bits per symbol,
+/// byte-padded — the same format QSGD's travelling table uses; the
+/// empirical cell probabilities are not derivable from levels/bounds
+/// alone, so the table is genuine traffic).
+pub(crate) fn codebook_broadcast_bits(cb: &Codebook) -> u64 {
+    let n = cb.levels.len() as u64;
+    let table_bits = (5 * n).div_ceil(8) * 8;
+    32 * (n + cb.bounds.len() as u64) + 32 + 32 + table_bits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn design_cache_returns_identical_codebooks() {
+        // an unusual clip keeps this key private to the test
+        let scheme = CompressionScheme::Uniform { bits: 5, clip: 3.1372 };
+        let before = design_cache_stats();
+        let (cb1, rep1) = designed_codebook(scheme).unwrap();
+        let (cb2, rep2) = designed_codebook(scheme).unwrap();
+        let delta = design_cache_stats().since(&before);
+        assert_eq!(cb1, cb2);
+        assert_eq!(rep1.probs, rep2.probs);
+        assert_eq!(rep1.mse, rep2.mse);
+        // the second call must have hit (other tests only add counts)
+        assert!(delta.hits >= 1, "no cache hit recorded: {delta:?}");
+        assert!(delta.misses >= 1, "first design not counted: {delta:?}");
+    }
+
+    #[test]
+    fn cached_design_matches_direct_design() {
+        let scheme = CompressionScheme::RcFed {
+            bits: 3,
+            lambda: 0.0832, // unusual λ: first call is a genuine miss
+            length_model: LengthModel::Huffman,
+        };
+        let (cb_cached, rep_cached) = designed_codebook(scheme).unwrap();
+        let rc = RateConstrainedQuantizer {
+            lambda: 0.0832,
+            length_model: LengthModel::Huffman,
+            ..Default::default()
+        };
+        let (cb_direct, rep_direct) = rc.design(&StdGaussian, 3).unwrap();
+        assert_eq!(cb_cached, cb_direct);
+        assert_eq!(rep_cached.probs, rep_direct.probs);
+        assert_eq!(rep_cached.huffman_rate, rep_direct.huffman_rate);
+    }
+
+    #[test]
+    fn poisoned_cache_mutex_recovers() {
+        // regression: a panicked sweep worker used to poison the design
+        // cache's map mutex, turning every later designed_codebook call
+        // in the process into a PoisonError unwrap panic
+        let t = std::thread::spawn(|| {
+            let _guard = DESIGN_CACHE
+                .get_or_init(Default::default)
+                .lock()
+                .unwrap_or_else(|e| e.into_inner());
+            panic!("simulated sweep-worker panic while holding the lock");
+        });
+        assert!(t.join().is_err(), "the poisoning thread must panic");
+        // an unusual clip keeps this key private to the test; the call
+        // must succeed despite the poisoned mutex
+        let scheme = CompressionScheme::Uniform { bits: 4, clip: 2.9173 };
+        let (cb, _) = designed_codebook(scheme).unwrap();
+        cb.validate().unwrap();
+        // and the cache still serves hits afterwards
+        let before = design_cache_stats();
+        designed_codebook(scheme).unwrap();
+        assert!(design_cache_stats().since(&before).hits >= 1);
+    }
+
+    #[test]
+    fn uncachable_schemes_are_rejected() {
+        assert!(designed_codebook(CompressionScheme::Fp32).is_err());
+        assert!(
+            designed_codebook(CompressionScheme::Qsgd { bits: 3 }).is_err()
+        );
+    }
+}

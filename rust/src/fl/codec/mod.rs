@@ -1,0 +1,55 @@
+//! Staged client↔PS gradient codec: the decomposition of the former
+//! `fl/compression.rs` god-module into an explicit stage graph.
+//!
+//! ```text
+//!             client side                                  PS side
+//!  grad ──▶ [ Transform ] ──▶ [ Quantize ] ──▶ [ Code ] ──▶ wire ──▶ decode
+//!             identity          codebook         huffman              │
+//!             error-feedback    (rcfed/lloyd/    arithmetic           ▼
+//!             top-k (+indices)   nqfl/uniform)                   de-transform
+//!                               qsgd / fp32                     (scatter) + Σ
+//!
+//!  on top:  Compressor            — static composition (§3.1, design once)
+//!           CompressionPipeline   — + closed-loop λ control (RateTarget)
+//!           RateAllocator         — + per-client widths (RateAllocation)
+//! ```
+//!
+//! * [`transform`] — the pre-quantization stage: identity, per-client
+//!   error-feedback residuals ([`TransformState`]), top-k magnitude
+//!   sparsification with packed index coding;
+//! * [`quantize`] — the designed quantize backends and the fused
+//!   quantize+code wire path shared by every composition, plus the
+//!   staged encoder/decoders for transform-active packets;
+//! * [`design`] — the process-wide codebook design cache (§3.1's
+//!   universal N(0,1) designs, plus the adaptive per-window keys);
+//! * [`compressor`] — the static [`Compressor`];
+//! * [`pipeline`] — the round-loop [`CompressionPipeline`], the
+//!   closed-loop [`RateTarget`] controller and [`PacketDecoder`];
+//! * [`alloc`] — the water-filling per-client [`RateAllocation`].
+//!
+//! **Wire compatibility:** every pre-codec scheme × wire-coder
+//! combination is byte-identical through this tree (the golden e2e and
+//! bit-exact replay suites are the oracle). The transform stage only
+//! changes the wire when explicitly enabled: sparse packets prepend a
+//! `k + packed-indices` block to the payload, charged to
+//! `Packet::index_bits`; error feedback has zero wire effect.
+//!
+//! The old import path `rcfed::fl::compression` keeps working through a
+//! re-export shim in [`crate::fl`].
+
+pub mod alloc;
+pub mod compressor;
+pub mod design;
+pub mod pipeline;
+pub mod quantize;
+pub mod scheme;
+pub mod transform;
+
+pub use alloc::{AllocSnapshot, RateAllocation, RateAllocator};
+pub use compressor::Compressor;
+pub use design::{design_cache_stats, designed_codebook, DesignCacheStats};
+pub use pipeline::{
+    CompressionPipeline, PacketDecoder, RateTarget, RoundAdaptation,
+};
+pub use scheme::{CompressionScheme, WireCoder};
+pub use transform::{Transform, TransformCfg, TransformState};

@@ -1,0 +1,782 @@
+//! The closed-loop [`CompressionPipeline`]: the stateful composition of
+//! the Transform → Quantize → Code stages that the round loop drives,
+//! plus the rate-target controller and the PS-side decode dispatch.
+
+use crate::coding::arithmetic::ArithmeticCoder;
+use crate::coding::huffman::HuffmanCode;
+use crate::fl::packet::Packet;
+use crate::stats::empirical::EmpiricalPdf;
+use crate::stats::moments::{mean_std, Welford};
+use crate::util::rng::Rng;
+use crate::util::{Error, Result};
+
+use super::alloc::{AllocSnapshot, RateAllocation, RateAllocator};
+use super::compressor::Compressor;
+use super::design::{codebook_broadcast_bits, designed_adaptive_codebook};
+use super::quantize::{sample_normalized, Kernel};
+use super::scheme::{CompressionScheme, WireCoder};
+use super::transform::{TransformCfg, TransformState};
+
+/// Rate-target configuration for the closed-loop pipeline.
+///
+/// `Off` (the default) reproduces the static §3.1 behavior exactly: one
+/// codebook designed against N(0,1) before round 0, no stats pass, no
+/// extra side information, no downlink traffic, no random draw — runs
+/// are byte-identical to the pre-pipeline code path.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum RateTarget {
+    /// static design; nothing adapts
+    #[default]
+    Off,
+    /// Closed-loop control (the constrained form (5) solved online):
+    /// dual ascent on λ every `adapt_every` rounds drives the *measured*
+    /// uplink bits/coordinate — ledger bits over transmitted
+    /// coordinates, headers, side info and tables included — toward
+    /// `bits_per_coord`.
+    Track {
+        /// target uplink bits per gradient coordinate
+        bits_per_coord: f64,
+        /// adaptation window length in rounds
+        adapt_every: usize,
+    },
+}
+
+impl RateTarget {
+    pub fn is_on(&self) -> bool {
+        !matches!(self, RateTarget::Off)
+    }
+
+    /// Stable row-key label for CSVs, `"off"` when disabled.
+    pub fn label(&self) -> String {
+        match *self {
+            RateTarget::Off => "off".into(),
+            RateTarget::Track { bits_per_coord, adapt_every } => {
+                format!("rt{bits_per_coord}w{adapt_every}")
+            }
+        }
+    }
+
+    /// Reject nonsensical targets and unsupported schemes up front, so a
+    /// bad configuration is a config error, not a silent no-op.
+    pub fn validate(&self, scheme: &CompressionScheme) -> Result<()> {
+        let RateTarget::Track { bits_per_coord, adapt_every } = *self else {
+            return Ok(());
+        };
+        if !(bits_per_coord > 0.0 && bits_per_coord.is_finite()) {
+            return Err(Error::Config(format!(
+                "rate target {bits_per_coord} must be finite and > 0")));
+        }
+        if adapt_every == 0 {
+            return Err(Error::Config(
+                "rate target needs adapt-every >= 1".into()));
+        }
+        match scheme {
+            CompressionScheme::RcFed { .. } => Ok(()),
+            other => Err(Error::Config(format!(
+                "rate targeting requires the rcfed scheme (λ is the \
+                 control variable); got {other:?}"))),
+        }
+    }
+}
+
+/// Dual-ascent step schedule: sign-adaptive — grow while the rate error
+/// keeps one sign (λ still marching toward the crossing), halve on a
+/// flip (bracketing the crossing).
+const STEP_INIT: f64 = 0.02;
+const STEP_GROW: f64 = 1.5;
+const STEP_SHRINK: f64 = 0.5;
+const STEP_MIN: f64 = 1e-3;
+const STEP_MAX: f64 = 0.25;
+/// Cap on buffered normalized samples per adaptation window.
+const MAX_WINDOW_SAMPLES: usize = 65_536;
+
+/// What the pipeline did at a round boundary — returned to the round
+/// layer, which owns the downlink ledger.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RoundAdaptation {
+    /// nothing published this round
+    None,
+    /// the closed-loop controller re-designed the shared codebook; one
+    /// copy goes to every client
+    Broadcast { bits_per_client: u64 },
+    /// the rate allocator moved some clients to new widths; each changed
+    /// client receives its own codebook (`(client, bits)` per receiver)
+    PerClient { publications: Vec<(u32, u64)> },
+}
+
+/// Closed-loop compression pipeline — the stateful replacement for
+/// threading a static [`Compressor`] through the round loop.
+///
+/// With [`RateTarget::Off`] it is a transparent wrapper: `compress` and
+/// `decompress_accumulate` delegate to the inner static compressor and
+/// every adaptive entry point is a no-op. With [`RateTarget::Track`] it
+/// closes the loop the paper leaves open (§3.1 designs once, before
+/// training; Mitchell et al. 2022 show the gradient distribution drifts
+/// over training):
+///
+/// 1. each round, clients hand back a strided sample of their
+///    *normalized* gradient coordinates ([`Self::grad_sample`] →
+///    [`Self::observe_samples`]; only samples from packets the server
+///    actually ingested count) and the round layer reports the uplink
+///    ledger's measured bits ([`Self::observe_round`]).
+///    **Accounting policy:** the stats subsample (≤ 2048 coords/update)
+///    is control-plane metadata piggybacked on the uplink and is *not*
+///    charged to the gradient bit ledger — the same modeling choice as
+///    the uncharged θ broadcast (the ledger is Fig. 1's gradient-uplink
+///    x-axis, not a full traffic model); at paper-scale `d` the sample
+///    is orders of magnitude below the payload it steers;
+/// 2. at each window end ([`Self::end_round`]) dual ascent moves λ by
+///    the measured bits/coordinate error against the target, and the
+///    RC-FED codebook is re-designed against an [`EmpiricalPdf`] of the
+///    window's samples — warm-started from the previous codebook and
+///    served through the process-wide design cache;
+/// 3. the new codebook is versioned: uplink packets carry the version
+///    as a third side-info word (32 bits, honestly charged) and stale
+///    versions are rejected on decode; the publish cost is returned to
+///    the caller, which charges it to the downlink ledger.
+///
+/// The transform stage rides along on every path: an active transform
+/// (error feedback, top-k) runs the staged encoder against per-client
+/// [`TransformState`]s threaded through [`Self::compress_with`], and
+/// its index+value bits land on the same measured ledger the controller
+/// steers by.
+pub struct CompressionPipeline {
+    compressor: Compressor,
+    target: RateTarget,
+    adaptive: bool,
+    /// the transform stage shared by every path (mirrors the inner
+    /// compressor's configuration; the allocator carries its own copy)
+    transform: TransformCfg,
+    /// per-client rate allocator (`None` = the shared-codebook path)
+    alloc: Option<RateAllocator>,
+    version: u32,
+    lambda: f64,
+    /// windows adapted so far (part of the design-cache key)
+    adapt_step: u32,
+    step: f64,
+    prev_err: f64,
+    window_bits: u64,
+    window_coords: u64,
+    samples: Vec<f32>,
+    moments: Welford,
+    last_realized: f64,
+}
+
+impl CompressionPipeline {
+    /// Design the initial compressor and wire the controller. `target`
+    /// other than `Off` requires the RC-FED scheme (checked).
+    pub fn design(
+        scheme: CompressionScheme,
+        wire: WireCoder,
+        target: RateTarget,
+    ) -> Result<CompressionPipeline> {
+        CompressionPipeline::design_alloc(
+            scheme, wire, target, RateAllocation::Uniform)
+    }
+
+    /// Like [`Self::design`], with a per-client rate-allocation mode.
+    /// `RateAllocation::Uniform` is byte-identical to [`Self::design`];
+    /// `WaterFill` builds the width ladder up front (every width served
+    /// from the design cache) and waits for [`Self::bind_clients`].
+    pub fn design_alloc(
+        scheme: CompressionScheme,
+        wire: WireCoder,
+        target: RateTarget,
+        alloc: RateAllocation,
+    ) -> Result<CompressionPipeline> {
+        CompressionPipeline::design_full(
+            scheme, wire, target, alloc, TransformCfg::default())
+    }
+
+    /// The full constructor: scheme, wire coder, rate-target controller,
+    /// per-client allocation and transform stage. Every reduced
+    /// constructor delegates here with the remaining axes at their
+    /// byte-identical defaults.
+    pub fn design_full(
+        scheme: CompressionScheme,
+        wire: WireCoder,
+        target: RateTarget,
+        alloc: RateAllocation,
+        transform: TransformCfg,
+    ) -> Result<CompressionPipeline> {
+        target.validate(&scheme)?;
+        alloc.validate(&scheme, &target)?;
+        transform.validate(&scheme)?;
+        let allocator = match alloc {
+            RateAllocation::Uniform => None,
+            RateAllocation::WaterFill {
+                budget_bpc, adapt_every, min_bits, max_bits,
+            } => Some(RateAllocator::design(
+                scheme, wire, transform, budget_bpc, adapt_every, min_bits,
+                max_bits,
+            )?),
+        };
+        let lambda = match scheme {
+            CompressionScheme::RcFed { lambda, .. } => lambda,
+            _ => 0.0,
+        };
+        Ok(CompressionPipeline {
+            compressor: Compressor::design_with_transform(
+                scheme, wire, transform)?,
+            target,
+            adaptive: target.is_on(),
+            transform,
+            alloc: allocator,
+            version: 0,
+            lambda,
+            adapt_step: 0,
+            step: STEP_INIT,
+            prev_err: f64::NAN,
+            window_bits: 0,
+            window_coords: 0,
+            samples: Vec::new(),
+            moments: Welford::default(),
+            last_realized: f64::NAN,
+        })
+    }
+
+    /// Wrap an already-designed static compressor ([`RateTarget::Off`]).
+    pub fn from_compressor(compressor: Compressor) -> CompressionPipeline {
+        let transform = compressor.transform;
+        CompressionPipeline {
+            compressor,
+            target: RateTarget::Off,
+            adaptive: false,
+            transform,
+            alloc: None,
+            version: 0,
+            lambda: 0.0,
+            adapt_step: 0,
+            step: STEP_INIT,
+            prev_err: f64::NAN,
+            window_bits: 0,
+            window_coords: 0,
+            samples: Vec::new(),
+            moments: Welford::default(),
+            last_realized: f64::NAN,
+        }
+    }
+
+    pub fn is_adaptive(&self) -> bool {
+        self.adaptive
+    }
+
+    pub fn target(&self) -> RateTarget {
+        self.target
+    }
+
+    /// The configured transform stage.
+    pub fn transform(&self) -> TransformCfg {
+        self.transform
+    }
+
+    /// Current multiplier (the initial λ until the first window closes).
+    pub fn lambda(&self) -> f64 {
+        self.lambda
+    }
+
+    /// Current codebook version (bumped on every redesign).
+    pub fn version(&self) -> u32 {
+        self.version
+    }
+
+    /// Measured uplink bits/coordinate of the last closed window (NaN
+    /// before the first window closes).
+    pub fn last_realized(&self) -> f64 {
+        self.last_realized
+    }
+
+    /// The inner compressor (design diagnostics, codebook access).
+    pub fn compressor(&self) -> &Compressor {
+        &self.compressor
+    }
+
+    /// Compress a flat gradient. Adaptive packets carry the codebook
+    /// version as one extra side-info word (exact as f32 for any
+    /// realistic version count); allocated packets are encoded against
+    /// the sender's assigned codebook; `Off`/`Uniform` packets are
+    /// byte-identical to the static compressor's.
+    ///
+    /// Stateless entry point: fine for identity and pure-sparsification
+    /// transforms (a throwaway state is used); error feedback *needs*
+    /// per-client state and must go through [`Self::compress_with`].
+    pub fn compress(
+        &self,
+        client_id: u32,
+        round: u32,
+        grad: &[f32],
+        rng: &mut Rng,
+    ) -> Result<Packet> {
+        if self.transform.error_feedback {
+            return Err(Error::Config(
+                "error feedback carries per-client state; call \
+                 compress_with"
+                    .into(),
+            ));
+        }
+        let mut tmp = TransformState::new();
+        self.compress_with(&mut tmp, client_id, round, grad, rng)
+    }
+
+    /// Compress through the staged path with the caller's per-client
+    /// [`TransformState`]. Identical to [`Self::compress`] when the
+    /// transform is inactive (the state is untouched). On adaptive runs
+    /// with an active transform, the controller's stats sample of the
+    /// *working set* is stashed into the state
+    /// ([`TransformState::take_sample`]).
+    pub fn compress_with(
+        &self,
+        state: &mut TransformState,
+        client_id: u32,
+        round: u32,
+        grad: &[f32],
+        rng: &mut Rng,
+    ) -> Result<Packet> {
+        if let Some(alloc) = &self.alloc {
+            return alloc.compress_with(state, client_id, round, grad, rng);
+        }
+        let mut pkt = self.compressor.compress_with_sample(
+            state, client_id, round, grad, rng, self.adaptive)?;
+        if self.adaptive {
+            pkt.side_info.push(self.version as f32);
+        }
+        Ok(pkt)
+    }
+
+    /// Whether a per-client rate allocation is active.
+    pub fn is_allocated(&self) -> bool {
+        self.alloc.is_some()
+    }
+
+    /// Bind the allocator to the run's client population: per-client
+    /// bandwidth factors (from the channel model) seed the initial
+    /// water-fill. A no-op — and free — without an allocation.
+    pub fn bind_clients(
+        &mut self,
+        num_clients: usize,
+        bandwidth_factors: &[f64],
+    ) -> Result<()> {
+        if let Some(alloc) = &mut self.alloc {
+            alloc.bind(num_clients, bandwidth_factors)?;
+        }
+        Ok(())
+    }
+
+    /// Record one *ingested* update: the Track controller's sample pass
+    /// and the allocator's per-client energy pass, in one call. The
+    /// round layer calls this only for packets the server actually
+    /// decoded, so channel faults steer neither controller.
+    pub fn observe_delivery(&mut self, packet: &Packet, sample: &[f32]) {
+        self.observe_samples(sample);
+        if let Some(alloc) = &mut self.alloc {
+            alloc.observe_packet(packet);
+        }
+    }
+
+    /// The width currently assigned to `client` (None without an
+    /// allocation or before [`Self::bind_clients`]).
+    pub fn client_width(&self, client: usize) -> Option<u32> {
+        self.alloc.as_ref()?.widths.get(client).copied()
+    }
+
+    /// Current allocation diagnostics (None when allocation is off or
+    /// unbound).
+    pub fn alloc_snapshot(&self) -> Option<AllocSnapshot> {
+        let alloc = self.alloc.as_ref()?;
+        if !alloc.bound() {
+            return None;
+        }
+        Some(AllocSnapshot {
+            gini: alloc.gini(),
+            mean_bits: alloc.mean_bits(),
+            min_bits: *alloc.widths.iter().min().unwrap(),
+            max_bits: *alloc.widths.iter().max().unwrap(),
+        })
+    }
+
+    /// Current width histogram `(width, clients)` (empty when allocation
+    /// is off).
+    pub fn alloc_histogram(&self) -> Vec<(u32, usize)> {
+        self.alloc.as_ref().map(|a| a.histogram()).unwrap_or_default()
+    }
+
+    /// Client-side stats pass: a deterministic strided subsample of the
+    /// *normalized* gradient coordinates (what the quantizer actually
+    /// sees). Empty — and free — when the pipeline is not adaptive.
+    pub fn grad_sample(&self, grad: &[f32]) -> Vec<f32> {
+        if !self.adaptive || grad.is_empty() {
+            return Vec::new();
+        }
+        let (mu, sigma) = mean_std(grad);
+        self.sample_with(grad, mu, sigma)
+    }
+
+    /// Like [`Self::grad_sample`], but reusing the (μ, σ) the
+    /// compressor already wrote into `packet`'s side info — the client
+    /// hot path calls this to avoid a second O(d) moments pass over the
+    /// gradient it just compressed.
+    pub fn grad_sample_from(&self, grad: &[f32], packet: &Packet) -> Vec<f32> {
+        if !self.adaptive || grad.is_empty() || packet.side_info.len() < 2 {
+            return Vec::new();
+        }
+        self.sample_with(grad, packet.side_info[0], packet.side_info[1])
+    }
+
+    fn sample_with(&self, grad: &[f32], mu: f32, sigma: f32) -> Vec<f32> {
+        sample_normalized(grad, mu, sigma)
+    }
+
+    /// Fold one update's normalized sample into the window accumulator.
+    pub fn observe_samples(&mut self, sample: &[f32]) {
+        if !self.adaptive {
+            return;
+        }
+        for &z in sample {
+            if !z.is_finite() {
+                continue;
+            }
+            self.moments.push(z as f64);
+            if self.samples.len() < MAX_WINDOW_SAMPLES {
+                self.samples.push(z);
+            }
+        }
+    }
+
+    /// Report one round's uplink-ledger movement: `bits` as actually
+    /// charged by [`crate::coordinator::network::SimulatedNetwork`]
+    /// (headers, side info, tables, index blocks, partial straggler
+    /// prefixes — the measured rate, not the design-time estimate), over
+    /// `coords` transmitted gradient coordinates.
+    pub fn observe_round(&mut self, bits: u64, coords: u64) {
+        if !self.adaptive {
+            return;
+        }
+        self.window_bits += bits;
+        self.window_coords += coords;
+    }
+
+    /// Close round `round` (0-based). On an adaptation-window boundary
+    /// the active controller acts: the Track loop runs dual ascent on λ,
+    /// re-designs empirically and bumps the shared codebook version; the
+    /// rate allocator re-solves the per-client widths. The returned
+    /// [`RoundAdaptation`] carries what must be charged to the caller's
+    /// downlink ledger.
+    pub fn end_round(&mut self, round: usize) -> Result<RoundAdaptation> {
+        if let Some(alloc) = &mut self.alloc {
+            return Ok(match alloc.end_round(round) {
+                Some(publications) => {
+                    RoundAdaptation::PerClient { publications }
+                }
+                None => RoundAdaptation::None,
+            });
+        }
+        let RateTarget::Track { bits_per_coord, adapt_every } = self.target
+        else {
+            return Ok(RoundAdaptation::None);
+        };
+        if (round + 1) % adapt_every != 0 {
+            return Ok(RoundAdaptation::None);
+        }
+        if self.window_coords == 0 || self.samples.is_empty() {
+            // nothing transmitted this window (e.g. a channel blackout):
+            // hold λ and keep accumulating into the next window
+            return Ok(RoundAdaptation::None);
+        }
+        let realized = self.window_bits as f64 / self.window_coords as f64;
+        self.last_realized = realized;
+        // dual ascent on the rate constraint: λ ← [λ + η·(R − R*)]₊
+        let err = realized - bits_per_coord;
+        if self.prev_err.is_finite() {
+            self.step *= if err.signum() == self.prev_err.signum() {
+                STEP_GROW
+            } else {
+                STEP_SHRINK
+            };
+            self.step = self.step.clamp(STEP_MIN, STEP_MAX);
+        }
+        self.prev_err = err;
+        self.lambda = (self.lambda + self.step * err).max(0.0);
+
+        // re-design against the window's empirical pdf, warm-started
+        // from the codebook currently on the wire
+        let CompressionScheme::RcFed { bits, length_model, .. } =
+            self.compressor.scheme
+        else {
+            return Err(Error::Config(
+                "adaptive pipeline without an rcfed scheme".into()));
+        };
+        let samples = std::mem::take(&mut self.samples);
+        let moments = (
+            self.moments.mean(),
+            self.moments.stddev(),
+            self.moments.count(),
+        );
+        let pdf = EmpiricalPdf::from_samples(&samples);
+        self.adapt_step += 1;
+        let warm = self.compressor.codebook().cloned();
+        let (cb, rep) = designed_adaptive_codebook(
+            bits,
+            self.lambda,
+            length_model,
+            self.adapt_step,
+            moments,
+            &pdf,
+            warm.as_ref(),
+        )?;
+        let huffman = HuffmanCode::from_probs(&rep.probs)?;
+        let arith = ArithmeticCoder::from_probs(&rep.probs)?;
+        let broadcast = codebook_broadcast_bits(&cb);
+        self.compressor.kernel =
+            Kernel::Codebook { codebook: cb, huffman, arith };
+        self.compressor.design_mse = Some(rep.mse);
+        self.compressor.design_rate = Some(rep.huffman_rate);
+        self.version += 1;
+        self.window_bits = 0;
+        self.window_coords = 0;
+        self.moments = Welford::default();
+        Ok(RoundAdaptation::Broadcast { bits_per_client: broadcast })
+    }
+
+    /// PS side: decode and accumulate. Adaptive and allocated packets
+    /// must carry the *current* codebook version — a stale packet
+    /// decoded against a newer codebook would silently reconstruct
+    /// garbage, so it is rejected as a recoverable `Err` instead;
+    /// allocated packets additionally decode against the *sender's*
+    /// codebook, not a shared one.
+    pub fn decompress_accumulate(
+        &self,
+        packet: &Packet,
+        acc: &mut [f32],
+    ) -> Result<()> {
+        if let Some(alloc) = &self.alloc {
+            return alloc.decompress_accumulate(packet, acc);
+        }
+        if !self.adaptive {
+            return self.compressor.decompress_accumulate(packet, acc);
+        }
+        if packet.side_info.len() != 3 {
+            return Err(Error::Coding(format!(
+                "versioned packet carries {} side-info values, expected \
+                 3 (μ, σ, version)",
+                packet.side_info.len()
+            )));
+        }
+        let (mu, sigma) = (packet.side_info[0], packet.side_info[1]);
+        let ver = packet.side_version()?;
+        if ver != self.version {
+            return Err(Error::Coding(format!(
+                "stale codebook version {ver} (current {})", self.version)));
+        }
+        self.compressor.decode_codebook_accumulate(packet, mu, sigma, acc)
+    }
+}
+
+/// PS-side decoding interface: the server is generic over this, so both
+/// the static [`Compressor`] (tests, direct harnesses) and the
+/// closed-loop [`CompressionPipeline`] (the round loop) can feed it.
+pub trait PacketDecoder {
+    fn decompress_accumulate(
+        &self,
+        packet: &Packet,
+        acc: &mut [f32],
+    ) -> Result<()>;
+}
+
+impl PacketDecoder for Compressor {
+    fn decompress_accumulate(
+        &self,
+        packet: &Packet,
+        acc: &mut [f32],
+    ) -> Result<()> {
+        Compressor::decompress_accumulate(self, packet, acc)
+    }
+}
+
+impl PacketDecoder for CompressionPipeline {
+    fn decompress_accumulate(
+        &self,
+        packet: &Packet,
+        acc: &mut [f32],
+    ) -> Result<()> {
+        CompressionPipeline::decompress_accumulate(self, packet, acc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::rcq::LengthModel;
+
+    fn gaussian_grad(n: usize, mu: f32, sigma: f32, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        let mut g = vec![0f32; n];
+        rng.fill_normal_f32(&mut g, mu, sigma);
+        g
+    }
+
+    fn rcfed_scheme() -> CompressionScheme {
+        CompressionScheme::RcFed {
+            bits: 3,
+            lambda: 0.05,
+            length_model: LengthModel::Huffman,
+        }
+    }
+
+    #[test]
+    fn controller_labels_are_stable() {
+        assert_eq!(RateTarget::Off.label(), "off");
+        assert_eq!(
+            RateTarget::Track { bits_per_coord: 2.5, adapt_every: 4 }.label(),
+            "rt2.5w4"
+        );
+    }
+
+    #[test]
+    fn off_pipeline_is_bit_identical_to_static_compressor() {
+        // the acceptance bar: RateTarget::Off must reproduce the static
+        // Compressor packet for packet, byte for byte
+        for scheme in [
+            rcfed_scheme(),
+            CompressionScheme::Lloyd { bits: 3 },
+            CompressionScheme::Qsgd { bits: 3 },
+            CompressionScheme::Fp32,
+        ] {
+            let stat =
+                Compressor::design(scheme, WireCoder::Huffman).unwrap();
+            let pipe = CompressionPipeline::design(
+                scheme, WireCoder::Huffman, RateTarget::Off)
+            .unwrap();
+            assert!(!pipe.is_adaptive());
+            let g = gaussian_grad(4096, 0.01, 0.02, 71);
+            // QSGD draws randomness: identical seeds on both sides
+            let mut r1 = Rng::new(72);
+            let mut r2 = Rng::new(72);
+            let p1 = stat.compress(1, 5, &g, &mut r1).unwrap();
+            let p2 = pipe.compress(1, 5, &g, &mut r2).unwrap();
+            assert_eq!(p1.to_bytes(), p2.to_bytes(), "{scheme:?}");
+            assert_eq!(p1.total_bits(), p2.total_bits());
+            // the stats pass is skipped entirely
+            assert!(pipe.grad_sample(&g).is_empty());
+            let mut a1 = vec![0f32; g.len()];
+            let mut a2 = vec![0f32; g.len()];
+            stat.decompress_accumulate(&p1, &mut a1).unwrap();
+            pipe.decompress_accumulate(&p2, &mut a2).unwrap();
+            assert_eq!(a1, a2);
+        }
+    }
+
+    #[test]
+    fn rate_target_validation() {
+        let track = RateTarget::Track { bits_per_coord: 2.0, adapt_every: 4 };
+        assert!(track.validate(&rcfed_scheme()).is_ok());
+        assert!(track
+            .validate(&CompressionScheme::Lloyd { bits: 3 })
+            .is_err());
+        assert!(RateTarget::Track { bits_per_coord: 0.0, adapt_every: 4 }
+            .validate(&rcfed_scheme())
+            .is_err());
+        assert!(RateTarget::Track { bits_per_coord: 2.0, adapt_every: 0 }
+            .validate(&rcfed_scheme())
+            .is_err());
+        assert!(RateTarget::Off
+            .validate(&CompressionScheme::Fp32)
+            .is_ok());
+        assert!(CompressionPipeline::design(
+            CompressionScheme::Fp32,
+            WireCoder::Huffman,
+            track
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn adaptive_packets_carry_version_and_reject_stale() {
+        let target = RateTarget::Track { bits_per_coord: 2.0, adapt_every: 1 };
+        let mut pipe = CompressionPipeline::design(
+            rcfed_scheme(), WireCoder::Huffman, target)
+        .unwrap();
+        let g = gaussian_grad(8192, 0.0, 0.5, 73);
+        let mut rng = Rng::new(74);
+        let v0 = pipe.compress(0, 0, &g, &mut rng).unwrap();
+        assert_eq!(v0.side_info.len(), 3, "version word missing");
+        assert_eq!(v0.side_info[2], 0.0);
+        let mut acc = vec![0f32; g.len()];
+        pipe.decompress_accumulate(&v0, &mut acc).unwrap();
+        // drive one adaptation window by hand: samples + ledger movement
+        let sample = pipe.grad_sample(&g);
+        assert!(!sample.is_empty());
+        // the hot-path variant reuses the packet's (μ, σ) bit-for-bit
+        assert_eq!(sample, pipe.grad_sample_from(&g, &v0));
+        pipe.observe_samples(&sample);
+        pipe.observe_round(v0.total_bits(), v0.d as u64);
+        match pipe.end_round(0).unwrap() {
+            RoundAdaptation::Broadcast { bits_per_client } => {
+                assert!(bits_per_client > 0,
+                        "redesign must cost downlink bits");
+            }
+            other => panic!("expected a broadcast, got {other:?}"),
+        }
+        assert_eq!(pipe.version(), 1);
+        // the old packet is now stale and must be rejected, not decoded
+        let err = pipe.decompress_accumulate(&v0, &mut acc);
+        assert!(err.is_err(), "stale version accepted");
+        // fresh packets carry — and pass — the new version
+        let v1 = pipe.compress(0, 1, &g, &mut rng).unwrap();
+        assert_eq!(v1.side_info[2], 1.0);
+        pipe.decompress_accumulate(&v1, &mut acc).unwrap();
+    }
+
+    // `dual_ascent_moves_lambda_toward_the_target` lives in
+    // `tests/rate_controller.rs` (public API only).
+
+    #[test]
+    fn blackout_window_holds_lambda_and_keeps_accumulating() {
+        // the guard at the top of the Track end_round: a window in which
+        // nothing was transmitted (total channel blackout) must hold λ,
+        // publish no codebook, and carry its samples into the next window
+        let target = RateTarget::Track { bits_per_coord: 2.0, adapt_every: 1 };
+        let mut pipe = CompressionPipeline::design(
+            rcfed_scheme(), WireCoder::Huffman, target)
+        .unwrap();
+        let g = gaussian_grad(8192, 0.0, 1.0, 81);
+        let sample = pipe.grad_sample(&g);
+        assert!(!sample.is_empty());
+        let lam0 = pipe.lambda();
+
+        // window 1: samples observed, but zero ledger movement
+        pipe.observe_samples(&sample);
+        assert_eq!(pipe.end_round(0).unwrap(), RoundAdaptation::None);
+        assert_eq!(pipe.lambda(), lam0, "blackout must hold λ");
+        assert_eq!(pipe.version(), 0, "blackout must not publish");
+        assert!(pipe.last_realized().is_nan());
+        assert_eq!(pipe.samples.len(), sample.len(),
+                   "blackout samples must keep accumulating");
+
+        // the inverse blackout — ledger movement but no samples (every
+        // sampled packet was rejected) — also holds
+        let mut dry = CompressionPipeline::design(
+            rcfed_scheme(), WireCoder::Huffman, target)
+        .unwrap();
+        dry.observe_round(1000, 500);
+        assert_eq!(dry.end_round(0).unwrap(), RoundAdaptation::None);
+        assert_eq!(dry.version(), 0);
+
+        // window 2 transmits: adaptation fires and the design pdf spans
+        // both windows' samples
+        pipe.observe_samples(&sample);
+        pipe.observe_round(4 * 8192, 8192);
+        match pipe.end_round(1).unwrap() {
+            RoundAdaptation::Broadcast { bits_per_client } => {
+                assert!(bits_per_client > 0);
+            }
+            other => panic!("expected a broadcast, got {other:?}"),
+        }
+        assert_eq!(pipe.version(), 1);
+        assert_eq!(pipe.moments.count(), 0, "window state must reset");
+        assert!(pipe.lambda() > lam0, "realized ≫ target must raise λ");
+    }
+
+    // The σ = 0 constant-gradient regression lives in
+    // `super::compressor::tests`; the transform × Track composition
+    // scenario lives in `tests/error_feedback.rs` (public API only).
+}

@@ -1,0 +1,365 @@
+//! The **Quantize** and **Code** stages, plus the staged encoder/decoder
+//! that composes them with a [`super::transform`] stage.
+//!
+//! [`Kernel`] is a designed quantize backend (codebook family, QSGD,
+//! fp32); [`CodebookCodec`] fuses the codebook quantizer with its wire
+//! entropy coder — the single normalize→quantize→entropy-code (and
+//! inverse) path shared by the static [`super::compressor::Compressor`],
+//! the adaptive pipeline and the per-client rate allocator, so the
+//! allocated and shared-codebook paths cannot silently diverge.
+//! [`encode_staged`]/the sparse decoders run the full
+//! Transform → Quantize → Code graph for error-feedback and top-k
+//! packets; the identity configuration never enters them (the legacy
+//! dense path is taken verbatim, keeping existing schemes byte-identical
+//! on the wire).
+
+use crate::coding::arithmetic::ArithmeticCoder;
+use crate::coding::huffman::HuffmanCode;
+use crate::coding::EntropyCoder;
+use crate::fl::packet::{Packet, SchemeTag};
+use crate::quant::codebook::Codebook;
+use crate::quant::qsgd::{Qsgd, QsgdMessage};
+use crate::stats::moments::mean_std;
+use crate::util::rng::Rng;
+use crate::util::{Error, Result};
+
+use super::scheme::WireCoder;
+use super::transform::{self, TransformCfg, TransformState, WorkingSet};
+
+/// Per-update budget of the client-side stats pass (shared by the
+/// pipeline's dense sampler and the staged sparse sampler).
+pub(crate) const SAMPLES_PER_UPDATE: usize = 2048;
+
+pub(crate) enum Kernel {
+    /// normalize → codebook → static code (RC-FED / Lloyd / NQFL / Uniform)
+    Codebook {
+        codebook: Codebook,
+        huffman: HuffmanCode,
+        arith: ArithmeticCoder,
+    },
+    Qsgd(Qsgd),
+    Fp32,
+}
+
+/// One designed codebook + its wire codes, borrowed.
+pub(crate) struct CodebookCodec<'a> {
+    pub(crate) codebook: &'a Codebook,
+    pub(crate) huffman: &'a HuffmanCode,
+    pub(crate) arith: &'a ArithmeticCoder,
+    pub(crate) wire: WireCoder,
+}
+
+impl CodebookCodec<'_> {
+    /// Quantize stage: normalize and map one value set to symbols.
+    pub(crate) fn quantize(&self, values: &[f32]) -> (f32, f32, Vec<u8>) {
+        let (mu, sigma) = mean_std(values);
+        let mut symbols = Vec::new();
+        self.codebook.quantize_normalized(values, mu, sigma, &mut symbols);
+        (mu, sigma, symbols)
+    }
+
+    /// Code stage: entropy-encode a symbol stream under the configured
+    /// wire coder; returns `(payload, payload_bits)`.
+    pub(crate) fn code(&self, symbols: &[u8]) -> Result<(Vec<u8>, u64)> {
+        match self.wire {
+            WireCoder::Huffman => {
+                let bits = self.huffman.message_bits(symbols);
+                Ok((self.huffman.encode(symbols)?, bits))
+            }
+            WireCoder::Arithmetic => {
+                let p = EntropyCoder::encode(self.arith, symbols)?;
+                let bits = p.len() as u64 * 8;
+                Ok((p, bits))
+            }
+        }
+    }
+
+    /// Normalize and encode one gradient; returns `(μ, σ, payload,
+    /// payload_bits)` — the fused dense hot path.
+    pub(crate) fn encode(&self, grad: &[f32]) -> Result<(f32, f32, Vec<u8>, u64)> {
+        let (mu, sigma, symbols) = self.quantize(grad);
+        let (payload, payload_bits) = self.code(&symbols)?;
+        Ok((mu, sigma, payload, payload_bits))
+    }
+
+    /// Inverse code stage: decode `n` symbols from a payload slice.
+    pub(crate) fn decode_symbols(
+        &self,
+        payload: &[u8],
+        n: usize,
+    ) -> Result<Vec<u8>> {
+        match self.wire {
+            WireCoder::Huffman => self.huffman.decode(payload, n),
+            WireCoder::Arithmetic => self.arith.decode(payload, n),
+        }
+    }
+
+    /// Decode a packet's payload with the given (μ, σ) — validated here
+    /// — and accumulate the de-normalized reconstruction into `acc`.
+    pub(crate) fn decode_accumulate(
+        &self,
+        packet: &Packet,
+        mu: f32,
+        sigma: f32,
+        acc: &mut [f32],
+    ) -> Result<()> {
+        if !mu.is_finite() || !sigma.is_finite() {
+            return Err(Error::Coding(format!(
+                "non-finite side info (μ={mu}, σ={sigma})")));
+        }
+        let d = packet.d as usize;
+        let symbols = self.decode_symbols(&packet.payload, d)?;
+        self.codebook.dequantize_accumulate(&symbols, mu, sigma, acc);
+        Ok(())
+    }
+
+    /// Decode a *sparse* packet (top-k transform): index block at the
+    /// payload head, coded values behind it, scatter-accumulated into
+    /// `acc` at the carried indices.
+    pub(crate) fn decode_sparse_accumulate(
+        &self,
+        packet: &Packet,
+        mu: f32,
+        sigma: f32,
+        acc: &mut [f32],
+    ) -> Result<()> {
+        if !mu.is_finite() || !sigma.is_finite() {
+            return Err(Error::Coding(format!(
+                "non-finite side info (μ={mu}, σ={sigma})")));
+        }
+        let d = packet.d as usize;
+        let (indices, consumed) =
+            transform::unpack_indices(d, &packet.payload)?;
+        let k = indices.len();
+        let symbols = self.decode_symbols(&packet.payload[consumed..], k)?;
+        let mut vals = vec![0f32; k];
+        self.codebook.dequantize_into(&symbols, mu, sigma, &mut vals);
+        for (&i, &v) in indices.iter().zip(&vals) {
+            acc[i as usize] += v;
+        }
+        Ok(())
+    }
+}
+
+/// Decode a sparse fp32 packet: index block, then raw f32 values.
+pub(crate) fn decode_sparse_fp32(
+    packet: &Packet,
+    acc: &mut [f32],
+) -> Result<()> {
+    let d = packet.d as usize;
+    let (indices, consumed) = transform::unpack_indices(d, &packet.payload)?;
+    let need = consumed + 4 * indices.len();
+    if packet.payload.len() < need {
+        return Err(Error::Coding(format!(
+            "sparse fp32 payload {} bytes < {need}",
+            packet.payload.len()
+        )));
+    }
+    for (j, &i) in indices.iter().enumerate() {
+        let off = consumed + 4 * j;
+        acc[i as usize] += f32::from_le_bytes(
+            packet.payload[off..off + 4].try_into().unwrap(),
+        );
+    }
+    Ok(())
+}
+
+/// Borrowed view of a quantize backend, handed to [`encode_staged`] by
+/// both the static compressor and the per-client rate allocator.
+pub(crate) enum QuantBackend<'a> {
+    Codebook(CodebookCodec<'a>),
+    Qsgd(&'a Qsgd),
+    Fp32,
+}
+
+/// One QSGD message encoded for the wire: the unbiased stochastic
+/// quantization plus the travelling per-message code-length table.
+pub(crate) struct QsgdEncoded {
+    pub(crate) msg: QsgdMessage,
+    pub(crate) payload: Vec<u8>,
+    pub(crate) payload_bits: u64,
+    pub(crate) table_bits: u64,
+}
+
+/// Per-message Huffman from the empirical symbol histogram. QSGD has no
+/// universal design distribution, so the code LENGTH TABLE physically
+/// travels at the payload head (5 bits per alphabet symbol, byte-padded)
+/// and is charged to `table_bits`.
+pub(crate) fn qsgd_encode(
+    q: &Qsgd,
+    values: &[f32],
+    rng: &mut Rng,
+) -> Result<QsgdEncoded> {
+    let msg = q.encode(values, rng);
+    let hist: Vec<u64> = {
+        let mut h = vec![0u64; q.num_symbols()];
+        for &s in &msg.symbols {
+            h[s as usize] += 1;
+        }
+        h
+    };
+    let code = HuffmanCode::from_freqs(&hist)?;
+    let table_bits = (5 * q.num_symbols() as u64).div_ceil(8) * 8;
+    let mut w = crate::coding::bitio::BitWriter::new();
+    for &l in code.lengths() {
+        w.push(l as u64, 5);
+    }
+    while w.bit_len() < table_bits {
+        w.push(0, 1); // pad table to a byte boundary
+    }
+    let payload_bits = code.message_bits(&msg.symbols);
+    code.encode_into(&msg.symbols, &mut w)?;
+    Ok(QsgdEncoded { msg, payload: w.finish(), payload_bits, table_bits })
+}
+
+/// Strided, normalized stats sample of a working set — the ONE sampler
+/// behind both the pipeline's dense `grad_sample` path and the staged
+/// sparse path, so the adaptive controller's two sample streams cannot
+/// drift apart on stride or σ-floor policy.
+pub(crate) fn sample_normalized(
+    values: &[f32],
+    mu: f32,
+    sigma: f32,
+) -> Vec<f32> {
+    let s = sigma.max(crate::quant::codebook::SIGMA_FLOOR);
+    let stride = values.len().div_ceil(SAMPLES_PER_UPDATE).max(1);
+    values.iter().step_by(stride).map(|&g| (g - mu) / s).collect()
+}
+
+/// Everything the staged encoder produced while the working-set borrow
+/// was alive; owned, so [`transform::absorb`] can run afterwards.
+struct Encoded {
+    side_info: Vec<f32>,
+    payload: Vec<u8>,
+    payload_bits: u64,
+    table_bits: u64,
+    index_bits: u64,
+    recon: Vec<f32>,
+    sample: Option<Vec<f32>>,
+}
+
+/// Run the staged Transform → Quantize → Code path into a packet. Only
+/// active transform configurations come through here; `capture_sample`
+/// stashes the adaptive controller's stats sample into `state`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn encode_staged(
+    backend: &QuantBackend<'_>,
+    cfg: TransformCfg,
+    state: &mut TransformState,
+    client_id: u32,
+    round: u32,
+    grad: &[f32],
+    rng: &mut Rng,
+    tag: SchemeTag,
+    bits_per_symbol: u8,
+    capture_sample: bool,
+) -> Result<Packet> {
+    let d = grad.len();
+    if cfg.is_sparse() && d == 0 {
+        return Err(Error::Config(
+            "cannot sparsify an empty gradient".into()));
+    }
+    let want_recon = cfg.error_feedback;
+    let enc: Encoded = {
+        let ws = transform::forward(cfg, grad, state);
+        let (values, sparse_indices): (&[f32], Option<&[u32]>) = match ws {
+            WorkingSet::Dense(v) => (v, None),
+            WorkingSet::Sparse { indices, values } => (values, Some(indices)),
+        };
+        match backend {
+            QuantBackend::Codebook(codec) => {
+                let (mu, sigma, symbols) = codec.quantize(values);
+                let (coded, payload_bits) = codec.code(&symbols)?;
+                let (payload, index_bits) = match sparse_indices {
+                    None => (coded, 0),
+                    Some(idx) => {
+                        let (mut head, bits) = transform::pack_indices(d, idx);
+                        head.extend_from_slice(&coded);
+                        (head, bits)
+                    }
+                };
+                let recon = if want_recon {
+                    let mut r = vec![0f32; symbols.len()];
+                    codec.codebook.dequantize_into(&symbols, mu, sigma, &mut r);
+                    r
+                } else {
+                    Vec::new()
+                };
+                let sample = capture_sample
+                    .then(|| sample_normalized(values, mu, sigma));
+                Encoded {
+                    side_info: vec![mu, sigma],
+                    payload,
+                    payload_bits,
+                    table_bits: 0, // universal design-time code (§3.1)
+                    index_bits,
+                    recon,
+                    sample,
+                }
+            }
+            QuantBackend::Qsgd(q) => {
+                // dense only (sparse × qsgd is rejected at validation)
+                let e = qsgd_encode(q, values, rng)?;
+                let recon = if want_recon {
+                    let mut r = vec![0f32; values.len()];
+                    q.decode_into(&e.msg, &mut r);
+                    r
+                } else {
+                    Vec::new()
+                };
+                Encoded {
+                    // one 32-bit ‖v‖ per bucket — bucketing's real cost
+                    side_info: e.msg.norms,
+                    payload: e.payload,
+                    payload_bits: e.payload_bits,
+                    table_bits: e.table_bits,
+                    index_bits: 0,
+                    recon,
+                    sample: None,
+                }
+            }
+            QuantBackend::Fp32 => {
+                let mut coded = Vec::with_capacity(values.len() * 4);
+                for &x in values {
+                    coded.extend_from_slice(&x.to_le_bytes());
+                }
+                let payload_bits = values.len() as u64 * 32;
+                let (payload, index_bits) = match sparse_indices {
+                    None => (coded, 0),
+                    Some(idx) => {
+                        let (mut head, bits) = transform::pack_indices(d, idx);
+                        head.extend_from_slice(&coded);
+                        (head, bits)
+                    }
+                };
+                let recon =
+                    if want_recon { values.to_vec() } else { Vec::new() };
+                Encoded {
+                    side_info: vec![],
+                    payload,
+                    payload_bits,
+                    table_bits: 0,
+                    index_bits,
+                    recon,
+                    sample: None,
+                }
+            }
+        }
+    };
+    transform::absorb(cfg, d, &enc.recon, state);
+    if let Some(sample) = enc.sample {
+        state.set_sample(sample);
+    }
+    Ok(Packet {
+        client_id,
+        round,
+        scheme: tag,
+        bits_per_symbol,
+        d: d as u32,
+        side_info: enc.side_info,
+        payload: enc.payload,
+        payload_bits: enc.payload_bits,
+        table_bits: enc.table_bits,
+        index_bits: enc.index_bits,
+    })
+}

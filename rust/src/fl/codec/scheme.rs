@@ -1,0 +1,124 @@
+//! Scheme + wire-coder configuration: the *what* of the quantize and
+//! code stages (the *how* lives in [`super::quantize`]).
+
+use crate::fl::packet::SchemeTag;
+use crate::quant::rcq::LengthModel;
+
+/// Which wire entropy coder carries the symbols.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireCoder {
+    /// canonical Huffman (paper default)
+    Huffman,
+    /// static arithmetic coding (Shannon-bound reference)
+    Arithmetic,
+}
+
+/// Scheme selection + hyper-parameters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CompressionScheme {
+    /// the paper's contribution: rate-constrained quantization
+    RcFed { bits: u32, lambda: f64, length_model: LengthModel },
+    /// Lloyd-Max baseline [16]
+    Lloyd { bits: u32 },
+    /// NQFL companding baseline [14]
+    Nqfl { bits: u32 },
+    /// QSGD baseline [8]
+    Qsgd { bits: u32 },
+    /// plain uniform grid over ±clip
+    Uniform { bits: u32, clip: f64 },
+    /// uncompressed float32 reference
+    Fp32,
+}
+
+impl CompressionScheme {
+    pub fn tag(&self) -> SchemeTag {
+        match self {
+            CompressionScheme::RcFed { .. } => SchemeTag::RcFed,
+            CompressionScheme::Lloyd { .. } => SchemeTag::Lloyd,
+            CompressionScheme::Nqfl { .. } => SchemeTag::Nqfl,
+            CompressionScheme::Qsgd { .. } => SchemeTag::Qsgd,
+            CompressionScheme::Uniform { .. } => SchemeTag::Uniform,
+            CompressionScheme::Fp32 => SchemeTag::Fp32,
+        }
+    }
+
+    pub fn bits(&self) -> u32 {
+        match *self {
+            CompressionScheme::RcFed { bits, .. }
+            | CompressionScheme::Lloyd { bits }
+            | CompressionScheme::Nqfl { bits }
+            | CompressionScheme::Qsgd { bits }
+            | CompressionScheme::Uniform { bits, .. } => bits,
+            CompressionScheme::Fp32 => 32,
+        }
+    }
+
+    /// The same scheme with its bit-width rebound — how the rate
+    /// allocator derives a client's per-width operating point from the
+    /// configured base scheme. A no-op for `Fp32` (no width to rebind).
+    pub fn with_bits(self, bits: u32) -> CompressionScheme {
+        match self {
+            CompressionScheme::RcFed { lambda, length_model, .. } => {
+                CompressionScheme::RcFed { bits, lambda, length_model }
+            }
+            CompressionScheme::Lloyd { .. } => {
+                CompressionScheme::Lloyd { bits }
+            }
+            CompressionScheme::Nqfl { .. } => CompressionScheme::Nqfl { bits },
+            CompressionScheme::Qsgd { .. } => CompressionScheme::Qsgd { bits },
+            CompressionScheme::Uniform { clip, .. } => {
+                CompressionScheme::Uniform { bits, clip }
+            }
+            CompressionScheme::Fp32 => CompressionScheme::Fp32,
+        }
+    }
+
+    /// Short label for CSVs/logs, e.g. `rcfed_b3_l0.050`.
+    pub fn label(&self) -> String {
+        match *self {
+            CompressionScheme::RcFed { bits, lambda, .. } => {
+                format!("rcfed_b{bits}_l{lambda:.3}")
+            }
+            CompressionScheme::Lloyd { bits } => format!("lloyd_b{bits}"),
+            CompressionScheme::Nqfl { bits } => format!("nqfl_b{bits}"),
+            CompressionScheme::Qsgd { bits } => format!("qsgd_b{bits}"),
+            CompressionScheme::Uniform { bits, .. } => format!("uniform_b{bits}"),
+            CompressionScheme::Fp32 => "fp32".into(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scheme_labels_are_stable() {
+        assert_eq!(
+            CompressionScheme::RcFed {
+                bits: 3,
+                lambda: 0.05,
+                length_model: LengthModel::Huffman
+            }
+            .label(),
+            "rcfed_b3_l0.050"
+        );
+        assert_eq!(CompressionScheme::Qsgd { bits: 6 }.label(), "qsgd_b6");
+    }
+
+    #[test]
+    fn with_bits_rebinds_every_width_scheme() {
+        let rc = CompressionScheme::RcFed {
+            bits: 3,
+            lambda: 0.1,
+            length_model: LengthModel::Huffman,
+        };
+        assert_eq!(rc.with_bits(5).bits(), 5);
+        assert_eq!(CompressionScheme::Lloyd { bits: 2 }.with_bits(4).bits(), 4);
+        assert_eq!(CompressionScheme::Fp32.with_bits(4), CompressionScheme::Fp32);
+        assert_eq!(
+            CompressionScheme::Uniform { bits: 3, clip: 4.0 }.with_bits(6),
+            CompressionScheme::Uniform { bits: 6, clip: 4.0 }
+        );
+    }
+}

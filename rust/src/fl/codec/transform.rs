@@ -1,0 +1,518 @@
+//! The **Transform** stage: what happens to the raw effective gradient
+//! *before* quantization.
+//!
+//! Three behaviors, freely composable with every quantize/code backend:
+//!
+//! * **identity** — the working set *is* the gradient; zero wire effect,
+//!   zero cost (the pre-codec hot path is taken unchanged);
+//! * **error feedback** — a per-client residual (the quantization error
+//!   banked from previous rounds) is added to the gradient before
+//!   quantization, and re-banked from the fresh reconstruction after it.
+//!   The residual lives client-side in [`TransformState`], so a packet
+//!   lost downstream never touches it;
+//! * **top-k sparsification** — keep the `ceil(ratio·d)` largest-|value|
+//!   coordinates; their indices travel at the head of the payload as a
+//!   packed `ceil(log2 d)`-bit stream and are charged honestly to
+//!   `Packet::index_bits`.
+//!
+//! EF composes with top-k (classic EF-SGD): untransmitted coordinates
+//! accumulate in the residual until they win a top-k slot.
+
+use crate::coding::bitio::{BitReader, BitWriter};
+use crate::util::{Error, Result};
+
+use super::scheme::CompressionScheme;
+
+/// Which transform precedes quantization.
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub enum Transform {
+    /// the working set is the gradient itself
+    #[default]
+    Identity,
+    /// top-k magnitude sparsification: keep `ceil(ratio·d)` coordinates
+    TopK { ratio: f64 },
+}
+
+/// Transform-stage configuration: the kind plus the orthogonal
+/// error-feedback switch.
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub struct TransformCfg {
+    pub kind: Transform,
+    /// carry the quantization error across rounds in a per-client
+    /// residual (requires `compress_with` + a [`TransformState`])
+    pub error_feedback: bool,
+}
+
+impl TransformCfg {
+    pub fn identity() -> TransformCfg {
+        TransformCfg::default()
+    }
+
+    pub fn topk(ratio: f64) -> TransformCfg {
+        TransformCfg { kind: Transform::TopK { ratio }, error_feedback: false }
+    }
+
+    pub fn with_ef(mut self) -> TransformCfg {
+        self.error_feedback = true;
+        self
+    }
+
+    /// Anything beyond the plain identity pass-through?
+    pub fn is_active(&self) -> bool {
+        self.error_feedback || !matches!(self.kind, Transform::Identity)
+    }
+
+    /// Does the working set carry an index stream on the wire?
+    pub fn is_sparse(&self) -> bool {
+        matches!(self.kind, Transform::TopK { .. })
+    }
+
+    /// Scheme-label suffix, empty when inactive so every pre-transform
+    /// label (CSV keys, golden snapshots) stays byte-identical.
+    pub fn suffix(&self) -> String {
+        match (self.kind, self.error_feedback) {
+            (Transform::Identity, false) => String::new(),
+            (Transform::Identity, true) => "_ef".into(),
+            (Transform::TopK { ratio }, false) => format!("_topk{ratio}"),
+            (Transform::TopK { ratio }, true) => format!("_topk{ratio}_ef"),
+        }
+    }
+
+    /// Stable axis label for sweep rows, `"id"` when inactive.
+    pub fn label(&self) -> String {
+        match (self.kind, self.error_feedback) {
+            (Transform::Identity, false) => "id".into(),
+            (Transform::Identity, true) => "ef".into(),
+            (Transform::TopK { ratio }, false) => format!("topk{ratio}"),
+            (Transform::TopK { ratio }, true) => format!("topk{ratio}+ef"),
+        }
+    }
+
+    /// Reject nonsensical ratios and unsupported scheme combinations up
+    /// front, so a bad configuration is a config error, not a silent
+    /// no-op or a decode-time surprise.
+    pub fn validate(&self, scheme: &CompressionScheme) -> Result<()> {
+        if let Transform::TopK { ratio } = self.kind {
+            if !(ratio > 0.0 && ratio <= 1.0 && ratio.is_finite()) {
+                return Err(Error::Config(format!(
+                    "topk ratio {ratio} must be in (0, 1]")));
+            }
+            if matches!(scheme, CompressionScheme::Qsgd { .. }) {
+                return Err(Error::Config(
+                    "topk sparsification is not supported for qsgd (its \
+                     bucketed norms assume the dense layout); use a \
+                     designed-codebook scheme or fp32"
+                        .into(),
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Per-client transform state, owned by the client and threaded mutably
+/// through `compress_with`. It survives rounds by construction, and
+/// survives packet loss because nothing downstream of compression ever
+/// touches it — the satellite property the EF tests pin down.
+#[derive(Debug)]
+pub struct TransformState {
+    /// EF residual in the raw gradient domain (empty until first use)
+    residual: Vec<f32>,
+    /// EF working copy: gradient + residual
+    scratch: Vec<f32>,
+    /// sparse working set of the last forward pass
+    values: Vec<f32>,
+    indices: Vec<u32>,
+    /// top-k selection scratch (index permutation)
+    order: Vec<u32>,
+    /// stats sample captured by the staged path on adaptive runs
+    sample: Option<Vec<f32>>,
+    /// ‖residual‖₂ after the last compress (NaN while EF is off)
+    pub last_ef_norm: f64,
+    /// transmitted-coordinate fraction of the last compress (1 when
+    /// dense, NaN before the first staged compress)
+    pub last_sparsity: f64,
+}
+
+/// `Default` and [`TransformState::new`] are the same construction: the
+/// diagnostics start at their NaN "no compress yet" sentinels, so no
+/// construction path can leak a bogus 0.0 into the metrics means.
+impl Default for TransformState {
+    fn default() -> TransformState {
+        TransformState {
+            residual: Vec::new(),
+            scratch: Vec::new(),
+            values: Vec::new(),
+            indices: Vec::new(),
+            order: Vec::new(),
+            sample: None,
+            last_ef_norm: f64::NAN,
+            last_sparsity: f64::NAN,
+        }
+    }
+}
+
+impl TransformState {
+    pub fn new() -> TransformState {
+        TransformState::default()
+    }
+
+    /// The banked error-feedback residual (empty until the first EF
+    /// compress).
+    pub fn residual(&self) -> &[f32] {
+        &self.residual
+    }
+
+    pub(crate) fn set_sample(&mut self, sample: Vec<f32>) {
+        self.sample = Some(sample);
+    }
+
+    /// The stats sample the staged encoder captured for the adaptive
+    /// controller, if any (consumed).
+    pub fn take_sample(&mut self) -> Option<Vec<f32>> {
+        self.sample.take()
+    }
+}
+
+/// The working set a transform hands to the quantize stage.
+pub(crate) enum WorkingSet<'a> {
+    Dense(&'a [f32]),
+    Sparse { indices: &'a [u32], values: &'a [f32] },
+}
+
+/// Stage-1 forward pass: residual injection (EF), then selection
+/// (top-k). Returns a working set borrowing either `grad` (identity) or
+/// the state's scratch buffers — allocation-free after warm-up.
+pub(crate) fn forward<'a>(
+    cfg: TransformCfg,
+    grad: &'a [f32],
+    state: &'a mut TransformState,
+) -> WorkingSet<'a> {
+    if cfg.error_feedback {
+        let TransformState { residual, scratch, .. } = &mut *state;
+        residual.resize(grad.len(), 0.0);
+        scratch.clear();
+        scratch.reserve(grad.len());
+        for (&g, &r) in grad.iter().zip(residual.iter()) {
+            scratch.push(g + r);
+        }
+    }
+    match cfg.kind {
+        Transform::Identity => {
+            if cfg.error_feedback {
+                WorkingSet::Dense(&state.scratch)
+            } else {
+                WorkingSet::Dense(grad)
+            }
+        }
+        Transform::TopK { ratio } => {
+            let TransformState { scratch, values, indices, order, .. } =
+                state;
+            let src: &[f32] =
+                if cfg.error_feedback { scratch.as_slice() } else { grad };
+            let k = topk_count(src.len(), ratio);
+            select_topk(src, k, order, indices, values);
+            WorkingSet::Sparse { indices: &*indices, values: &*values }
+        }
+    }
+}
+
+/// Stage-1 epilogue, after quantization: bank the fresh quantization
+/// error into the residual (EF) and record the round diagnostics.
+/// `recon` reconstructs the working *values* in the raw gradient domain
+/// (length k for sparse, d for dense; ignored when EF is off).
+pub(crate) fn absorb(
+    cfg: TransformCfg,
+    d: usize,
+    recon: &[f32],
+    state: &mut TransformState,
+) {
+    state.last_sparsity = if cfg.is_sparse() {
+        state.indices.len() as f64 / d.max(1) as f64
+    } else {
+        1.0
+    };
+    if !cfg.error_feedback {
+        state.last_ef_norm = f64::NAN;
+        return;
+    }
+    // scratch = grad + residual_old (filled by forward); the new
+    // residual is whatever of it the wire did not carry
+    let norm = {
+        let TransformState { residual, scratch, indices, .. } = &mut *state;
+        if cfg.is_sparse() {
+            residual.copy_from_slice(scratch);
+            for (&i, &q) in indices.iter().zip(recon) {
+                residual[i as usize] -= q;
+            }
+        } else {
+            for ((r, &s), &q) in
+                residual.iter_mut().zip(scratch.iter()).zip(recon)
+            {
+                *r = s - q;
+            }
+        }
+        residual
+            .iter()
+            .map(|&x| (x as f64) * (x as f64))
+            .sum::<f64>()
+            .sqrt()
+    };
+    state.last_ef_norm = norm;
+}
+
+/// Kept-coordinate count for dimension `d` at `ratio`: `ceil(ratio·d)`,
+/// at least 1 for a non-empty gradient.
+pub(crate) fn topk_count(d: usize, ratio: f64) -> usize {
+    if d == 0 {
+        return 0;
+    }
+    ((d as f64 * ratio).ceil() as usize).clamp(1, d)
+}
+
+/// Deterministic top-k selection by |value|, ties broken toward the
+/// lower index (a strict total order, so the selected *set* is unique
+/// however the partition shuffles). Output indices ascend. `order` is
+/// caller-owned scratch (the hot path reuses the state's buffer, so
+/// selection is allocation-free after warm-up).
+fn select_topk(
+    src: &[f32],
+    k: usize,
+    order: &mut Vec<u32>,
+    indices: &mut Vec<u32>,
+    values: &mut Vec<f32>,
+) {
+    indices.clear();
+    values.clear();
+    let d = src.len();
+    if k == 0 || d == 0 {
+        return;
+    }
+    order.clear();
+    order.extend(0..d as u32);
+    let cmp = |a: &u32, b: &u32| {
+        let ma = src[*a as usize].abs();
+        let mb = src[*b as usize].abs();
+        mb.total_cmp(&ma).then_with(|| a.cmp(b))
+    };
+    if k < d {
+        order.select_nth_unstable_by(k - 1, cmp);
+        order.truncate(k);
+    }
+    order.sort_unstable();
+    indices.extend_from_slice(order);
+    values.extend(order.iter().map(|&i| src[i as usize]));
+}
+
+/// Bits per packed index for dimension `d`: `ceil(log2 d)`, min 1.
+pub(crate) fn index_width(d: usize) -> u32 {
+    (usize::BITS - (d.max(2) - 1).leading_zeros()).max(1)
+}
+
+/// Serialize the sparse index block: `k` as u32 LE, then `k` packed
+/// [`index_width`]-bit indices, byte-padded. Returns `(bytes, bits)` —
+/// `bits` is the exact wire cost charged to `Packet::index_bits`.
+pub(crate) fn pack_indices(d: usize, indices: &[u32]) -> (Vec<u8>, u64) {
+    let w = index_width(d);
+    let mut bw = BitWriter::new();
+    for &i in indices {
+        bw.push(i as u64, w);
+    }
+    let body = bw.finish();
+    let bits = 32 + body.len() as u64 * 8;
+    let mut out = Vec::with_capacity(4 + body.len());
+    out.extend_from_slice(&(indices.len() as u32).to_le_bytes());
+    out.extend_from_slice(&body);
+    (out, bits)
+}
+
+/// Parse and validate the index block at a payload head. Returns the
+/// indices and the bytes consumed. Malformed blocks — truncation, `k`
+/// outside `1..=d`, out-of-range or non-increasing indices (a corrupted
+/// stream decodes to *something*, so monotonicity is the integrity
+/// check) — are recoverable `Err`s, never panics.
+pub(crate) fn unpack_indices(
+    d: usize,
+    payload: &[u8],
+) -> Result<(Vec<u32>, usize)> {
+    if payload.len() < 4 {
+        return Err(Error::Coding("sparse payload too short".into()));
+    }
+    let k = u32::from_le_bytes(payload[0..4].try_into().unwrap()) as usize;
+    if k == 0 || k > d {
+        return Err(Error::Coding(format!(
+            "sparse packet keeps {k} of {d} coordinates")));
+    }
+    let w = index_width(d);
+    let body_bytes = (k as u64 * w as u64).div_ceil(8) as usize;
+    if payload.len() < 4 + body_bytes {
+        return Err(Error::Coding("sparse index block truncated".into()));
+    }
+    let mut r = BitReader::new(&payload[4..4 + body_bytes]);
+    let mut indices = Vec::with_capacity(k);
+    let mut prev: i64 = -1;
+    for _ in 0..k {
+        let i = r.read(w) as u32;
+        if i as usize >= d || i as i64 <= prev {
+            return Err(Error::Coding(format!(
+                "sparse index stream corrupt (index {i} after {prev}, \
+                 d={d})")));
+        }
+        prev = i as i64;
+        indices.push(i);
+    }
+    Ok((indices, 4 + body_bytes))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_and_suffixes_are_stable() {
+        assert_eq!(TransformCfg::identity().suffix(), "");
+        assert_eq!(TransformCfg::identity().label(), "id");
+        assert!(!TransformCfg::identity().is_active());
+        let ef = TransformCfg::identity().with_ef();
+        assert_eq!(ef.suffix(), "_ef");
+        assert_eq!(ef.label(), "ef");
+        assert!(ef.is_active() && !ef.is_sparse());
+        let tk = TransformCfg::topk(0.1);
+        assert_eq!(tk.suffix(), "_topk0.1");
+        assert_eq!(tk.label(), "topk0.1");
+        assert!(tk.is_active() && tk.is_sparse());
+        assert_eq!(tk.with_ef().suffix(), "_topk0.1_ef");
+        assert_eq!(tk.with_ef().label(), "topk0.1+ef");
+    }
+
+    #[test]
+    fn validation_rejects_bad_ratios_and_qsgd() {
+        let lloyd = CompressionScheme::Lloyd { bits: 3 };
+        assert!(TransformCfg::topk(0.5).validate(&lloyd).is_ok());
+        assert!(TransformCfg::topk(1.0).validate(&lloyd).is_ok());
+        assert!(TransformCfg::topk(0.0).validate(&lloyd).is_err());
+        assert!(TransformCfg::topk(1.5).validate(&lloyd).is_err());
+        assert!(TransformCfg::topk(f64::NAN).validate(&lloyd).is_err());
+        let qsgd = CompressionScheme::Qsgd { bits: 3 };
+        assert!(TransformCfg::topk(0.5).validate(&qsgd).is_err());
+        // EF alone is fine everywhere, qsgd included
+        assert!(TransformCfg::identity().with_ef().validate(&qsgd).is_ok());
+    }
+
+    #[test]
+    fn topk_selection_is_deterministic_with_index_tiebreak() {
+        let src = [1.0f32, -3.0, 2.0, -2.0, 0.5, 2.0];
+        let mut order = Vec::new();
+        let (mut idx, mut vals) = (Vec::new(), Vec::new());
+        select_topk(&src, 3, &mut order, &mut idx, &mut vals);
+        // |−3| > |2| (index 2 beats the tied index 5) > |−2|
+        assert_eq!(idx, vec![1, 2, 3]);
+        assert_eq!(vals, vec![-3.0, 2.0, -2.0]);
+        // k = d keeps everything, ascending
+        select_topk(&src, 6, &mut order, &mut idx, &mut vals);
+        assert_eq!(idx, vec![0, 1, 2, 3, 4, 5]);
+        assert_eq!(vals.len(), 6);
+    }
+
+    #[test]
+    fn topk_count_bounds() {
+        assert_eq!(topk_count(0, 0.5), 0);
+        assert_eq!(topk_count(10, 0.1), 1);
+        assert_eq!(topk_count(10, 0.25), 3);
+        assert_eq!(topk_count(10, 1.0), 10);
+        assert_eq!(topk_count(10, 0.0001), 1);
+    }
+
+    #[test]
+    fn index_width_is_ceil_log2() {
+        assert_eq!(index_width(1), 1);
+        assert_eq!(index_width(2), 1);
+        assert_eq!(index_width(3), 2);
+        assert_eq!(index_width(64), 6);
+        assert_eq!(index_width(65), 7);
+        assert_eq!(index_width(4096), 12);
+    }
+
+    #[test]
+    fn index_block_roundtrips_and_rejects_corruption() {
+        let d = 1000;
+        let idx = vec![0u32, 7, 512, 999];
+        let (bytes, bits) = pack_indices(d, &idx);
+        assert_eq!(bits, 32 + ((4 * 10) as u64).div_ceil(8) * 8);
+        assert_eq!(bytes.len() as u64 * 8, bits);
+        let (back, consumed) = unpack_indices(d, &bytes).unwrap();
+        assert_eq!(back, idx);
+        assert_eq!(consumed, bytes.len());
+        // truncated head / body
+        assert!(unpack_indices(d, &bytes[..3]).is_err());
+        assert!(unpack_indices(d, &bytes[..5]).is_err());
+        // k out of range
+        let mut bad = bytes.clone();
+        bad[0..4].copy_from_slice(&0u32.to_le_bytes());
+        assert!(unpack_indices(d, &bad).is_err());
+        bad[0..4].copy_from_slice(&(d as u32 + 1).to_le_bytes());
+        assert!(unpack_indices(d, &bad).is_err());
+        // non-increasing stream: duplicate the first index over the second
+        let dup = vec![7u32, 7, 512, 999];
+        let (dup_bytes, _) = pack_indices(d, &dup);
+        assert!(unpack_indices(d, &dup_bytes).is_err());
+    }
+
+    #[test]
+    fn ef_forward_absorb_banks_the_quantization_error() {
+        let cfg = TransformCfg::identity().with_ef();
+        let mut state = TransformState::new();
+        let grad = vec![1.0f32, -2.0, 0.5];
+        {
+            let ws = forward(cfg, &grad, &mut state);
+            match ws {
+                WorkingSet::Dense(v) => assert_eq!(v, &grad[..]),
+                _ => panic!("identity+ef must stay dense"),
+            }
+        }
+        // pretend the quantizer reconstructed with error +0.1 everywhere
+        let recon: Vec<f32> = grad.iter().map(|&g| g + 0.1).collect();
+        absorb(cfg, grad.len(), &recon, &mut state);
+        for &r in state.residual() {
+            assert!((r + 0.1).abs() < 1e-6, "residual {r}");
+        }
+        assert!((state.last_sparsity - 1.0).abs() < 1e-12);
+        assert!(state.last_ef_norm > 0.0);
+        // next round the residual rides along
+        {
+            let ws = forward(cfg, &grad, &mut state);
+            let WorkingSet::Dense(v) = ws else { panic!() };
+            for (x, &g) in v.iter().zip(&grad) {
+                assert!((x - (g - 0.1)).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn ef_topk_residual_keeps_untransmitted_mass() {
+        let cfg = TransformCfg::topk(0.5).with_ef();
+        let grad = vec![4.0f32, 0.1, -3.0, 0.2];
+        let mut state = TransformState::new();
+        {
+            let ws = forward(cfg, &grad, &mut state);
+            let WorkingSet::Sparse { indices, values } = ws else {
+                panic!()
+            };
+            assert_eq!(indices, &[0, 2]);
+            assert_eq!(values, &[4.0, -3.0]);
+        }
+        // exact reconstruction of the kept values
+        absorb(cfg, grad.len(), &[4.0, -3.0], &mut state);
+        assert_eq!(state.residual(), &[0.0, 0.1, 0.0, 0.2]);
+        assert!((state.last_sparsity - 0.5).abs() < 1e-12);
+        // the dropped coordinates come back next round
+        {
+            let ws = forward(cfg, &[0.0f32; 4], &mut state);
+            let WorkingSet::Sparse { indices, values } = ws else {
+                panic!()
+            };
+            assert_eq!(indices, &[1, 3]);
+            assert_eq!(values, &[0.1, 0.2]);
+        }
+    }
+}

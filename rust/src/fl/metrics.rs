@@ -1,7 +1,7 @@
 //! Per-round metrics + the uplink bit ledger that produces Fig. 1's
 //! x-axis.
 
-use crate::util::csv::CsvWriter;
+use crate::util::csv::{CsvField, CsvWriter};
 use crate::util::Result;
 
 /// Metrics of one communication round.
@@ -46,6 +46,17 @@ pub struct AllocTraceRow {
     pub bits_down: u64,
 }
 
+/// One round of the transform-stage trace. Only recorded when a
+/// transform (error feedback and/or sparsification) is active, so plain
+/// runs carry — and emit — nothing.
+#[derive(Clone, Copy, Debug)]
+pub struct TransformTraceRow {
+    /// mean client ‖EF residual‖₂ this round (NaN when EF is off)
+    pub ef_residual_norm: f64,
+    /// mean transmitted-coordinate fraction this round (1 when dense)
+    pub sparsity: f64,
+}
+
 /// Accumulates the experiment's metric history and bit ledger.
 #[derive(Debug, Default)]
 pub struct MetricsLog {
@@ -54,6 +65,7 @@ pub struct MetricsLog {
     bits_down_cum: u64,
     rate: Vec<RateTraceRow>,
     alloc: Vec<AllocTraceRow>,
+    transform: Vec<TransformTraceRow>,
 }
 
 impl MetricsLog {
@@ -113,6 +125,26 @@ impl MetricsLog {
         self.alloc.last().map(|a| a.gini).unwrap_or(f64::NAN)
     }
 
+    /// Record the transform trace for the round just pushed. Call once
+    /// per round, after [`push`](Self::push), only when the transform
+    /// stage is active — the CSV schema grows the `ef_residual_norm` /
+    /// `sparsity` columns exactly when every round has a trace row.
+    pub fn push_transform(&mut self, ef_residual_norm: f64, sparsity: f64) {
+        self.transform
+            .push(TransformTraceRow { ef_residual_norm, sparsity });
+    }
+
+    /// Per-round transform trace (empty on identity runs).
+    pub fn transform_trace(&self) -> &[TransformTraceRow] {
+        &self.transform
+    }
+
+    /// Transmitted-coordinate fraction of the final round (NaN when the
+    /// transform stage is inactive).
+    pub fn final_sparsity(&self) -> f64 {
+        self.transform.last().map(|t| t.sparsity).unwrap_or(f64::NAN)
+    }
+
     pub fn total_bits(&self) -> u64 {
         self.bits_cum
     }
@@ -148,8 +180,10 @@ impl MetricsLog {
 
     /// Append all rounds to a CSV. The base schema is unchanged from the
     /// static path; the controller columns (`lambda`, `realized_bpc`,
-    /// `bits_down`) appear only when a rate trace was recorded for every
-    /// round, so static-run CSVs stay byte-identical.
+    /// `bits_down`), the allocation columns and the transform columns
+    /// (`ef_residual_norm`, `sparsity`) appear only when the matching
+    /// trace was recorded for every round, so static-run CSVs stay
+    /// byte-identical.
     pub fn write_csv(&self, path: &str, label: &str) -> Result<()> {
         let with_rate =
             !self.rate.is_empty() && self.rate.len() == self.rounds.len();
@@ -159,6 +193,10 @@ impl MetricsLog {
         let with_alloc = !with_rate
             && !self.alloc.is_empty()
             && self.alloc.len() == self.rounds.len();
+        // the transform stage composes with either controller, so its
+        // columns gate independently and always come last
+        let with_transform = !self.transform.is_empty()
+            && self.transform.len() == self.rounds.len();
         let mut header = vec![
             "scheme", "round", "train_loss", "test_acc", "bits_up",
             "bits_cum", "wall_secs",
@@ -171,50 +209,38 @@ impl MetricsLog {
             header.extend_from_slice(&["alloc_gini", "alloc_mean_bits",
                                        "bits_down"]);
         }
+        if with_transform {
+            header.extend_from_slice(&["ef_residual_norm", "sparsity"]);
+        }
         let mut w = CsvWriter::create(path, &header)?;
         for (i, r) in self.rounds.iter().enumerate() {
+            let mut row: Vec<CsvField> = vec![
+                CsvField::from(label),
+                CsvField::from(r.round),
+                CsvField::from(r.train_loss as f64),
+                CsvField::from(r.test_accuracy),
+                CsvField::from(r.bits_up),
+                CsvField::from(r.bits_cum),
+                CsvField::from(r.wall_secs),
+            ];
             if with_rate {
                 let t = &self.rate[i];
-                crate::csv_row!(
-                    w,
-                    label,
-                    r.round,
-                    r.train_loss as f64,
-                    r.test_accuracy,
-                    r.bits_up,
-                    r.bits_cum,
-                    r.wall_secs,
-                    t.lambda,
-                    t.realized_bpc,
-                    t.bits_down
-                )?;
-            } else if with_alloc {
-                let t = &self.alloc[i];
-                crate::csv_row!(
-                    w,
-                    label,
-                    r.round,
-                    r.train_loss as f64,
-                    r.test_accuracy,
-                    r.bits_up,
-                    r.bits_cum,
-                    r.wall_secs,
-                    t.gini,
-                    t.mean_bits,
-                    t.bits_down
-                )?;
-            } else {
-                crate::csv_row!(
-                    w,
-                    label,
-                    r.round,
-                    r.train_loss as f64,
-                    r.test_accuracy,
-                    r.bits_up,
-                    r.bits_cum,
-                    r.wall_secs
-                )?;
+                row.push(CsvField::from(t.lambda));
+                row.push(CsvField::from(t.realized_bpc));
+                row.push(CsvField::from(t.bits_down));
             }
+            if with_alloc {
+                let t = &self.alloc[i];
+                row.push(CsvField::from(t.gini));
+                row.push(CsvField::from(t.mean_bits));
+                row.push(CsvField::from(t.bits_down));
+            }
+            if with_transform {
+                let t = &self.transform[i];
+                row.push(CsvField::from(t.ef_residual_norm));
+                row.push(CsvField::from(t.sparsity));
+            }
+            w.row(&row)?;
         }
         w.flush()
     }
@@ -289,6 +315,46 @@ mod tests {
         std::fs::remove_dir_all(dir).ok();
         // uniform runs carry no trace and no gini
         assert!(MetricsLog::new().final_alloc_gini().is_nan());
+    }
+
+    #[test]
+    fn transform_trace_gates_extra_csv_columns() {
+        let dir = std::env::temp_dir().join(format!(
+            "rcfed_metrics_transform_{}", std::process::id()));
+        let path = dir.join("tf.csv");
+        let mut m = MetricsLog::new();
+        m.push(0, 1.0, f64::NAN, 100, 0.01);
+        m.push_transform(0.5, 0.1);
+        m.push(1, 0.9, 0.6, 90, 0.01);
+        m.push_transform(0.25, 0.1);
+        assert_eq!(m.transform_trace().len(), 2);
+        assert!((m.final_sparsity() - 0.1).abs() < 1e-12);
+        m.write_csv(path.to_str().unwrap(), "rcfed_b3_topk0.1_ef").unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let header = text.lines().next().unwrap();
+        assert!(
+            header.ends_with("wall_secs,ef_residual_norm,sparsity"),
+            "transform columns missing: {header}"
+        );
+        assert_eq!(text.lines().count(), 3);
+        std::fs::remove_dir_all(dir).ok();
+        // identity runs carry no trace and no sparsity
+        assert!(MetricsLog::new().final_sparsity().is_nan());
+
+        // the transform columns compose with the rate columns
+        let mut both = MetricsLog::new();
+        both.push(0, 1.0, f64::NAN, 100, 0.01);
+        both.push_rate(0.05, f64::NAN, 0);
+        both.push_transform(f64::NAN, 0.2);
+        let dir = std::env::temp_dir().join(format!(
+            "rcfed_metrics_transform_rate_{}", std::process::id()));
+        let path = dir.join("tfr.csv");
+        both.write_csv(path.to_str().unwrap(), "x").unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.lines().next().unwrap().ends_with(
+            "lambda,realized_bpc,bits_down,ef_residual_norm,sparsity"
+        ));
+        std::fs::remove_dir_all(dir).ok();
     }
 
     #[test]

@@ -1,14 +1,23 @@
-//! Federated-learning core: the client-side compression pipeline
-//! ([`compression`]), the wire format with exact bit accounting
-//! ([`packet`]), client local training ([`client`]), the parameter
-//! server ([`server`]) and per-round metrics ([`metrics`]).
+//! Federated-learning core: the staged client-side codec ([`codec`]:
+//! Transform → Quantize → Code, with the closed-loop pipeline and the
+//! per-client rate allocator on top), the wire format with exact bit
+//! accounting ([`packet`]), client local training ([`client`]), the
+//! parameter server ([`server`]) and per-round metrics ([`metrics`]).
 //!
 //! This module implements Algorithm 1 of the paper end-to-end:
-//! normalize → quantize (Q*) → entropy-encode → transmit → decode →
-//! de-normalize → aggregate → SGD step.
+//! transform → normalize → quantize (Q*) → entropy-encode → transmit →
+//! decode → de-normalize → aggregate → SGD step.
 
 pub mod client;
-pub mod compression;
+pub mod codec;
 pub mod metrics;
 pub mod packet;
 pub mod server;
+
+/// Back-compat shim: the staged [`codec`] subsystem replaced the old
+/// `fl/compression.rs` god-module. Every pre-existing import path
+/// (`rcfed::fl::compression::…`) keeps compiling through these
+/// re-exports; new code should prefer `rcfed::fl::codec`.
+pub mod compression {
+    pub use super::codec::*;
+}

@@ -60,12 +60,18 @@ pub struct Packet {
     /// side information values (μ,σ for RC-FED family; ‖v‖ for QSGD;
     /// empty for fp32)
     pub side_info: Vec<f32>,
-    /// entropy-coded symbol payload
+    /// entropy-coded symbol payload; sparse (top-k) packets prepend a
+    /// `k + packed-indices` block ahead of the coded values
     pub payload: Vec<u8>,
-    /// exact payload length in bits (≤ 8·payload.len())
+    /// exact coded-value length in bits (≤ 8·payload.len(), excluding
+    /// any index block)
     pub payload_bits: u64,
     /// per-message code-table bits (0 for universal design-time codes)
     pub table_bits: u64,
+    /// sparse-index block bits (0 for dense packets) — top-k index
+    /// streams are genuine traffic, charged separately so the ledger
+    /// stays honest about where the uplink budget goes
+    pub index_bits: u64,
 }
 
 impl Packet {
@@ -74,6 +80,7 @@ impl Packet {
         HEADER_BITS
             + 32 * self.side_info.len() as u64
             + self.table_bits
+            + self.index_bits
             + self.payload_bits
     }
 
@@ -128,7 +135,8 @@ impl Packet {
     }
 
     /// Parse a serialized packet (inverse of [`to_bytes`]; `table_bits`
-    /// is accounting metadata and is not carried on the wire).
+    /// and `index_bits` are accounting metadata and are not carried on
+    /// the wire — the decoders re-derive both blocks from the payload).
     pub fn from_bytes(buf: &[u8]) -> Result<Packet> {
         let need = |n: usize| -> Result<()> {
             if buf.len() < n {
@@ -170,6 +178,7 @@ impl Packet {
             payload,
             payload_bits,
             table_bits: 0,
+            index_bits: 0,
         })
     }
 }
@@ -189,6 +198,7 @@ mod tests {
             payload: vec![0xAB, 0xCD, 0xEF],
             payload_bits: 21,
             table_bits: 0,
+            index_bits: 0,
         }
     }
 
@@ -196,6 +206,10 @@ mod tests {
     fn total_bits_accounting() {
         let p = sample();
         assert_eq!(p.total_bits(), HEADER_BITS + 64 + 21);
+        // sparse index blocks are charged on top
+        let mut sparse = sample();
+        sparse.index_bits = 72;
+        assert_eq!(sparse.total_bits(), HEADER_BITS + 64 + 21 + 72);
     }
 
     #[test]

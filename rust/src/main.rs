@@ -25,7 +25,7 @@ use rcfed::coordinator::sweep::{run_sweep, SweepGrid};
 use rcfed::data::DatasetKind;
 use rcfed::fl::compression::{
     designed_codebook, CompressionScheme, RateAllocation, RateTarget,
-    WireCoder,
+    Transform, TransformCfg, WireCoder,
 };
 use rcfed::fl::server::LrSchedule;
 use rcfed::quant::rcq::{LengthModel, RateConstrainedQuantizer};
@@ -62,10 +62,11 @@ fn print_usage() {
         "rcfed — rate-constrained quantization for federated learning\n\n\
          usage: rcfed <run|sweep|design|info> [--key value ...]\n\n\
          run    --dataset cifar|femnist|tiny --scheme \
-         rcfed|lloyd|nqfl|qsgd|uniform|fp32\n       \
+         rcfed|lloyd|nqfl|qsgd|uniform|fp32|topk{{ratio}}\n       \
          [--bits 3] [--lambda 0.05] [--rounds 100] [--clients-per-round 0]\n       \
          [--local-iters 1] [--batch 64] [--lr 0.01] [--seed 42]\n       \
          [--backend native|pjrt] [--model mlp_synthcifar] [--out file.csv]\n       \
+         transform stage: [--topk ratio] [--ef]  (e.g. --scheme topk0.1 --ef)\n       \
          closed-loop rate control (rcfed only):\n       \
          [--rate-target bits_per_coord] [--adapt-every 5]\n       \
          per-client rate allocation (codebook schemes):\n       \
@@ -73,10 +74,11 @@ fn print_usage() {
          [--min-bits 1] [--max-bits 6] [--adapt-every 5]\n\
          sweep  same dataset flags; runs the full Fig. 1 grid through the\n       \
          sweep engine [--lambdas l1,l2] [--bits-list 3,6] [--seeds s1,s2]\n       \
-         [--sweep-threads 0] [--json file.json]\n       \
+         [--scheme-list rcfed,lloyd,fp32] [--sweep-threads 0] [--json file.json]\n       \
          scenario axes: [--loss-list p1,p2] [--deadline-list s1,s2]\n       \
          [--rate-target-list r1,r2 [--adapt-every 5]]\n       \
-         [--budget-list b1,b2 [--min-bits 1 --max-bits 6]]\n\n\
+         [--budget-list b1,b2 [--min-bits 1 --max-bits 6]]\n       \
+         [--topk-list r1,r2 [--ef]]\n\n\
          channel model (run + sweep; all default off/ideal):\n       \
          [--loss p] [--burst-loss p --burst-enter p --burst-exit p]\n       \
          [--corrupt p] [--corrupt-bits n] [--deadline secs]\n       \
@@ -87,29 +89,55 @@ fn print_usage() {
     );
 }
 
-fn parse_scheme(args: &Args) -> Result<CompressionScheme> {
-    let bits = args.usize_or("bits", 3)? as u32;
-    let lambda = args.f64_or("lambda", 0.05)?;
-    let lm = match args.str_or("length-model", "huffman").as_str() {
-        "huffman" => LengthModel::Huffman,
-        "ideal" => LengthModel::Ideal,
-        other => {
-            return Err(Error::Config(format!(
-                "bad --length-model {other:?}")))
-        }
-    };
-    Ok(match args.str_or("scheme", "rcfed").as_str() {
+/// Shared scheme-name resolution for `--scheme` and `--scheme-list`.
+fn scheme_by_name(
+    name: &str,
+    bits: u32,
+    lambda: f64,
+    lm: LengthModel,
+    clip: f64,
+) -> Result<CompressionScheme> {
+    Ok(match name {
         "rcfed" => CompressionScheme::RcFed { bits, lambda, length_model: lm },
         "lloyd" => CompressionScheme::Lloyd { bits },
         "nqfl" => CompressionScheme::Nqfl { bits },
         "qsgd" => CompressionScheme::Qsgd { bits },
-        "uniform" => CompressionScheme::Uniform {
-            bits,
-            clip: args.f64_or("clip", 4.0)?,
-        },
+        "uniform" => CompressionScheme::Uniform { bits, clip },
         "fp32" => CompressionScheme::Fp32,
-        other => return Err(Error::Config(format!("bad --scheme {other:?}"))),
+        other => return Err(Error::Config(format!("bad scheme {other:?}"))),
     })
+}
+
+/// The shared `--length-model` flag (run + sweep).
+fn parse_length_model(args: &Args) -> Result<LengthModel> {
+    match args.str_or("length-model", "huffman").as_str() {
+        "huffman" => Ok(LengthModel::Huffman),
+        "ideal" => Ok(LengthModel::Ideal),
+        other => Err(Error::Config(format!("bad --length-model {other:?}"))),
+    }
+}
+
+/// Parse `--scheme` plus its hyper-parameter flags. A `topk{ratio}`
+/// token (e.g. `--scheme topk0.1`) selects top-k sparsification over
+/// the default rcfed quantizer; plain names keep the identity transform
+/// (override with `--topk`).
+fn parse_scheme(args: &Args) -> Result<(CompressionScheme, Transform)> {
+    let bits = args.usize_or("bits", 3)? as u32;
+    let lambda = args.f64_or("lambda", 0.05)?;
+    let clip = args.f64_or("clip", 4.0)?;
+    let lm = parse_length_model(args)?;
+    let tok = args.str_or("scheme", "rcfed");
+    if let Some(ratio) = tok.strip_prefix("topk") {
+        let ratio: f64 = ratio.parse().map_err(|_| {
+            Error::Config(format!("bad topk ratio in --scheme {tok:?}"))
+        })?;
+        let scheme = scheme_by_name("rcfed", bits, lambda, lm, clip)?;
+        return Ok((scheme, Transform::TopK { ratio }));
+    }
+    Ok((
+        scheme_by_name(&tok, bits, lambda, lm, clip)?,
+        Transform::Identity,
+    ))
 }
 
 /// Channel-model flags shared by `run` and `sweep`. Everything defaults
@@ -141,7 +169,20 @@ fn parse_config(args: &Args) -> Result<ExperimentConfig> {
         DatasetKind::SynthFemnist => ExperimentConfig::synth_femnist(),
         DatasetKind::Tiny => ExperimentConfig::tiny(),
     };
-    cfg.scheme = parse_scheme(args)?;
+    let (scheme, mut transform_kind) = parse_scheme(args)?;
+    cfg.scheme = scheme;
+    // transform stage: --topk composes with any --scheme (and overrides
+    // a topk scheme token); --ef banks the quantization error in a
+    // per-client residual
+    let topk = args.f64_or("topk", f64::NAN)?;
+    if !topk.is_nan() {
+        transform_kind = Transform::TopK { ratio: topk };
+    }
+    cfg.transform = TransformCfg {
+        kind: transform_kind,
+        error_feedback: args.has_flag("ef"),
+    };
+    cfg.transform.validate(&cfg.scheme)?;
     cfg.channel = parse_channel(args)?;
     cfg.rounds = args.usize_or("rounds", cfg.rounds)?;
     cfg.clients_per_round =
@@ -263,6 +304,16 @@ fn cmd_run(args: &Args) -> Result<()> {
             report.total_comm_bits() as f64 / 1e9
         );
     }
+    if cfg.transform.is_active() {
+        let trace = report.metrics.transform_trace().last();
+        println!(
+            "transform {:<13} sparsity={:.3} ef_norm={:.5} \
+             index+value bits on the uplink ledger",
+            cfg.transform.label(),
+            trace.map(|t| t.sparsity).unwrap_or(f64::NAN),
+            trace.map(|t| t.ef_residual_norm).unwrap_or(f64::NAN),
+        );
+    }
     if cfg.alloc.is_on() {
         let hist: Vec<String> = report
             .alloc_hist
@@ -296,6 +347,11 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let deadline_list = args.f64_list_or("deadline-list", &[])?;
     let rate_target_list = args.f64_list_or("rate-target-list", &[])?;
     let budget_list = args.f64_list_or("budget-list", &[])?;
+    let topk_list = args.f64_list_or("topk-list", &[])?;
+    let scheme_list = args.get("scheme-list").map(|s| s.to_string());
+    // scheme-list hyper-parameter knobs (shared with parse_scheme)
+    let list_clip = args.f64_or("clip", 4.0)?;
+    let list_lm = parse_length_model(args)?;
     let adapt_every = args.usize_or("adapt-every", 5)?;
     let min_bits = args.usize_or("min-bits", 1)? as u32;
     let max_bits = args.usize_or("max-bits", 6)? as u32;
@@ -304,11 +360,16 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let json_out = args.get("json").map(|s| s.to_string());
     args.finish()?;
     let base_channel = base.channel;
+    let base_ef = base.transform.error_feedback;
     // either the axis or a base-level --rate-target puts the sweep in
     // closed-loop mode; both only steer rcfed cells
     let rate_axis = !rate_target_list.is_empty() || base.rate_target.is_on();
     // likewise for the per-client allocation axis
     let alloc_axis = !budget_list.is_empty() || base.alloc.is_on();
+    // and for the transform axis (a base-level --topk/--ef counts too)
+    let transform_axis = !topk_list.is_empty() || base.transform.is_active();
+    // qsgd cannot host the sparsifying transform (validated per cell)
+    let sparse_axis = !topk_list.is_empty() || base.transform.is_sparse();
     // the two controllers are mutually exclusive per cell; crossing the
     // axes would fill a third of the grid with cells that can only fail
     // validation, so reject the combination up front
@@ -320,16 +381,14 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         ));
     }
 
-    // declarative grid: RC-FED λ-curve + baselines, expanded and executed
-    // by the sweep engine across a scoped worker pool with the shared
-    // codebook design cache.
+    // declarative grid: RC-FED λ-curve + baselines (or an explicit
+    // --scheme-list), expanded and executed by the sweep engine across a
+    // scoped worker pool with the shared codebook design cache.
     let rc_bits = *bits.first().unwrap_or(&3) as u32;
     // --threads controls the scheduler *inside* each cell; the engine
     // defaults it to 1 so sweep workers don't oversubscribe the machine.
     let inner_threads = base.threads;
-    let mut grid = SweepGrid::new(base)
-        .rcfed_lambda_curve(rc_bits, &lambdas)
-        .threads(sweep_threads);
+    let mut grid = SweepGrid::new(base).threads(sweep_threads);
     if inner_threads > 1 {
         grid.inner_threads = inner_threads;
         if sweep_threads == 0 {
@@ -340,18 +399,80 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             grid.threads = (cores / inner_threads).max(1);
         }
     }
-    // the rate-target axis only steers rcfed (λ is the control
-    // variable), so a rate sweep drops the baseline schemes instead of
-    // crossing them into cells that can only fail validation; the
-    // allocation axis steers any designed-codebook scheme, so it only
-    // drops QSGD (no codebook to allocate)
-    if !rate_axis {
-        for &b in &bits {
-            grid = grid
-                .scheme(CompressionScheme::Lloyd { bits: b as u32 })
-                .scheme(CompressionScheme::Nqfl { bits: b as u32 });
-            if !alloc_axis {
-                grid = grid.scheme(CompressionScheme::Qsgd { bits: b as u32 });
+    if let Some(list) = &scheme_list {
+        // explicit scheme axis: the named schemes crossed with
+        // --bits-list, and rcfed entries additionally with --lambdas —
+        // the same knobs the default grid honors, so nothing the user
+        // passed is silently dropped
+        for tok in list.split(',') {
+            let tok = tok.trim();
+            if tok.starts_with("topk") {
+                return Err(Error::Config(
+                    "sparsification is a transform axis, not a scheme: \
+                     use --topk-list instead of a topk entry in \
+                     --scheme-list"
+                        .into(),
+                ));
+            }
+            // axis compatibility up front: the default grid silently
+            // drops schemes an active controller cannot steer, but an
+            // *explicitly named* scheme deserves a hard error instead of
+            // a grid of cells that can only fail validation
+            if rate_axis && tok != "rcfed" {
+                return Err(Error::Config(format!(
+                    "rate-target sweeps steer rcfed only; remove \
+                     {tok:?} from --scheme-list or drop the rate axis"
+                )));
+            }
+            if alloc_axis && matches!(tok, "qsgd" | "fp32") {
+                return Err(Error::Config(format!(
+                    "allocation sweeps need a designed-codebook scheme; \
+                     remove {tok:?} from --scheme-list or drop \
+                     --budget-list"
+                )));
+            }
+            if sparse_axis && tok == "qsgd" {
+                return Err(Error::Config(
+                    "qsgd cannot host top-k sparsification; remove it \
+                     from --scheme-list or drop --topk-list"
+                        .into(),
+                ));
+            }
+            match tok {
+                "rcfed" => {
+                    for &b in &bits {
+                        grid = grid.rcfed_lambda_curve(b as u32, &lambdas);
+                    }
+                }
+                // fp32 has no width axis: one cell, not one per --bits
+                "fp32" => {
+                    grid = grid.scheme(CompressionScheme::Fp32);
+                }
+                _ => {
+                    for &b in &bits {
+                        grid = grid.scheme(scheme_by_name(
+                            tok, b as u32, 0.0, list_lm, list_clip)?);
+                    }
+                }
+            }
+        }
+    } else {
+        grid = grid.rcfed_lambda_curve(rc_bits, &lambdas);
+        // the rate-target axis only steers rcfed (λ is the control
+        // variable), so a rate sweep drops the baseline schemes instead
+        // of crossing them into cells that can only fail validation; the
+        // allocation axis steers any designed-codebook scheme and the
+        // sparsifying transform any non-qsgd scheme, so those two only
+        // drop QSGD
+        if !rate_axis {
+            for &b in &bits {
+                grid = grid
+                    .scheme(CompressionScheme::Lloyd { bits: b as u32 })
+                    .scheme(CompressionScheme::Nqfl { bits: b as u32 });
+                if !alloc_axis && !sparse_axis {
+                    grid = grid
+                        .scheme(CompressionScheme::Qsgd { bits: b as u32 });
+                }
             }
         }
     }
@@ -393,6 +514,17 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             max_bits,
         );
     }
+    // transform axis: a dense identity cell rides along so sparse rows
+    // always have a dense row to compare against (--ef applies to the
+    // whole axis, reference cell included)
+    if !topk_list.is_empty() {
+        grid = grid
+            .transform(TransformCfg {
+                kind: Transform::Identity,
+                error_feedback: base_ef,
+            })
+            .topk_axis(&topk_list, base_ef);
+    }
 
     let report = run_sweep(&grid)?;
     for cell in &report.cells {
@@ -420,6 +552,13 @@ fn cmd_sweep(args: &Args) -> Result<()> {
                 cell.report.downlink_bits as f64 / 1e9
             ));
         }
+        if transform_axis {
+            line.push_str(&format!(
+                " transform={:<11} sparsity={:.3}",
+                cell.transform,
+                cell.report.metrics.final_sparsity()
+            ));
+        }
         println!("{line}");
     }
     use rcfed::util::csv::CsvField;
@@ -438,6 +577,9 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     if alloc_axis {
         header.push("alloc");
     }
+    if transform_axis {
+        header.push("transform");
+    }
     header.extend_from_slice(&["acc", "gigabits"]);
     if rate_axis {
         header.extend_from_slice(&["realized_bpc", "downlink_gigabits"]);
@@ -447,6 +589,9 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         if !rate_axis {
             header.push("downlink_gigabits");
         }
+    }
+    if transform_axis {
+        header.push("sparsity");
     }
     report.write_csv_with(&out, &header, |c| {
         let mut row = vec![CsvField::from(c.label.clone())];
@@ -462,6 +607,9 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         if alloc_axis {
             row.push(CsvField::from(c.alloc.clone()));
         }
+        if transform_axis {
+            row.push(CsvField::from(c.transform.clone()));
+        }
         row.push(CsvField::from(c.report.final_accuracy));
         row.push(CsvField::from(c.report.uplink_gigabits()));
         if rate_axis {
@@ -476,6 +624,9 @@ fn cmd_sweep(args: &Args) -> Result<()> {
                 ));
             }
         }
+        if transform_axis {
+            row.push(CsvField::from(c.report.metrics.final_sparsity()));
+        }
         row
     })?;
     println!("{}", report.summary());
@@ -488,7 +639,17 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 }
 
 fn cmd_design(args: &Args) -> Result<()> {
-    let scheme = parse_scheme(args)?;
+    let (scheme, transform) = parse_scheme(args)?;
+    // design is about the quantizer codebook; a sparsifying scheme
+    // token would silently design the dense codebook instead, so
+    // reject it rather than mislead
+    if transform != Transform::Identity {
+        return Err(Error::Config(
+            "design has no transform stage; pass a plain scheme name \
+             (rcfed|lloyd)"
+                .into(),
+        ));
+    }
     let target = args.f64_or("target-rate", f64::NAN)?;
     args.finish()?;
     match scheme {

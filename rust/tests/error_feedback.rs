@@ -1,0 +1,300 @@
+//! Error-feedback + top-k sparsification scenarios through the staged
+//! `fl/codec` subsystem: EF-compressed aggregates must converge to the
+//! uncompressed sum, a dropped packet must leave the client residual
+//! intact, and sparse packets must charge their index bits honestly.
+
+use rcfed::coordinator::experiment::{run_experiment, ExperimentConfig};
+use rcfed::coordinator::network::ChannelSpec;
+use rcfed::fl::compression::{
+    CompressionPipeline, CompressionScheme, RateAllocation, RateTarget,
+    Transform, TransformCfg, TransformState, WireCoder,
+};
+use rcfed::fl::packet::Packet;
+use rcfed::quant::rcq::LengthModel;
+use rcfed::util::rng::Rng;
+
+fn rcfed3() -> CompressionScheme {
+    CompressionScheme::RcFed {
+        bits: 3,
+        lambda: 0.05,
+        length_model: LengthModel::Huffman,
+    }
+}
+
+fn pipe(transform: TransformCfg) -> CompressionPipeline {
+    CompressionPipeline::design_full(
+        rcfed3(),
+        WireCoder::Huffman,
+        RateTarget::Off,
+        RateAllocation::Uniform,
+        transform,
+    )
+    .unwrap()
+}
+
+fn gaussian(n: usize, mu: f32, sigma: f32, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    let mut g = vec![0f32; n];
+    rng.fill_normal_f32(&mut g, mu, sigma);
+    g
+}
+
+fn l2_diff(sum: &[f32], truth: &[f64]) -> f64 {
+    sum.iter()
+        .zip(truth)
+        .map(|(&a, &b)| (a as f64 - b) * (a as f64 - b))
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// With a deterministic (repeated) gradient stream, the plain quantizer
+/// repeats the same error every round — the aggregate drifts linearly —
+/// while EF banks the error and re-injects it, so the EF aggregate
+/// tracks the uncompressed sum to within the final residual norm.
+#[test]
+fn ef_aggregate_converges_to_the_uncompressed_sum() {
+    let d = 4096;
+    let rounds = 25u32;
+    let g = gaussian(d, 0.01, 0.3, 1);
+    let ef = pipe(TransformCfg::identity().with_ef());
+    let plain = pipe(TransformCfg::identity());
+    let mut state = TransformState::new();
+    let mut sum_true = vec![0f64; d];
+    let mut sum_ef = vec![0f32; d];
+    let mut sum_plain = vec![0f32; d];
+    for t in 0..rounds {
+        let mut rng = Rng::new(99);
+        let p = ef.compress_with(&mut state, 0, t, &g, &mut rng).unwrap();
+        ef.decompress_accumulate(&p, &mut sum_ef).unwrap();
+        let q = plain.compress(0, t, &g, &mut rng).unwrap();
+        plain.decompress_accumulate(&q, &mut sum_plain).unwrap();
+        for (s, &x) in sum_true.iter_mut().zip(&g) {
+            *s += x as f64;
+        }
+    }
+    let e_ef = l2_diff(&sum_ef, &sum_true);
+    let e_plain = l2_diff(&sum_plain, &sum_true);
+    // exact invariant: Σ decoded = Σ true − residual_T, so the EF error
+    // equals the final residual norm (up to f32 accumulation noise)
+    let r_norm = state.last_ef_norm;
+    assert!(r_norm.is_finite() && r_norm > 0.0);
+    assert!(
+        (e_ef - r_norm).abs() < 1e-2 * (1.0 + r_norm),
+        "EF aggregate error {e_ef} != residual norm {r_norm}"
+    );
+    // and the plain aggregate drifts ~rounds× further
+    assert!(
+        e_ef * 3.0 < e_plain,
+        "EF error {e_ef} not clearly below plain error {e_plain}"
+    );
+}
+
+/// A packet lost in the channel must not touch the client-side residual:
+/// the error banked at compress time rides into the next round whether
+/// or not the server ever saw the packet.
+#[test]
+fn dropped_packet_leaves_the_residual_intact() {
+    let d = 1024;
+    let g = gaussian(d, 0.0, 0.5, 7);
+    let ef = pipe(TransformCfg::identity().with_ef());
+    let mut state = TransformState::new();
+    let mut rng = Rng::new(8);
+    let _lost = ef.compress_with(&mut state, 0, 0, &g, &mut rng).unwrap();
+    let residual_after_loss: Vec<f32> = state.residual().to_vec();
+    assert!(
+        residual_after_loss.iter().any(|&r| r != 0.0),
+        "3-bit quantization must leave a nonzero residual"
+    );
+    // the "loss": nothing decodes the packet, nothing else runs — the
+    // state the next round sees is exactly the banked residual
+    assert_eq!(state.residual(), &residual_after_loss[..]);
+    // the next round's packet carries the banked error: its decoded
+    // reconstruction approximates g + residual, so subtracting g leaves
+    // a vector correlated with the residual
+    let p1 = ef.compress_with(&mut state, 0, 1, &g, &mut rng).unwrap();
+    let mut recon = vec![0f32; d];
+    ef.decompress_accumulate(&p1, &mut recon).unwrap();
+    let carried: Vec<f64> = recon
+        .iter()
+        .zip(&g)
+        .map(|(&r, &x)| (r - x) as f64)
+        .collect();
+    let dot: f64 = carried
+        .iter()
+        .zip(&residual_after_loss)
+        .map(|(&a, &b)| a * b as f64)
+        .sum();
+    assert!(dot > 0.0, "round-1 packet does not carry the residual");
+}
+
+/// End-to-end: an EF run over a lossy channel is deterministic, records
+/// the transform trace, and survives without touching accuracy plumbing.
+#[test]
+fn ef_run_is_deterministic_under_packet_loss() {
+    let mut cfg = ExperimentConfig::tiny();
+    cfg.rounds = 12;
+    cfg.transform = TransformCfg::identity().with_ef();
+    cfg.channel = ChannelSpec { loss: 0.3, ..ChannelSpec::ideal() };
+    let a = run_experiment(&cfg).unwrap();
+    let b = run_experiment(&cfg).unwrap();
+    assert!(a.channel.lost > 0, "loss 0.3 never fired");
+    assert_eq!(a.total_bits, b.total_bits);
+    assert_eq!(a.final_accuracy, b.final_accuracy);
+    assert_eq!(a.metrics.transform_trace().len(), 12);
+    let last = a.metrics.transform_trace().last().unwrap();
+    assert!((last.sparsity - 1.0).abs() < 1e-12, "dense EF is not sparse");
+    assert!(
+        last.ef_residual_norm.is_finite() && last.ef_residual_norm > 0.0,
+        "residual norm missing from the trace"
+    );
+    assert_eq!(a.label, "rcfed_b3_l0.050_ef");
+}
+
+/// Top-k packets: index bits charged to the ledger, fewer total bits
+/// than dense at small ratios, and scatter-decode through real wire
+/// bytes touching only the kept coordinates.
+#[test]
+fn topk_charges_index_bits_and_beats_dense_uplink() {
+    let d = 4096;
+    let g = gaussian(d, 0.0, 1.0, 11);
+    let dense = pipe(TransformCfg::identity());
+    let sparse = pipe(TransformCfg::topk(0.1));
+    let mut rng = Rng::new(12);
+    let pd = dense.compress(0, 0, &g, &mut rng).unwrap();
+    let ps = sparse.compress(0, 0, &g, &mut rng).unwrap();
+    let k = 410; // ceil(0.1 · 4096)
+    assert!(ps.index_bits > 0, "index bits not charged");
+    assert_eq!(pd.index_bits, 0, "dense packets must not charge indices");
+    assert!(
+        ps.total_bits() < pd.total_bits(),
+        "topk0.1 {} >= dense {}",
+        ps.total_bits(),
+        pd.total_bits()
+    );
+    let parsed = Packet::parse(&ps.to_bytes()).unwrap();
+    let mut acc = vec![0f32; d];
+    sparse.decompress_accumulate(&parsed, &mut acc).unwrap();
+    let touched = acc.iter().filter(|&&x| x != 0.0).count();
+    assert!(touched <= k, "sparse decode touched {touched} > k={k}");
+    assert!(touched > k / 2, "sparse decode touched only {touched}");
+    // the kept coordinates align with the gradient's largest entries
+    let dot: f64 = g.iter().zip(&acc).map(|(&a, &b)| (a * b) as f64).sum();
+    assert!(dot > 0.0);
+}
+
+/// The acceptance scenario: `--scheme topk0.1 --ef` end-to-end, with the
+/// Track controller measuring the index+value bits in `realized_bpc`.
+#[test]
+fn topk_ef_runs_end_to_end_with_rate_tracking() {
+    let mut cfg = ExperimentConfig::tiny();
+    cfg.rounds = 9;
+    cfg.eval_every = 3;
+    cfg.transform = TransformCfg::topk(0.1).with_ef();
+    cfg.rate_target = RateTarget::Track { bits_per_coord: 1.0, adapt_every: 3 };
+    let rep = run_experiment(&cfg).unwrap();
+    assert_eq!(rep.label, "rcfed_b3_l0.050_topk0.1_ef");
+    assert!(rep.realized_bpc().is_finite(), "realized_bpc missing");
+    assert_eq!(rep.metrics.transform_trace().len(), 9);
+    let last = rep.metrics.transform_trace().last().unwrap();
+    assert!(last.sparsity > 0.0 && last.sparsity <= 0.11,
+            "sparsity {} off the 0.1 ratio", last.sparsity);
+    assert!(last.ef_residual_norm > 0.0);
+    // the same protocol without sparsification pays more uplink (both
+    // static, so the comparison is free of controller drift)
+    let mut sparse_static = cfg.clone();
+    sparse_static.rate_target = RateTarget::Off;
+    let mut dense_static = sparse_static.clone();
+    dense_static.transform = TransformCfg::identity().with_ef();
+    let sparse_rep = run_experiment(&sparse_static).unwrap();
+    let dense_rep = run_experiment(&dense_static).unwrap();
+    assert!(
+        sparse_rep.total_bits < dense_rep.total_bits,
+        "topk {} >= dense {}",
+        sparse_rep.total_bits,
+        dense_rep.total_bits
+    );
+    // deterministic replay, transform and all
+    let again = run_experiment(&cfg).unwrap();
+    assert_eq!(rep.total_bits, again.total_bits);
+    assert_eq!(rep.final_accuracy, again.final_accuracy);
+}
+
+/// topk+ef under the closed loop: the staged sampler feeds the
+/// controller a working-set sample, versioned sparse packets roundtrip,
+/// and a window end still broadcasts.
+#[test]
+fn transform_composes_with_the_track_controller() {
+    let target = RateTarget::Track { bits_per_coord: 1.0, adapt_every: 1 };
+    let mut pipe = CompressionPipeline::design_full(
+        rcfed3(),
+        WireCoder::Huffman,
+        target,
+        RateAllocation::Uniform,
+        TransformCfg::topk(0.1).with_ef(),
+    )
+    .unwrap();
+    let g = gaussian(8192, 0.0, 1.0, 83);
+    let mut rng = Rng::new(84);
+    let mut state = TransformState::new();
+    // stateless compress is a config error under EF
+    assert!(pipe.compress(0, 0, &g, &mut rng).is_err());
+    let pkt = pipe.compress_with(&mut state, 0, 0, &g, &mut rng).unwrap();
+    assert_eq!(pkt.side_info.len(), 3, "version word missing");
+    assert!(pkt.index_bits > 0);
+    let sample = state.take_sample().expect("staged sampler must fire");
+    assert!(!sample.is_empty());
+    assert!(sample.len() <= 8192 / 8 + 1, "sample of the kept set only");
+    let mut acc = vec![0f32; g.len()];
+    pipe.decompress_accumulate(&pkt, &mut acc).unwrap();
+    pipe.observe_samples(&sample);
+    pipe.observe_round(pkt.total_bits(), pkt.d as u64);
+    match pipe.end_round(0).unwrap() {
+        rcfed::fl::compression::RoundAdaptation::Broadcast {
+            bits_per_client,
+        } => {
+            assert!(bits_per_client > 0);
+        }
+        other => panic!("expected a broadcast, got {other:?}"),
+    }
+    assert_eq!(pipe.version(), 1);
+    // stale sparse packets are rejected like dense ones
+    assert!(pipe.decompress_accumulate(&pkt, &mut acc).is_err());
+    let fresh = pipe.compress_with(&mut state, 0, 1, &g, &mut rng).unwrap();
+    pipe.decompress_accumulate(&fresh, &mut acc).unwrap();
+}
+
+/// Config errors stay config errors: EF through the stateless entry
+/// point, bad ratios, and topk × qsgd are rejected up front.
+#[test]
+fn transform_misconfigurations_are_rejected() {
+    let ef = pipe(TransformCfg::identity().with_ef());
+    let g = gaussian(64, 0.0, 1.0, 21);
+    let mut rng = Rng::new(22);
+    assert!(ef.compress(0, 0, &g, &mut rng).is_err(),
+            "stateless EF compress must be a config error");
+    assert!(CompressionPipeline::design_full(
+        rcfed3(),
+        WireCoder::Huffman,
+        RateTarget::Off,
+        RateAllocation::Uniform,
+        TransformCfg::topk(0.0),
+    )
+    .is_err());
+    assert!(CompressionPipeline::design_full(
+        CompressionScheme::Qsgd { bits: 3 },
+        WireCoder::Huffman,
+        RateTarget::Off,
+        RateAllocation::Uniform,
+        TransformCfg::topk(0.5),
+    )
+    .is_err());
+    // qsgd + EF is allowed (dense, unbiased reconstruction exists)
+    assert!(CompressionPipeline::design_full(
+        CompressionScheme::Qsgd { bits: 3 },
+        WireCoder::Huffman,
+        RateTarget::Off,
+        RateAllocation::Uniform,
+        TransformCfg { kind: Transform::Identity, error_feedback: true },
+    )
+    .is_ok());
+}

@@ -4,7 +4,10 @@
 //! partial gradient. This is the contract the channel model's
 //! corruption injection relies on.
 
-use rcfed::fl::compression::{CompressionScheme, Compressor, WireCoder};
+use rcfed::fl::compression::{
+    CompressionPipeline, CompressionScheme, Compressor, RateAllocation,
+    RateTarget, TransformCfg, WireCoder,
+};
 use rcfed::fl::packet::Packet;
 use rcfed::quant::rcq::LengthModel;
 use rcfed::util::rng::Rng;
@@ -20,6 +23,7 @@ fn sample_packet() -> Packet {
         payload: vec![0xA5; 24],
         payload_bits: 24 * 8 - 3,
         table_bits: 0,
+        index_bits: 0,
     }
 }
 
@@ -180,6 +184,182 @@ fn decompress_rejects_missing_or_bogus_side_info() {
     assert!(c.decompress_accumulate(&bad, &mut acc).is_err());
     // nothing accumulated by any rejected packet
     assert!(acc.iter().all(|&x| x == 0.0));
+}
+
+#[test]
+fn side_version_fuzz_is_recoverable_on_the_adaptive_pipeline() {
+    // PRs 3–4 added a third side-info word (codebook/allocation version)
+    // — fuzz it: stale, malformed and byte-stomped versions must come
+    // back as recoverable Errs, never panics or silent accepts.
+    let mut pipe = CompressionPipeline::design(
+        CompressionScheme::RcFed {
+            bits: 3,
+            lambda: 0.05,
+            length_model: LengthModel::Huffman,
+        },
+        WireCoder::Huffman,
+        RateTarget::Track { bits_per_coord: 2.0, adapt_every: 1 },
+    )
+    .unwrap();
+    let mut rng = Rng::new(0xC0DE);
+    let d = 1024;
+    let mut grad = vec![0f32; d];
+    rng.fill_normal_f32(&mut grad, 0.0, 1.0);
+    let v0 = pipe.compress(0, 0, &grad, &mut rng).unwrap();
+    assert_eq!(v0.side_info.len(), 3);
+    // malformed version words are rejected up front
+    for bad in [f32::NAN, f32::INFINITY, -1.0, 2.5, 4.3e9] {
+        let mut forged = v0.clone();
+        forged.side_info[2] = bad;
+        let mut acc = vec![0f32; d];
+        assert!(
+            pipe.decompress_accumulate(&forged, &mut acc).is_err(),
+            "version {bad} accepted"
+        );
+        assert!(acc.iter().all(|&x| x == 0.0), "partial accumulation");
+    }
+    // drive one adaptation window so the live version moves to 1
+    let sample = pipe.grad_sample(&grad);
+    pipe.observe_samples(&sample);
+    pipe.observe_round(v0.total_bits(), v0.d as u64);
+    pipe.end_round(0).unwrap();
+    assert_eq!(pipe.version(), 1);
+    // the v0 packet is now stale: recoverable reject, nothing written
+    let mut acc = vec![0f32; d];
+    assert!(pipe.decompress_accumulate(&v0, &mut acc).is_err());
+    assert!(acc.iter().all(|&x| x == 0.0));
+    // byte-stomp the version word (bytes 30..34 of the wire image) of a
+    // fresh packet: parse may fail, decode must never panic
+    let fresh = pipe.compress(0, 1, &grad, &mut rng).unwrap();
+    let clean = fresh.to_bytes();
+    for trial in 0..512 {
+        let mut bytes = clean.clone();
+        for (i, b) in bytes[30..34].iter_mut().enumerate() {
+            *b = (trial as u8).wrapping_mul(37).wrapping_add(i as u8 * 101);
+        }
+        if let Ok(parsed) = Packet::parse(&bytes) {
+            let mut acc = vec![0f32; d];
+            let _ = pipe.decompress_accumulate(&parsed, &mut acc);
+        }
+    }
+    // the untouched fresh packet still decodes
+    pipe.decompress_accumulate(&fresh, &mut acc).unwrap();
+}
+
+#[test]
+fn width_header_fuzz_is_recoverable_on_the_allocated_pipeline() {
+    // the allocator decodes against the width claimed in the header —
+    // every forged width must be a recoverable reject, never a panic or
+    // an out-of-ladder index
+    let mut pipe = CompressionPipeline::design_alloc(
+        CompressionScheme::RcFed {
+            bits: 3,
+            lambda: 0.05,
+            length_model: LengthModel::Huffman,
+        },
+        WireCoder::Huffman,
+        RateTarget::Off,
+        RateAllocation::WaterFill {
+            budget_bpc: 2.5,
+            adapt_every: 1,
+            min_bits: 1,
+            max_bits: 6,
+        },
+    )
+    .unwrap();
+    pipe.bind_clients(2, &[1.0, 1.0]).unwrap();
+    let mut rng = Rng::new(0xF00D);
+    let d = 600;
+    let mut grad = vec![0f32; d];
+    rng.fill_normal_f32(&mut grad, 0.0, 1.0);
+    let pkt = pipe.compress(0, 0, &grad, &mut rng).unwrap();
+    let assigned = pkt.bits_per_symbol;
+    for width in 0u8..=255 {
+        let mut forged = pkt.clone();
+        forged.bits_per_symbol = width;
+        let mut acc = vec![0f32; d];
+        let result = pipe.decompress_accumulate(&forged, &mut acc);
+        if width == assigned {
+            assert!(result.is_ok(), "assigned width rejected");
+        } else {
+            assert!(result.is_err(), "forged width {width} accepted");
+            assert!(acc.iter().all(|&x| x == 0.0), "partial accumulation");
+        }
+    }
+    // the width byte through the real wire image (offset 9): parse
+    // succeeds (any u8 is a legal header value), decode must reject
+    let clean = pkt.to_bytes();
+    for width in 0u8..=255 {
+        if width == assigned {
+            continue;
+        }
+        let mut bytes = clean.clone();
+        bytes[9] = width;
+        let parsed = Packet::parse(&bytes).unwrap();
+        let mut acc = vec![0f32; d];
+        assert!(pipe.decompress_accumulate(&parsed, &mut acc).is_err());
+    }
+    // stomping the version word on the allocated path is recoverable too
+    let mut forged = pkt.clone();
+    for bad in [f32::NAN, -2.0, 0.5, 7.0] {
+        forged.side_info[2] = bad;
+        let mut acc = vec![0f32; d];
+        assert!(pipe.decompress_accumulate(&forged, &mut acc).is_err());
+    }
+}
+
+#[test]
+fn sparse_topk_packets_survive_mutation_without_panicking() {
+    // the top-k index block is attacker-controlled bytes at the payload
+    // head: every mutation must parse/decode to Ok or Err, never panic,
+    // never scatter out of bounds
+    let c = Compressor::design_with_transform(
+        CompressionScheme::RcFed {
+            bits: 3,
+            lambda: 0.05,
+            length_model: LengthModel::Huffman,
+        },
+        WireCoder::Huffman,
+        TransformCfg::topk(0.1),
+    )
+    .unwrap();
+    let mut rng = Rng::new(0x70CC);
+    let d = 800;
+    let mut grad = vec![0f32; d];
+    rng.fill_normal_f32(&mut grad, 0.0, 1.0);
+    let pkt = c.compress(1, 0, &grad, &mut rng).unwrap();
+    assert!(pkt.index_bits > 0);
+    let clean = pkt.to_bytes();
+    for trial in 0..600 {
+        let mut bytes = clean.clone();
+        match trial % 3 {
+            0 => {
+                let cut = rng.below(bytes.len());
+                bytes.truncate(cut);
+            }
+            1 => {
+                for _ in 0..8 {
+                    let bit = rng.below(bytes.len() * 8);
+                    bytes[bit / 8] ^= 1 << (bit % 8);
+                }
+            }
+            _ => {
+                let start = rng.below(bytes.len());
+                let end = (start + 1 + rng.below(8)).min(bytes.len());
+                for b in &mut bytes[start..end] {
+                    *b = rng.next_u64() as u8;
+                }
+            }
+        }
+        if let Ok(parsed) = Packet::parse(&bytes) {
+            let mut acc = vec![0f32; d];
+            let _ = c.decompress_accumulate(&parsed, &mut acc);
+        }
+    }
+    // the clean packet still decodes after all that
+    let mut acc = vec![0f32; d];
+    c.decompress_accumulate(&Packet::parse(&clean).unwrap(), &mut acc)
+        .unwrap();
 }
 
 #[test]

@@ -17,7 +17,7 @@ use rcfed::coordinator::experiment::{run_experiment, ExperimentConfig};
 use rcfed::coordinator::network::{ChannelSpec, SimulatedNetwork};
 use rcfed::fl::compression::{
     designed_codebook, CompressionPipeline, CompressionScheme,
-    RateAllocation, RateTarget, RoundAdaptation, WireCoder,
+    RateAllocation, RateTarget, RoundAdaptation, TransformCfg, WireCoder,
 };
 use rcfed::quant::rcq::LengthModel;
 use rcfed::util::rng::Rng;
@@ -190,4 +190,127 @@ fn waterfill_experiment_end_to_end_under_heterogeneous_channel() {
     // the run still learns through per-client codebooks
     assert!(a.final_accuracy > 0.3, "acc collapsed: {}", a.final_accuracy);
     assert_eq!(a.total_comm_bits(), a.total_bits + a.downlink_bits);
+}
+
+#[test]
+fn waterfill_respects_the_budget_and_bandwidth_priors() {
+    let mut pipe = CompressionPipeline::design_alloc(
+        CompressionScheme::Lloyd { bits: 3 },
+        WireCoder::Huffman,
+        RateTarget::Off,
+        RateAllocation::WaterFill {
+            budget_bpc: 3.0,
+            adapt_every: 1,
+            min_bits: 1,
+            max_bits: 6,
+        },
+    )
+    .unwrap();
+    // strongly heterogeneous bandwidths, flat energies: the initial
+    // allocation must already skew toward the fast clients
+    pipe.bind_clients(4, &[0.2, 0.2, 1.0, 2.6]).unwrap();
+    let w: Vec<u32> = (0..4).map(|c| pipe.client_width(c).unwrap()).collect();
+    assert!(w[3] >= w[2] && w[2] >= w[0], "{w:?}");
+    assert!(w[3] > w[0], "bandwidth prior ignored: {w:?}");
+    // the mean *encoded design rate* of the assignment stays within the
+    // budget
+    let rate_of = |width: u32| {
+        let (_, rep) =
+            designed_codebook(CompressionScheme::Lloyd { bits: width })
+                .unwrap();
+        rep.huffman_rate
+    };
+    let mean_rate: f64 =
+        w.iter().map(|&b| rate_of(b)).sum::<f64>() / w.len() as f64;
+    assert!(
+        mean_rate <= 3.0 + 1e-9,
+        "assignment {w:?} breaks the budget: {mean_rate}"
+    );
+}
+
+#[test]
+fn allocated_topk_packets_roundtrip_with_version_and_indices() {
+    let mut pipe = CompressionPipeline::design_full(
+        rcfed(),
+        WireCoder::Huffman,
+        RateTarget::Off,
+        RateAllocation::WaterFill {
+            budget_bpc: 2.5,
+            adapt_every: 1,
+            min_bits: 1,
+            max_bits: 6,
+        },
+        TransformCfg::topk(0.2),
+    )
+    .unwrap();
+    pipe.bind_clients(2, &[1.0, 1.0]).unwrap();
+    let d = 2000;
+    let mut g = vec![0f32; d];
+    Rng::new(95).fill_normal_f32(&mut g, 0.0, 1.0);
+    let mut rng = Rng::new(96);
+    let pkt = pipe.compress(0, 0, &g, &mut rng).unwrap();
+    assert_eq!(pkt.side_info.len(), 3, "version word missing");
+    assert!(pkt.index_bits > 0, "index bits not charged");
+    let mut acc = vec![0f32; d];
+    pipe.decompress_accumulate(&pkt, &mut acc).unwrap();
+    let nonzero = acc.iter().filter(|&&x| x != 0.0).count();
+    assert!(nonzero <= 400, "sparse decode touched {nonzero} coords");
+    // sparse packets honor the stale-version rejection too
+    let mut forged = pkt.clone();
+    forged.side_info[2] = 7.0;
+    assert!(pipe.decompress_accumulate(&forged, &mut acc).is_err());
+}
+
+#[test]
+fn allocation_validation() {
+    let waterfill = |budget: f64| RateAllocation::WaterFill {
+        budget_bpc: budget,
+        adapt_every: 1,
+        min_bits: 1,
+        max_bits: 6,
+    };
+    let rc = rcfed();
+    let off = RateTarget::Off;
+    assert!(RateAllocation::Uniform.validate(&rc, &off).is_ok());
+    assert!(waterfill(2.5).validate(&rc, &off).is_ok());
+    assert!(waterfill(2.5)
+        .validate(&CompressionScheme::Lloyd { bits: 3 }, &off)
+        .is_ok());
+    // QSGD/Fp32 have no designed codebook to allocate
+    assert!(waterfill(2.5)
+        .validate(&CompressionScheme::Qsgd { bits: 3 }, &off)
+        .is_err());
+    assert!(waterfill(2.5).validate(&CompressionScheme::Fp32, &off).is_err());
+    // both controllers at once is a config error
+    let track = RateTarget::Track { bits_per_coord: 2.0, adapt_every: 2 };
+    assert!(waterfill(2.5).validate(&rc, &track).is_err());
+    assert!(RateAllocation::Uniform.validate(&rc, &track).is_ok());
+    // nonsense budgets / ranges
+    assert!(waterfill(0.0).validate(&rc, &off).is_err());
+    assert!(waterfill(f64::NAN).validate(&rc, &off).is_err());
+    let bad_range = RateAllocation::WaterFill {
+        budget_bpc: 2.0,
+        adapt_every: 1,
+        min_bits: 4,
+        max_bits: 3,
+    };
+    assert!(bad_range.validate(&rc, &off).is_err());
+    // a budget below the min-width encoded rate passes validate but is
+    // rejected at design time
+    let starved = RateAllocation::WaterFill {
+        budget_bpc: 0.5,
+        adapt_every: 1,
+        min_bits: 2,
+        max_bits: 4,
+    };
+    assert!(starved.validate(&rc, &off).is_ok());
+    assert!(CompressionPipeline::design_alloc(
+        rc,
+        WireCoder::Huffman,
+        off,
+        starved
+    )
+    .is_err());
+    assert_eq!(RateAllocation::Uniform.label(), "uniform");
+    assert_eq!(waterfill(2.5).label(), "wf2.5w1b1-6");
 }

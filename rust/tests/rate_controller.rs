@@ -141,3 +141,38 @@ fn loose_target_relaxes_lambda_to_zero_cost() {
         "λ should relax toward 0 under a loose target, got {final_lambda}"
     );
 }
+
+#[test]
+fn dual_ascent_moves_lambda_toward_the_target() {
+    // realized >> target must raise lambda (cheaper codebook); a later
+    // window with realized << target must lower it again
+    let target = RateTarget::Track { bits_per_coord: 2.0, adapt_every: 1 };
+    let mut pipe =
+        CompressionPipeline::design(rcfed(), WireCoder::Huffman, target)
+            .unwrap();
+    let mut g = vec![0f32; 16_384];
+    Rng::new(75).fill_normal_f32(&mut g, 0.0, 1.0);
+    let sample = pipe.grad_sample(&g);
+    let lam0 = pipe.lambda();
+    pipe.observe_samples(&sample);
+    pipe.observe_round(4 * 16_384, 16_384); // 4 bits/coord measured
+    pipe.end_round(0).unwrap();
+    assert!((pipe.last_realized() - 4.0).abs() < 1e-9);
+    let lam1 = pipe.lambda();
+    assert!(lam1 > lam0, "lambda must rise: {lam0} -> {lam1}");
+    pipe.observe_samples(&sample);
+    pipe.observe_round(16_384 / 2, 16_384); // 0.5 bits/coord measured
+    pipe.end_round(1).unwrap();
+    assert!(
+        pipe.lambda() < lam1,
+        "lambda must fall: {lam1} -> {}",
+        pipe.lambda()
+    );
+    // lambda is a Lagrange multiplier: never negative
+    for round in 2..30 {
+        pipe.observe_samples(&sample);
+        pipe.observe_round(1, 16_384);
+        pipe.end_round(round).unwrap();
+        assert!(pipe.lambda() >= 0.0);
+    }
+}
