@@ -1,0 +1,127 @@
+//! Streamed round-loop throughput: clients/sec through the cohort
+//! pipeline (materialize → train → compress → deliver → accumulate) as
+//! the *population* grows with the per-round cohort held fixed.
+//!
+//! The claim under test is the streaming executor's scaling contract:
+//! wall-clock per round and resident memory follow the active cohort,
+//! not the population — a 1M-client federation with a 1k cohort runs on
+//! a laptop. The resident executor rides along at small populations as
+//! the baseline (it materializes every client up front, so it is
+//! excluded from the large-population legs by construction).
+//!
+//!     cargo bench --bench round_throughput
+//!
+//! Scale the heavyweight leg up with RCFED_BENCH_POP (population of the
+//! largest streamed leg, default 1_000_000).
+
+use rcfed::coordinator::experiment::{
+    run_experiment, ExecutionMode, ExperimentConfig,
+};
+use rcfed::csv_row;
+use rcfed::util::csv::CsvWriter;
+
+struct Leg {
+    mode: ExecutionMode,
+    population: usize,
+    cohort: usize,
+    shards: usize,
+}
+
+fn config_for(leg: &Leg) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::tiny();
+    cfg.dataset.num_clients = leg.population;
+    cfg.clients_per_round = leg.cohort;
+    cfg.rounds = 4;
+    // keep the measurement about the round loop, not the eval pass
+    cfg.eval_every = cfg.rounds;
+    cfg.mode = leg.mode;
+    cfg.round_shards = leg.shards;
+    cfg
+}
+
+fn main() {
+    rcfed::util::log::init_from_env();
+    let top_pop: usize = std::env::var("RCFED_BENCH_POP")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1_000_000);
+    let mut w = CsvWriter::create(
+        "results/round_throughput.csv",
+        &[
+            "mode",
+            "population",
+            "cohort",
+            "round_shards",
+            "rounds",
+            "clients_per_sec",
+            "wall_secs",
+            "peak_rss_kb",
+        ],
+    )
+    .unwrap();
+    println!("=== streamed round throughput (tiny model) ===\n");
+
+    let legs = [
+        // resident baseline: the whole population lives in memory
+        Leg {
+            mode: ExecutionMode::Resident,
+            population: 1_000,
+            cohort: 256,
+            shards: 0,
+        },
+        // streamed at the same scale — parity check
+        Leg {
+            mode: ExecutionMode::Streamed,
+            population: 1_000,
+            cohort: 256,
+            shards: 0,
+        },
+        // population grows 100×, cohort fixed: throughput and RSS
+        // should hold roughly flat
+        Leg {
+            mode: ExecutionMode::Streamed,
+            population: 100_000,
+            cohort: 256,
+            shards: 0,
+        },
+        // the ISSUE target: ~1M clients, 1k per round, laptop-sized
+        Leg {
+            mode: ExecutionMode::Streamed,
+            population: top_pop,
+            cohort: 1_000,
+            shards: 0,
+        },
+    ];
+
+    for leg in &legs {
+        let cfg = config_for(leg);
+        let report = run_experiment(&cfg).unwrap();
+        let served = (cfg.rounds * leg.cohort) as f64;
+        let cps = served / report.wall_secs.max(1e-9);
+        println!(
+            "{:<9?} population={:<9} cohort={:<5} shards={} \
+             {:>9.1} clients/s  wall={:.2}s  peak_rss={} kB",
+            leg.mode,
+            leg.population,
+            leg.cohort,
+            leg.shards,
+            cps,
+            report.wall_secs,
+            report.peak_rss_kb,
+        );
+        csv_row!(
+            w,
+            format!("{:?}", leg.mode),
+            leg.population,
+            leg.cohort,
+            leg.shards,
+            cfg.rounds,
+            cps,
+            report.wall_secs,
+            report.peak_rss_kb
+        )
+        .unwrap();
+    }
+    w.flush().unwrap();
+    println!("\nwrote results/round_throughput.csv");
+}

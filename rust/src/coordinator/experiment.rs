@@ -6,14 +6,16 @@
 
 use std::rc::Rc;
 
+use crate::data::synth::ShardGen;
 use crate::data::{DatasetConfig, DatasetKind, FederatedDataset};
-use crate::fl::client::Client;
+use crate::fl::client::{Client, ClientUpdate};
 use crate::fl::compression::{
     CompressionPipeline, CompressionScheme, RateAllocation, RateTarget,
     RoundAdaptation, TransformCfg, WireCoder,
 };
 use crate::fl::metrics::MetricsLog;
 use crate::fl::server::{LrSchedule, Server};
+use crate::fl::store::{ClientStore, ShardSource};
 use crate::model::native::NativeMlp;
 use crate::model::pjrt::PjrtModel;
 use crate::model::Backend;
@@ -21,8 +23,10 @@ use crate::coordinator::network::{
     ChannelSpec, ChannelStats, Delivery, SimulatedNetwork,
 };
 use crate::coordinator::scheduler::{
-    run_round, run_round_serial, select_clients, RoundPlan,
+    run_round, run_round_serial, select_clients, stream_round,
+    stream_round_serial, RoundPlan,
 };
+use crate::util::mem::current_rss_kb;
 use crate::util::rng::Rng;
 use crate::util::timer::Timer;
 use crate::util::{Error, Result};
@@ -38,6 +42,22 @@ pub enum BackendChoice {
     /// AOT JAX/Pallas graphs via PJRT (paper-faithful 3-layer path);
     /// the string names a model in `artifacts/manifest.json`
     Pjrt(String),
+}
+
+/// How a round's cohort is executed. Both modes are byte-identical in
+/// every observable (aggregate, bit ledger, survivor sets, metrics) —
+/// pinned by `tests/streaming_identity.rs` — so the choice is purely a
+/// memory/throughput trade.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecutionMode {
+    /// Every client materialized for the whole run (`Vec<Client>`; the
+    /// historical path). Memory O(population · shard).
+    Resident,
+    /// Cohorts stream through a bounded worker pool: shards materialize
+    /// lazily per round, durable state spills to a keyed store between
+    /// rounds. Memory O(active cohort) + O(ever-selected clients ·
+    /// state). The default.
+    Streamed,
 }
 
 /// Full experiment configuration.
@@ -75,6 +95,13 @@ pub struct ExperimentConfig {
     /// byte-identical to the pre-codec behavior), error feedback and/or
     /// top-k sparsification
     pub transform: TransformCfg,
+    /// round execution: streamed cohorts (default) or fully resident
+    /// clients — byte-identical results either way
+    pub mode: ExecutionMode,
+    /// streamed mode: contiguous cohort chunks handed to the worker pool
+    /// (0 ⇒ auto: 4 per worker). Any value yields identical results;
+    /// this only tunes work-stealing granularity.
+    pub round_shards: usize,
 }
 
 impl ExperimentConfig {
@@ -101,6 +128,8 @@ impl ExperimentConfig {
             rate_target: RateTarget::Off,
             alloc: RateAllocation::Uniform,
             transform: TransformCfg::default(),
+            mode: ExecutionMode::Streamed,
+            round_shards: 0,
         }
     }
 
@@ -174,6 +203,10 @@ pub struct ExperimentReport {
     /// final per-client width histogram `(width, clients)` from the rate
     /// allocator (empty for uniform-allocation runs)
     pub alloc_hist: Vec<(u32, usize)>,
+    /// peak resident-set size observed across round boundaries, in KiB
+    /// (0 where `/proc/self/status` is unavailable). The streamed path's
+    /// flat-RSS claim is checked against this in CI.
+    pub peak_rss_kb: u64,
 }
 
 impl ExperimentReport {
@@ -229,15 +262,36 @@ fn evaluate<B: Backend + ?Sized>(
 }
 
 /// Run a full experiment; the core entry point of the library.
+///
+/// In streamed mode (the default) the dataset is **never fully
+/// materialized**: only the compact [`ShardGen`] recipe and the test set
+/// exist up front, and each round materializes exactly its cohort's
+/// shards. This is what makes million-client populations runnable.
 pub fn run_experiment(config: &ExperimentConfig) -> Result<ExperimentReport> {
-    let ds = FederatedDataset::build(&config.dataset);
-    run_experiment_on(config, &ds)
+    match config.mode {
+        ExecutionMode::Streamed => {
+            let gen = ShardGen::new(&config.dataset);
+            let eval_ds = gen.eval_dataset();
+            let mut exec = Executor::Streamed {
+                source: ShardSource::Lazy(&gen),
+                store: ClientStore::new(config.seed),
+                round_shards: config.round_shards,
+            };
+            run_with_executor(config, &eval_ds, &mut exec)
+        }
+        ExecutionMode::Resident => {
+            let ds = FederatedDataset::build(&config.dataset);
+            run_experiment_on(config, &ds)
+        }
+    }
 }
 
 /// Like [`run_experiment`], but reusing a prebuilt dataset. The sweep
 /// engine builds each base's dataset once and shares it across that
 /// base's cells, instead of rebuilding (and holding) one copy per
-/// concurrently running cell.
+/// concurrently running cell. In streamed mode the cohort borrows shards
+/// straight out of `ds` (no per-client clone — the historical resident
+/// path copied every shard into its `Client`).
 ///
 /// `ds` must have been built from exactly `config.dataset` (checked).
 pub fn run_experiment_on(
@@ -250,6 +304,40 @@ pub fn run_experiment_on(
             ds.config, config.dataset
         )));
     }
+    match config.mode {
+        ExecutionMode::Streamed => {
+            let mut exec = Executor::Streamed {
+                source: ShardSource::Resident(&ds.shards),
+                store: ClientStore::new(config.seed),
+                round_shards: config.round_shards,
+            };
+            run_with_executor(config, ds, &mut exec)
+        }
+        ExecutionMode::Resident => {
+            // clients (deterministic per-client seeds)
+            let mut clients: Vec<Client> = ds
+                .shards
+                .iter()
+                .enumerate()
+                .map(|(i, s)| {
+                    Client::new(
+                        i as u32, s.clone(), config.seed ^ (i as u64) << 20)
+                })
+                .collect();
+            let mut exec = Executor::Resident(&mut clients);
+            run_with_executor(config, ds, &mut exec)
+        }
+    }
+}
+
+/// Shared tail of both entry points: validate, design the pipeline,
+/// dispatch on backend, log the outcome. `ds` is used for evaluation
+/// only in streamed mode (its `shards` may be empty).
+fn run_with_executor(
+    config: &ExperimentConfig,
+    ds: &FederatedDataset,
+    exec: &mut Executor<'_>,
+) -> Result<ExperimentReport> {
     config.channel.validate()?;
     let total_timer = Timer::start();
     let mut pipeline = CompressionPipeline::design_full(
@@ -257,26 +345,16 @@ pub fn run_experiment_on(
         config.transform)?;
     // identity transforms suffix nothing, keeping every pre-codec label
     let label = config.label();
-
-    // clients (deterministic per-client seeds)
-    let mut clients: Vec<Client> = ds
-        .shards
-        .iter()
-        .enumerate()
-        .map(|(i, s)| {
-            Client::new(i as u32, s.clone(), config.seed ^ (i as u64) << 20)
-        })
-        .collect();
     let mut sampler = Rng::new(config.seed.wrapping_mul(0x2545F4914F6CDD1D));
 
     // backend + server. The native path fans clients out across a scoped
     // thread pool; the PJRT engine is single-threaded host-side (XLA
-    // parallelizes internally), so it uses the serial runner.
+    // parallelizes internally), so it uses the serial runners.
     let report = match &config.backend {
         BackendChoice::Native => {
             let backend = config.native_backend();
-            drive(config, ds, &mut clients, &mut sampler, &mut pipeline,
-                  &backend, run_round::<NativeMlp>)?
+            drive(config, ds, exec, &mut sampler, &mut pipeline, &backend,
+                  run_round::<NativeMlp>, stream_round::<NativeMlp>)?
         }
         BackendChoice::Pjrt(model) => {
             let engine = Rc::new(crate::runtime::Engine::from_default_dir()?);
@@ -286,8 +364,9 @@ pub fn run_experiment_on(
                     "pjrt model batch {} overrides configured batch {}",
                     backend.batch_size(), config.batch);
             }
-            drive(config, ds, &mut clients, &mut sampler, &mut pipeline,
-                  &backend, run_round_serial::<PjrtModel>)?
+            drive(config, ds, exec, &mut sampler, &mut pipeline, &backend,
+                  run_round_serial::<PjrtModel>,
+                  stream_round_serial_shim::<PjrtModel>)?
         }
     };
     if config.alloc.is_on() {
@@ -323,7 +402,18 @@ pub fn run_experiment_on(
     Ok(report)
 }
 
-/// The signature of a round runner (`run_round` for thread-safe
+/// How [`drive`] obtains a round's updates: the resident `Vec<Client>`
+/// (historical path) or the streamed store-backed cohort pipeline.
+enum Executor<'a> {
+    Resident(&'a mut Vec<Client>),
+    Streamed {
+        source: ShardSource<'a>,
+        store: ClientStore,
+        round_shards: usize,
+    },
+}
+
+/// The signature of a resident round runner (`run_round` for thread-safe
 /// backends, `run_round_serial` otherwise). Runners share the pipeline
 /// immutably; adaptation happens between rounds in [`drive`].
 type Runner<B> = fn(
@@ -332,17 +422,50 @@ type Runner<B> = fn(
     &[f32],
     &RoundPlan,
     &CompressionPipeline,
-) -> Result<Vec<crate::fl::client::ClientUpdate>>;
+) -> Result<Vec<ClientUpdate>>;
+
+/// The streamed counterpart (`stream_round` for thread-safe backends,
+/// [`stream_round_serial_shim`] otherwise).
+type StreamRunner<B> = fn(
+    &B,
+    &ShardSource<'_>,
+    &mut ClientStore,
+    &[usize],
+    &[f32],
+    &RoundPlan,
+    &CompressionPipeline,
+    usize,
+) -> Result<Vec<ClientUpdate>>;
+
+/// Adapter giving `stream_round_serial` the [`StreamRunner`] shape (the
+/// serial path has no use for a shard count).
+#[allow(clippy::too_many_arguments)]
+fn stream_round_serial_shim<B: Backend + ?Sized>(
+    backend: &B,
+    source: &ShardSource<'_>,
+    store: &mut ClientStore,
+    cohort: &[usize],
+    params: &[f32],
+    plan: &RoundPlan,
+    pipeline: &CompressionPipeline,
+    _round_shards: usize,
+) -> Result<Vec<ClientUpdate>> {
+    stream_round_serial(
+        backend, source, store, cohort, params, plan, pipeline,
+    )
+}
 
 /// The round loop, generic over backend.
+#[allow(clippy::too_many_arguments)]
 fn drive<B: Backend>(
     config: &ExperimentConfig,
     ds: &FederatedDataset,
-    clients: &mut [Client],
+    exec: &mut Executor<'_>,
     sampler: &mut Rng,
     pipeline: &mut CompressionPipeline,
     backend: &B,
     runner: Runner<B>,
+    stream_runner: StreamRunner<B>,
 ) -> Result<ExperimentReport> {
     let total_timer = Timer::start();
     let batch = if let BackendChoice::Pjrt(_) = config.backend {
@@ -355,13 +478,16 @@ fn drive<B: Backend>(
         backend.init_params(config.seed ^ 0xA5A5_5A5A),
         config.lr,
     );
+    // population size comes from the config, not from materialized
+    // shards: the streamed path may never materialize any
+    let k_all = config.dataset.num_clients;
     let mut network = SimulatedNetwork::with_spec(
-        clients.len(),
+        k_all,
         config.channel,
         config.seed ^ 0xC4A2_2E1B_9D5F_7733,
     );
     let mut metrics = MetricsLog::new();
-    let k_all = clients.len();
+    let mut peak_rss_kb = 0u64;
     // bind the rate allocator (if any) to this population: the channel
     // model's per-client bandwidth factors seed the initial water-fill
     // (a free no-op under Alloc::Uniform)
@@ -393,11 +519,27 @@ fn drive<B: Backend>(
         // always true — and draws nothing — at availability 1)
         let mut sampled = sampler.sample_indices(k_all, k_round);
         sampled.retain(|_| network.participates());
-        let mut selected = select_clients(clients, &sampled);
         let params_snapshot = server.params.clone();
-        let updates =
-            runner(backend, &mut selected, &params_snapshot, &plan,
-                   &*pipeline)?;
+        let updates = match exec {
+            Executor::Resident(clients) => {
+                let mut selected = select_clients(clients, &sampled);
+                runner(backend, &mut selected, &params_snapshot, &plan,
+                       &*pipeline)?
+            }
+            Executor::Streamed { source, store, round_shards } => {
+                // normalize to the exact cohort `select_clients` yields:
+                // ascending population index, duplicates collapsed,
+                // out-of-range dropped
+                let mut cohort = sampled.clone();
+                cohort.retain(|&i| i < k_all);
+                cohort.sort_unstable();
+                cohort.dedup();
+                stream_runner(
+                    backend, source, store, &cohort, &params_snapshot,
+                    &plan, &*pipeline, *round_shards,
+                )?
+            }
+        };
         // uplink: every update goes through the channel; only survivors
         // reach the aggregate, which the server averages over `received`
         // so it stays unbiased over whoever made it through
@@ -509,6 +651,13 @@ fn drive<B: Backend>(
             network.bits_this_round(),
             round_timer.secs(),
         );
+        // in-memory stream trace (never written to the CSV): cohort
+        // size, survivors and the RSS sample behind the flat-memory
+        // claim. Identical across execution modes by construction —
+        // except rss_kb, which is measurement, not simulation state.
+        let rss_kb = current_rss_kb();
+        peak_rss_kb = peak_rss_kb.max(rss_kb);
+        metrics.push_stream(updates.len(), survivors, rss_kb);
         if pipeline.is_adaptive() {
             metrics.push_rate(
                 pipeline.lambda(),
@@ -562,6 +711,7 @@ fn drive<B: Backend>(
         wall_secs: total_timer.secs(),
         channel: network.stats,
         alloc_hist: pipeline.alloc_histogram(),
+        peak_rss_kb,
         metrics,
     })
 }
@@ -844,6 +994,49 @@ mod tests {
         cfg.rate_target =
             RateTarget::Track { bits_per_coord: 2.0, adapt_every: 2 };
         assert!(run_experiment(&cfg).is_err());
+    }
+
+    #[test]
+    fn streamed_is_default_and_matches_resident() {
+        let cfg = ExperimentConfig::tiny();
+        assert_eq!(cfg.mode, ExecutionMode::Streamed);
+        let streamed = run_experiment(&cfg).unwrap();
+        let mut res = cfg.clone();
+        res.mode = ExecutionMode::Resident;
+        let resident = run_experiment(&res).unwrap();
+        assert_eq!(streamed.total_bits, resident.total_bits);
+        assert_eq!(streamed.final_accuracy, resident.final_accuracy);
+        assert_eq!(streamed.channel, resident.channel);
+    }
+
+    #[test]
+    fn population_larger_than_cohort_streams_with_bounded_state() {
+        let mut cfg = ExperimentConfig::tiny();
+        cfg.dataset.num_clients = 512;
+        cfg.clients_per_round = 16;
+        cfg.rounds = 3;
+        cfg.eval_every = 0;
+        let rep = run_experiment(&cfg).unwrap();
+        assert_eq!(rep.metrics.rounds.len(), 3);
+        assert!(rep.total_bits > 0);
+        let st = rep.metrics.stream_trace();
+        assert_eq!(st.len(), 3);
+        assert!(st.iter().all(|r| r.cohort == 16), "{st:?}");
+        assert!(st.iter().all(|r| r.survivors == 16));
+    }
+
+    #[test]
+    fn round_shards_do_not_change_results() {
+        let mut cfg = ExperimentConfig::tiny();
+        cfg.rounds = 6;
+        let base = run_experiment(&cfg).unwrap();
+        for shards in [1usize, 2, 7] {
+            let mut c = cfg.clone();
+            c.round_shards = shards;
+            let rep = run_experiment(&c).unwrap();
+            assert_eq!(rep.total_bits, base.total_bits, "shards={shards}");
+            assert_eq!(rep.final_accuracy, base.final_accuracy);
+        }
     }
 
     #[test]

@@ -33,6 +33,8 @@
 //! is `Delivered`, so ideal-channel experiments are byte-identical to
 //! the channel-less code path.
 
+use std::collections::HashMap;
+
 use crate::fl::packet::Packet;
 use crate::util::rng::Rng;
 use crate::util::{Error, Result};
@@ -287,9 +289,16 @@ impl std::fmt::Display for ChannelStats {
 }
 
 /// Uplink ledger + deterministic fault-injecting channel.
+///
+/// Per-client state (bit ledgers, bandwidth factors) is keyed by client
+/// id and materialized on first touch, so a network over a
+/// million-client population costs memory proportional to the clients
+/// that actually transmitted — the streamed round loop's O(active
+/// cohort) discipline — not to the population.
 #[derive(Debug)]
 pub struct SimulatedNetwork {
-    per_client_bits: Vec<u64>,
+    /// uplink bits per client, keyed by id (absent ⇒ never transmitted)
+    per_client_bits: HashMap<usize, u64>,
     total_bits: u64,
     round_bits: Vec<u64>,
     /// server→client broadcast ledger (codebook re-publications from the
@@ -297,12 +306,12 @@ pub struct SimulatedNetwork {
     downlink_bits: u64,
     round_downlink_bits: Vec<u64>,
     /// per-client unicast downlink (the rate allocator's per-client
-    /// codebook publications)
-    per_client_down_bits: Vec<u64>,
+    /// codebook publications), keyed by id
+    per_client_down_bits: HashMap<usize, u64>,
     /// the channel configuration this network simulates
     pub spec: ChannelSpec,
-    /// per-client bandwidth factor (empty when `uplink_bps == 0`)
-    client_factor: Vec<f64>,
+    /// seed for the keyed per-client bandwidth-factor derivation
+    seed: u64,
     rng: Rng,
     /// Gilbert–Elliott state: currently in the bad (burst) state?
     burst_bad: bool,
@@ -329,33 +338,23 @@ impl SimulatedNetwork {
     /// Full channel model. All randomness (loss, corruption,
     /// availability) derives from `seed`; per-client bandwidth factors
     /// are deterministic in `(seed, client)` and independent of traffic
-    /// order.
+    /// order. `num_clients` sizes nothing — every per-client structure
+    /// is keyed and grows with the clients actually touched — but stays
+    /// in the signature as the population contract.
     pub fn with_spec(
-        num_clients: usize,
+        _num_clients: usize,
         spec: ChannelSpec,
         seed: u64,
     ) -> SimulatedNetwork {
-        let client_factor = if spec.uplink_bps > 0.0
-            && spec.bandwidth_spread > 0.0
-        {
-            let mut r = Rng::new(seed ^ 0xBA2D_81F7_0C3A_55E1);
-            (0..num_clients)
-                .map(|_| {
-                    1.0 + spec.bandwidth_spread * (2.0 * r.uniform() - 1.0)
-                })
-                .collect()
-        } else {
-            Vec::new()
-        };
         SimulatedNetwork {
-            per_client_bits: vec![0; num_clients],
+            per_client_bits: HashMap::new(),
             total_bits: 0,
             round_bits: Vec::new(),
             downlink_bits: 0,
             round_downlink_bits: Vec::new(),
-            per_client_down_bits: vec![0; num_clients],
+            per_client_down_bits: HashMap::new(),
             spec,
-            client_factor,
+            seed,
             rng: Rng::new(seed ^ 0x6E65_7477_6F72_6Bu64), // "network"
             burst_bad: false,
             stats: ChannelStats::default(),
@@ -367,15 +366,24 @@ impl SimulatedNetwork {
         if self.spec.uplink_bps <= 0.0 {
             return None;
         }
-        let f = self.client_factor.get(client).copied().unwrap_or(1.0);
-        Some(self.spec.uplink_bps * f)
+        Some(self.spec.uplink_bps * self.client_bandwidth_factor(client))
     }
 
     /// Relative uplink-bandwidth factor of `client` (1.0 under a
     /// homogeneous or infinite-bandwidth model) — the heterogeneity
-    /// prior the rate allocator water-fills against.
+    /// prior the rate allocator water-fills against. Derived on demand
+    /// from `(seed, client)` — no per-population table — uniform over
+    /// `[1−spread, 1+spread]`.
     pub fn client_bandwidth_factor(&self, client: usize) -> f64 {
-        self.client_factor.get(client).copied().unwrap_or(1.0)
+        if self.spec.uplink_bps <= 0.0 || self.spec.bandwidth_spread <= 0.0 {
+            return 1.0;
+        }
+        let mut r = Rng::new(
+            self.seed
+                ^ 0xBA2D_81F7_0C3A_55E1
+                ^ (client as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        );
+        1.0 + self.spec.bandwidth_spread * (2.0 * r.uniform() - 1.0)
     }
 
     /// Simulated transmit duration of `bits` from `client`.
@@ -391,9 +399,7 @@ impl SimulatedNetwork {
     /// `begin_round` open round 0 implicitly, so no bits are ever
     /// silently dropped from the per-round ledger.
     fn account(&mut self, client: usize, bits: u64) {
-        if client < self.per_client_bits.len() {
-            self.per_client_bits[client] += bits;
-        }
+        *self.per_client_bits.entry(client).or_insert(0) += bits;
         self.total_bits += bits;
         if self.round_bits.is_empty() {
             self.round_bits.push(0);
@@ -544,9 +550,7 @@ impl SimulatedNetwork {
     /// publications go through here, so only the clients whose width
     /// actually moved are charged (a broadcast would overcount).
     pub fn unicast(&mut self, client: usize, bits: u64) -> u64 {
-        if client < self.per_client_down_bits.len() {
-            self.per_client_down_bits[client] += bits;
-        }
+        *self.per_client_down_bits.entry(client).or_insert(0) += bits;
         self.charge_downlink(bits);
         bits
     }
@@ -562,7 +566,7 @@ impl SimulatedNetwork {
     /// Cumulative downlink bits unicast to `client` (codebook
     /// publications from the rate allocator; zero otherwise).
     pub fn client_downlink_bits(&self, client: usize) -> u64 {
-        self.per_client_down_bits.get(client).copied().unwrap_or(0)
+        self.per_client_down_bits.get(&client).copied().unwrap_or(0)
     }
 
     /// Mark the start of a round (opens fresh round buckets on both
@@ -595,7 +599,7 @@ impl SimulatedNetwork {
     }
 
     pub fn client_bits(&self, client: usize) -> u64 {
-        self.per_client_bits.get(client).copied().unwrap_or(0)
+        self.per_client_bits.get(&client).copied().unwrap_or(0)
     }
 
     /// Simulated duration of a round where `durations` are the per-client
@@ -681,13 +685,37 @@ mod tests {
         assert_eq!(n.client_downlink_bits(2), 100);
         // never leaks into the uplink ledger
         assert_eq!(n.total_bits(), 0);
-        // out-of-range receivers still charge the aggregate ledger
+        // receivers beyond the nominal population still charge both
+        // ledgers (the keyed ledger has no bound to fall outside of)
         n.unicast(99, 50);
         assert_eq!(n.downlink_bits(), 850);
+        assert_eq!(n.client_downlink_bits(99), 50);
         // a unicast before any begin_round opens round 0 implicitly
         let mut fresh = SimulatedNetwork::new(2);
         fresh.unicast(0, 40);
         assert_eq!(fresh.downlink_bits_this_round(), 40);
+    }
+
+    #[test]
+    fn ledgers_grow_with_touched_clients_not_population() {
+        // a network over a huge nominal population allocates nothing up
+        // front; only the clients that actually transmit (or receive a
+        // unicast) occupy ledger memory
+        let mut n = SimulatedNetwork::with_spec(
+            1_000_000_000,
+            ChannelSpec::ideal(),
+            0,
+        );
+        n.begin_round();
+        n.transmit(&pkt(7, 100));
+        n.transmit(&pkt(999_999_999, 100));
+        n.unicast(7, 40);
+        assert_eq!(n.per_client_bits.len(), 2);
+        assert_eq!(n.per_client_down_bits.len(), 1);
+        assert_eq!(n.client_bits(7), pkt(7, 100).total_bits());
+        assert_eq!(n.client_bits(999_999_999), pkt(7, 100).total_bits());
+        assert_eq!(n.client_bits(3), 0, "untouched clients read zero");
+        assert_eq!(n.client_downlink_bits(3), 0);
     }
 
     #[test]

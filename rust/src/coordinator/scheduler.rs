@@ -2,9 +2,28 @@
 //! when the backend allows it (native models are pure functions of their
 //! inputs; the PJRT CPU client is driven from one thread and parallelizes
 //! internally via Eigen).
+//!
+//! Two executors share the per-client round body
+//! ([`crate::fl::client::run_client_round`]):
+//!
+//! * **resident** ([`run_round`] / [`run_round_serial`]) — iterates
+//!   pre-materialized `&mut Client`s (the historical path);
+//! * **streamed** ([`stream_round`] / [`stream_round_serial`]) — checks
+//!   durable state out of a [`ClientStore`], materializes each shard
+//!   from a [`ShardSource`] for exactly the duration of the client's
+//!   local step, and shards the cohort across the sweep engine's
+//!   `parallel_map` pool with a deterministic ordered reduction, so
+//!   memory is O(active cohort) while results stay byte-identical to
+//!   the resident executor.
 
-use crate::fl::client::{Client, ClientUpdate};
+use std::sync::Mutex;
+
+use crate::coordinator::sweep::parallel_map;
+use crate::fl::client::{
+    run_client_round, Client, ClientState, ClientUpdate, RoundScratch,
+};
 use crate::fl::compression::CompressionPipeline;
+use crate::fl::store::{ClientStore, ShardSource};
 use crate::model::Backend;
 use crate::util::Result;
 
@@ -114,6 +133,142 @@ where
     Ok(out)
 }
 
+/// Run a cohort through the streamed executor, serially: check each
+/// client's durable state out of the store, materialize its shard, run
+/// the round body with one shared scratch, spill the state back.
+/// `cohort` holds population indices in ascending order (the same order
+/// `select_clients` yields); updates come back in that order.
+pub fn stream_round_serial<B: Backend + ?Sized>(
+    backend: &B,
+    source: &ShardSource<'_>,
+    store: &mut ClientStore,
+    cohort: &[usize],
+    params: &[f32],
+    plan: &RoundPlan,
+    pipeline: &CompressionPipeline,
+) -> Result<Vec<ClientUpdate>> {
+    let mut scratch = RoundScratch::new();
+    let mut out = Vec::with_capacity(cohort.len());
+    for &idx in cohort {
+        let mut state = store.checkout(idx);
+        let shard = source.shard(idx);
+        let r = run_client_round(
+            backend, &shard, &mut state, &mut scratch, idx as u32, params,
+            plan.round, plan.local_iters, plan.lr, plan.batch, pipeline,
+        );
+        // spill even when the round body errored: the stream position is
+        // durable state regardless of what aborts the experiment next
+        store.commit(idx, state);
+        out.push(r?);
+    }
+    Ok(out)
+}
+
+/// Streamed cohort execution across a bounded worker pool.
+///
+/// The cohort is cut into `round_shards` contiguous chunks (`0` ⇒ auto:
+/// 4 chunks per worker, so work-stealing smooths uneven local-step
+/// costs); workers pull chunks via `parallel_map`, each with its own
+/// [`RoundScratch`], materializing one shard at a time. The reduction is
+/// ordered by construction — chunk `i`'s updates land before chunk
+/// `i+1`'s — so the update sequence, and therefore aggregation order,
+/// the bit ledger and survivor sets downstream, are byte-identical to
+/// [`stream_round_serial`] and to the resident executor for any shard
+/// count or thread count.
+#[allow(clippy::too_many_arguments)]
+pub fn stream_round<B: Backend + Sync + ?Sized>(
+    backend: &B,
+    source: &ShardSource<'_>,
+    store: &mut ClientStore,
+    cohort: &[usize],
+    params: &[f32],
+    plan: &RoundPlan,
+    pipeline: &CompressionPipeline,
+    round_shards: usize,
+) -> Result<Vec<ClientUpdate>>
+where
+    CompressionPipeline: Sync,
+{
+    let n = cohort.len();
+    let threads = if plan.threads == 0 {
+        std::thread::available_parallelism().map(|x| x.get()).unwrap_or(1)
+    } else {
+        plan.threads
+    };
+    let threads = threads.min(n.max(1));
+    if !backend.supports_parallel() || threads <= 1 || n <= 1 {
+        return stream_round_serial(
+            backend, source, store, cohort, params, plan, pipeline,
+        );
+    }
+
+    let shards = if round_shards == 0 {
+        (threads * 4).min(n)
+    } else {
+        round_shards.clamp(1, n)
+    };
+    let per = n.div_ceil(shards);
+
+    // serial checkout in cohort order (the store is &mut; checkouts are
+    // cheap map removals), then hand contiguous chunks to the pool
+    let mut chunks: Vec<Mutex<Option<Vec<(usize, ClientState)>>>> =
+        Vec::with_capacity(shards);
+    let mut it = cohort.iter();
+    loop {
+        let chunk: Vec<(usize, ClientState)> = it
+            .by_ref()
+            .take(per)
+            .map(|&idx| (idx, store.checkout(idx)))
+            .collect();
+        if chunk.is_empty() {
+            break;
+        }
+        chunks.push(Mutex::new(Some(chunk)));
+    }
+
+    type ChunkOut = Result<Vec<(usize, ClientState, ClientUpdate)>>;
+    let results: Vec<ChunkOut> = parallel_map(&chunks, threads, |_, slot| {
+        let chunk =
+            slot.lock().unwrap().take().expect("chunk consumed once");
+        let mut scratch = RoundScratch::new();
+        let mut done = Vec::with_capacity(chunk.len());
+        for (idx, mut state) in chunk {
+            let shard = source.shard(idx);
+            let up = run_client_round(
+                backend, &shard, &mut state, &mut scratch, idx as u32,
+                params, plan.round, plan.local_iters, plan.lr, plan.batch,
+                pipeline,
+            )?;
+            done.push((idx, state, up));
+        }
+        Ok(done)
+    });
+
+    // ordered reduction: chunks are contiguous cohort slices, so pushing
+    // them back in chunk order restores exact cohort order
+    let mut out = Vec::with_capacity(n);
+    let mut first_err = None;
+    for r in results {
+        match r {
+            Ok(batch) => {
+                for (idx, state, up) in batch {
+                    store.commit(idx, state);
+                    out.push(up);
+                }
+            }
+            Err(e) => {
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
+        }
+    }
+    match first_err {
+        Some(e) => Err(e),
+        None => Ok(out),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -194,5 +349,110 @@ mod tests {
         let mut refs: Vec<&mut Client> = clients.iter_mut().collect();
         let ups = run_round(&m, &mut refs, &params, &plan, &c).unwrap();
         assert_eq!(ups.len(), 1);
+    }
+
+    /// The streamed executor must replay the resident executor exactly:
+    /// same packets, same order, for any shard/thread count, across
+    /// rounds where clients sit out (durable state spill/restore).
+    #[test]
+    fn streamed_matches_resident_across_rounds() {
+        let seed = 4242u64;
+        let mut cfg = DatasetConfig::tiny();
+        cfg.num_clients = 8;
+        let ds = FederatedDataset::build(&cfg);
+        let mut resident: Vec<Client> = ds
+            .shards
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                Client::new(i as u32, s.clone(), seed ^ ((i as u64) << 20))
+            })
+            .collect();
+        let c = CompressionPipeline::design(
+            CompressionScheme::Lloyd { bits: 3 },
+            WireCoder::Huffman,
+            RateTarget::Off,
+        )
+        .unwrap();
+        let m = NativeMlp::tiny();
+        let params = crate::model::Backend::init_params(&m, 1);
+
+        let source = ShardSource::Resident(&ds.shards);
+        let mut store_par = ClientStore::new(seed);
+        let mut store_ser = ClientStore::new(seed);
+        // overlapping cohorts: clients 1 and 3 participate twice, so the
+        // second round exercises state restore, not just fresh creation
+        let cohorts: [&[usize]; 3] = [&[0, 1, 3, 5, 7], &[1, 2, 3], &[4]];
+        for (round, cohort) in cohorts.iter().enumerate() {
+            let plan = RoundPlan {
+                round: round as u32,
+                local_iters: 2,
+                lr: 0.05,
+                batch: 8,
+                threads: 4,
+            };
+            let refs = select_clients(&mut resident, cohort);
+            let mut refs: Vec<&mut Client> = refs;
+            let want =
+                run_round(&m, &mut refs, &params, &plan, &c).unwrap();
+            let have = stream_round(
+                &m, &source, &mut store_par, cohort, &params, &plan, &c, 3,
+            )
+            .unwrap();
+            let have_ser = stream_round_serial(
+                &m, &source, &mut store_ser, cohort, &params, &plan, &c,
+            )
+            .unwrap();
+            assert_eq!(want.len(), have.len());
+            for ((a, b), s) in want.iter().zip(&have).zip(&have_ser) {
+                assert_eq!(a.packet.client_id, b.packet.client_id);
+                assert_eq!(a.packet.payload, b.packet.payload);
+                assert_eq!(a.mean_loss, b.mean_loss);
+                assert_eq!(b.packet.payload, s.packet.payload);
+            }
+        }
+        // only ever-selected clients hold spilled state
+        assert_eq!(store_par.spilled(), 7); // all but client 6
+    }
+
+    /// Lazy shard materialization must not change results either.
+    #[test]
+    fn streamed_lazy_source_matches_resident_source() {
+        let seed = 99u64;
+        let mut cfg = DatasetConfig::tiny();
+        cfg.num_clients = 6;
+        let ds = FederatedDataset::build(&cfg);
+        let gen = crate::data::synth::ShardGen::new(&cfg);
+        let c = CompressionPipeline::design(
+            CompressionScheme::Lloyd { bits: 3 },
+            WireCoder::Huffman,
+            RateTarget::Off,
+        )
+        .unwrap();
+        let m = NativeMlp::tiny();
+        let params = crate::model::Backend::init_params(&m, 2);
+        let plan = RoundPlan {
+            round: 0,
+            local_iters: 1,
+            lr: 0.1,
+            batch: 8,
+            threads: 2,
+        };
+        let cohort = [0usize, 2, 5];
+        let mut s1 = ClientStore::new(seed);
+        let mut s2 = ClientStore::new(seed);
+        let a = stream_round(
+            &m, &ShardSource::Resident(&ds.shards), &mut s1, &cohort,
+            &params, &plan, &c, 0,
+        )
+        .unwrap();
+        let b = stream_round(
+            &m, &ShardSource::Lazy(&gen), &mut s2, &cohort, &params, &plan,
+            &c, 0,
+        )
+        .unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.packet.payload, y.packet.payload);
+        }
     }
 }

@@ -6,6 +6,22 @@
 //! strong but finite-sample learning is non-trivial — the regime in which
 //! quantization noise visibly moves test accuracy, which is what Fig. 1
 //! measures.
+//!
+//! Two construction modes share one deterministic recipe:
+//!
+//! * **Eager** — [`build`] materializes every shard up front (the
+//!   historical path; memory is O(population · examples)).
+//! * **Lazy** — [`ShardGen`] captures only the compact per-client recipe
+//!   (class weights + a precomputed per-shard seed) and materializes any
+//!   shard on demand. `build` itself delegates to `ShardGen`, so the two
+//!   modes are byte-identical *by construction*, not by parallel
+//!   maintenance.
+//!
+//! The lazy recipe is O(population) in the number of clients but with a
+//! tiny constant (one `u64` seed plus the class-weight vector per client,
+//! ~100 bytes) versus the O(examples · features) shard itself (~MBs), so
+//! million-client populations fit comfortably while a round only ever
+//! materializes its active cohort.
 
 use crate::data::partition::{device_class_subsets, dirichlet_class_weights};
 use crate::data::{DatasetConfig, DatasetKind, FederatedDataset, Shard};
@@ -54,47 +70,198 @@ fn gen_examples(
     }
 }
 
-/// Build a full federated dataset per `config`.
-pub fn build(config: &DatasetConfig) -> FederatedDataset {
-    let kind = config.kind;
-    let classes = kind.num_classes();
-    let feat = kind.num_features();
-    let mut rng = Rng::new(config.seed);
-    let protos =
-        prototypes(&mut rng, classes, feat, prototype_scale(kind));
+/// Per-client class weights, stored densely (Dirichlet skew touches every
+/// class) or sparsely (device subsets touch ≤ 8), whichever is smaller.
+/// Densification restores the exact `Vec<f64>` the partitioner produced,
+/// so `categorical` sees bit-identical weights either way.
+#[derive(Clone, Debug)]
+enum ClassWeights {
+    Dense(Vec<f64>),
+    Sparse(Vec<(u32, f64)>),
+}
 
-    // per-client class weights: Dirichlet (CIFAR protocol) or
-    // device-subset (FEMNIST protocol)
-    let weights = match config.dirichlet_beta {
-        Some(beta) => dirichlet_class_weights(
-            &mut rng, config.num_clients, classes, beta),
-        None => device_class_subsets(
-            &mut rng, config.num_clients, classes, 3, 8),
-    };
-
-    let mut shards = Vec::with_capacity(config.num_clients);
-    for w in &weights {
-        let mut srng = rng.fork(shards.len() as u64);
-        let (mut xs, mut ys) = (Vec::new(), Vec::new());
-        gen_examples(&mut srng, &protos, w, config.examples_per_client,
-                     config.noise, &mut xs, &mut ys);
-        shards.push(Shard { xs, ys, num_features: feat });
+impl ClassWeights {
+    fn compact(dense: Vec<f64>, classes: usize) -> ClassWeights {
+        let nnz = dense.iter().filter(|&&w| w != 0.0).count();
+        // a sparse entry costs 12 B packed (u32 + f64) vs 8 B dense
+        if nnz * 3 < classes * 2 {
+            ClassWeights::Sparse(
+                dense
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &w)| w != 0.0)
+                    .map(|(c, &w)| (c as u32, w))
+                    .collect(),
+            )
+        } else {
+            ClassWeights::Dense(dense)
+        }
     }
 
-    // IID balanced test set
-    let uniform = vec![1.0 / classes as f64; classes];
-    let mut trng = rng.fork(u64::MAX);
-    let (mut test_xs, mut test_ys) = (Vec::new(), Vec::new());
-    gen_examples(&mut trng, &protos, &uniform, config.test_examples,
-                 config.noise, &mut test_xs, &mut test_ys);
+    fn densify_into(&self, classes: usize, out: &mut Vec<f64>) {
+        out.clear();
+        match self {
+            ClassWeights::Dense(w) => out.extend_from_slice(w),
+            ClassWeights::Sparse(pairs) => {
+                out.resize(classes, 0.0);
+                for &(c, w) in pairs {
+                    out[c as usize] = w;
+                }
+            }
+        }
+    }
+}
 
+/// Compact deterministic recipe for a federated dataset: prototypes, each
+/// client's class-weight vector, and a precomputed per-shard RNG seed.
+///
+/// The seed table exists because [`Rng::fork`] *mutates* its parent (one
+/// `next_u64` draw per fork): shard `i`'s generator depends on the `i`
+/// forks before it, so lazy materialization cannot replay forks on
+/// demand. Capturing the parent draw for every shard up front freezes
+/// the exact eager sequence into random-access form.
+#[derive(Clone, Debug)]
+pub struct ShardGen {
+    config: DatasetConfig,
+    num_classes: usize,
+    num_features: usize,
+    protos: Vec<Vec<f32>>,
+    weights: Vec<ClassWeights>,
+    shard_seeds: Vec<u64>,
+    test_seed: u64,
+}
+
+impl ShardGen {
+    /// Capture the generation recipe for `config`. Replays the exact RNG
+    /// schedule of the eager builder: prototypes, then partition weights,
+    /// then one fork draw per shard, then the test-set fork.
+    pub fn new(config: &DatasetConfig) -> ShardGen {
+        let kind = config.kind;
+        let classes = kind.num_classes();
+        let feat = kind.num_features();
+        let mut rng = Rng::new(config.seed);
+        let protos = prototypes(&mut rng, classes, feat, prototype_scale(kind));
+
+        // per-client class weights: Dirichlet (CIFAR protocol) or
+        // device-subset (FEMNIST protocol)
+        let dense_weights = match config.dirichlet_beta {
+            Some(beta) => dirichlet_class_weights(
+                &mut rng, config.num_clients, classes, beta),
+            None => device_class_subsets(
+                &mut rng, config.num_clients, classes, 3, 8),
+        };
+        let weights: Vec<ClassWeights> = dense_weights
+            .into_iter()
+            .map(|w| ClassWeights::compact(w, classes))
+            .collect();
+
+        // freeze the fork schedule: seed_i is exactly what
+        // `rng.fork(i)` would have produced at this point in the
+        // sequence (one parent draw per shard, in shard order)
+        let mut shard_seeds = Vec::with_capacity(config.num_clients);
+        for i in 0..config.num_clients as u64 {
+            let base = rng.next_u64();
+            shard_seeds.push(base ^ i.wrapping_mul(0x9E3779B97F4A7C15));
+        }
+        let test_seed =
+            rng.next_u64() ^ u64::MAX.wrapping_mul(0x9E3779B97F4A7C15);
+
+        ShardGen {
+            config: config.clone(),
+            num_classes: classes,
+            num_features: feat,
+            protos,
+            weights,
+            shard_seeds,
+            test_seed,
+        }
+    }
+
+    pub fn num_clients(&self) -> usize {
+        self.shard_seeds.len()
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+
+    pub fn num_features(&self) -> usize {
+        self.num_features
+    }
+
+    pub fn config(&self) -> &DatasetConfig {
+        &self.config
+    }
+
+    /// Materialize client `i`'s shard. Byte-identical to
+    /// `build(config).shards[i]` for any order of calls (`&self`: safe to
+    /// call concurrently from a worker pool).
+    pub fn shard(&self, i: usize) -> Shard {
+        assert!(i < self.shard_seeds.len(), "shard {i} out of range");
+        let mut srng = Rng::new(self.shard_seeds[i]);
+        let mut dense = Vec::with_capacity(self.num_classes);
+        self.weights[i].densify_into(self.num_classes, &mut dense);
+        let (mut xs, mut ys) = (Vec::new(), Vec::new());
+        gen_examples(
+            &mut srng,
+            &self.protos,
+            &dense,
+            self.config.examples_per_client,
+            self.config.noise,
+            &mut xs,
+            &mut ys,
+        );
+        Shard { xs, ys, num_features: self.num_features }
+    }
+
+    /// Materialize the IID balanced test set.
+    pub fn test_set(&self) -> (Vec<f32>, Vec<i32>) {
+        let uniform = vec![1.0 / self.num_classes as f64; self.num_classes];
+        let mut trng = Rng::new(self.test_seed);
+        let (mut xs, mut ys) = (Vec::new(), Vec::new());
+        gen_examples(
+            &mut trng,
+            &self.protos,
+            &uniform,
+            self.config.test_examples,
+            self.config.noise,
+            &mut xs,
+            &mut ys,
+        );
+        (xs, ys)
+    }
+
+    /// An evaluation-only view: test set materialized, **no shards**.
+    /// Used by the streamed round loop, which pulls shards straight from
+    /// this generator; `num_clients` lives in `.config`, not in
+    /// `shards.len()`.
+    pub fn eval_dataset(&self) -> FederatedDataset {
+        let (test_xs, test_ys) = self.test_set();
+        FederatedDataset {
+            config: self.config.clone(),
+            shards: Vec::new(),
+            test_xs,
+            test_ys,
+            num_classes: self.num_classes,
+            num_features: self.num_features,
+        }
+    }
+}
+
+/// Build a full federated dataset per `config` (eager: every shard
+/// materialized, via the same [`ShardGen`] recipe the lazy path uses).
+pub fn build(config: &DatasetConfig) -> FederatedDataset {
+    let gen = ShardGen::new(config);
+    let shards: Vec<Shard> =
+        (0..gen.num_clients()).map(|i| gen.shard(i)).collect();
+    let (test_xs, test_ys) = gen.test_set();
     FederatedDataset {
         config: config.clone(),
         shards,
         test_xs,
         test_ys,
-        num_classes: classes,
-        num_features: feat,
+        num_classes: gen.num_classes(),
+        num_features: gen.num_features(),
     }
 }
 
@@ -114,6 +281,32 @@ mod tests {
         cfg2.seed += 1;
         let c = build(&cfg2);
         assert_ne!(a.shards[0].xs, c.shards[0].xs);
+    }
+
+    #[test]
+    fn lazy_shards_match_eager_build() {
+        // Dirichlet (dense weights) and device-subset (sparse weights)
+        // recipes must both materialize byte-identically, in any order.
+        let mut femnist = DatasetConfig::synth_femnist();
+        femnist.num_clients = 12;
+        for cfg in [DatasetConfig::tiny(), femnist] {
+            let eager = build(&cfg);
+            let gen = ShardGen::new(&cfg);
+            assert_eq!(gen.num_clients(), cfg.num_clients);
+            // out-of-order, repeated materialization
+            for &i in &[cfg.num_clients - 1, 0, 1, 0] {
+                let s = gen.shard(i);
+                assert_eq!(s.xs, eager.shards[i].xs, "shard {i} xs");
+                assert_eq!(s.ys, eager.shards[i].ys, "shard {i} ys");
+            }
+            let (txs, tys) = gen.test_set();
+            assert_eq!(txs, eager.test_xs);
+            assert_eq!(tys, eager.test_ys);
+            let eval = gen.eval_dataset();
+            assert!(eval.shards.is_empty());
+            assert_eq!(eval.test_xs, eager.test_xs);
+            assert_eq!(eval.config, cfg);
+        }
     }
 
     #[test]

@@ -6,6 +6,19 @@
 //! mini-batch gradient the paper's Algorithm 1 transmits; for `e > 1` it
 //! is the FedAvg-style accumulated update the convergence analysis in §4
 //! covers). The effective gradient is what gets compressed.
+//!
+//! The round body is a free function ([`run_client_round`]) over three
+//! separable pieces:
+//!
+//! * the **shard** (data) — resident or materialized lazily per round,
+//! * the **durable state** ([`ClientState`]: RNG stream + EF residual /
+//!   codec versions) — must survive rounds the client sits out,
+//! * the **scratch** ([`RoundScratch`]: gradient, local params, batch
+//!   buffers) — per-worker, reusable across *different* clients.
+//!
+//! [`Client`] bundles all three for the resident path; the streamed
+//! round loop (`coordinator::scheduler::stream_round`) checks durable
+//! state out of a `ClientStore` and shares scratch across the cohort.
 
 use crate::data::Shard;
 use crate::fl::compression::{CompressionPipeline, TransformState};
@@ -14,19 +27,54 @@ use crate::model::Backend;
 use crate::util::rng::Rng;
 use crate::util::Result;
 
-/// One federated client.
-pub struct Client {
-    pub id: u32,
-    pub shard: Shard,
-    rng: Rng,
-    /// per-client transform state (error-feedback residual etc.) —
-    /// survives rounds, untouched by packet loss downstream
-    codec: TransformState,
-    // scratch buffers reused across rounds (hot path: no allocation)
-    grad: Vec<f32>,
+/// Durable per-client state: everything that must persist across rounds
+/// for byte-identical replay — the client's private RNG stream (batch
+/// sampling + stochastic-rounding draws advance it every participation)
+/// and the codec transform state (error-feedback residual, adaptive
+/// codebook versions).
+#[derive(Debug)]
+pub struct ClientState {
+    pub rng: Rng,
+    pub codec: TransformState,
+}
+
+impl ClientState {
+    /// Seed derivation is the identity-critical contract: the stream for
+    /// client `id` is `Rng::new(seed ^ id·φ64)` regardless of whether the
+    /// client lives in a resident `Vec` or a spill store.
+    pub fn new(id: u32, seed: u64) -> ClientState {
+        ClientState {
+            rng: Rng::new(seed ^ (id as u64).wrapping_mul(0x9E3779B97F4A7C15)),
+            codec: TransformState::new(),
+        }
+    }
+}
+
+/// Per-worker scratch reused across clients and rounds (hot path: no
+/// allocation). Safe to share across clients: `Backend::grad` zero-fills
+/// the gradient buffer and the other buffers are cleared or overwritten
+/// before use, so no state leaks between clients.
+#[derive(Default)]
+pub struct RoundScratch {
+    pub grad: Vec<f32>,
     local: Vec<f32>,
     xs: Vec<f32>,
     ys: Vec<i32>,
+}
+
+impl RoundScratch {
+    pub fn new() -> RoundScratch {
+        RoundScratch::default()
+    }
+}
+
+/// One federated client (resident representation: owns its shard,
+/// durable state and scratch for the lifetime of the experiment).
+pub struct Client {
+    pub id: u32,
+    pub shard: Shard,
+    state: ClientState,
+    scratch: RoundScratch,
 }
 
 /// Result of one client round before/after compression.
@@ -44,23 +92,87 @@ pub struct ClientUpdate {
     pub sparsity: f64,
 }
 
+/// Run `e` local iterations from `params` and return the compressed
+/// effective gradient (plus the pipeline's stats sample when rate
+/// targeting is on — free otherwise).
+#[allow(clippy::too_many_arguments)]
+pub fn run_client_round<B: Backend + ?Sized>(
+    backend: &B,
+    shard: &Shard,
+    state: &mut ClientState,
+    scratch: &mut RoundScratch,
+    id: u32,
+    params: &[f32],
+    round: u32,
+    local_iters: usize,
+    lr: f32,
+    batch: usize,
+    pipeline: &CompressionPipeline,
+) -> Result<ClientUpdate> {
+    let d = backend.num_params();
+    scratch.grad.resize(d, 0.0);
+    scratch.local.clear();
+    scratch.local.extend_from_slice(params);
+    let mut loss_acc = 0f64;
+    for _ in 0..local_iters.max(1) {
+        shard.sample_batch(
+            &mut state.rng, batch, &mut scratch.xs, &mut scratch.ys);
+        let loss = backend.grad(
+            &scratch.local, &scratch.xs, &scratch.ys, &mut scratch.grad)?;
+        loss_acc += loss as f64;
+        for (p, &g) in scratch.local.iter_mut().zip(&scratch.grad) {
+            *p -= lr * g;
+        }
+    }
+    // effective gradient: (θ_t − θ_{k,e}) / η_t
+    let inv_lr = 1.0 / lr;
+    for (g, (&p0, &pl)) in scratch
+        .grad
+        .iter_mut()
+        .zip(params.iter().zip(&scratch.local))
+    {
+        *g = (p0 - pl) * inv_lr;
+    }
+    let packet = pipeline.compress_with(
+        &mut state.codec, id, round, &scratch.grad, &mut state.rng)?;
+    // stats sample: the staged path captured a working-set sample
+    // when a transform is active; otherwise reuse the (μ, σ) the
+    // compressor just computed over the dense gradient
+    let sample = match state.codec.take_sample() {
+        Some(sample) => sample,
+        None => pipeline.grad_sample_from(&scratch.grad, &packet),
+    };
+    Ok(ClientUpdate {
+        packet,
+        mean_loss: (loss_acc / local_iters.max(1) as f64) as f32,
+        sample,
+        ef_norm: state.codec.last_ef_norm,
+        sparsity: state.codec.last_sparsity,
+    })
+}
+
 impl Client {
     pub fn new(id: u32, shard: Shard, seed: u64) -> Client {
         Client {
             id,
             shard,
-            rng: Rng::new(seed ^ (id as u64).wrapping_mul(0x9E3779B97F4A7C15)),
-            codec: TransformState::new(),
-            grad: Vec::new(),
-            local: Vec::new(),
-            xs: Vec::new(),
-            ys: Vec::new(),
+            state: ClientState::new(id, seed),
+            scratch: RoundScratch::new(),
         }
     }
 
-    /// Run `e` local iterations from `params` and return the compressed
-    /// effective gradient (plus the pipeline's stats sample when rate
-    /// targeting is on — free otherwise).
+    /// Re-assemble a client around previously spilled durable state
+    /// (`ClientStore` checkout on the streamed path).
+    pub fn from_state(id: u32, shard: Shard, state: ClientState) -> Client {
+        Client { id, shard, state, scratch: RoundScratch::new() }
+    }
+
+    /// Tear down into the durable state worth keeping between rounds.
+    pub fn into_state(self) -> ClientState {
+        self.state
+    }
+
+    /// Run `e` local iterations from `params` (see [`run_client_round`]).
     #[allow(clippy::too_many_arguments)]
     pub fn round<B: Backend + ?Sized>(
         &mut self,
@@ -72,57 +184,30 @@ impl Client {
         batch: usize,
         pipeline: &CompressionPipeline,
     ) -> Result<ClientUpdate> {
-        let d = backend.num_params();
-        self.grad.resize(d, 0.0);
-        self.local.clear();
-        self.local.extend_from_slice(params);
-        let mut loss_acc = 0f64;
-        for _ in 0..local_iters.max(1) {
-            self.shard.sample_batch(
-                &mut self.rng, batch, &mut self.xs, &mut self.ys);
-            let loss =
-                backend.grad(&self.local, &self.xs, &self.ys, &mut self.grad)?;
-            loss_acc += loss as f64;
-            for (p, &g) in self.local.iter_mut().zip(&self.grad) {
-                *p -= lr * g;
-            }
-        }
-        // effective gradient: (θ_t − θ_{k,e}) / η_t
-        let inv_lr = 1.0 / lr;
-        for (g, (&p0, &pl)) in self
-            .grad
-            .iter_mut()
-            .zip(params.iter().zip(&self.local))
-        {
-            *g = (p0 - pl) * inv_lr;
-        }
-        let packet = pipeline.compress_with(
-            &mut self.codec, self.id, round, &self.grad, &mut self.rng)?;
-        // stats sample: the staged path captured a working-set sample
-        // when a transform is active; otherwise reuse the (μ, σ) the
-        // compressor just computed over the dense gradient
-        let sample = match self.codec.take_sample() {
-            Some(sample) => sample,
-            None => pipeline.grad_sample_from(&self.grad, &packet),
-        };
-        Ok(ClientUpdate {
-            packet,
-            mean_loss: (loss_acc / local_iters.max(1) as f64) as f32,
-            sample,
-            ef_norm: self.codec.last_ef_norm,
-            sparsity: self.codec.last_sparsity,
-        })
+        run_client_round(
+            backend,
+            &self.shard,
+            &mut self.state,
+            &mut self.scratch,
+            self.id,
+            params,
+            round,
+            local_iters,
+            lr,
+            batch,
+            pipeline,
+        )
     }
 
     /// Raw (uncompressed) effective gradient — used by tests and the
     /// quantization-error diagnostics.
     pub fn last_gradient(&self) -> &[f32] {
-        &self.grad
+        &self.scratch.grad
     }
 
     /// The client's transform state (EF residual diagnostics).
     pub fn codec_state(&self) -> &TransformState {
-        &self.codec
+        &self.state.codec
     }
 }
 
@@ -196,5 +281,34 @@ mod tests {
         let ua = a.round(&m, &params, 0, 2, 0.1, 8, &c).unwrap();
         let ub = b.round(&m, &params, 0, 2, 0.1, 8, &c).unwrap();
         assert_eq!(ua.packet.payload, ub.packet.payload);
+    }
+
+    #[test]
+    fn free_round_fn_matches_resident_client() {
+        // the streamed path (shared scratch + spilled state) and the
+        // resident path must produce identical packets
+        let (m, ds, c) = setup();
+        let params = m.init_params(4);
+        let mut resident = Client::new(2, ds.shards[2].clone(), 11);
+        let mut state = ClientState::new(2, 11);
+        let mut scratch = RoundScratch::new();
+        // dirty the scratch with another client's round first
+        run_client_round(
+            &m, &ds.shards[0], &mut ClientState::new(0, 11), &mut scratch,
+            0, &params, 0, 1, 0.1, 8, &c,
+        )
+        .unwrap();
+        for round in 0..3 {
+            let ua = resident
+                .round(&m, &params, round, 2, 0.1, 8, &c)
+                .unwrap();
+            let ub = run_client_round(
+                &m, &ds.shards[2], &mut state, &mut scratch, 2, &params,
+                round, 2, 0.1, 8, &c,
+            )
+            .unwrap();
+            assert_eq!(ua.packet.payload, ub.packet.payload);
+            assert_eq!(ua.mean_loss, ub.mean_loss);
+        }
     }
 }

@@ -231,17 +231,27 @@ pub struct RateAllocator {
     versions: Vec<u32>,
     /// per-client bandwidth factors, normalized to mean 1
     factors: Vec<f64>,
-    /// per-client second-moment accumulators of the *current* window
-    /// (sum, count), folded into `energy_last` at each window end
-    energy_sum: Vec<f64>,
-    energy_n: Vec<u64>,
-    /// latest per-window energy estimate per client (flat prior 1.0;
-    /// clients unseen in a window keep their previous estimate) — a
-    /// windowed tracker, so the allocation follows gradient-energy
-    /// drift instead of averaging over the whole run
-    energy_last: Vec<f64>,
+    /// per-client gradient second moments, **keyed by client id**:
+    /// `sum`/`n` accumulate the current window and fold into `last` at
+    /// each window end; a client absent from the map carries the flat
+    /// prior 1.0. Keyed rather than index-dense so memory is O(clients
+    /// ever ingested) — not O(population) — and a client's estimate
+    /// survives every round it sits out, however large the population.
+    moments: std::collections::HashMap<u32, Moment>,
     /// packets observed in the current adaptation window
     window_obs: u64,
+}
+
+/// One client's windowed second-moment tracker (see
+/// [`RateAllocator::moments`]).
+#[derive(Clone, Copy, Debug)]
+struct Moment {
+    /// σ² sum of the current window
+    sum: f64,
+    /// packets in the current window
+    n: u64,
+    /// latest folded per-window estimate (the solver's `E_c`)
+    last: f64,
 }
 
 impl RateAllocator {
@@ -292,9 +302,7 @@ impl RateAllocator {
             widths: Vec::new(),
             versions: Vec::new(),
             factors: Vec::new(),
-            energy_sum: Vec::new(),
-            energy_n: Vec::new(),
-            energy_last: Vec::new(),
+            moments: std::collections::HashMap::new(),
             window_obs: 0,
         })
     }
@@ -344,9 +352,13 @@ impl RateAllocator {
                 }
             })
             .collect();
-        self.energy_sum = vec![0.0; num_clients];
-        self.energy_n = vec![0; num_clients];
-        self.energy_last = vec![1.0; num_clients];
+        // Learned energy estimates are keyed by client id and survive a
+        // re-bind (a client's estimate must outlive the rounds — and
+        // cohorts — it sits out); only the in-flight window restarts.
+        for m in self.moments.values_mut() {
+            m.sum = 0.0;
+            m.n = 0;
+        }
         self.versions = vec![0; num_clients];
         self.window_obs = 0;
         let priority = self.factors.clone();
@@ -406,17 +418,29 @@ impl RateAllocator {
     /// accumulator. Only packets the server actually decoded count, so
     /// lost/corrupt uplinks cannot steer the allocation.
     pub(crate) fn observe_packet(&mut self, packet: &Packet) {
-        let c = packet.client_id as usize;
-        if c >= self.energy_sum.len() || packet.side_info.len() < 2 {
+        let c = packet.client_id;
+        if (c as usize) >= self.factors.len()
+            || packet.side_info.len() < 2
+        {
             return;
         }
         let sigma = packet.side_info[1] as f64;
         if !sigma.is_finite() {
             return;
         }
-        self.energy_sum[c] += sigma * sigma;
-        self.energy_n[c] += 1;
+        let m = self
+            .moments
+            .entry(c)
+            .or_insert(Moment { sum: 0.0, n: 0, last: 1.0 });
+        m.sum += sigma * sigma;
+        m.n += 1;
         self.window_obs += 1;
+    }
+
+    /// The client's latest folded energy estimate, or the flat prior 1.0
+    /// when it has never been observed.
+    pub(crate) fn moment_estimate(&self, client: u32) -> f64 {
+        self.moments.get(&client).map_or(1.0, |m| m.last)
     }
 
     /// Close round `round` (0-based). On an adaptation-window boundary,
@@ -434,23 +458,20 @@ impl RateAllocator {
         self.window_obs = 0;
         // fold the window's observations into the per-client estimate
         // (unseen clients keep their previous one) and reset the window
-        for ((last, sum), n) in self
-            .energy_last
-            .iter_mut()
-            .zip(self.energy_sum.iter_mut())
-            .zip(self.energy_n.iter_mut())
-        {
-            if *n > 0 {
-                *last = *sum / *n as f64;
-                *sum = 0.0;
-                *n = 0;
+        for m in self.moments.values_mut() {
+            if m.n > 0 {
+                m.last = m.sum / m.n as f64;
+                m.sum = 0.0;
+                m.n = 0;
             }
         }
+        // priority is built in ascending client-index order, never map
+        // iteration order, so the solve input is deterministic
         let priority: Vec<f64> = self
             .factors
             .iter()
-            .zip(self.energy_last.iter())
-            .map(|(&f, &e)| e * f)
+            .enumerate()
+            .map(|(c, &f)| f * self.moment_estimate(c as u32))
             .collect();
         let new = self.solve(&priority);
         if new == self.widths {
@@ -774,4 +795,68 @@ mod tests {
         assert_eq!(before, after);
     }
 
+    #[test]
+    fn moment_estimates_survive_rounds_a_client_sits_out() {
+        use crate::fl::packet::SchemeTag;
+        // a minimal decoded-uplink probe: only client_id and the σ
+        // side-info word matter to the allocator's moment tracker
+        let probe = |client: u32, sigma: f32| Packet {
+            client_id: client,
+            round: 0,
+            scheme: SchemeTag::RcFed,
+            bits_per_symbol: 3,
+            d: 1,
+            side_info: vec![0.0, sigma, 0.0],
+            payload: Vec::new(),
+            payload_bits: 0,
+            table_bits: 0,
+            index_bits: 0,
+        };
+        let mut alloc = RateAllocator::design(
+            rcfed_scheme(),
+            WireCoder::Huffman,
+            TransformCfg::default(),
+            2.5,
+            1,
+            1,
+            6,
+        )
+        .unwrap();
+        alloc.bind(4, &[1.0; 4]).unwrap();
+        // window 0: every client reports; client 3 is the energetic one
+        for (c, sigma) in [(0u32, 0.1f32), (1, 0.1), (2, 0.1), (3, 2.0)] {
+            alloc.observe_packet(&probe(c, sigma));
+        }
+        alloc.end_round(0);
+        let e3 = alloc.moment_estimate(3);
+        assert!((e3 - 4.0).abs() < 1e-9, "E_3 = σ² = 4, got {e3}");
+        let w3 = alloc.widths[3];
+        assert!(w3 > alloc.widths[0], "energetic client earns width");
+
+        // windows 1..=3: client 3 sits out every cohort. Its folded
+        // estimate — and therefore its wide codebook — must survive,
+        // not decay to the flat prior as a dense re-initialized window
+        // tracker would.
+        for round in 1..4usize {
+            for c in 0..3u32 {
+                alloc.observe_packet(&probe(c, 0.1));
+            }
+            alloc.end_round(round);
+            assert_eq!(alloc.moment_estimate(3), e3, "round {round}");
+            assert_eq!(alloc.widths[3], w3, "round {round}");
+        }
+
+        // a never-observed client reads the flat prior, and the tracker
+        // holds exactly the clients ever ingested, not the population
+        assert_eq!(alloc.moment_estimate(99), 1.0);
+        assert_eq!(alloc.moments.len(), 4);
+
+        // re-binding (e.g. a sweep leg reusing the allocator) keeps the
+        // learned estimates and restarts only the in-flight window
+        alloc.observe_packet(&probe(0, 9.0));
+        alloc.bind(4, &[1.0; 4]).unwrap();
+        assert_eq!(alloc.moment_estimate(3), e3);
+        assert_eq!(alloc.moment_estimate(0), 0.1f32 as f64 * 0.1f32 as f64);
+        assert_eq!(alloc.window_obs, 0);
+    }
 }

@@ -57,6 +57,22 @@ pub struct TransformTraceRow {
     pub sparsity: f64,
 }
 
+/// One round of the cohort-streaming trace: how many clients computed,
+/// how many survived the channel, and the RSS sample behind the streamed
+/// path's flat-memory claim. Recorded every round on every run, but kept
+/// **in memory only** — never emitted to the CSV, whose schema is pinned
+/// (`rss_kb` is measurement noise, not simulation state, so it must not
+/// enter byte-compared artifacts).
+#[derive(Clone, Copy, Debug)]
+pub struct StreamTraceRow {
+    /// clients that computed an update this round (post-availability)
+    pub cohort: usize,
+    /// packets the server actually ingested
+    pub survivors: usize,
+    /// resident-set size at the round boundary, KiB (0 off-Linux)
+    pub rss_kb: u64,
+}
+
 /// Accumulates the experiment's metric history and bit ledger.
 #[derive(Debug, Default)]
 pub struct MetricsLog {
@@ -66,6 +82,7 @@ pub struct MetricsLog {
     rate: Vec<RateTraceRow>,
     alloc: Vec<AllocTraceRow>,
     transform: Vec<TransformTraceRow>,
+    stream: Vec<StreamTraceRow>,
 }
 
 impl MetricsLog {
@@ -143,6 +160,28 @@ impl MetricsLog {
     /// transform stage is inactive).
     pub fn final_sparsity(&self) -> f64 {
         self.transform.last().map(|t| t.sparsity).unwrap_or(f64::NAN)
+    }
+
+    /// Record the streaming trace for the round just pushed. Call once
+    /// per round, after [`push`](Self::push). Unlike the other traces
+    /// this one never reaches the CSV (see [`StreamTraceRow`]).
+    pub fn push_stream(
+        &mut self,
+        cohort: usize,
+        survivors: usize,
+        rss_kb: u64,
+    ) {
+        self.stream.push(StreamTraceRow { cohort, survivors, rss_kb });
+    }
+
+    /// Per-round streaming trace (in-memory diagnostics only).
+    pub fn stream_trace(&self) -> &[StreamTraceRow] {
+        &self.stream
+    }
+
+    /// Peak RSS sample across the run's round boundaries, KiB.
+    pub fn peak_rss_kb(&self) -> u64 {
+        self.stream.iter().map(|r| r.rss_kb).max().unwrap_or(0)
     }
 
     pub fn total_bits(&self) -> u64 {
@@ -287,6 +326,30 @@ mod tests {
                  wall_secs\n"
             ),
             "static header drifted: {text}"
+        );
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn stream_trace_never_reaches_the_csv() {
+        let dir = std::env::temp_dir().join(format!(
+            "rcfed_metrics_stream_{}", std::process::id()));
+        let path = dir.join("s.csv");
+        let mut m = MetricsLog::new();
+        m.push(0, 1.0, 0.5, 42, 0.01);
+        m.push_stream(16, 14, 120_000);
+        assert_eq!(m.stream_trace().len(), 1);
+        assert_eq!(m.stream_trace()[0].cohort, 16);
+        assert_eq!(m.peak_rss_kb(), 120_000);
+        m.write_csv(path.to_str().unwrap(), "s").unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        // schema must stay byte-identical to the static path
+        assert!(
+            text.starts_with(
+                "scheme,round,train_loss,test_acc,bits_up,bits_cum,\
+                 wall_secs\n"
+            ),
+            "stream trace leaked into the CSV: {text}"
         );
         std::fs::remove_dir_all(dir).ok();
     }

@@ -13,6 +13,7 @@ pub mod codec;
 pub mod metrics;
 pub mod packet;
 pub mod server;
+pub mod store;
 
 /// Back-compat shim: the staged [`codec`] subsystem replaced the old
 /// `fl/compression.rs` god-module. Every pre-existing import path

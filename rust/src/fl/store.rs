@@ -1,0 +1,157 @@
+//! Keyed spill store for durable per-client state, and the shard source
+//! abstraction behind the streamed round loop.
+//!
+//! The resident path owns every client for the whole experiment:
+//! `Vec<Client>` holds each client's shard, RNG stream, EF residual and
+//! scratch buffers — O(population) memory whether or not a client is ever
+//! sampled. At paper scale ("heavy traffic from millions of users") that
+//! is the binding constraint, not compute.
+//!
+//! The streamed path splits a client into its three parts (see
+//! [`crate::fl::client`]):
+//!
+//! * **shard** — re-materialized per round from a [`ShardSource`]
+//!   (borrowed from a resident dataset, or generated on demand by a
+//!   [`ShardGen`] recipe);
+//! * **durable state** — spilled into this [`ClientStore`] between
+//!   rounds, keyed by client id, so only clients that have *ever
+//!   participated* occupy memory (a fresh checkout derives the exact
+//!   seed the resident constructor would have used — byte-identity does
+//!   not depend on which path created the state);
+//! * **scratch** — owned by the round executor's workers, never stored.
+
+use std::borrow::Cow;
+use std::collections::HashMap;
+
+use crate::data::synth::ShardGen;
+use crate::data::Shard;
+use crate::fl::client::ClientState;
+
+/// Where a round gets its cohort's shards from.
+pub enum ShardSource<'a> {
+    /// Borrow from an already-materialized dataset (sweep cells share one
+    /// `FederatedDataset` read-only; streaming over it avoids the
+    /// historical per-client `Shard` clone).
+    Resident(&'a [Shard]),
+    /// Generate on demand from the compact recipe — nothing but the
+    /// active cohort's shards ever exists in memory.
+    Lazy(&'a ShardGen),
+}
+
+impl<'a> ShardSource<'a> {
+    pub fn num_clients(&self) -> usize {
+        match self {
+            ShardSource::Resident(shards) => shards.len(),
+            ShardSource::Lazy(gen) => gen.num_clients(),
+        }
+    }
+
+    /// The shard for population index `i` — borrowed when resident,
+    /// freshly materialized when lazy. `&self`: workers call this
+    /// concurrently.
+    pub fn shard(&self, i: usize) -> Cow<'a, Shard> {
+        match self {
+            ShardSource::Resident(shards) => Cow::Borrowed(&shards[i]),
+            ShardSource::Lazy(gen) => Cow::Owned(gen.shard(i)),
+        }
+    }
+}
+
+/// Compact keyed store for durable per-client state (RNG stream + codec
+/// transform state). Memory is O(clients ever selected), not
+/// O(population): a client that never participates costs nothing.
+pub struct ClientStore {
+    /// experiment seed; per-client streams derive from it exactly as the
+    /// resident constructor does: `Client::new(i, _, seed ^ (i << 20))`
+    seed: u64,
+    durable: HashMap<u32, ClientState>,
+}
+
+impl ClientStore {
+    pub fn new(seed: u64) -> ClientStore {
+        ClientStore { seed, durable: HashMap::new() }
+    }
+
+    /// Take client `idx`'s durable state out of the store, creating it
+    /// on first participation with the canonical seed derivation.
+    pub fn checkout(&mut self, idx: usize) -> ClientState {
+        let id = idx as u32;
+        self.durable.remove(&id).unwrap_or_else(|| {
+            ClientState::new(id, self.seed ^ ((idx as u64) << 20))
+        })
+    }
+
+    /// Return client `idx`'s state after a round (advanced RNG, updated
+    /// EF residual) so its next participation resumes the exact stream.
+    pub fn commit(&mut self, idx: usize, state: ClientState) {
+        self.durable.insert(idx as u32, state);
+    }
+
+    /// Number of clients currently holding spilled state.
+    pub fn spilled(&self) -> usize {
+        self.durable.len()
+    }
+
+    /// Read-only view of a client's spilled state (diagnostics/tests).
+    pub fn peek(&self, idx: usize) -> Option<&ClientState> {
+        self.durable.get(&(idx as u32))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DatasetConfig;
+
+    #[test]
+    fn fresh_checkout_matches_resident_seed_derivation() {
+        let seed = 42u64;
+        let mut store = ClientStore::new(seed);
+        for idx in [0usize, 3, 17] {
+            let mut state = store.checkout(idx);
+            let mut resident =
+                ClientState::new(idx as u32, seed ^ ((idx as u64) << 20));
+            for _ in 0..16 {
+                assert_eq!(
+                    state.rng.next_u64(),
+                    resident.rng.next_u64(),
+                    "client {idx} stream diverged"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn commit_checkout_roundtrip_preserves_the_stream() {
+        let mut store = ClientStore::new(7);
+        let mut a = store.checkout(5);
+        // advance the stream mid-experiment, then spill
+        let drawn: Vec<u64> = (0..4).map(|_| a.rng.next_u64()).collect();
+        let mut reference = a.rng.clone();
+        store.commit(5, a);
+        assert_eq!(store.spilled(), 1);
+        let mut b = store.checkout(5);
+        assert_eq!(store.spilled(), 0);
+        for _ in 0..8 {
+            assert_eq!(b.rng.next_u64(), reference.next_u64());
+        }
+        // the draws really happened before the spill
+        assert_eq!(drawn.len(), 4);
+    }
+
+    #[test]
+    fn shard_source_lazy_matches_resident() {
+        let cfg = DatasetConfig::tiny();
+        let ds = crate::data::FederatedDataset::build(&cfg);
+        let gen = ShardGen::new(&cfg);
+        let resident = ShardSource::Resident(&ds.shards);
+        let lazy = ShardSource::Lazy(&gen);
+        assert_eq!(resident.num_clients(), lazy.num_clients());
+        for i in 0..cfg.num_clients {
+            let a = resident.shard(i);
+            let b = lazy.shard(i);
+            assert_eq!(a.xs, b.xs, "shard {i}");
+            assert_eq!(a.ys, b.ys, "shard {i}");
+        }
+    }
+}

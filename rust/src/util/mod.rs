@@ -13,6 +13,7 @@ pub mod cli;
 pub mod csv;
 pub mod json;
 pub mod log;
+pub mod mem;
 pub mod rng;
 pub mod timer;
 

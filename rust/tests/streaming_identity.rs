@@ -1,0 +1,192 @@
+//! Byte-identity of the streamed round loop vs. the resident one.
+//!
+//! The streaming executor (lazy shard materialization + spilled
+//! per-client state + sharded cohort workers) is the default, and it is
+//! allowed to be the default only because these tests pin it to the
+//! resident `Vec<Client>` path *bit for bit*: same ledger, same
+//! survivor sets, same accuracy bits, same metrics CSV bytes — across
+//! schemes, transforms, controllers and lossy channels.
+
+use rcfed::coordinator::experiment::{
+    run_experiment, ExecutionMode, ExperimentConfig, ExperimentReport,
+};
+use rcfed::coordinator::network::ChannelSpec;
+use rcfed::fl::compression::{
+    CompressionScheme, RateAllocation, RateTarget, TransformCfg,
+};
+use rcfed::quant::rcq::LengthModel;
+
+/// Fast base: tiny dataset, few rounds, eval every other round so the
+/// accuracy column carries both NaN and real entries.
+fn base() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::tiny();
+    cfg.rounds = 6;
+    cfg.eval_every = 2;
+    cfg
+}
+
+fn run_mode(cfg: &ExperimentConfig, mode: ExecutionMode) -> ExperimentReport {
+    let mut cfg = cfg.clone();
+    cfg.mode = mode;
+    run_experiment(&cfg).unwrap()
+}
+
+/// Everything simulation-determined must match bitwise; wall clock and
+/// RSS are measurement noise and excluded by construction.
+fn assert_identical(tag: &str, a: &ExperimentReport, b: &ExperimentReport) {
+    assert_eq!(a.label, b.label, "{tag}: label");
+    assert_eq!(
+        a.final_accuracy.to_bits(),
+        b.final_accuracy.to_bits(),
+        "{tag}: final accuracy {} vs {}",
+        a.final_accuracy,
+        b.final_accuracy
+    );
+    assert_eq!(
+        a.best_accuracy.to_bits(),
+        b.best_accuracy.to_bits(),
+        "{tag}: best accuracy"
+    );
+    assert_eq!(a.num_params, b.num_params, "{tag}: num_params");
+    assert_eq!(a.total_bits, b.total_bits, "{tag}: uplink ledger");
+    assert_eq!(a.downlink_bits, b.downlink_bits, "{tag}: downlink ledger");
+    assert_eq!(a.channel, b.channel, "{tag}: channel stats/survivors");
+    assert_eq!(a.alloc_hist, b.alloc_hist, "{tag}: allocation histogram");
+    assert_eq!(
+        a.metrics.rounds.len(),
+        b.metrics.rounds.len(),
+        "{tag}: round count"
+    );
+    for (ra, rb) in a.metrics.rounds.iter().zip(b.metrics.rounds.iter()) {
+        assert_eq!(ra.round, rb.round, "{tag}: round index");
+        assert_eq!(
+            ra.train_loss.to_bits(),
+            rb.train_loss.to_bits(),
+            "{tag}: round {} train loss",
+            ra.round
+        );
+        assert_eq!(
+            ra.test_accuracy.to_bits(),
+            rb.test_accuracy.to_bits(),
+            "{tag}: round {} accuracy",
+            ra.round
+        );
+        assert_eq!(ra.bits_up, rb.bits_up, "{tag}: round {} bits", ra.round);
+        assert_eq!(
+            ra.bits_cum, rb.bits_cum,
+            "{tag}: round {} cumulative bits",
+            ra.round
+        );
+    }
+    // the exported artifact must be byte-identical, not just field-wise
+    // equal — the CSV is what downstream plots and goldens consume
+    let dir = std::env::temp_dir();
+    let pa = dir.join(format!("rcfed_ident_{tag}_a.csv"));
+    let pb = dir.join(format!("rcfed_ident_{tag}_b.csv"));
+    a.metrics.write_csv(pa.to_str().unwrap(), &a.label).unwrap();
+    b.metrics.write_csv(pb.to_str().unwrap(), &b.label).unwrap();
+    let bytes_a = std::fs::read(&pa).unwrap();
+    let bytes_b = std::fs::read(&pb).unwrap();
+    let _ = std::fs::remove_file(&pa);
+    let _ = std::fs::remove_file(&pb);
+    assert!(!bytes_a.is_empty(), "{tag}: empty CSV");
+    assert_eq!(bytes_a, bytes_b, "{tag}: metrics CSV bytes diverged");
+}
+
+fn check(tag: &str, cfg: &ExperimentConfig) {
+    let resident = run_mode(cfg, ExecutionMode::Resident);
+    let streamed = run_mode(cfg, ExecutionMode::Streamed);
+    assert_identical(tag, &resident, &streamed);
+}
+
+#[test]
+fn rcfed_ideal_channel() {
+    check("rcfed", &base());
+}
+
+#[test]
+fn lloyd_with_topk_and_error_feedback() {
+    // the transform satellite: EF residuals are durable per-client
+    // state, exactly what the ClientStore spills between rounds
+    let mut cfg = base();
+    cfg.scheme = CompressionScheme::Lloyd { bits: 3 };
+    cfg.transform = TransformCfg::topk(0.25).with_ef();
+    check("lloyd_topk_ef", &cfg);
+}
+
+#[test]
+fn rate_targeted_rcfed() {
+    let mut cfg = base();
+    cfg.scheme = CompressionScheme::RcFed {
+        bits: 3,
+        lambda: 0.05,
+        length_model: LengthModel::Huffman,
+    };
+    cfg.rate_target =
+        RateTarget::Track { bits_per_coord: 2.5, adapt_every: 2 };
+    check("rate_target", &cfg);
+}
+
+#[test]
+fn waterfill_allocation_over_heterogeneous_bandwidth() {
+    // exercises per-client codebook versions + moment estimates (spilled
+    // allocator state) and the keyed bandwidth-factor derivation
+    let mut cfg = base();
+    cfg.scheme = CompressionScheme::Lloyd { bits: 3 };
+    cfg.alloc = RateAllocation::WaterFill {
+        budget_bpc: 2.5,
+        adapt_every: 2,
+        min_bits: 1,
+        max_bits: 6,
+    };
+    cfg.channel = ChannelSpec {
+        uplink_bps: 1e6,
+        bandwidth_spread: 0.4,
+        ..ChannelSpec::ideal()
+    };
+    check("waterfill", &cfg);
+}
+
+#[test]
+fn lossy_channel_survivor_sets() {
+    // loss + availability + corruption: the survivor set (and therefore
+    // every downstream aggregate) depends on the exact order of channel
+    // RNG draws — the strictest identity requirement the streamed path
+    // must meet
+    let mut cfg = base();
+    cfg.rounds = 8;
+    cfg.channel = ChannelSpec {
+        loss: 0.2,
+        availability: 0.85,
+        corrupt: 0.1,
+        ..ChannelSpec::ideal()
+    };
+    check("lossy", &cfg);
+}
+
+#[test]
+fn population_larger_than_cohort() {
+    // the streaming configuration the executor exists for: sample a
+    // small cohort out of a larger population every round
+    let mut cfg = base();
+    cfg.dataset.num_clients = 64;
+    cfg.clients_per_round = 8;
+    check("big_population", &cfg);
+}
+
+#[test]
+fn shard_count_does_not_change_results() {
+    // the worker-pool shard count is a throughput knob, never a results
+    // knob: any sharding must reduce to the same ordered stream
+    let mut cfg = base();
+    cfg.dataset.num_clients = 16;
+    cfg.clients_per_round = 6;
+    cfg.mode = ExecutionMode::Streamed;
+    cfg.round_shards = 1;
+    let reference = run_experiment(&cfg).unwrap();
+    for shards in [0, 2, 5] {
+        cfg.round_shards = shards;
+        let got = run_experiment(&cfg).unwrap();
+        assert_identical(&format!("shards{shards}"), &reference, &got);
+    }
+}
