@@ -1,11 +1,16 @@
 //! E6 — entropy-coder bench: (i) rate vs the Shannon bound `H(Q(Z))`
 //! (the premise of §2's "Source-encoded Transmission"), (ii) encode /
 //! decode throughput of the wire coders on realistic quantized-gradient
-//! symbol streams.
+//! symbol streams, including the block-coding speed tier and its
+//! speedup over the baseline Huffman coder.
 //!
 //!     cargo bench --bench coding_throughput
+//!
+//! Symbols are one byte each, so Msym/s and MB/s coincide; the CSV
+//! carries both names for downstream plots.
 
 use rcfed::coding::arithmetic::ArithmeticCoder;
+use rcfed::coding::block::BlockCoder;
 use rcfed::coding::huffman::HuffmanCode;
 use rcfed::coding::lz::Lzw;
 use rcfed::coding::EntropyCoder;
@@ -35,16 +40,22 @@ fn symbol_stream(bits: u32, lambda: f64, n: usize, seed: u64) -> (Vec<u8>, Vec<f
 }
 
 fn main() {
-    let n = 1_000_000;
+    let n: usize = std::env::var("RCFED_BENCH_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1_000_000);
     let mut w = CsvWriter::create(
         "results/coding.csv",
         &["coder", "bits", "lambda", "bits_per_sym", "entropy",
-          "enc_msyms_per_s", "dec_msyms_per_s"],
+          "enc_msyms_per_s", "dec_msyms_per_s", "enc_mbytes_per_s",
+          "dec_mbytes_per_s", "speedup_vs_huffman"],
     )
     .unwrap();
 
     println!("=== E6: entropy coders on quantized gradient streams ===\n");
-    for (bits, lambda) in [(3u32, 0.05), (6, 0.05)] {
+    // 3/6-bit grids match E1–E5; the 8-bit row is the block tier's
+    // acceptance stream (256-cell alphabet, worst-case table refresh)
+    for (bits, lambda) in [(3u32, 0.05), (6, 0.05), (8, 0.05)] {
         let (sym, probs) = symbol_stream(bits, lambda, n, 7);
         let h = entropy_bits(&probs);
         println!("-- b={bits} λ={lambda} H(Q(Z))={h:.4} bits/sym --");
@@ -52,8 +63,35 @@ fn main() {
         let huff = HuffmanCode::from_probs(&probs).unwrap();
         let arith = ArithmeticCoder::from_probs(&probs).unwrap();
         let lzw = Lzw;
-        let coders: Vec<(&str, &dyn EntropyCoder)> =
-            vec![("huffman", &huff), ("arithmetic", &arith), ("lzw", &lzw)];
+        let block = BlockCoder::new(probs.len()).unwrap();
+
+        // ledger-honesty check on the bench stream itself: the block
+        // coder's self-framing payload is exactly what it claims, and it
+        // never costs more than the baseline plus its table refreshes
+        let huff_bits = huff.message_bits(&sym);
+        let (block_payload, block_bits) = block.encode_counted(&sym).unwrap();
+        assert_eq!(
+            block_bits,
+            block.message_bits(&sym).unwrap(),
+            "block message_bits drifted from the encoded length"
+        );
+        assert_eq!(block_payload.len() as u64, block_bits.div_ceil(8));
+        let refreshes =
+            (n as u64).div_ceil(block.block_len() as u64) * block.table_bits();
+        assert!(
+            block_bits <= huff_bits + refreshes,
+            "block tier spent {block_bits} bits > huffman {huff_bits} + \
+             {refreshes} table overhead"
+        );
+
+        let coders: Vec<(&str, &dyn EntropyCoder)> = vec![
+            ("huffman", &huff),
+            ("arithmetic", &arith),
+            ("lzw", &lzw),
+            ("block", &block),
+        ];
+        let mut huff_enc = f64::NAN;
+        let mut huff_dec = f64::NAN;
         for (name, coder) in coders {
             let payload = coder.encode(&sym).unwrap();
             let bps = payload.len() as f64 * 8.0 / n as f64;
@@ -65,13 +103,23 @@ fn main() {
             });
             let enc_tput = n as f64 / enc_stats.median() / 1e6;
             let dec_tput = n as f64 / dec_stats.median() / 1e6;
+            if name == "huffman" {
+                huff_enc = enc_tput;
+                huff_dec = dec_tput;
+            }
+            // one symbol = one byte, so MB/s tracks Msym/s exactly
+            let speedup = if huff_enc.is_finite() && huff_dec.is_finite() {
+                (enc_tput + dec_tput) / (huff_enc + huff_dec)
+            } else {
+                f64::NAN
+            };
             println!(
                 "  {name:<11} {bps:.4} bits/sym (H+{:+.4})  enc {enc_tput:8.1} \
-                 Msym/s  dec {dec_tput:8.1} Msym/s",
+                 MB/s  dec {dec_tput:8.1} MB/s  ({speedup:.2}x huffman)",
                 bps - h
             );
             csv_row!(w, name, bits as usize, lambda, bps, h, enc_tput,
-                     dec_tput)
+                     dec_tput, enc_tput, dec_tput, speedup)
                 .unwrap();
             report(
                 &format!("{name}_b{bits}_encode"),
@@ -88,5 +136,7 @@ fn main() {
     }
     w.flush().unwrap();
     println!("expected shape: arithmetic ≈ H, huffman ∈ [H, H+1), LZW \
-              between; huffman fastest to decode.\nwrote results/coding.csv");
+              between; the block tier trades ≤ table_bits/block_len \
+              bits/sym of rate for the largest enc+dec throughput.\n\
+              wrote results/coding.csv");
 }

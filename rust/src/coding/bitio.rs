@@ -65,17 +65,27 @@ impl BitWriter {
 }
 
 /// Bit source over a byte payload, LSB-first (mirrors [`BitWriter`]).
+///
+/// Reads past EOF still return zero bits (symbol counts travel out of
+/// band, so legitimate decodes stop exactly at the stream end), but the
+/// reader now *accounts* for every bit a caller asked for:
+/// [`Self::bits_consumed`] accumulates requested widths even when the
+/// buffer ran dry, so `bits_consumed() > 8 · payload.len()` — surfaced
+/// as [`Self::overran`] — is proof a decode walked off a truncated
+/// payload instead of silently eating the zero fill.
 #[derive(Debug)]
 pub struct BitReader<'a> {
     buf: &'a [u8],
     byte_pos: usize,
     acc: u64,
     nbits: u32,
+    /// bits *requested* via read/consume (not clamped at EOF)
+    consumed: u64,
 }
 
 impl<'a> BitReader<'a> {
     pub fn new(buf: &'a [u8]) -> Self {
-        BitReader { buf, byte_pos: 0, acc: 0, nbits: 0 }
+        BitReader { buf, byte_pos: 0, acc: 0, nbits: 0, consumed: 0 }
     }
 
     /// Refill the accumulator to >= 57 available bits (or EOF).
@@ -100,8 +110,62 @@ impl<'a> BitReader<'a> {
         }
     }
 
+    /// Branch-light bit-queue refill (§Perf, the block coder's decode
+    /// hot path): one unaligned 8-byte load tops the accumulator up to
+    /// 56–63 valid bits and advances `byte_pos` by however many whole
+    /// bytes actually fit. Bits of the partially-loaded tail byte land
+    /// above `nbits`; they are the true next stream bits, so the later
+    /// idempotent OR over the same byte keeps the accumulator exact.
+    /// Near EOF (fewer than 8 bytes left) this falls back to the
+    /// checked byte-wise refill — the only place reads are bounds-
+    /// gated, keeping the loop unsafe-free.
+    #[inline]
+    pub fn fill(&mut self) {
+        if self.nbits >= 56 {
+            return; // already full; also keeps the shift below < 64
+        }
+        if self.byte_pos + 8 <= self.buf.len() {
+            let w = u64::from_le_bytes(
+                self.buf[self.byte_pos..self.byte_pos + 8]
+                    .try_into()
+                    .unwrap(),
+            );
+            self.acc |= w << self.nbits;
+            let whole = (63 - self.nbits) >> 3;
+            self.byte_pos += whole as usize;
+            self.nbits += 8 * whole;
+        } else {
+            self.refill();
+        }
+    }
+
+    /// Bits available in the accumulator right now (after [`Self::fill`]
+    /// this is ≥ 56 away from EOF). Batched decode loops size their
+    /// between-fill runs so peeks never exceed this.
+    #[inline]
+    pub fn available(&self) -> u32 {
+        self.nbits
+    }
+
+    /// Total bits requested so far via `read`/`consume`. At EOF the
+    /// count keeps growing past the payload's capacity even though the
+    /// returned bits are zero fill — exact-accounting decoders compare
+    /// this against the header-declared bit length.
+    #[inline]
+    pub fn bits_consumed(&self) -> u64 {
+        self.consumed
+    }
+
+    /// True iff more bits were requested than the payload holds — the
+    /// truncated-payload signal `read`'s zero fill used to swallow.
+    #[inline]
+    pub fn overran(&self) -> bool {
+        self.consumed > 8 * self.buf.len() as u64
+    }
+
     /// Read `n` bits (<= 57). Reads past EOF return zero bits (callers
-    /// track symbol counts themselves, as the paper's decoder knows `d`).
+    /// track symbol counts themselves, as the paper's decoder knows `d`)
+    /// but still count toward [`Self::bits_consumed`].
     #[inline]
     pub fn read(&mut self, n: u32) -> u64 {
         debug_assert!(n <= 57);
@@ -112,6 +176,7 @@ impl<'a> BitReader<'a> {
         let take = n.min(self.nbits);
         self.acc >>= take;
         self.nbits -= take;
+        self.consumed += n as u64;
         out
     }
 
@@ -125,12 +190,21 @@ impl<'a> BitReader<'a> {
         self.acc & ((1u64 << n) - 1)
     }
 
+    /// Peek `n` bits straight out of the accumulator, no refill attempt.
+    /// Valid only while `n <= self.available()` — batched loops call
+    /// [`Self::fill`] once and then peek/consume several codewords.
+    #[inline]
+    pub fn peek_filled(&self, n: u32) -> u64 {
+        self.acc & ((1u64 << n) - 1)
+    }
+
     /// Consume `n` bits after a successful peek.
     #[inline]
     pub fn consume(&mut self, n: u32) {
         let take = n.min(self.nbits);
         self.acc >>= take;
         self.nbits -= take;
+        self.consumed += n as u64;
     }
 }
 
@@ -191,6 +265,71 @@ mod tests {
         let mut r = BitReader::new(&[0xFF]);
         assert_eq!(r.read(8), 0xFF);
         assert_eq!(r.read(8), 0);
+    }
+
+    #[test]
+    fn bits_consumed_counts_requests_not_availability() {
+        let mut r = BitReader::new(&[0xFF]);
+        assert_eq!(r.read(5), 0b11111);
+        assert_eq!(r.bits_consumed(), 5);
+        assert!(!r.overran());
+        r.read(3);
+        assert_eq!(r.bits_consumed(), 8);
+        assert!(!r.overran(), "exactly the payload is not an overrun");
+        // this read is pure zero fill — the count must still grow
+        assert_eq!(r.read(4), 0);
+        assert_eq!(r.bits_consumed(), 12);
+        assert!(r.overran(), "reading past EOF must be detectable");
+    }
+
+    #[test]
+    fn consume_counts_toward_overrun_too() {
+        let mut r = BitReader::new(&[0xAB]);
+        assert_eq!(r.peek(8), 0xAB);
+        r.consume(8);
+        assert!(!r.overran());
+        r.consume(1);
+        assert_eq!(r.bits_consumed(), 9);
+        assert!(r.overran());
+    }
+
+    #[test]
+    fn fill_matches_checked_refill_bit_for_bit() {
+        let mut rng = Rng::new(9);
+        let bytes: Vec<u8> = (0..4096).map(|_| rng.next_u64() as u8).collect();
+        let widths: Vec<u32> =
+            (0..2000).map(|_| 1 + rng.below(15) as u32).collect();
+        // reference: plain read() (checked refill)
+        let mut a = BitReader::new(&bytes);
+        let want: Vec<u64> = widths.iter().map(|&n| a.read(n)).collect();
+        // fast path: fill() once per batch, then peek_filled/consume
+        let mut b = BitReader::new(&bytes);
+        let mut got = Vec::new();
+        for chunk in widths.chunks(3) {
+            b.fill(); // ≥ 56 bits away from EOF; 3 × 15 = 45 ≤ 56
+            for &n in chunk {
+                got.push(b.peek_filled(n));
+                b.consume(n);
+            }
+        }
+        assert_eq!(got, want);
+        assert_eq!(b.bits_consumed(), a.bits_consumed());
+        assert!(!b.overran());
+    }
+
+    #[test]
+    fn fill_near_eof_falls_back_without_panicking() {
+        let bytes = [0x5A, 0xC3, 0x01];
+        let mut r = BitReader::new(&bytes);
+        r.fill(); // < 8 bytes: checked fallback
+        assert_eq!(r.available(), 24);
+        assert_eq!(r.peek_filled(8), 0x5A);
+        r.consume(8);
+        assert_eq!(r.peek_filled(8), 0xC3);
+        r.consume(16);
+        r.fill(); // at EOF: no-op
+        assert_eq!(r.available(), 0);
+        assert!(!r.overran());
     }
 
     #[test]

@@ -1,0 +1,567 @@
+//! Block-based canonical Huffman — the wire coders' throughput tier.
+//!
+//! The correctness-first coders pay per-symbol refill/flush checks and a
+//! single table designed for the *stationary* cell distribution. This
+//! coder instead cuts the symbol stream into fixed-length blocks and,
+//! per block (orz-style static multi-table coding):
+//!
+//! * rebuilds a canonical Huffman table from the block's own histogram
+//!   (limited to [`MAX_LEN`] bits, same limiter as the baseline coder);
+//! * optionally runs a move-to-front front end ([`super::rank::Mtf`])
+//!   when the *exactly measured* coded cost with the transform beats the
+//!   cost without it;
+//! * encodes/decodes through the `u64` bit-queue fast paths of
+//!   [`super::bitio`] — two merged codewords per writer push, one
+//!   8-byte refill per batch of codewords on the read side, checked
+//!   refill only near EOF. No `unsafe` anywhere.
+//!
+//! Every block is self-framing, so the table-refresh overhead is part of
+//! the payload and [`BlockCoder::message_bits`] is *exact*: the bit
+//! ledger charges `kind + flag + 4·nsym table + Σ codeword` bits per
+//! block, and `encode` asserts it produced precisely that many bits.
+//!
+//! ## Wire format (LSB-first, symbol count travels out of band)
+//!
+//! ```text
+//! block   := 1-bit kind
+//!            kind=1 (constant): 8-bit symbol        (the whole block
+//!                               is that symbol — the degenerate
+//!                               single-live-cell regime at large λ)
+//!            kind=0 (coded):    1-bit MTF flag
+//!                               nsym × 4-bit codeword lengths (0 = no
+//!                               code; 4 bits hold MAX_LEN = 15)
+//!                               block_len codewords (last block short)
+//! stream  := block*             (⌈n / block_len⌉ blocks for n symbols)
+//! ```
+//!
+//! Both sides know `nsym` (the quantizer's cell count) and `block_len`
+//! from the scheme configuration, so neither travels on the wire.
+
+use crate::coding::bitio::{BitReader, BitWriter};
+use crate::coding::huffman::{limited_code_lengths, MAX_LEN};
+use crate::coding::rank::Mtf;
+use crate::coding::EntropyCoder;
+use crate::util::{Error, Result};
+
+/// Default symbols per block: big enough to amortize a 256-entry table
+/// rebuild to < 0.02 bits/symbol, small enough to track per-packet
+/// drift in the quantized stream.
+pub const DEFAULT_BLOCK_LEN: usize = 1 << 16;
+
+/// Symbols of each block probed to decide whether the full MTF cost
+/// evaluation is worth running (the transform scan is the only
+/// super-linear step, so stationary streams must skip it).
+const MTF_PROBE: usize = 4096;
+
+/// Per-block static multi-table Huffman coder over a fixed alphabet.
+#[derive(Clone, Debug)]
+pub struct BlockCoder {
+    nsym: usize,
+    block_len: usize,
+}
+
+/// How one block will be represented on the wire, plus its exact cost.
+enum BlockMode {
+    /// every symbol of the block equals this one
+    Constant(u8),
+    /// per-block canonical Huffman, optionally over the MTF rank stream
+    Coded { mtf: bool, lens: Vec<u32> },
+}
+
+struct BlockPlan {
+    mode: BlockMode,
+    /// exact bits this block occupies on the wire, header included
+    bits: u64,
+}
+
+impl BlockCoder {
+    /// Coder over `nsym` symbols at the default block length.
+    pub fn new(nsym: usize) -> Result<BlockCoder> {
+        Self::with_block_len(nsym, DEFAULT_BLOCK_LEN)
+    }
+
+    /// Coder with an explicit block length (tests sweep this to place
+    /// symbols on and across block boundaries).
+    pub fn with_block_len(nsym: usize, block_len: usize) -> Result<BlockCoder> {
+        if nsym == 0 || nsym > 256 {
+            return Err(Error::Coding(format!(
+                "alphabet size {nsym} unsupported"
+            )));
+        }
+        if block_len == 0 {
+            return Err(Error::Coding("block length must be ≥ 1".into()));
+        }
+        Ok(BlockCoder { nsym, block_len })
+    }
+
+    pub fn block_len(&self) -> usize {
+        self.block_len
+    }
+
+    /// Fixed per-block framing overhead of a coded block, in bits:
+    /// kind + MTF flag + the 4-bit length table.
+    pub fn table_bits(&self) -> u64 {
+        2 + 4 * self.nsym as u64
+    }
+
+    /// Histogram of one block; rejects out-of-alphabet symbols (the
+    /// mismatch `message_bits` must never silently undercount).
+    fn histogram(&self, block: &[u8]) -> Result<[u64; 256]> {
+        let mut hist = [0u64; 256];
+        for &s in block {
+            hist[s as usize] += 1;
+        }
+        if let Some(bad) =
+            (self.nsym..256).find(|&s| hist[s] > 0)
+        {
+            return Err(Error::Coding(format!(
+                "symbol {bad} outside the {}-symbol alphabet",
+                self.nsym
+            )));
+        }
+        Ok(hist)
+    }
+
+    /// Exact coded cost (bits) of a histogram under a length table.
+    fn coded_cost(hist: &[u64], lens: &[u32]) -> u64 {
+        hist.iter()
+            .zip(lens)
+            .map(|(&f, &l)| f * l as u64)
+            .sum()
+    }
+
+    /// Decide how one block travels, measuring exact costs. When MTF is
+    /// chosen, `scratch` holds the block's rank stream on return (the
+    /// encoder codes it directly; `message_bits` just drops it).
+    fn plan_block(
+        &self,
+        block: &[u8],
+        scratch: &mut Vec<u8>,
+    ) -> Result<BlockPlan> {
+        let hist = self.histogram(block)?;
+        let live = hist[..self.nsym].iter().filter(|&&f| f > 0).count();
+        if live <= 1 {
+            let sym = hist[..self.nsym]
+                .iter()
+                .position(|&f| f > 0)
+                .unwrap_or(0) as u8;
+            return Ok(BlockPlan { mode: BlockMode::Constant(sym), bits: 9 });
+        }
+        let lens = limited_code_lengths(&hist[..self.nsym], MAX_LEN);
+        let raw_cost = Self::coded_cost(&hist[..self.nsym], &lens);
+
+        // Probe a prefix before paying the full O(m·rank) MTF scan: on
+        // stationary streams the rank distribution carries no less
+        // entropy than the symbol distribution, so the probe fails and
+        // the block encodes at full histogram speed.
+        let probe = &block[..block.len().min(MTF_PROBE)];
+        let mut probe_ranks = Vec::new();
+        Mtf::new(self.nsym)?.encode(probe, &mut probe_ranks)?;
+        let probe_gate = {
+            let mut ph = [0u64; 256];
+            let mut rh = [0u64; 256];
+            for &s in probe {
+                ph[s as usize] += 1;
+            }
+            for &r in &probe_ranks {
+                rh[r as usize] += 1;
+            }
+            let p_lens = limited_code_lengths(&ph[..self.nsym], MAX_LEN);
+            let r_lens = limited_code_lengths(&rh[..self.nsym], MAX_LEN);
+            let p_cost = Self::coded_cost(&ph[..self.nsym], &p_lens);
+            let r_cost = Self::coded_cost(&rh[..self.nsym], &r_lens);
+            // require a clear (> ~6%) win on the probe before scanning
+            // the whole block
+            r_cost * 17 <= p_cost * 16
+        };
+        let mut mode = BlockMode::Coded { mtf: false, lens };
+        let mut cost = raw_cost;
+        if probe_gate {
+            scratch.clear();
+            if block.len() <= MTF_PROBE {
+                scratch.extend_from_slice(&probe_ranks);
+            } else {
+                Mtf::new(self.nsym)?.encode(block, scratch)?;
+            }
+            let mut rh = [0u64; 256];
+            for &r in scratch.iter() {
+                rh[r as usize] += 1;
+            }
+            let r_lens = limited_code_lengths(&rh[..self.nsym], MAX_LEN);
+            let r_cost = Self::coded_cost(&rh[..self.nsym], &r_lens);
+            // ties go to the raw histogram: the transform must *win*
+            if r_cost < cost {
+                mode = BlockMode::Coded { mtf: true, lens: r_lens };
+                cost = r_cost;
+            }
+        }
+        Ok(BlockPlan { mode, bits: self.table_bits() + cost })
+    }
+
+    /// Exact total wire bits for `symbols` — every block's kind bit,
+    /// MTF flag, 4-bit length table (the table-refresh overhead the
+    /// packet ledger must charge) and codewords. Equals the bit length
+    /// `encode` produces, which asserts the match.
+    pub fn message_bits(&self, symbols: &[u8]) -> Result<u64> {
+        let mut scratch = Vec::new();
+        let mut total = 0u64;
+        for block in symbols.chunks(self.block_len) {
+            total += self.plan_block(block, &mut scratch)?.bits;
+        }
+        Ok(total)
+    }
+
+    /// Encode, returning the payload and its exact bit length
+    /// (`== message_bits`, padding excluded).
+    pub fn encode_counted(&self, symbols: &[u8]) -> Result<(Vec<u8>, u64)> {
+        let mut w = BitWriter::with_capacity(symbols.len());
+        let mut scratch = Vec::new();
+        for block in symbols.chunks(self.block_len) {
+            let plan = self.plan_block(block, &mut scratch)?;
+            let before = w.bit_len();
+            match plan.mode {
+                BlockMode::Constant(sym) => {
+                    w.push(1, 1);
+                    w.push(sym as u64, 8);
+                }
+                BlockMode::Coded { mtf, ref lens } => {
+                    w.push(0, 1);
+                    w.push(mtf as u64, 1);
+                    for &l in lens {
+                        w.push(l as u64, 4);
+                    }
+                    let enc = canonical_codes(lens)?;
+                    let data: &[u8] = if mtf { &scratch } else { block };
+                    // §Perf: two codewords per push (≤ 30 bits merged)
+                    let mut pairs = data.chunks_exact(2);
+                    for p in &mut pairs {
+                        let (c1, l1) = enc[p[0] as usize];
+                        let (c2, l2) = enc[p[1] as usize];
+                        w.push(c1 as u64 | ((c2 as u64) << l1), l1 + l2);
+                    }
+                    for &s in pairs.remainder() {
+                        let (c, l) = enc[s as usize];
+                        w.push(c as u64, l);
+                    }
+                }
+            }
+            debug_assert_eq!(
+                w.bit_len() - before,
+                plan.bits,
+                "block plan drifted from the bits actually written"
+            );
+        }
+        Ok((w.finish(), w.bit_len()))
+    }
+
+    /// Decode exactly `n` symbols, returning them with the exact number
+    /// of bits consumed. Truncated payloads (zero-fill tails included)
+    /// are rejected via the reader's overrun accounting.
+    pub fn decode_counted(
+        &self,
+        payload: &[u8],
+        n: usize,
+    ) -> Result<(Vec<u8>, u64)> {
+        let mut out = Vec::with_capacity(n);
+        let mut scratch = Vec::new();
+        let mut r = BitReader::new(payload);
+        let mut lens = vec![0u32; self.nsym];
+        let mut remaining = n;
+        while remaining > 0 {
+            let m = remaining.min(self.block_len);
+            if r.read(1) == 1 {
+                let sym = r.read(8);
+                if sym >= self.nsym as u64 {
+                    return Err(Error::Coding(format!(
+                        "constant-block symbol {sym} outside the \
+                         {}-symbol alphabet",
+                        self.nsym
+                    )));
+                }
+                out.resize(out.len() + m, sym as u8);
+            } else {
+                let mtf = r.read(1) == 1;
+                for l in lens.iter_mut() {
+                    *l = r.read(4) as u32;
+                }
+                let enc = canonical_codes(&lens)?;
+                let (lut, max_len) = decode_lut(&lens, &enc)?;
+                let target = if mtf {
+                    scratch.clear();
+                    scratch.reserve(m);
+                    &mut scratch
+                } else {
+                    &mut out
+                };
+                decode_block(&mut r, &lut, max_len, m, target)?;
+                if mtf {
+                    Mtf::new(self.nsym)?.decode(&scratch, &mut out)?;
+                }
+            }
+            if r.overran() {
+                return Err(Error::Coding(format!(
+                    "block payload truncated: {} bits consumed from a \
+                     {}-bit payload",
+                    r.bits_consumed(),
+                    8 * payload.len()
+                )));
+            }
+            remaining -= m;
+        }
+        Ok((out, r.bits_consumed()))
+    }
+
+    /// Decode exactly `n` symbols and require them to consume exactly
+    /// `payload_bits` bits — the packet-header contract. Truncation,
+    /// padding abuse and wrong declared lengths are all recoverable
+    /// coding errors.
+    pub fn decode_exact(
+        &self,
+        payload: &[u8],
+        n: usize,
+        payload_bits: u64,
+    ) -> Result<Vec<u8>> {
+        let (out, consumed) = self.decode_counted(payload, n)?;
+        if consumed != payload_bits {
+            return Err(Error::Coding(format!(
+                "block payload bit-length mismatch: {n} symbols consumed \
+                 {consumed} bits, header declares {payload_bits}"
+            )));
+        }
+        Ok(out)
+    }
+}
+
+impl EntropyCoder for BlockCoder {
+    fn encode(&self, symbols: &[u8]) -> Result<Vec<u8>> {
+        Ok(self.encode_counted(symbols)?.0)
+    }
+
+    fn decode(&self, payload: &[u8], n: usize) -> Result<Vec<u8>> {
+        Ok(self.decode_counted(payload, n)?.0)
+    }
+
+    fn name(&self) -> &'static str {
+        "block"
+    }
+}
+
+/// Canonical codeword assignment from lengths — same (len, symbol)
+/// ordering and LSB-first bit-reversal as the baseline Huffman coder,
+/// with an exact-integer Kraft check so wire-supplied tables can never
+/// build an overlapping code. Returns `(code, len)` per symbol.
+fn canonical_codes(lens: &[u32]) -> Result<Vec<(u32, u32)>> {
+    let max_len = lens.iter().copied().max().unwrap_or(0);
+    if max_len == 0 {
+        return Err(Error::Coding("block table has no codewords".into()));
+    }
+    debug_assert!(max_len <= MAX_LEN, "4-bit lengths cannot exceed 15");
+    let kraft: u64 = lens
+        .iter()
+        .filter(|&&l| l > 0)
+        .map(|&l| 1u64 << (max_len - l))
+        .sum();
+    if kraft > 1u64 << max_len {
+        return Err(Error::Coding(format!(
+            "block table violates Kraft: {kraft}/{}",
+            1u64 << max_len
+        )));
+    }
+    let mut order: Vec<usize> =
+        (0..lens.len()).filter(|&i| lens[i] > 0).collect();
+    order.sort_by_key(|&i| (lens[i], i));
+    let mut enc = vec![(0u32, 0u32); lens.len()];
+    let mut code = 0u32;
+    let mut prev_len = 0u32;
+    for &i in &order {
+        code <<= lens[i] - prev_len;
+        prev_len = lens[i];
+        enc[i] = (code.reverse_bits() >> (32 - lens[i]), lens[i]);
+        code += 1;
+    }
+    Ok(enc)
+}
+
+/// Full `2^max_len` decode LUT: low bits of the stream → (symbol, len).
+/// Entries no codeword covers stay `len == 0` (incomplete tables decode
+/// to a recoverable error on such bits).
+fn decode_lut(
+    lens: &[u32],
+    enc: &[(u32, u32)],
+) -> Result<(Vec<(u8, u8)>, u32)> {
+    let max_len = lens.iter().copied().max().unwrap_or(0);
+    let mut lut = vec![(0u8, 0u8); 1usize << max_len];
+    for (i, &(code, len)) in enc.iter().enumerate() {
+        if len == 0 {
+            continue;
+        }
+        let step = 1usize << len;
+        let mut idx = code as usize;
+        while idx < lut.len() {
+            lut[idx] = (i as u8, len as u8);
+            idx += step;
+        }
+    }
+    Ok((lut, max_len))
+}
+
+/// Decode `m` codewords through the bit queue: one [`BitReader::fill`]
+/// per batch of `⌊56 / max_len⌋` symbols, unchecked peeks in between
+/// (the fill guarantees the accumulator covers the batch away from EOF;
+/// near EOF the checked fallback plus zero fill behaves like the
+/// baseline decoder, and the caller's overrun accounting catches any
+/// walk off the end).
+fn decode_block(
+    r: &mut BitReader,
+    lut: &[(u8, u8)],
+    max_len: u32,
+    m: usize,
+    out: &mut Vec<u8>,
+) -> Result<()> {
+    let batch = (56 / max_len).max(1) as usize;
+    let mut left = m;
+    while left > 0 {
+        r.fill();
+        let run = batch.min(left);
+        for _ in 0..run {
+            let bits = r.peek_filled(max_len) as usize;
+            let (sym, len) = lut[bits];
+            if len == 0 {
+                return Err(Error::Coding(
+                    "invalid codeword in block payload".into(),
+                ));
+            }
+            r.consume(len as u32);
+            out.push(sym);
+        }
+        left -= run;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::huffman::HuffmanCode;
+    use crate::util::rng::Rng;
+
+    fn skewed_stream(nsym: usize, n: usize, seed: u64) -> Vec<u8> {
+        let mut rng = Rng::new(seed);
+        let probs: Vec<f64> = (0..nsym)
+            .map(|i| 0.5f64.powi(i.min(30) as i32) + 1e-3)
+            .collect();
+        (0..n).map(|_| rng.categorical(&probs) as u8).collect()
+    }
+
+    #[test]
+    fn roundtrips_and_message_bits_exact_across_block_boundaries() {
+        for &block_len in &[1usize, 7, 256, 4096] {
+            for &n in &[0usize, 1, 7, 255, 256, 257, 5000] {
+                let msg = skewed_stream(16, n, 3 + n as u64);
+                let coder = BlockCoder::with_block_len(16, block_len).unwrap();
+                let (payload, bits) = coder.encode_counted(&msg).unwrap();
+                assert_eq!(
+                    bits,
+                    coder.message_bits(&msg).unwrap(),
+                    "block_len={block_len} n={n}"
+                );
+                assert_eq!(payload.len() as u64, bits.div_ceil(8));
+                let back = coder.decode_exact(&payload, n, bits).unwrap();
+                assert_eq!(back, msg, "block_len={block_len} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn constant_blocks_cost_nine_bits() {
+        let coder = BlockCoder::with_block_len(8, 64).unwrap();
+        let msg = vec![5u8; 200]; // 4 blocks: 64+64+64+8, all constant
+        let (payload, bits) = coder.encode_counted(&msg).unwrap();
+        assert_eq!(bits, 4 * 9);
+        assert_eq!(coder.decode_exact(&payload, 200, bits).unwrap(), msg);
+    }
+
+    #[test]
+    fn per_block_tables_beat_one_global_table_on_drifting_streams() {
+        // first half biased to low symbols, second half to high ones —
+        // per-block refresh adapts, a single table cannot
+        let mut msg = skewed_stream(32, 40_000, 11);
+        let mut tail: Vec<u8> =
+            skewed_stream(32, 40_000, 12).iter().map(|&s| 31 - s).collect();
+        msg.append(&mut tail);
+        let mut hist = [0u64; 32];
+        for &s in &msg {
+            hist[s as usize] += 1;
+        }
+        let global = HuffmanCode::from_freqs(&hist).unwrap();
+        let coder = BlockCoder::with_block_len(32, 1 << 14).unwrap();
+        let (_, bits) = coder.encode_counted(&msg).unwrap();
+        let budget = global.message_bits(&msg)
+            + (msg.len() / coder.block_len() + 1) as u64 * coder.table_bits();
+        assert!(
+            bits <= budget,
+            "block coder spent {bits} > global {budget}"
+        );
+    }
+
+    #[test]
+    fn mtf_front_end_wins_on_run_heavy_streams() {
+        // long runs over a large alphabet: MTF collapses them to rank 0
+        let mut rng = Rng::new(4);
+        let mut msg = Vec::new();
+        while msg.len() < 60_000 {
+            let s = rng.below(200) as u8;
+            let run = 20 + rng.below(200);
+            msg.extend(std::iter::repeat(s).take(run));
+        }
+        let coder = BlockCoder::new(200).unwrap();
+        let (payload, bits) = coder.encode_counted(&msg).unwrap();
+        assert_eq!(bits, coder.message_bits(&msg).unwrap());
+        let back = coder.decode_exact(&payload, msg.len(), bits).unwrap();
+        assert_eq!(back, msg);
+        // runs of ~120 symbols decay the rate well below the stationary
+        // histogram's; MTF must capture that (< 2 bits/symbol here)
+        assert!(
+            bits < 2 * msg.len() as u64,
+            "MTF front end missed run structure: {} bits/sym",
+            bits as f64 / msg.len() as f64
+        );
+    }
+
+    #[test]
+    fn truncated_payloads_are_rejected() {
+        let msg = skewed_stream(16, 10_000, 9);
+        let coder = BlockCoder::new(16).unwrap();
+        let (payload, bits) = coder.encode_counted(&msg).unwrap();
+        for cut in [payload.len() / 4, payload.len() / 2, payload.len() - 1] {
+            let r = coder.decode_exact(&payload[..cut], msg.len(), bits);
+            assert!(r.is_err(), "cut at {cut} decoded cleanly");
+        }
+        // and a wrong declared length fails even with the full payload
+        assert!(coder
+            .decode_exact(&payload, msg.len(), bits + 1)
+            .is_err());
+    }
+
+    #[test]
+    fn out_of_alphabet_symbols_error_in_both_accounting_paths() {
+        let coder = BlockCoder::new(4).unwrap();
+        assert!(coder.message_bits(&[0, 1, 9]).is_err());
+        assert!(coder.encode_counted(&[0, 1, 9]).is_err());
+    }
+
+    #[test]
+    fn garbage_headers_never_panic() {
+        let coder = BlockCoder::new(16).unwrap();
+        let mut rng = Rng::new(31);
+        for trial in 0..200 {
+            let len = rng.below(40);
+            let junk: Vec<u8> =
+                (0..len).map(|_| rng.next_u64() as u8).collect();
+            // must return (not panic); success is allowed only if the
+            // bits happen to form a valid stream
+            let _ = coder.decode(&junk, 100);
+            let _ = coder.decode_exact(&junk, 100, trial as u64);
+        }
+    }
+}

@@ -33,9 +33,12 @@ pub struct HuffmanCode {
     max_len: u32,
     /// §Perf: pair-encode table for alphabets ≤ 64 — `(merged bits, total
     /// len)` for every symbol pair, halving BitWriter pushes on the
-    /// encode hot path. `len == u8::MAX` marks pairs with un-coded
-    /// symbols (encode then falls back to the checked path).
-    pair: Vec<(u32, u8)>,
+    /// encode hot path. Merged bits are `u64`: two near-`MAX_LEN` codes
+    /// span up to `2·MAX_LEN` bits, which a `u32` slot would silently
+    /// truncate the moment the length limit moves past 16. `len ==
+    /// u8::MAX` marks pairs with un-coded symbols (encode then falls
+    /// back to the checked path).
+    pair: Vec<(u64, u8)>,
     nsym: usize,
 }
 
@@ -101,10 +104,11 @@ impl HuffmanCode {
         } else {
             Vec::new()
         };
-        // pair-encode table (encode hot path)
+        // pair-encode table (encode hot path); merged in u64 so a
+        // MAX_LEN×MAX_LEN pair can never truncate, whatever the limit
         let nsym = lens.len();
-        let pair = if nsym <= 64 && max_len <= 28 {
-            let mut pair = vec![(0u32, u8::MAX); nsym * nsym];
+        let pair = if nsym <= 64 {
+            let mut pair = vec![(0u64, u8::MAX); nsym * nsym];
             for s1 in 0..nsym {
                 if lens[s1] == 0 {
                     continue;
@@ -114,7 +118,7 @@ impl HuffmanCode {
                         continue;
                     }
                     pair[s1 * nsym + s2] = (
-                        enc[s1] | (enc[s2] << lens[s1]),
+                        enc[s1] as u64 | ((enc[s2] as u64) << lens[s1]),
                         (lens[s1] + lens[s2]) as u8,
                     );
                 }
@@ -143,18 +147,40 @@ impl HuffmanCode {
     }
 
     /// Exact encoded size of `symbols`, in bits (excluding padding).
-    /// Out-of-alphabet symbols contribute 0 (encode rejects them).
+    ///
+    /// Symbols `encode` would reject (out of alphabet, or carrying no
+    /// code) are a contract violation here too: counting them as 0 bits
+    /// would silently undercount the ledger while the matching `encode`
+    /// errors out. Debug builds assert; release builds keep the
+    /// historical 0-bit fallback so a ledger estimate never panics on
+    /// the hot path.
     pub fn message_bits(&self, symbols: &[u8]) -> u64 {
         symbols
             .iter()
-            .map(|&s| self.lens.get(s as usize).copied().unwrap_or(0) as u64)
+            .map(|&s| {
+                let len =
+                    self.lens.get(s as usize).copied().unwrap_or(0) as u64;
+                debug_assert!(
+                    len > 0,
+                    "message_bits on symbol {s} that encode would reject \
+                     (alphabet {}, len 0)",
+                    self.lens.len()
+                );
+                len
+            })
             .sum()
     }
 
     /// Encode into a fresh payload.
     pub fn encode(&self, symbols: &[u8]) -> Result<Vec<u8>> {
-        let mut w =
-            BitWriter::with_capacity((self.message_bits(symbols) / 8 + 1) as usize);
+        // capacity estimate only — tolerates the invalid symbols that
+        // encode_into is about to reject, so it must not go through the
+        // asserting message_bits
+        let cap: u64 = symbols
+            .iter()
+            .map(|&s| self.lens.get(s as usize).copied().unwrap_or(0) as u64)
+            .sum();
+        let mut w = BitWriter::with_capacity((cap / 8 + 1) as usize);
         self.encode_into(symbols, &mut w)?;
         Ok(w.finish())
     }
@@ -174,7 +200,7 @@ impl HuffmanCode {
                     return Err(Error::Coding(format!(
                         "symbol without code in pair {s1},{s2}")));
                 }
-                w.push(bits as u64, len as u32);
+                w.push(bits, len as u32);
             }
             for &s in it.remainder() {
                 self.push_one(s, w)?;
@@ -209,9 +235,21 @@ impl HuffmanCode {
 
     /// Decode into a preallocated buffer (hot path).
     pub fn decode_into(&self, payload: &[u8], out: &mut [u8]) -> Result<()> {
+        self.decode_counted(payload, out).map(|_| ())
+    }
+
+    /// Decode into a preallocated buffer, returning the exact number of
+    /// bits the symbols consumed (padding excluded). A truncated
+    /// payload — one whose zero fill happens to decode as valid
+    /// codewords — is rejected here instead of silently completing.
+    pub fn decode_counted(
+        &self,
+        payload: &[u8],
+        out: &mut [u8],
+    ) -> Result<u64> {
         if self.max_len == 0 {
             if out.is_empty() {
-                return Ok(());
+                return Ok(0);
             }
             return Err(Error::Coding("empty code cannot decode".into()));
         }
@@ -224,6 +262,36 @@ impl HuffmanCode {
             }
             r.consume(len as u32);
             *slot = sym;
+        }
+        if r.overran() {
+            return Err(Error::Coding(format!(
+                "huffman payload truncated: {} bits consumed from a \
+                 {}-bit payload",
+                r.bits_consumed(),
+                8 * payload.len()
+            )));
+        }
+        Ok(r.bits_consumed())
+    }
+
+    /// Decode exactly `out.len()` symbols and require them to consume
+    /// exactly `payload_bits` bits — the header-declared length a
+    /// [`crate::fl::packet::Packet`] carries. Any mismatch (truncation,
+    /// padding abuse, a wrong declared length) is a recoverable coding
+    /// error.
+    pub fn decode_exact(
+        &self,
+        payload: &[u8],
+        out: &mut [u8],
+        payload_bits: u64,
+    ) -> Result<()> {
+        let consumed = self.decode_counted(payload, out)?;
+        if consumed != payload_bits {
+            return Err(Error::Coding(format!(
+                "huffman payload bit-length mismatch: {} symbols consumed \
+                 {consumed} bits, header declares {payload_bits}",
+                out.len()
+            )));
         }
         Ok(())
     }
@@ -500,6 +568,59 @@ mod tests {
         let mut back = vec![0u8; msg.len()];
         code.decode_into(&payload, &mut back).unwrap();
         assert_eq!(back, msg);
+    }
+
+    #[test]
+    fn pair_table_survives_max_len_by_max_len_codes() {
+        // ≤64-symbol alphabet whose two rarest codes both sit at
+        // MAX_LEN: a back-to-back pair of them merges to 2·MAX_LEN = 30
+        // bits through the pair table. The u32 predecessor truncated
+        // exactly this shape once the limit crossed 16, so pin the
+        // merged width and the roundtrip.
+        let freqs: Vec<u64> = (0..64u32).map(|i| 1u64 << i.min(50)).collect();
+        let code = HuffmanCode::from_freqs(&freqs).unwrap();
+        let lens = code.lengths();
+        assert_eq!(lens.iter().copied().max(), Some(MAX_LEN));
+        let deepest: Vec<u8> = (0..64u8)
+            .filter(|&s| lens[s as usize] == MAX_LEN)
+            .collect();
+        assert!(deepest.len() >= 2, "need two MAX_LEN codes: {lens:?}");
+        // an even-length message of alternating deepest symbols runs
+        // entirely through the pair path
+        let msg: Vec<u8> = (0..500)
+            .map(|i| deepest[i % deepest.len()])
+            .collect();
+        let mut w = BitWriter::new();
+        code.encode_into(&msg, &mut w).unwrap();
+        assert_eq!(w.bit_len(), 500 * MAX_LEN as u64);
+        assert_eq!(w.bit_len(), code.message_bits(&msg));
+        let payload = w.finish();
+        let mut back = vec![0u8; msg.len()];
+        code.decode_into(&payload, &mut back).unwrap();
+        assert_eq!(back, msg);
+    }
+
+    #[test]
+    fn decode_counted_rejects_truncated_payloads() {
+        let code = HuffmanCode::from_probs(&[0.5, 0.25, 0.25]).unwrap();
+        let msg: Vec<u8> = (0..300).map(|i| (i % 3) as u8).collect();
+        let payload = code.encode(&msg).unwrap();
+        let bits = code.message_bits(&msg);
+        // the intact payload decodes with an exact bit count
+        let mut out = vec![0u8; msg.len()];
+        assert_eq!(
+            code.decode_counted(&payload, &mut out).unwrap(),
+            bits
+        );
+        code.decode_exact(&payload, &mut out, bits).unwrap();
+        // chopping trailing bytes must surface as an error, not as a
+        // silently-valid all-zero tail
+        let truncated = &payload[..payload.len() / 2];
+        let err = code.decode_counted(truncated, &mut out);
+        assert!(err.is_err(), "truncated payload decoded cleanly");
+        // a wrong declared bit-length is rejected even when the payload
+        // physically covers the symbols
+        assert!(code.decode_exact(&payload, &mut out, bits + 1).is_err());
     }
 
     #[test]

@@ -10,15 +10,23 @@
 //!   bound `H(Q(Z))` (the quantity the RC design constrains);
 //! * [`lz`] — LZW, the Lempel–Ziv variant the paper mentions as an
 //!   alternative entropy coder;
-//! * [`bitio`] — the shared bit-level reader/writer.
+//! * [`block`] — the throughput tier: per-block canonical Huffman with
+//!   table refresh (orz-style static multi-table coding) over an
+//!   optional [`rank`] move-to-front front end, with exact per-block
+//!   bit accounting;
+//! * [`rank`] — the MTF symbol-ranking transform;
+//! * [`bitio`] — the shared bit-level reader/writer (now with `u64`
+//!   bit-queue fast paths and past-EOF accounting).
 //!
 //! All coders speak `&[u8]` symbol streams (alphabet ≤ 256; RC-FED uses
 //! `2^b ≤ 64` symbols) and produce self-contained byte payloads.
 
 pub mod arithmetic;
 pub mod bitio;
+pub mod block;
 pub mod huffman;
 pub mod lz;
+pub mod rank;
 
 use crate::util::Result;
 

@@ -171,8 +171,14 @@ impl ExperimentConfig {
     /// Row-key label: the scheme label plus the transform suffix (empty
     /// for identity) — the ONE composition every report/CSV key uses, so
     /// per-round metric labels and sweep row keys cannot drift apart.
+    /// The block wire tier adds a `_wblock` suffix; the historical wires
+    /// (Huffman, arithmetic) keep their pre-existing labels untouched.
     pub fn label(&self) -> String {
-        format!("{}{}", self.scheme.label(), self.transform.suffix())
+        let wire = match self.wire {
+            WireCoder::Block => "_wblock",
+            _ => "",
+        };
+        format!("{}{}{wire}", self.scheme.label(), self.transform.suffix())
     }
 
     fn native_backend(&self) -> NativeMlp {
@@ -1037,6 +1043,29 @@ mod tests {
             assert_eq!(rep.total_bits, base.total_bits, "shards={shards}");
             assert_eq!(rep.final_accuracy, base.final_accuracy);
         }
+    }
+
+    #[test]
+    fn block_wire_reproduces_huffman_trajectory_within_table_overhead() {
+        // the block wire changes payload *bytes* but decodes to the same
+        // symbols, so under an ideal channel the model trajectory — and
+        // the final accuracy — must match the Huffman wire exactly; only
+        // the ledger moves, and only by bounded per-block table refreshes
+        let mut h = ExperimentConfig::tiny();
+        h.rounds = 6;
+        h.eval_every = 3;
+        let mut b = h.clone();
+        b.wire = WireCoder::Block;
+        assert!(b.label().ends_with("_wblock"));
+        assert_eq!(h.label(), h.scheme.label(), "huffman label must not move");
+        let rh = run_experiment(&h).unwrap();
+        let rb = run_experiment(&b).unwrap();
+        assert_eq!(rb.final_accuracy, rh.final_accuracy);
+        let (lo, hi) =
+            (0.9 * rh.total_bits as f64, 1.1 * rh.total_bits as f64);
+        let got = rb.total_bits as f64;
+        assert!(lo <= got && got <= hi,
+                "block bits {got} outside [{lo}, {hi}]");
     }
 
     #[test]

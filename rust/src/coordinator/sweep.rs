@@ -32,6 +32,7 @@ use crate::data::FederatedDataset;
 use crate::fl::compression::{
     design_cache_stats, designed_codebook, CompressionScheme,
     DesignCacheStats, RateAllocation, RateTarget, Transform, TransformCfg,
+    WireCoder,
 };
 use crate::quant::codebook::Codebook;
 use crate::quant::rcq::LengthModel;
@@ -127,6 +128,10 @@ pub struct SweepGrid {
     /// identity): crosses every cell with each error-feedback /
     /// sparsification configuration
     pub transforms: Vec<TransformCfg>,
+    /// wire-coder axis (empty ⇒ each base's own wire, normally Huffman):
+    /// crosses every cell with each wire entropy coder, so the block
+    /// throughput tier can ride the same grids as the paper coder
+    pub wires: Vec<WireCoder>,
     /// sweep worker threads (0 ⇒ hardware)
     pub threads: usize,
     /// scheduler threads *inside* each cell. Defaults to 1: the sweep
@@ -145,6 +150,7 @@ impl SweepGrid {
             rate_targets: Vec::new(),
             allocs: Vec::new(),
             transforms: Vec::new(),
+            wires: Vec::new(),
             threads: 0,
             inner_threads: 1,
         }
@@ -299,6 +305,13 @@ impl SweepGrid {
         self
     }
 
+    /// Add one wire-coder axis value. A Huffman reference cell is *not*
+    /// added — chain `.wire(WireCoder::Huffman)` for the paper coder.
+    pub fn wire(mut self, wire: WireCoder) -> Self {
+        self.wires.push(wire);
+        self
+    }
+
     /// Sweep worker threads (0 ⇒ hardware).
     pub fn threads(mut self, threads: usize) -> Self {
         self.threads = threads;
@@ -307,7 +320,7 @@ impl SweepGrid {
 
     /// Expand the grid into per-cell configs with deterministic per-cell
     /// seeds, in declaration order (bases → seeds → channels →
-    /// rate targets → allocations → transforms → schemes).
+    /// rate targets → allocations → transforms → wires → schemes).
     pub fn expand(&self) -> Vec<SweepCell> {
         let mut cells = Vec::new();
         for (base_index, base) in self.bases.iter().enumerate() {
@@ -338,32 +351,41 @@ impl SweepGrid {
             } else {
                 self.transforms.clone()
             };
+            let wires: Vec<WireCoder> = if self.wires.is_empty() {
+                vec![base.wire]
+            } else {
+                self.wires.clone()
+            };
             for &seed in &seeds {
                 for &channel in &channels {
                     for &rate_target in &rate_targets {
                         for &alloc in &allocs {
                             for &transform in &transforms {
-                                for &scheme in &self.schemes {
-                                    let mut config = base.clone();
-                                    config.scheme = scheme;
-                                    config.seed = seed;
-                                    config.channel = channel;
-                                    config.rate_target = rate_target;
-                                    config.alloc = alloc;
-                                    config.transform = transform;
-                                    config.threads = self.inner_threads;
-                                    cells.push(SweepCell {
-                                        index: cells.len(),
-                                        base_index,
-                                        label: config.label(),
-                                        dataset: base.dataset.kind.name(),
-                                        seed,
-                                        channel: channel.label(),
-                                        rate: rate_target.label(),
-                                        alloc: alloc.label(),
-                                        transform: transform.label(),
-                                        config,
-                                    });
+                                for &wire in &wires {
+                                    for &scheme in &self.schemes {
+                                        let mut config = base.clone();
+                                        config.scheme = scheme;
+                                        config.seed = seed;
+                                        config.channel = channel;
+                                        config.rate_target = rate_target;
+                                        config.alloc = alloc;
+                                        config.transform = transform;
+                                        config.wire = wire;
+                                        config.threads = self.inner_threads;
+                                        cells.push(SweepCell {
+                                            index: cells.len(),
+                                            base_index,
+                                            label: config.label(),
+                                            dataset: base.dataset.kind.name(),
+                                            seed,
+                                            channel: channel.label(),
+                                            rate: rate_target.label(),
+                                            alloc: alloc.label(),
+                                            transform: transform.label(),
+                                            wire: wire.name().to_string(),
+                                            config,
+                                        });
+                                    }
                                 }
                             }
                         }
@@ -393,6 +415,8 @@ pub struct SweepCell {
     pub alloc: String,
     /// transform label (`"id"` for the identity stage)
     pub transform: String,
+    /// wire-coder label (`"huffman"` for the paper coder)
+    pub wire: String,
     pub config: ExperimentConfig,
 }
 
@@ -409,6 +433,8 @@ pub struct SweepCellResult {
     pub alloc: String,
     /// transform label (`"id"` for the identity stage)
     pub transform: String,
+    /// wire-coder label (`"huffman"` for the paper coder)
+    pub wire: String,
     pub scheme: CompressionScheme,
     pub report: ExperimentReport,
 }
@@ -423,6 +449,7 @@ pub struct SweepCellFailure {
     pub rate: String,
     pub alloc: String,
     pub transform: String,
+    pub wire: String,
     pub error: String,
 }
 
@@ -470,15 +497,16 @@ pub fn run_sweep(grid: &SweepGrid) -> Result<SweepReport> {
                 rate: cell.rate,
                 alloc: cell.alloc,
                 transform: cell.transform,
+                wire: cell.wire,
                 scheme: cell.config.scheme,
                 report,
             }),
             Err(e) => {
                 crate::warn!(
                     "sweep cell {} (dataset {}, seed {}, channel {}, \
-                     rate {}, alloc {}, transform {}) failed: {e}",
+                     rate {}, alloc {}, transform {}, wire {}) failed: {e}",
                     cell.label, cell.dataset, cell.seed, cell.channel,
-                    cell.rate, cell.alloc, cell.transform
+                    cell.rate, cell.alloc, cell.transform, cell.wire
                 );
                 failures.push(SweepCellFailure {
                     label: cell.label,
@@ -488,6 +516,7 @@ pub fn run_sweep(grid: &SweepGrid) -> Result<SweepReport> {
                     rate: cell.rate,
                     alloc: cell.alloc,
                     transform: cell.transform,
+                    wire: cell.wire,
                     error: e.to_string(),
                 });
             }
@@ -550,6 +579,10 @@ impl SweepReport {
             || self.failures.iter().any(|f| f.alloc != "uniform");
         let with_transform = self.cells.iter().any(|c| c.transform != "id")
             || self.failures.iter().any(|f| f.transform != "id");
+        // the wire column appears as soon as any cell left the paper's
+        // Huffman coder — all-huffman grids keep the exact schema bytes
+        let with_wire = self.cells.iter().any(|c| c.wire != "huffman")
+            || self.failures.iter().any(|f| f.wire != "huffman");
         let mut header: Vec<&str> = vec![Self::CSV_HEADER[0]];
         if multi_dataset {
             header.push("dataset");
@@ -568,6 +601,9 @@ impl SweepReport {
         }
         if with_transform {
             header.push("transform");
+        }
+        if with_wire {
+            header.push("wire");
         }
         header.extend_from_slice(&Self::CSV_HEADER[1..]);
         if with_rate {
@@ -602,6 +638,9 @@ impl SweepReport {
             }
             if with_transform {
                 row.push(CsvField::from(c.transform.clone()));
+            }
+            if with_wire {
+                row.push(CsvField::from(c.wire.clone()));
             }
             row.push(CsvField::from(c.report.final_accuracy));
             row.push(CsvField::from(c.report.best_accuracy));
@@ -668,6 +707,8 @@ impl SweepReport {
             || self.failures.iter().any(|f| f.alloc != "uniform");
         let with_transform = self.cells.iter().any(|c| c.transform != "id")
             || self.failures.iter().any(|f| f.transform != "id");
+        let with_wire = self.cells.iter().any(|c| c.wire != "huffman")
+            || self.failures.iter().any(|f| f.wire != "huffman");
         let cells: Vec<Json> = self
             .cells
             .iter()
@@ -723,6 +764,9 @@ impl SweepReport {
                         num_or_null(c.report.metrics.final_sparsity()),
                     ));
                 }
+                if with_wire {
+                    fields.push(("wire", s(&c.wire)));
+                }
                 if with_channel {
                     let st = &c.report.channel;
                     fields.push(("channel", s(&c.channel)));
@@ -768,6 +812,9 @@ impl SweepReport {
                 }
                 if with_transform {
                     fields.push(("transform", s(&f.transform)));
+                }
+                if with_wire {
+                    fields.push(("wire", s(&f.wire)));
                 }
                 if with_channel {
                     fields.push(("channel", s(&f.channel)));
@@ -1166,6 +1213,55 @@ mod tests {
             .scheme(CompressionScheme::Fp32)
             .expand();
         assert_eq!(plain[0].transform, "id");
+    }
+
+    #[test]
+    fn wire_axis_crosses_and_reports_gated_columns() {
+        use crate::fl::compression::WireCoder;
+        let mut base = tiny_base();
+        base.rounds = 4;
+        base.eval_every = 2;
+        let grid = SweepGrid::new(base)
+            .scheme(CompressionScheme::Lloyd { bits: 3 })
+            .wire(WireCoder::Huffman)
+            .wire(WireCoder::Block);
+        let cells = grid.expand();
+        assert_eq!(cells.len(), 2); // huffman + block
+        assert_eq!(cells[0].wire, "huffman");
+        assert_eq!(cells[0].label, "lloyd_b3");
+        assert_eq!(cells[1].wire, "block");
+        assert_eq!(cells[1].label, "lloyd_b3_wblock");
+        assert_eq!(cells[1].config.wire, WireCoder::Block);
+        let mut grid = grid;
+        grid.threads = 1;
+        let report = run_sweep(&grid).unwrap();
+        assert_eq!(report.cells.len(), 2);
+        // same symbols either way ⇒ identical trajectory and accuracy
+        assert_eq!(
+            report.cells[0].report.final_accuracy,
+            report.cells[1].report.final_accuracy
+        );
+        let dir = std::env::temp_dir()
+            .join(format!("rcfed_sweep_wire_{}", std::process::id()));
+        let csv_path = dir.join("wire.csv");
+        let json_path = dir.join("wire.json");
+        report.write_csv(csv_path.to_str().unwrap()).unwrap();
+        report.write_json(json_path.to_str().unwrap()).unwrap();
+        let csv = std::fs::read_to_string(&csv_path).unwrap();
+        assert!(
+            csv.starts_with("scheme,wire,final_acc"),
+            "wire key column missing: {csv}"
+        );
+        let json = std::fs::read_to_string(&json_path).unwrap();
+        let v = crate::util::json::Json::parse(&json).unwrap();
+        let jcells = v.req("cells").unwrap().as_arr().unwrap();
+        assert!(jcells[0].get("wire").is_some());
+        std::fs::remove_dir_all(dir).ok();
+        // a grid without the axis stays wire-free (no schema drift)
+        let plain = SweepGrid::new(tiny_base())
+            .scheme(CompressionScheme::Fp32)
+            .expand();
+        assert_eq!(plain[0].wire, "huffman");
     }
 
     #[test]

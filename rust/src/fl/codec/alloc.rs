@@ -3,6 +3,7 @@
 //! quantize/code path.
 
 use crate::coding::arithmetic::ArithmeticCoder;
+use crate::coding::block::BlockCoder;
 use crate::coding::huffman::HuffmanCode;
 use crate::fl::packet::Packet;
 use crate::quant::codebook::Codebook;
@@ -272,6 +273,16 @@ impl RateAllocator {
             let rate = match wire {
                 WireCoder::Huffman => rep.huffman_rate,
                 WireCoder::Arithmetic => rep.entropy_bits,
+                // per-block coding pays a table refresh every block;
+                // amortize it into the design rate so the water-fill
+                // budgets against what the ledger will actually charge
+                WireCoder::Block => {
+                    let coder =
+                        BlockCoder::new(huffman.lengths().len())?;
+                    rep.huffman_rate
+                        + coder.table_bits() as f64
+                            / coder.block_len() as f64
+                }
             };
             let broadcast_bits = codebook_broadcast_bits(&codebook);
             table.push(WidthDesign {

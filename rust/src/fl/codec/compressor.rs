@@ -275,8 +275,13 @@ impl Compressor {
                     .map(|_| r.read(5) as u32)
                     .collect();
                 let code = HuffmanCode::from_lengths(&lens)?;
-                let symbols =
-                    code.decode(&packet.payload[table_bytes..], d)?;
+                // hold the coded tail to the exact-accounting contract:
+                // it must cover the declared bits and consume exactly
+                // that many (a zero-filled truncated tail is a reject)
+                let coded = &packet.payload[table_bytes..];
+                Packet::ensure_covers(coded, packet.payload_bits)?;
+                let mut symbols = vec![0u8; d];
+                code.decode_exact(coded, &mut symbols, packet.payload_bits)?;
                 if packet.side_info.len() != q.num_buckets(d) {
                     return Err(Error::Coding(format!(
                         "qsgd: {} norms for {} buckets",
@@ -476,6 +481,49 @@ mod tests {
             .map(|(&x, &y)| ((x - y) as f64).powi(2)).sum::<f64>()
             / g.len() as f64;
         assert!(mse < 0.1);
+    }
+
+    #[test]
+    fn block_wire_roundtrips_through_real_bytes() {
+        let g = gaussian_grad(50_000, 0.0, 1.0, 14);
+        let mut rng = Rng::new(15);
+        let scheme = CompressionScheme::RcFed {
+            bits: 3,
+            lambda: 0.05,
+            length_model: LengthModel::Huffman,
+        };
+        let h = Compressor::design(scheme, WireCoder::Huffman).unwrap();
+        let b = Compressor::design(scheme, WireCoder::Block).unwrap();
+        let ph = h.compress(0, 0, &g, &mut rng).unwrap();
+        let pb = b.compress(0, 0, &g, &mut rng).unwrap();
+        // block coding pays its per-block table refresh but must stay
+        // within that overhead of the design-time Huffman payload
+        let blocks = (g.len() as u64)
+            .div_ceil(crate::coding::block::DEFAULT_BLOCK_LEN as u64);
+        let coder = crate::coding::block::BlockCoder::new(8).unwrap();
+        assert!(
+            pb.payload_bits <= ph.payload_bits + blocks * coder.table_bits(),
+            "block {} vs huffman {} (+{} blocks of table)",
+            pb.payload_bits,
+            ph.payload_bits,
+            blocks
+        );
+        // through the real wire bytes, with exact-accounting decode
+        let parsed = Packet::parse(&pb.to_bytes()).unwrap();
+        let mut acc = vec![0f32; g.len()];
+        b.decompress_accumulate(&parsed, &mut acc).unwrap();
+        let mse: f64 = g
+            .iter()
+            .zip(&acc)
+            .map(|(&x, &y)| ((x - y) as f64).powi(2))
+            .sum::<f64>()
+            / g.len() as f64;
+        assert!(mse < 0.1, "block-wire reconstruction mse {mse}");
+        // and a truncated block payload is a recoverable reject
+        let mut cut = parsed.clone();
+        cut.payload.truncate(cut.payload.len() / 2);
+        cut.payload_bits = cut.payload.len() as u64 * 8 + 1;
+        assert!(b.decompress_accumulate(&cut, &mut acc).is_err());
     }
 
     #[test]

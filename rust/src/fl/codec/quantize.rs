@@ -14,6 +14,7 @@
 //! on the wire).
 
 use crate::coding::arithmetic::ArithmeticCoder;
+use crate::coding::block::BlockCoder;
 use crate::coding::huffman::HuffmanCode;
 use crate::coding::EntropyCoder;
 use crate::fl::packet::{Packet, SchemeTag};
@@ -71,6 +72,13 @@ impl CodebookCodec<'_> {
                 let bits = p.len() as u64 * 8;
                 Ok((p, bits))
             }
+            WireCoder::Block => {
+                // the block coder is distribution-stateless: it refreshes
+                // its table per block, so it only needs the alphabet size
+                // the designed Huffman code already fixes
+                let coder = BlockCoder::new(self.huffman.lengths().len())?;
+                coder.encode_counted(symbols)
+            }
         }
     }
 
@@ -82,15 +90,32 @@ impl CodebookCodec<'_> {
         Ok((mu, sigma, payload, payload_bits))
     }
 
-    /// Inverse code stage: decode `n` symbols from a payload slice.
+    /// Inverse code stage: decode `n` symbols from a payload slice,
+    /// holding it to the exact-accounting contract — the slice must
+    /// physically cover `payload_bits` ([`Packet::ensure_covers`]) and,
+    /// for the bit-granular coders, the symbols must consume exactly
+    /// that many bits. Truncated payloads whose zero fill happens to
+    /// decode cleanly are rejected, not silently accepted.
     pub(crate) fn decode_symbols(
         &self,
         payload: &[u8],
         n: usize,
+        payload_bits: u64,
     ) -> Result<Vec<u8>> {
+        Packet::ensure_covers(payload, payload_bits)?;
         match self.wire {
-            WireCoder::Huffman => self.huffman.decode(payload, n),
+            WireCoder::Huffman => {
+                let mut out = vec![0u8; n];
+                self.huffman.decode_exact(payload, &mut out, payload_bits)?;
+                Ok(out)
+            }
+            // byte-granular coder: charged 8·len at encode, so the
+            // coverage check above is the whole contract
             WireCoder::Arithmetic => self.arith.decode(payload, n),
+            WireCoder::Block => {
+                let coder = BlockCoder::new(self.huffman.lengths().len())?;
+                coder.decode_exact(payload, n, payload_bits)
+            }
         }
     }
 
@@ -108,7 +133,8 @@ impl CodebookCodec<'_> {
                 "non-finite side info (μ={mu}, σ={sigma})")));
         }
         let d = packet.d as usize;
-        let symbols = self.decode_symbols(&packet.payload, d)?;
+        let symbols =
+            self.decode_symbols(&packet.payload, d, packet.payload_bits)?;
         self.codebook.dequantize_accumulate(&symbols, mu, sigma, acc);
         Ok(())
     }
@@ -131,7 +157,13 @@ impl CodebookCodec<'_> {
         let (indices, consumed) =
             transform::unpack_indices(d, &packet.payload)?;
         let k = indices.len();
-        let symbols = self.decode_symbols(&packet.payload[consumed..], k)?;
+        // `payload_bits` counts coded-value bits only (the index block
+        // is charged to `index_bits`), so it bounds exactly this slice
+        let symbols = self.decode_symbols(
+            &packet.payload[consumed..],
+            k,
+            packet.payload_bits,
+        )?;
         let mut vals = vec![0f32; k];
         self.codebook.dequantize_into(&symbols, mu, sigma, &mut vals);
         for (&i, &v) in indices.iter().zip(&vals) {

@@ -11,6 +11,20 @@ pub enum WireCoder {
     Huffman,
     /// static arithmetic coding (Shannon-bound reference)
     Arithmetic,
+    /// per-block canonical Huffman with table refresh + optional MTF
+    /// front end (the throughput tier, [`crate::coding::block`])
+    Block,
+}
+
+impl WireCoder {
+    /// Stable CLI / CSV name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            WireCoder::Huffman => "huffman",
+            WireCoder::Arithmetic => "arithmetic",
+            WireCoder::Block => "block",
+        }
+    }
 }
 
 /// Scheme selection + hyper-parameters.

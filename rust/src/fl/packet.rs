@@ -13,6 +13,22 @@
 //!
 //! Packets also serialize to real bytes (and parse back) so the wire
 //! format is honest, not just a counter.
+//!
+//! ## Block-coded payloads
+//!
+//! Under the block wire coder ([`crate::coding::block`]) the payload is
+//! a sequence of self-framing blocks — each carries a kind bit, an MTF
+//! flag and its own 4-bit-per-symbol code-length table ahead of the
+//! codewords. The per-block table-refresh overhead is *inside*
+//! `payload_bits` (the blocks physically occupy those bits), so
+//! [`Packet::total_bits`] charges it with no schema change;
+//! `table_bits` stays reserved for tables serialized *outside* the
+//! coded stream (QSGD's per-message table). Decoders must hold every
+//! payload to the exact-accounting contract: the declared
+//! `payload_bits` must be physically covered
+//! ([`Packet::ensure_covers`]) and the symbols must consume exactly
+//! that many bits — a truncated payload whose zero fill happens to
+//! decode cleanly is a reject, not a silent all-zero tail.
 
 use crate::util::{Error, Result};
 
@@ -107,6 +123,21 @@ impl Packet {
                 "malformed codebook version {ver}")));
         }
         Ok(ver as u32)
+    }
+
+    /// Reject a coded slice too short for a header-declared bit length —
+    /// the guard every decode path runs before touching coded bytes, so
+    /// hand-assembled or mutated packets (which never went through
+    /// [`Packet::parse`]'s equivalent check) cannot reach a decoder
+    /// whose zero fill would fabricate a valid-looking symbol tail.
+    pub fn ensure_covers(coded: &[u8], payload_bits: u64) -> Result<()> {
+        if (coded.len() as u64) * 8 < payload_bits {
+            return Err(Error::Coding(format!(
+                "payload holds {} bits, header declares {payload_bits}",
+                coded.len() * 8
+            )));
+        }
+        Ok(())
     }
 
     /// Serialize to actual bytes (header + side info + padded payload).
@@ -250,6 +281,15 @@ mod tests {
             p.side_info[2] = bad;
             assert!(p.side_version().is_err(), "version {bad} accepted");
         }
+    }
+
+    #[test]
+    fn ensure_covers_is_the_short_payload_guard() {
+        Packet::ensure_covers(&[0u8; 3], 24).unwrap();
+        Packet::ensure_covers(&[0u8; 3], 21).unwrap();
+        assert!(Packet::ensure_covers(&[0u8; 3], 25).is_err());
+        assert!(Packet::ensure_covers(&[], 1).is_err());
+        Packet::ensure_covers(&[], 0).unwrap();
     }
 
     #[test]

@@ -66,6 +66,8 @@ fn print_usage() {
          [--bits 3] [--lambda 0.05] [--rounds 100] [--clients-per-round 0]\n       \
          [--local-iters 1] [--batch 64] [--lr 0.01] [--seed 42]\n       \
          [--backend native|pjrt] [--model mlp_synthcifar] [--out file.csv]\n       \
+         [--wire huffman|arithmetic|block] (block = per-block-table\n       \
+         throughput tier)\n       \
          streaming round loop (the default executor):\n       \
          [--population N] (alias of --clients) [--cohort K] (alias of\n       \
          --clients-per-round) [--round-shards S] [--resident]\n       \
@@ -218,6 +220,7 @@ fn parse_config(args: &Args) -> Result<ExperimentConfig> {
     cfg.wire = match args.str_or("wire", "huffman").as_str() {
         "huffman" => WireCoder::Huffman,
         "arithmetic" => WireCoder::Arithmetic,
+        "block" => WireCoder::Block,
         other => return Err(Error::Config(format!("bad --wire {other:?}"))),
     };
     // closed-loop rate targeting: --rate-target turns the controller on

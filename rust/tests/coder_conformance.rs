@@ -1,12 +1,14 @@
 //! Coder conformance suite: one shared battery of symbol streams run
-//! through every entropy coder (Huffman, Arithmetic, LZW), asserting
-//! `decode(encode(x)) == x` on each, plus the Huffman-specific
-//! guarantee that `message_bits` is *exactly* the bit length `encode`
-//! produces (the RC design loop and the uplink ledger both depend on
+//! through every entropy coder (Huffman, Arithmetic, LZW, Block),
+//! asserting `decode(encode(x)) == x` on each, plus the guarantee that
+//! `message_bits` is *exactly* the bit length `encode` produces — for
+//! the baseline Huffman coder and for the block coder's self-framing
+//! payloads (the RC design loop and the uplink ledger both depend on
 //! that number being honest).
 
 use rcfed::coding::arithmetic::ArithmeticCoder;
 use rcfed::coding::bitio::BitWriter;
+use rcfed::coding::block::{BlockCoder, DEFAULT_BLOCK_LEN};
 use rcfed::coding::huffman::HuffmanCode;
 use rcfed::coding::lz::Lzw;
 use rcfed::coding::EntropyCoder;
@@ -96,7 +98,9 @@ fn every_coder_roundtrips_the_battery() {
         let huffman = HuffmanCode::from_freqs(&freqs).unwrap();
         let arith = ArithmeticCoder::from_freqs(&freqs).unwrap();
         let lzw = Lzw;
-        let coders: [&dyn EntropyCoder; 3] = [&huffman, &arith, &lzw];
+        let block = BlockCoder::new(case.nsym).unwrap();
+        let coders: [&dyn EntropyCoder; 4] =
+            [&huffman, &arith, &lzw, &block];
         for coder in coders {
             let payload = coder.encode(&case.stream).unwrap_or_else(|e| {
                 panic!("{}/{}: encode failed: {e}", coder.name(), case.name)
@@ -148,6 +152,65 @@ fn huffman_message_bits_is_exactly_what_encode_produces() {
 }
 
 #[test]
+fn block_message_bits_is_exactly_what_encode_produces() {
+    // the ledger-honesty contract extended to the throughput tier:
+    // `message_bits` must equal the bits `encode` emits *including*
+    // every block's self-framing table refresh, at the default block
+    // length and at small lengths that force multi-block streams,
+    // boundary-straddling tails and degenerate single-symbol blocks
+    for case in battery() {
+        for block_len in [DEFAULT_BLOCK_LEN, 64, 1000] {
+            let coder =
+                BlockCoder::with_block_len(case.nsym, block_len).unwrap();
+            let claimed = coder.message_bits(&case.stream).unwrap();
+            let (payload, bits) = coder.encode_counted(&case.stream).unwrap();
+            assert_eq!(
+                bits, claimed,
+                "{}/block_len={block_len}: message_bits lied about the \
+                 wire cost",
+                case.name
+            );
+            assert_eq!(
+                payload.len() as u64,
+                claimed.div_ceil(8),
+                "{}/block_len={block_len}: payload padding",
+                case.name
+            );
+            // and the exact-accounting decode closes the loop
+            let back = coder
+                .decode_exact(&payload, case.stream.len(), claimed)
+                .unwrap();
+            assert_eq!(
+                back, case.stream,
+                "{}/block_len={block_len}: roundtrip mismatch",
+                case.name
+            );
+        }
+    }
+}
+
+#[test]
+fn block_boundary_symbols_survive_every_alignment() {
+    // streams sized exactly at, one under and one over a block boundary
+    // — the tail block carries fewer symbols than block_len and must
+    // still frame, cost and decode exactly
+    let mut rng = Rng::new(0xB10C);
+    for block_len in [1usize, 2, 7, 64] {
+        for n in [block_len.saturating_sub(1), block_len, block_len + 1, 3 * block_len]
+        {
+            let stream: Vec<u8> =
+                (0..n).map(|_| rng.below(8) as u8).collect();
+            let coder = BlockCoder::with_block_len(8, block_len).unwrap();
+            let claimed = coder.message_bits(&stream).unwrap();
+            let (payload, bits) = coder.encode_counted(&stream).unwrap();
+            assert_eq!(bits, claimed, "block_len={block_len} n={n}");
+            let back = coder.decode_exact(&payload, n, claimed).unwrap();
+            assert_eq!(back, stream, "block_len={block_len} n={n}");
+        }
+    }
+}
+
+#[test]
 fn decoders_reject_or_zero_fill_truncated_payloads_without_panicking() {
     // conformance for the channel-corruption path: a truncated payload
     // must never panic any decoder — wrong symbols or Err are both
@@ -160,11 +223,27 @@ fn decoders_reject_or_zero_fill_truncated_payloads_without_panicking() {
         let huffman = HuffmanCode::from_freqs(&freqs).unwrap();
         let arith = ArithmeticCoder::from_freqs(&freqs).unwrap();
         let lzw = Lzw;
-        let coders: [&dyn EntropyCoder; 3] = [&huffman, &arith, &lzw];
+        let block = BlockCoder::new(case.nsym).unwrap();
+        let coders: [&dyn EntropyCoder; 4] =
+            [&huffman, &arith, &lzw, &block];
         for coder in coders {
             let payload = coder.encode(&case.stream).unwrap();
             for cut in [payload.len() / 2, 1, 0] {
                 let _ = coder.decode(&payload[..cut], case.stream.len());
+            }
+        }
+        // the exact-accounting block path goes further: truncation is a
+        // recoverable Err, never a zero-filled accept
+        let (payload, bits) = block.encode_counted(&case.stream).unwrap();
+        for cut in [payload.len() / 2, 1, 0] {
+            if (cut as u64 * 8) < bits {
+                assert!(
+                    block
+                        .decode_exact(&payload[..cut], case.stream.len(), bits)
+                        .is_err(),
+                    "{}: truncated block payload accepted at {cut} bytes",
+                    case.name
+                );
             }
         }
     }

@@ -102,7 +102,18 @@ fn compressors() -> Vec<Compressor> {
             WireCoder::Arithmetic,
         )
         .unwrap(),
+        Compressor::design(
+            CompressionScheme::RcFed {
+                bits: 3,
+                lambda: 0.05,
+                length_model: LengthModel::Huffman,
+            },
+            WireCoder::Block,
+        )
+        .unwrap(),
         Compressor::design(CompressionScheme::Lloyd { bits: 3 }, WireCoder::Huffman)
+            .unwrap(),
+        Compressor::design(CompressionScheme::Lloyd { bits: 3 }, WireCoder::Block)
             .unwrap(),
         Compressor::design(CompressionScheme::Qsgd { bits: 3 }, WireCoder::Huffman)
             .unwrap(),
@@ -153,6 +164,117 @@ fn decompress_never_panics_on_mutated_wire_bytes() {
             }
         }
     }
+}
+
+#[test]
+fn truncated_payloads_are_recoverable_rejects_for_every_wire() {
+    // the zero-fill bugfix battery: a payload physically shorter than
+    // the bit length its header declares must come back as a
+    // recoverable Err from every coded wire path — never a panic and
+    // never a silent zero-filled accept that corrupts the aggregate
+    let mut rng = Rng::new(0x7105);
+    let d = 600;
+    let mut grad = vec![0f32; d];
+    rng.fill_normal_f32(&mut grad, 0.0, 1.0);
+    for c in compressors() {
+        let pkt = c.compress(2, 1, &grad, &mut rng).unwrap();
+        if pkt.payload.is_empty() {
+            continue;
+        }
+        for keep in [0, 1, pkt.payload.len() / 2, pkt.payload.len() - 1] {
+            if keep >= pkt.payload.len() {
+                continue;
+            }
+            // cut bytes but keep the header's bit claim: the struct-level
+            // lie `ensure_covers`/exact decode must catch
+            let mut cut = pkt.clone();
+            cut.payload.truncate(keep);
+            let mut acc = vec![0f32; d];
+            assert!(
+                c.decompress_accumulate(&cut, &mut acc).is_err(),
+                "{} bytes of a {}-byte payload accepted",
+                keep,
+                pkt.payload.len()
+            );
+            assert!(acc.iter().all(|&x| x == 0.0), "partial accumulation");
+        }
+        // a wire image whose declared bit length exceeds the payload is
+        // already dead at parse (the header-level guard)
+        let mut bytes = pkt.to_bytes();
+        let lie = (pkt.payload.len() as u64 * 8 + 1).to_le_bytes();
+        bytes[14..20].copy_from_slice(&lie[..6]);
+        assert!(Packet::parse(&bytes).is_err());
+        // the intact packet still decodes after the battery
+        let mut acc = vec![0f32; d];
+        c.decompress_accumulate(&pkt, &mut acc).unwrap();
+    }
+}
+
+#[test]
+fn block_header_mutation_never_panics() {
+    // the block wire carries self-framing headers (kind bit, MTF flag,
+    // 4-bit length tables) *inside* the payload — stomp them directly:
+    // Kraft violations, empty tables, out-of-alphabet constant blocks
+    // and truncated tails must all surface as Err or as channel noise,
+    // never as a panic or over-read
+    let c = Compressor::design(
+        CompressionScheme::RcFed {
+            bits: 3,
+            lambda: 0.05,
+            length_model: LengthModel::Huffman,
+        },
+        WireCoder::Block,
+    )
+    .unwrap();
+    let mut rng = Rng::new(0xB10C);
+    let d = 900;
+    let mut grad = vec![0f32; d];
+    rng.fill_normal_f32(&mut grad, 0.0, 1.0);
+    let pkt = c.compress(0, 0, &grad, &mut rng).unwrap();
+    let clean = pkt.to_bytes();
+    let payload_start = clean.len() - pkt.payload.len();
+    for trial in 0..800 {
+        let mut bytes = clean.clone();
+        match trial % 4 {
+            0 => {
+                // stomp the first payload bytes — that's the first
+                // block's kind/flag/table header
+                let end = (payload_start + 1 + rng.below(6)).min(bytes.len());
+                for b in &mut bytes[payload_start..end] {
+                    *b = rng.next_u64() as u8;
+                }
+            }
+            1 => {
+                // flip single bits anywhere in the payload region
+                for _ in 0..4 {
+                    let bit = payload_start * 8
+                        + rng.below((bytes.len() - payload_start) * 8);
+                    bytes[bit / 8] ^= 1 << (bit % 8);
+                }
+            }
+            2 => {
+                // truncate inside the payload
+                let cut = payload_start + rng.below(pkt.payload.len());
+                bytes.truncate(cut);
+            }
+            _ => {
+                // stomp a random span anywhere (headers included)
+                let start = rng.below(bytes.len());
+                let end = (start + 1 + rng.below(12)).min(bytes.len());
+                for b in &mut bytes[start..end] {
+                    *b = rng.next_u64() as u8;
+                }
+            }
+        }
+        if let Ok(parsed) = Packet::parse(&bytes) {
+            let mut acc = vec![0f32; d];
+            let _ = c.decompress_accumulate(&parsed, &mut acc);
+        }
+    }
+    // the untouched packet still decodes
+    let mut acc = vec![0f32; d];
+    c.decompress_accumulate(&Packet::parse(&clean).unwrap(), &mut acc)
+        .unwrap();
 }
 
 #[test]

@@ -12,7 +12,7 @@ use rcfed::coordinator::experiment::{
 };
 use rcfed::coordinator::network::ChannelSpec;
 use rcfed::fl::compression::{
-    CompressionScheme, RateAllocation, RateTarget, TransformCfg,
+    CompressionScheme, RateAllocation, RateTarget, TransformCfg, WireCoder,
 };
 use rcfed::quant::rcq::LengthModel;
 
@@ -162,6 +162,32 @@ fn lossy_channel_survivor_sets() {
         ..ChannelSpec::ideal()
     };
     check("lossy", &cfg);
+}
+
+#[test]
+fn block_wire_coder() {
+    // the throughput tier rides the same streamed/resident split as the
+    // paper coder: per-block tables and the exact-accounting decode must
+    // not perturb the ledger or the trajectory on either side
+    let mut cfg = base();
+    cfg.wire = WireCoder::Block;
+    check("wblock", &cfg);
+}
+
+#[test]
+fn block_wire_coder_under_corruption() {
+    // corruption exercises the strict bit-accounting rejects (truncated
+    // or mutated block payloads) — accept/reject decisions must be
+    // identical across execution modes
+    let mut cfg = base();
+    cfg.rounds = 8;
+    cfg.wire = WireCoder::Block;
+    cfg.channel = ChannelSpec {
+        loss: 0.15,
+        corrupt: 0.15,
+        ..ChannelSpec::ideal()
+    };
+    check("wblock_lossy", &cfg);
 }
 
 #[test]
