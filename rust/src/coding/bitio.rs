@@ -53,6 +53,15 @@ impl BitWriter {
         self.total_bits
     }
 
+    /// Pad with zero bits to the next byte boundary (no-op when already
+    /// aligned) — one `push` instead of a 1-bit-at-a-time loop.
+    pub fn align_to_byte(&mut self) {
+        let rem = (self.total_bits % 8) as u32;
+        if rem != 0 {
+            self.push(0, 8 - rem);
+        }
+    }
+
     /// Flush and return the byte payload (final partial byte zero-padded).
     pub fn finish(mut self) -> Vec<u8> {
         while self.nbits > 0 {
@@ -330,6 +339,19 @@ mod tests {
         r.fill(); // at EOF: no-op
         assert_eq!(r.available(), 0);
         assert!(!r.overran());
+    }
+
+    #[test]
+    fn align_to_byte_pads_exactly() {
+        let mut w = BitWriter::new();
+        w.push(0b101, 3);
+        w.align_to_byte();
+        assert_eq!(w.bit_len(), 8);
+        w.align_to_byte(); // already aligned: no-op
+        assert_eq!(w.bit_len(), 8);
+        w.push(0xAB, 8);
+        let bytes = w.finish();
+        assert_eq!(bytes, vec![0b101, 0xAB]);
     }
 
     #[test]

@@ -14,6 +14,7 @@ use crate::fl::compression::{
     RoundAdaptation, TransformCfg, WireCoder,
 };
 use crate::fl::metrics::MetricsLog;
+use crate::fl::packet::Packet;
 use crate::fl::server::{LrSchedule, Server};
 use crate::fl::store::{ClientStore, ShardSource};
 use crate::model::native::NativeMlp;
@@ -26,6 +27,7 @@ use crate::coordinator::scheduler::{
     run_round, run_round_serial, select_clients, stream_round,
     stream_round_serial, RoundPlan,
 };
+use crate::coordinator::sweep::{effective_threads, parallel_map};
 use crate::util::mem::current_rss_kb;
 use crate::util::rng::Rng;
 use crate::util::timer::Timer;
@@ -461,6 +463,192 @@ fn stream_round_serial_shim<B: Backend + ?Sized>(
     )
 }
 
+/// One update's channel outcome after the serial delivery pass.
+/// Classification stays serial because [`SimulatedNetwork::deliver`]
+/// draws the channel RNG per packet — the parallel decode path is only
+/// byte-identical to the serial one if the draw order matches.
+enum Outcome<'a> {
+    /// intact delivery: decode the original packet (a decode failure
+    /// here is a run error, exactly as on the serial path)
+    Intact(&'a ClientUpdate),
+    /// corrupted but parseable: decode the re-parsed packet; failures
+    /// are channel noise, not run errors
+    Reparsed(&'a ClientUpdate, Packet),
+    /// corrupted beyond parsing: decode-error bookkeeping only
+    Unparseable(&'a ClientUpdate, Error),
+}
+
+/// Channel delivery + decode + accumulate for one round of updates.
+/// Returns `(survivors, Σ mean_loss over survivors, Σ coords sent)`.
+///
+/// With `threads > 1` the per-packet decodes fan out across
+/// [`parallel_map`] while everything order-sensitive stays serial:
+/// the channel draws (phase 1), then an ordered replay of the decoded
+/// reconstructions into the accumulator (phase 3). Each worker decodes
+/// into a private zero-filled `d`-vector and the replay folds those
+/// vectors in delivery order, so the accumulator sees the same
+/// additions in the same order as the serial path — byte-identical by
+/// construction ([`Server::accumulate_decoded`] spells out the f32
+/// argument; `tests/streaming_identity.rs` pins it). Peak extra memory
+/// is `O(threads · d)`: decode batches advance chunk by chunk.
+fn deliver_round(
+    round: usize,
+    updates: &[ClientUpdate],
+    network: &mut SimulatedNetwork,
+    server: &mut Server,
+    pipeline: &mut CompressionPipeline,
+    threads: usize,
+) -> Result<(usize, f64, u64)> {
+    let mut loss_acc = 0f64;
+    let mut survivors = 0usize;
+    let mut coords_sent = 0u64;
+    // `threads == 0` means hardware parallelism, as everywhere else
+    let workers = effective_threads(threads, updates.len());
+    if workers <= 1 || updates.len() <= 1 {
+        // serial reference path
+        for up in updates {
+            coords_sent += up.packet.d as u64;
+            match network.deliver(&up.packet) {
+                Delivery::Delivered { .. } => {
+                    // intact delivery decodes, or the run is broken
+                    server.receive(&*pipeline, &up.packet)?;
+                    // the stats sample (and the allocator's per-client
+                    // energy) ride with the packet, so only packets the
+                    // server actually ingested steer either controller
+                    pipeline.observe_delivery(&up.packet, &up.sample);
+                    survivors += 1;
+                    loss_acc += up.mean_loss as f64;
+                }
+                Delivery::Corrupted { bytes, .. } => {
+                    // the real wire path: parse → decode; failures are
+                    // channel noise, not run errors
+                    match server.receive_bytes(&*pipeline, &bytes) {
+                        Ok(()) => {
+                            pipeline.observe_delivery(&up.packet, &up.sample);
+                            survivors += 1;
+                            loss_acc += up.mean_loss as f64;
+                        }
+                        Err(e) => {
+                            network.note_decode_error();
+                            crate::debug!(
+                                "round {round}: client {} corrupt packet \
+                                 rejected: {e}",
+                                up.packet.client_id
+                            );
+                        }
+                    }
+                }
+                Delivery::Lost => {
+                    crate::debug!(
+                        "round {round}: client {} packet lost",
+                        up.packet.client_id
+                    );
+                }
+                Delivery::Straggled { secs } => {
+                    crate::debug!(
+                        "round {round}: client {} straggled ({secs:.3}s \
+                         deadline)",
+                        up.packet.client_id
+                    );
+                }
+            }
+        }
+        return Ok((survivors, loss_acc, coords_sent));
+    }
+    // phase 1 (serial): channel draws + wire parse, in delivery order
+    let mut outcomes: Vec<Outcome<'_>> = Vec::with_capacity(updates.len());
+    for up in updates {
+        coords_sent += up.packet.d as u64;
+        match network.deliver(&up.packet) {
+            Delivery::Delivered { .. } => {
+                outcomes.push(Outcome::Intact(up));
+            }
+            Delivery::Corrupted { bytes, .. } => match Packet::parse(&bytes) {
+                Ok(pkt) => outcomes.push(Outcome::Reparsed(up, pkt)),
+                Err(e) => outcomes.push(Outcome::Unparseable(up, e)),
+            },
+            Delivery::Lost => {
+                crate::debug!(
+                    "round {round}: client {} packet lost",
+                    up.packet.client_id
+                );
+            }
+            Delivery::Straggled { secs } => {
+                crate::debug!(
+                    "round {round}: client {} straggled ({secs:.3}s \
+                     deadline)",
+                    up.packet.client_id
+                );
+            }
+        }
+    }
+    let d = server.dim();
+    for chunk in outcomes.chunks(workers) {
+        // phase 2 (parallel): decode this chunk's packets, each into a
+        // private zero-filled reconstruction buffer
+        let todo: Vec<&Packet> = chunk
+            .iter()
+            .filter_map(|o| match o {
+                Outcome::Intact(up) => Some(&up.packet),
+                Outcome::Reparsed(_, pkt) => Some(pkt),
+                Outcome::Unparseable(..) => None,
+            })
+            .collect();
+        let dec: &CompressionPipeline = pipeline;
+        let mut decoded = parallel_map(&todo, workers, |_, pkt: &&Packet| {
+            if pkt.d as usize != d {
+                // mirror Server::receive's pre-decode dimension check
+                return Err(Error::Coding(format!(
+                    "packet d={} vs model d={}", pkt.d, d)));
+            }
+            let mut recon = vec![0f32; d];
+            dec.decompress_accumulate(pkt, &mut recon)?;
+            Ok(recon)
+        })
+        .into_iter();
+        // phase 3 (serial): replay in delivery order
+        for outcome in chunk {
+            match outcome {
+                Outcome::Intact(up) => {
+                    let recon: Vec<f32> =
+                        decoded.next().expect("one result per packet")?;
+                    server.accumulate_decoded(&recon)?;
+                    pipeline.observe_delivery(&up.packet, &up.sample);
+                    survivors += 1;
+                    loss_acc += up.mean_loss as f64;
+                }
+                Outcome::Reparsed(up, _) => {
+                    match decoded.next().expect("one result per packet") {
+                        Ok(recon) => {
+                            server.accumulate_decoded(&recon)?;
+                            pipeline.observe_delivery(&up.packet, &up.sample);
+                            survivors += 1;
+                            loss_acc += up.mean_loss as f64;
+                        }
+                        Err(e) => {
+                            network.note_decode_error();
+                            crate::debug!(
+                                "round {round}: client {} corrupt packet \
+                                 rejected: {e}",
+                                up.packet.client_id
+                            );
+                        }
+                    }
+                }
+                Outcome::Unparseable(up, e) => {
+                    network.note_decode_error();
+                    crate::debug!(
+                        "round {round}: client {} corrupt packet \
+                         rejected: {e}",
+                        up.packet.client_id
+                    );
+                }
+            }
+        }
+    }
+    Ok((survivors, loss_acc, coords_sent))
+}
+
 /// The round loop, generic over backend.
 #[allow(clippy::too_many_arguments)]
 fn drive<B: Backend>(
@@ -549,56 +737,10 @@ fn drive<B: Backend>(
         // uplink: every update goes through the channel; only survivors
         // reach the aggregate, which the server averages over `received`
         // so it stays unbiased over whoever made it through
-        let mut loss_acc = 0f64;
-        let mut survivors = 0usize;
-        let mut coords_sent = 0u64;
-        for up in &updates {
-            coords_sent += up.packet.d as u64;
-            match network.deliver(&up.packet) {
-                Delivery::Delivered { .. } => {
-                    // intact delivery decodes, or the run is broken
-                    server.receive(&*pipeline, &up.packet)?;
-                    // the stats sample (and the allocator's per-client
-                    // energy) ride with the packet, so only packets the
-                    // server actually ingested steer either controller
-                    pipeline.observe_delivery(&up.packet, &up.sample);
-                    survivors += 1;
-                    loss_acc += up.mean_loss as f64;
-                }
-                Delivery::Corrupted { bytes, .. } => {
-                    // the real wire path: parse → decode; failures are
-                    // channel noise, not run errors
-                    match server.receive_bytes(&*pipeline, &bytes) {
-                        Ok(()) => {
-                            pipeline.observe_delivery(&up.packet, &up.sample);
-                            survivors += 1;
-                            loss_acc += up.mean_loss as f64;
-                        }
-                        Err(e) => {
-                            network.note_decode_error();
-                            crate::debug!(
-                                "round {round}: client {} corrupt packet \
-                                 rejected: {e}",
-                                up.packet.client_id
-                            );
-                        }
-                    }
-                }
-                Delivery::Lost => {
-                    crate::debug!(
-                        "round {round}: client {} packet lost",
-                        up.packet.client_id
-                    );
-                }
-                Delivery::Straggled { secs } => {
-                    crate::debug!(
-                        "round {round}: client {} straggled ({secs:.3}s \
-                         deadline)",
-                        up.packet.client_id
-                    );
-                }
-            }
-        }
+        let (survivors, loss_acc, coords_sent) = deliver_round(
+            round, &updates, &mut network, &mut server, pipeline,
+            config.threads,
+        )?;
         if survivors > 0 {
             server.step()?;
         } else {

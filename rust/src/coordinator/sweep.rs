@@ -44,7 +44,7 @@ use crate::util::Result;
 
 /// Resolve a requested worker count: 0 ⇒ hardware parallelism, always
 /// clamped to the number of jobs and at least 1.
-fn effective_threads(requested: usize, jobs: usize) -> usize {
+pub(crate) fn effective_threads(requested: usize, jobs: usize) -> usize {
     let t = if requested == 0 {
         std::thread::available_parallelism().map(|x| x.get()).unwrap_or(1)
     } else {

@@ -21,7 +21,9 @@
 //! state out of a `ClientStore` and shares scratch across the cohort.
 
 use crate::data::Shard;
-use crate::fl::compression::{CompressionPipeline, TransformState};
+use crate::fl::compression::{
+    CodecScratch, CompressionPipeline, TransformState,
+};
 use crate::fl::packet::Packet;
 use crate::model::Backend;
 use crate::util::rng::Rng;
@@ -60,6 +62,8 @@ pub struct RoundScratch {
     local: Vec<f32>,
     xs: Vec<f32>,
     ys: Vec<i32>,
+    /// encode-side symbol/recon buffers (see [`CodecScratch`])
+    codec: CodecScratch,
 }
 
 impl RoundScratch {
@@ -133,8 +137,14 @@ pub fn run_client_round<B: Backend + ?Sized>(
     {
         *g = (p0 - pl) * inv_lr;
     }
-    let packet = pipeline.compress_with(
-        &mut state.codec, id, round, &scratch.grad, &mut state.rng)?;
+    let packet = pipeline.compress_with_scratch(
+        &mut state.codec,
+        &mut scratch.codec,
+        id,
+        round,
+        &scratch.grad,
+        &mut state.rng,
+    )?;
     // stats sample: the staged path captured a working-set sample
     // when a transform is active; otherwise reuse the (μ, σ) the
     // compressor just computed over the dense gradient

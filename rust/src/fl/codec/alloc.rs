@@ -12,7 +12,9 @@ use crate::util::{Error, Result};
 
 use super::design::{codebook_broadcast_bits, designed_codebook};
 use super::pipeline::RateTarget;
-use super::quantize::{encode_staged, CodebookCodec, QuantBackend};
+use super::quantize::{
+    encode_staged, CodebookCodec, CodecScratch, QuantBackend,
+};
 use super::scheme::{CompressionScheme, WireCoder};
 use super::transform::{TransformCfg, TransformState};
 
@@ -513,6 +515,7 @@ impl RateAllocator {
     pub(crate) fn compress_with(
         &self,
         state: &mut TransformState,
+        scratch: &mut CodecScratch,
         client_id: u32,
         round: u32,
         grad: &[f32],
@@ -533,6 +536,7 @@ impl RateAllocator {
                 &backend,
                 self.transform,
                 state,
+                scratch,
                 client_id,
                 round,
                 grad,
@@ -545,7 +549,7 @@ impl RateAllocator {
             return Ok(pkt);
         }
         let (mu, sigma, payload, payload_bits) =
-            design.codec(self.wire).encode(grad)?;
+            design.codec(self.wire).encode(grad, &mut scratch.symbols)?;
         Ok(Packet {
             client_id,
             round,

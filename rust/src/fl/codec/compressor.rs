@@ -12,8 +12,8 @@ use crate::util::{Error, Result};
 
 use super::design::designed_codebook;
 use super::quantize::{
-    decode_sparse_fp32, encode_staged, qsgd_encode, CodebookCodec, Kernel,
-    QuantBackend,
+    decode_sparse_fp32, encode_staged, qsgd_encode, qsgd_table_bytes,
+    CodebookCodec, CodecScratch, Kernel, QuantBackend,
 };
 use super::scheme::{CompressionScheme, WireCoder};
 use super::transform::{TransformCfg, TransformState};
@@ -122,7 +122,8 @@ impl Compressor {
             let mut tmp = TransformState::new();
             return self.compress_with(&mut tmp, client_id, round, grad, rng);
         }
-        self.compress_dense(client_id, round, grad, rng)
+        let mut scratch = CodecScratch::new();
+        self.compress_dense(&mut scratch, client_id, round, grad, rng)
     }
 
     /// Compress through the full staged path, threading the caller's
@@ -136,15 +137,21 @@ impl Compressor {
         grad: &[f32],
         rng: &mut Rng,
     ) -> Result<Packet> {
-        self.compress_with_sample(state, client_id, round, grad, rng, false)
+        let mut scratch = CodecScratch::new();
+        self.compress_with_sample(
+            state, &mut scratch, client_id, round, grad, rng, false)
     }
 
     /// [`Self::compress_with`] plus the adaptive controller's stats
     /// capture (the sample lands in `state`; see
-    /// [`TransformState::take_sample`]).
+    /// [`TransformState::take_sample`]) and the caller's reusable
+    /// [`CodecScratch`] (the round loop threads one per worker, so the
+    /// hot path allocates nothing after warm-up).
+    #[allow(clippy::too_many_arguments)]
     pub(crate) fn compress_with_sample(
         &self,
         state: &mut TransformState,
+        scratch: &mut CodecScratch,
         client_id: u32,
         round: u32,
         grad: &[f32],
@@ -152,12 +159,13 @@ impl Compressor {
         capture_sample: bool,
     ) -> Result<Packet> {
         if !self.transform.is_active() {
-            return self.compress_dense(client_id, round, grad, rng);
+            return self.compress_dense(scratch, client_id, round, grad, rng);
         }
         encode_staged(
             &self.backend(),
             self.transform,
             state,
+            scratch,
             client_id,
             round,
             grad,
@@ -169,9 +177,11 @@ impl Compressor {
     }
 
     /// The legacy dense hot path — byte-identical to the pre-codec
-    /// module for every scheme.
+    /// module for every scheme. The quantize stage writes into the
+    /// caller's reusable symbol buffer.
     fn compress_dense(
         &self,
+        scratch: &mut CodecScratch,
         client_id: u32,
         round: u32,
         grad: &[f32],
@@ -185,7 +195,8 @@ impl Compressor {
                     arith,
                     wire: self.wire,
                 };
-                let (mu, sigma, payload, payload_bits) = codec.encode(grad)?;
+                let (mu, sigma, payload, payload_bits) =
+                    codec.encode(grad, &mut scratch.symbols)?;
                 Ok(Packet {
                     client_id,
                     round,
@@ -265,7 +276,8 @@ impl Compressor {
             Kernel::Qsgd(q) => {
                 // read the code-length table from the payload head, then
                 // decode the symbol stream with the rebuilt canonical code
-                let table_bytes = (5 * q.num_symbols()).div_ceil(8);
+                // (table geometry shared with `qsgd_encode`)
+                let table_bytes = qsgd_table_bytes(q.num_symbols());
                 if packet.payload.len() < table_bytes {
                     return Err(Error::Coding("qsgd packet too short".into()));
                 }

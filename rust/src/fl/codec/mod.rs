@@ -51,5 +51,6 @@ pub use design::{design_cache_stats, designed_codebook, DesignCacheStats};
 pub use pipeline::{
     CompressionPipeline, PacketDecoder, RateTarget, RoundAdaptation,
 };
+pub use quantize::CodecScratch;
 pub use scheme::{CompressionScheme, WireCoder};
 pub use transform::{Transform, TransformCfg, TransformState};

@@ -13,7 +13,7 @@ use crate::util::{Error, Result};
 use super::alloc::{AllocSnapshot, RateAllocation, RateAllocator};
 use super::compressor::Compressor;
 use super::design::{codebook_broadcast_bits, designed_adaptive_codebook};
-use super::quantize::{sample_normalized, Kernel};
+use super::quantize::{sample_normalized, CodecScratch, Kernel};
 use super::scheme::{CompressionScheme, WireCoder};
 use super::transform::{TransformCfg, TransformState};
 
@@ -332,11 +332,31 @@ impl CompressionPipeline {
         grad: &[f32],
         rng: &mut Rng,
     ) -> Result<Packet> {
+        let mut scratch = CodecScratch::new();
+        self.compress_with_scratch(
+            state, &mut scratch, client_id, round, grad, rng)
+    }
+
+    /// The round loop's hot entry point: [`Self::compress_with`] plus
+    /// the worker's reusable [`CodecScratch`], so a warm worker encodes
+    /// without allocating symbol/recon buffers. Byte-identical to
+    /// [`Self::compress_with`] — scratch is a buffer-reuse knob, never a
+    /// results knob.
+    pub fn compress_with_scratch(
+        &self,
+        state: &mut TransformState,
+        scratch: &mut CodecScratch,
+        client_id: u32,
+        round: u32,
+        grad: &[f32],
+        rng: &mut Rng,
+    ) -> Result<Packet> {
         if let Some(alloc) = &self.alloc {
-            return alloc.compress_with(state, client_id, round, grad, rng);
+            return alloc.compress_with(
+                state, scratch, client_id, round, grad, rng);
         }
         let mut pkt = self.compressor.compress_with_sample(
-            state, client_id, round, grad, rng, self.adaptive)?;
+            state, scratch, client_id, round, grad, rng, self.adaptive)?;
         if self.adaptive {
             pkt.side_info.push(self.version as f32);
         }

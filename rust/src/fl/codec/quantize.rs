@@ -31,6 +31,26 @@ use super::transform::{self, TransformCfg, TransformState, WorkingSet};
 /// pipeline's dense sampler and the staged sparse sampler).
 pub(crate) const SAMPLES_PER_UPDATE: usize = 2048;
 
+/// Reusable per-worker encode scratch: the symbol and reconstruction
+/// buffers every quantize/encode pass needs. Rides in the round loop's
+/// `RoundScratch` and is shared across the clients a worker drives, so
+/// the staged hot path allocates nothing after the first warm-up round
+/// (buffers are cleared/overwritten before every use — no state leaks
+/// between clients). The stats *sample* is deliberately not scratch: it
+/// is owned by the `ClientUpdate` and rides across the round boundary
+/// into the controller's observe pass.
+#[derive(Debug, Default)]
+pub struct CodecScratch {
+    pub(crate) symbols: Vec<u8>,
+    pub(crate) recon: Vec<f32>,
+}
+
+impl CodecScratch {
+    pub fn new() -> CodecScratch {
+        CodecScratch::default()
+    }
+}
+
 pub(crate) enum Kernel {
     /// normalize → codebook → static code (RC-FED / Lloyd / NQFL / Uniform)
     Codebook {
@@ -51,12 +71,18 @@ pub(crate) struct CodebookCodec<'a> {
 }
 
 impl CodebookCodec<'_> {
-    /// Quantize stage: normalize and map one value set to symbols.
-    pub(crate) fn quantize(&self, values: &[f32]) -> (f32, f32, Vec<u8>) {
+    /// Quantize stage: normalize and map one value set to symbols,
+    /// written into the caller's reusable buffer (cleared + resized to
+    /// exactly `values.len()` — capacity-aware, no doubling growth on a
+    /// multi-million-coordinate gradient).
+    pub(crate) fn quantize(
+        &self,
+        values: &[f32],
+        symbols: &mut Vec<u8>,
+    ) -> (f32, f32) {
         let (mu, sigma) = mean_std(values);
-        let mut symbols = Vec::new();
-        self.codebook.quantize_normalized(values, mu, sigma, &mut symbols);
-        (mu, sigma, symbols)
+        self.codebook.quantize_normalized(values, mu, sigma, symbols);
+        (mu, sigma)
     }
 
     /// Code stage: entropy-encode a symbol stream under the configured
@@ -83,10 +109,15 @@ impl CodebookCodec<'_> {
     }
 
     /// Normalize and encode one gradient; returns `(μ, σ, payload,
-    /// payload_bits)` — the fused dense hot path.
-    pub(crate) fn encode(&self, grad: &[f32]) -> Result<(f32, f32, Vec<u8>, u64)> {
-        let (mu, sigma, symbols) = self.quantize(grad);
-        let (payload, payload_bits) = self.code(&symbols)?;
+    /// payload_bits)` — the fused dense hot path. `symbols` is the
+    /// caller's reusable quantize buffer (see [`CodecScratch`]).
+    pub(crate) fn encode(
+        &self,
+        grad: &[f32],
+        symbols: &mut Vec<u8>,
+    ) -> Result<(f32, f32, Vec<u8>, u64)> {
+        let (mu, sigma) = self.quantize(grad, symbols);
+        let (payload, payload_bits) = self.code(symbols)?;
         Ok((mu, sigma, payload, payload_bits))
     }
 
@@ -213,6 +244,21 @@ pub(crate) struct QsgdEncoded {
     pub(crate) table_bits: u64,
 }
 
+/// QSGD code-length-table width per symbol on the wire (bits).
+const QSGD_LEN_BITS: u64 = 5;
+
+/// Byte-padded size of QSGD's travelling code-length table, in bits —
+/// the ONE place the `5 bits/symbol, byte-aligned` arithmetic lives
+/// (shared by the encode side and the decoder's table-strip offset).
+pub(crate) fn qsgd_table_bits(num_symbols: usize) -> u64 {
+    (QSGD_LEN_BITS * num_symbols as u64).div_ceil(8) * 8
+}
+
+/// Same quantity in whole bytes (the decoder's payload-head offset).
+pub(crate) fn qsgd_table_bytes(num_symbols: usize) -> usize {
+    (qsgd_table_bits(num_symbols) / 8) as usize
+}
+
 /// Per-message Huffman from the empirical symbol histogram. QSGD has no
 /// universal design distribution, so the code LENGTH TABLE physically
 /// travels at the payload head (5 bits per alphabet symbol, byte-padded)
@@ -223,22 +269,21 @@ pub(crate) fn qsgd_encode(
     rng: &mut Rng,
 ) -> Result<QsgdEncoded> {
     let msg = q.encode(values, rng);
-    let hist: Vec<u64> = {
-        let mut h = vec![0u64; q.num_symbols()];
-        for &s in &msg.symbols {
-            h[s as usize] += 1;
-        }
-        h
-    };
+    let mut hist = vec![0u64; q.num_symbols()];
+    for &s in &msg.symbols {
+        hist[s as usize] += 1;
+    }
     let code = HuffmanCode::from_freqs(&hist)?;
-    let table_bits = (5 * q.num_symbols() as u64).div_ceil(8) * 8;
-    let mut w = crate::coding::bitio::BitWriter::new();
+    let table_bits = qsgd_table_bits(q.num_symbols());
+    // table bytes + ~1 byte/symbol upper estimate for the coded stream
+    let mut w = crate::coding::bitio::BitWriter::with_capacity(
+        (table_bits / 8) as usize + msg.symbols.len(),
+    );
     for &l in code.lengths() {
-        w.push(l as u64, 5);
+        w.push(l as u64, QSGD_LEN_BITS as u32);
     }
-    while w.bit_len() < table_bits {
-        w.push(0, 1); // pad table to a byte boundary
-    }
+    w.align_to_byte();
+    debug_assert_eq!(w.bit_len(), table_bits);
     let payload_bits = code.message_bits(&msg.symbols);
     code.encode_into(&msg.symbols, &mut w)?;
     Ok(QsgdEncoded { msg, payload: w.finish(), payload_bits, table_bits })
@@ -255,29 +300,39 @@ pub(crate) fn sample_normalized(
 ) -> Vec<f32> {
     let s = sigma.max(crate::quant::codebook::SIGMA_FLOOR);
     let stride = values.len().div_ceil(SAMPLES_PER_UPDATE).max(1);
-    values.iter().step_by(stride).map(|&g| (g - mu) / s).collect()
+    // exact-capacity allocation: the sample is owned output (it rides
+    // into the controller's observe pass), so it cannot be scratch, but
+    // it must not grow by doubling either
+    let mut out = Vec::with_capacity(values.len().div_ceil(stride));
+    out.extend(values.iter().step_by(stride).map(|&g| (g - mu) / s));
+    out
 }
 
 /// Everything the staged encoder produced while the working-set borrow
-/// was alive; owned, so [`transform::absorb`] can run afterwards.
+/// was alive; owned, so [`transform::absorb`] can run afterwards. The
+/// reconstruction is NOT here — it lands in the caller's
+/// [`CodecScratch::recon`] buffer (disjoint from the transform state, so
+/// the borrow is fine) and is read back by `absorb`.
 struct Encoded {
     side_info: Vec<f32>,
     payload: Vec<u8>,
     payload_bits: u64,
     table_bits: u64,
     index_bits: u64,
-    recon: Vec<f32>,
     sample: Option<Vec<f32>>,
 }
 
 /// Run the staged Transform → Quantize → Code path into a packet. Only
 /// active transform configurations come through here; `capture_sample`
-/// stashes the adaptive controller's stats sample into `state`.
+/// stashes the adaptive controller's stats sample into `state`;
+/// `scratch` carries the reusable symbol/recon buffers (allocation-free
+/// after warm-up).
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn encode_staged(
     backend: &QuantBackend<'_>,
     cfg: TransformCfg,
     state: &mut TransformState,
+    scratch: &mut CodecScratch,
     client_id: u32,
     round: u32,
     grad: &[f32],
@@ -292,6 +347,7 @@ pub(crate) fn encode_staged(
             "cannot sparsify an empty gradient".into()));
     }
     let want_recon = cfg.error_feedback;
+    scratch.recon.clear();
     let enc: Encoded = {
         let ws = transform::forward(cfg, grad, state);
         let (values, sparse_indices): (&[f32], Option<&[u32]>) = match ws {
@@ -300,8 +356,9 @@ pub(crate) fn encode_staged(
         };
         match backend {
             QuantBackend::Codebook(codec) => {
-                let (mu, sigma, symbols) = codec.quantize(values);
-                let (coded, payload_bits) = codec.code(&symbols)?;
+                let (mu, sigma) =
+                    codec.quantize(values, &mut scratch.symbols);
+                let (coded, payload_bits) = codec.code(&scratch.symbols)?;
                 let (payload, index_bits) = match sparse_indices {
                     None => (coded, 0),
                     Some(idx) => {
@@ -310,13 +367,11 @@ pub(crate) fn encode_staged(
                         (head, bits)
                     }
                 };
-                let recon = if want_recon {
-                    let mut r = vec![0f32; symbols.len()];
-                    codec.codebook.dequantize_into(&symbols, mu, sigma, &mut r);
-                    r
-                } else {
-                    Vec::new()
-                };
+                if want_recon {
+                    scratch.recon.resize(scratch.symbols.len(), 0.0);
+                    codec.codebook.dequantize_into(
+                        &scratch.symbols, mu, sigma, &mut scratch.recon);
+                }
                 let sample = capture_sample
                     .then(|| sample_normalized(values, mu, sigma));
                 Encoded {
@@ -325,20 +380,16 @@ pub(crate) fn encode_staged(
                     payload_bits,
                     table_bits: 0, // universal design-time code (§3.1)
                     index_bits,
-                    recon,
                     sample,
                 }
             }
             QuantBackend::Qsgd(q) => {
                 // dense only (sparse × qsgd is rejected at validation)
                 let e = qsgd_encode(q, values, rng)?;
-                let recon = if want_recon {
-                    let mut r = vec![0f32; values.len()];
-                    q.decode_into(&e.msg, &mut r);
-                    r
-                } else {
-                    Vec::new()
-                };
+                if want_recon {
+                    scratch.recon.resize(values.len(), 0.0);
+                    q.decode_into(&e.msg, &mut scratch.recon);
+                }
                 Encoded {
                     // one 32-bit ‖v‖ per bucket — bucketing's real cost
                     side_info: e.msg.norms,
@@ -346,7 +397,6 @@ pub(crate) fn encode_staged(
                     payload_bits: e.payload_bits,
                     table_bits: e.table_bits,
                     index_bits: 0,
-                    recon,
                     sample: None,
                 }
             }
@@ -364,21 +414,21 @@ pub(crate) fn encode_staged(
                         (head, bits)
                     }
                 };
-                let recon =
-                    if want_recon { values.to_vec() } else { Vec::new() };
+                if want_recon {
+                    scratch.recon.extend_from_slice(values);
+                }
                 Encoded {
                     side_info: vec![],
                     payload,
                     payload_bits,
                     table_bits: 0,
                     index_bits,
-                    recon,
                     sample: None,
                 }
             }
         }
     };
-    transform::absorb(cfg, d, &enc.recon, state);
+    transform::absorb(cfg, d, &scratch.recon, state);
     if let Some(sample) = enc.sample {
         state.set_sample(sample);
     }

@@ -123,8 +123,10 @@ pub struct TransformState {
     /// sparse working set of the last forward pass
     values: Vec<f32>,
     indices: Vec<u32>,
-    /// top-k selection scratch (index permutation)
+    /// top-k selection scratch (candidate index set)
     order: Vec<u32>,
+    /// top-k pivot-sample scratch (strided |value| subsample)
+    pivot: Vec<f32>,
     /// stats sample captured by the staged path on adaptive runs
     sample: Option<Vec<f32>>,
     /// ‖residual‖₂ after the last compress (NaN while EF is off)
@@ -145,6 +147,7 @@ impl Default for TransformState {
             values: Vec::new(),
             indices: Vec::new(),
             order: Vec::new(),
+            pivot: Vec::new(),
             sample: None,
             last_ef_norm: f64::NAN,
             last_sparsity: f64::NAN,
@@ -206,12 +209,13 @@ pub(crate) fn forward<'a>(
             }
         }
         Transform::TopK { ratio } => {
-            let TransformState { scratch, values, indices, order, .. } =
-                state;
+            let TransformState {
+                scratch, values, indices, order, pivot, ..
+            } = state;
             let src: &[f32] =
                 if cfg.error_feedback { scratch.as_slice() } else { grad };
             let k = topk_count(src.len(), ratio);
-            select_topk(src, k, order, indices, values);
+            select_topk(src, k, order, pivot, indices, values);
             WorkingSet::Sparse { indices: &*indices, values: &*values }
         }
     }
@@ -270,15 +274,33 @@ pub(crate) fn topk_count(d: usize, ratio: f64) -> usize {
     ((d as f64 * ratio).ceil() as usize).clamp(1, d)
 }
 
+/// Strided pivot-sample budget for the threshold-first top-k pass.
+const PIVOT_SAMPLE: usize = 1024;
+
 /// Deterministic top-k selection by |value|, ties broken toward the
 /// lower index (a strict total order, so the selected *set* is unique
-/// however the partition shuffles). Output indices ascend. `order` is
-/// caller-owned scratch (the hot path reuses the state's buffer, so
-/// selection is allocation-free after warm-up).
+/// however the partition shuffles). Output indices ascend. `order` and
+/// `pivot_buf` are caller-owned scratch (the hot path reuses the
+/// state's buffers, so selection is allocation-free after warm-up).
+///
+/// §Perf (threshold-first): for large `d`, feeding all `d` indices to
+/// `select_nth_unstable_by` costs an O(d) partition over an
+/// index-indirect comparator. Instead a strided |value| sample picks a
+/// pivot at twice the keep fraction's rank (safety margin), one
+/// branch-free pass collects the candidates that survive the pivot —
+/// typically ≈ 2k ≪ d — and only the candidate set enters the
+/// selection. The candidate test `!(|v| < pivot)` keeps every NaN (NaN
+/// magnitudes rank above +∞ under `total_cmp`, so they are always
+/// selected first), and a pivot that overshoots (fewer than k
+/// candidates) falls back to the full index set. Because the selected
+/// set is unique under the strict total order, the fast path is
+/// byte-identical to the reference (`select_topk_reference`, test-only)
+/// on every input — the in-module differential tests pin this.
 fn select_topk(
     src: &[f32],
     k: usize,
     order: &mut Vec<u32>,
+    pivot_buf: &mut Vec<f32>,
     indices: &mut Vec<u32>,
     values: &mut Vec<f32>,
 ) {
@@ -288,8 +310,65 @@ fn select_topk(
     if k == 0 || d == 0 {
         return;
     }
+    let cmp = |a: &u32, b: &u32| {
+        let ma = src[*a as usize].abs();
+        let mb = src[*b as usize].abs();
+        mb.total_cmp(&ma).then_with(|| a.cmp(b))
+    };
     order.clear();
-    order.extend(0..d as u32);
+    if k < d && d > PIVOT_SAMPLE {
+        let stride = d.div_ceil(PIVOT_SAMPLE).max(1);
+        pivot_buf.clear();
+        pivot_buf.extend(src.iter().step_by(stride).map(|v| v.abs()));
+        let m = pivot_buf.len();
+        // pivot rank: 2× the keep fraction, so the expected candidate
+        // count is ≈ 2k — cheap insurance against sampling error
+        let frac = k as f64 / d as f64;
+        let r = ((2.0 * frac * m as f64) as usize).min(m - 1);
+        pivot_buf.select_nth_unstable_by(r, |a, b| b.total_cmp(a));
+        let pivot = pivot_buf[r];
+        // negated compare: NaN fails `<`, so NaNs stay candidates; a
+        // NaN pivot admits everything (degenerates to full selection)
+        for (i, &v) in src.iter().enumerate() {
+            if !(v.abs() < pivot) {
+                order.push(i as u32);
+            }
+        }
+        if order.len() < k {
+            // the unsampled tail was heavier than the sample suggested:
+            // correctness first, take the full index set
+            order.clear();
+            order.extend(0..d as u32);
+        }
+    } else {
+        order.extend(0..d as u32);
+    }
+    if k < order.len() {
+        order.select_nth_unstable_by(k - 1, cmp);
+        order.truncate(k);
+    }
+    order.sort_unstable();
+    indices.extend_from_slice(order);
+    values.extend(order.iter().map(|&i| src[i as usize]));
+}
+
+/// Scalar reference for [`select_topk`]: full `d`-element selection, no
+/// pivot pre-pass. The differential tests pin the fast path's output
+/// byte-identical to this oracle.
+#[cfg(test)]
+fn select_topk_reference(
+    src: &[f32],
+    k: usize,
+    indices: &mut Vec<u32>,
+    values: &mut Vec<f32>,
+) {
+    indices.clear();
+    values.clear();
+    let d = src.len();
+    if k == 0 || d == 0 {
+        return;
+    }
+    let mut order: Vec<u32> = (0..d as u32).collect();
     let cmp = |a: &u32, b: &u32| {
         let ma = src[*a as usize].abs();
         let mb = src[*b as usize].abs();
@@ -300,7 +379,7 @@ fn select_topk(
         order.truncate(k);
     }
     order.sort_unstable();
-    indices.extend_from_slice(order);
+    indices.extend_from_slice(&order);
     values.extend(order.iter().map(|&i| src[i as usize]));
 }
 
@@ -402,16 +481,76 @@ mod tests {
     #[test]
     fn topk_selection_is_deterministic_with_index_tiebreak() {
         let src = [1.0f32, -3.0, 2.0, -2.0, 0.5, 2.0];
-        let mut order = Vec::new();
+        let (mut order, mut pivot) = (Vec::new(), Vec::new());
         let (mut idx, mut vals) = (Vec::new(), Vec::new());
-        select_topk(&src, 3, &mut order, &mut idx, &mut vals);
+        select_topk(&src, 3, &mut order, &mut pivot, &mut idx, &mut vals);
         // |−3| > |2| (index 2 beats the tied index 5) > |−2|
         assert_eq!(idx, vec![1, 2, 3]);
         assert_eq!(vals, vec![-3.0, 2.0, -2.0]);
         // k = d keeps everything, ascending
-        select_topk(&src, 6, &mut order, &mut idx, &mut vals);
+        select_topk(&src, 6, &mut order, &mut pivot, &mut idx, &mut vals);
         assert_eq!(idx, vec![0, 1, 2, 3, 4, 5]);
         assert_eq!(vals.len(), 6);
+    }
+
+    /// Fast (threshold-first) path vs full-selection oracle, byte-level.
+    fn assert_topk_matches_reference(src: &[f32], k: usize, tag: &str) {
+        let (mut order, mut pivot) = (Vec::new(), Vec::new());
+        let (mut idx, mut vals) = (Vec::new(), Vec::new());
+        select_topk(src, k, &mut order, &mut pivot, &mut idx, &mut vals);
+        let (mut ridx, mut rvals) = (Vec::new(), Vec::new());
+        select_topk_reference(src, k, &mut ridx, &mut rvals);
+        assert_eq!(idx, ridx, "{tag}: index set diverged (k={k})");
+        let a: Vec<u32> = vals.iter().map(|v| v.to_bits()).collect();
+        let b: Vec<u32> = rvals.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(a, b, "{tag}: values diverged bitwise (k={k})");
+    }
+
+    #[test]
+    fn topk_threshold_path_matches_reference() {
+        // d > PIVOT_SAMPLE so the pivot pre-pass engages
+        let d = 5000usize;
+        // deterministic pseudo-random values with sign flips and a
+        // heavy-tailed spread (no external RNG in unit tests)
+        let mut x = 0x243F6A8885A308D3u64;
+        let src: Vec<f32> = (0..d)
+            .map(|_| {
+                x ^= x << 13;
+                x ^= x >> 7;
+                x ^= x << 17;
+                let u = (x >> 40) as f32 / (1u64 << 24) as f32; // [0,1)
+                (u - 0.5) * (1.0 + (x & 0xF) as f32)
+            })
+            .collect();
+        for k in [1usize, 10, 50, 500, 2500, 4999, 5000] {
+            assert_topk_matches_reference(&src, k, "random");
+        }
+        // exact ties everywhere: selection must resolve by index alone
+        let ties: Vec<f32> =
+            (0..d).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        for k in [1usize, 100, 2048] {
+            assert_topk_matches_reference(&ties, k, "ties");
+        }
+        // all zeros: pivot is 0, every coordinate is a candidate
+        let zeros = vec![0f32; d];
+        assert_topk_matches_reference(&zeros, 37, "zeros");
+        // NaNs scattered in: NaN magnitudes sort above everything under
+        // total_cmp and must survive the candidate filter
+        let mut nans = src.clone();
+        for i in (0..d).step_by(701) {
+            nans[i] = f32::NAN;
+        }
+        for k in [3usize, 64, 1500] {
+            assert_topk_matches_reference(&nans, k, "nan");
+        }
+        // mostly-zero input with a few spikes: the pivot collapses to 0
+        // and the fallback logic must not drop the spikes
+        let mut spikes = vec![0f32; d];
+        spikes[7] = 9.0;
+        spikes[4096] = -11.0;
+        for k in [1usize, 2, 100] {
+            assert_topk_matches_reference(&spikes, k, "spikes");
+        }
     }
 
     #[test]

@@ -97,6 +97,28 @@ impl Server {
         self.receive(decoder, &packet)
     }
 
+    /// Fold an already-decoded reconstruction into the accumulator.
+    ///
+    /// The parallel delivery path decodes each packet into a private
+    /// zero-filled buffer off-thread, then replays the buffers here *in
+    /// delivery order*. Because the per-packet decode writes into a
+    /// fresh zeroed buffer and this fold adds the buffers serially in
+    /// the same order the serial path adds packets, the accumulator is
+    /// byte-identical to [`receive`](Self::receive)-ing the packets one
+    /// by one (f32 addition is non-associative across *different*
+    /// orders, but the order here is the same).
+    pub fn accumulate_decoded(&mut self, recon: &[f32]) -> Result<()> {
+        if recon.len() != self.dim() {
+            return Err(Error::Coding(format!(
+                "decoded d={} vs model d={}", recon.len(), self.dim())));
+        }
+        for (a, &g) in self.acc.iter_mut().zip(recon) {
+            *a += g;
+        }
+        self.received += 1;
+        Ok(())
+    }
+
     /// Packets successfully ingested since `begin_round`.
     pub fn received(&self) -> usize {
         self.received

@@ -9,12 +9,31 @@
 //! `rust/tests/pjrt_roundtrip.rs`. For the small alphabets RC-FED uses
 //! (≤ 64 levels) a branch-free linear compare-sum beats binary search on
 //! modern cores for b ≤ 4 and stays competitive at b = 6; we pick the
-//! strategy per width.
+//! strategy per width (cutoff: [`SMALL_MAX_BOUNDS`]).
+//!
+//! Perf architecture: the wide-alphabet (b ≥ 5) bin table is built at
+//! *design time* — the bin structure lives in the normalized domain and
+//! is invariant under the per-packet affine `(μ, σ)` map — so an apply
+//! touches no per-call table build. The dequantize side premultiplies
+//! `σ·s_l + μ` into a ≤ 256-entry table per packet, reducing the per
+//! coordinate work to a single gather (+ add). Every fast kernel has a
+//! `*_reference` scalar twin pinned byte-identical by
+//! `tests/quantizer_kernels.rs`.
 
 use crate::util::{Error, Result};
 
 /// Sigma floor shared with the Pallas kernel (see kernels/quantize.py).
 pub const SIGMA_FLOOR: f32 = 1e-8;
+
+/// Small-alphabet cutoff shared by every apply kernel: alphabets with at
+/// most this many interior boundaries (b ≤ 4, i.e. ≤ 16 levels) take the
+/// branch-free compare-sum; wider ones take the binned lookup (block
+/// kernel) or binary search (`index_of`). One constant so the scalar and
+/// block paths can never disagree about which strategy a width gets.
+pub const SMALL_MAX_BOUNDS: usize = 15;
+
+/// Uniform lookup bins in the design-time wide-alphabet table.
+const BINS: usize = 2048;
 
 /// A scalar quantizer: sorted reconstruction levels + interior boundaries.
 #[derive(Clone, Debug, PartialEq)]
@@ -23,6 +42,46 @@ pub struct Codebook {
     pub levels: Vec<f32>,
     /// interior boundaries `u_1 < … < u_{N-1}` (len = N − 1)
     pub bounds: Vec<f32>,
+    /// Design-time bin table for the wide-alphabet quantize path (empty
+    /// for small alphabets). Bin `k` of the uniform grid over
+    /// `[bounds[0], bounds[n-1]]` stores the `(min_c, max_c)` bracket of
+    /// boundary indices any normalized value mapped to that bin can
+    /// straddle. The bin structure lives in the *normalized* domain, so
+    /// it is invariant under the per-packet affine `(μ, σ)` map and is
+    /// built exactly once per codebook instead of per quantize call.
+    /// Brackets are widened by one grid cell on each side so the
+    /// f32-rounded apply-time bin index (which can land one cell off the
+    /// exact edge comparison) always yields a valid bracket.
+    bins: Vec<(u8, u8)>,
+    /// Grid origin / scale captured at design time; the apply path must
+    /// use these exact f32 values for the bracket guarantee to hold.
+    bin_lo: f32,
+    bin_scale: f32,
+}
+
+/// Build the design-time bin table over normalized boundaries.
+fn build_bins(bounds: &[f32]) -> (Vec<(u8, u8)>, f32, f32) {
+    let n = bounds.len();
+    let lo = bounds[0];
+    let span = (bounds[n - 1] - lo).max(f32::MIN_POSITIVE);
+    let scale = BINS as f32 / span;
+    let mut bins = Vec::with_capacity(BINS);
+    for k in 0..BINS {
+        let min_c = if k == 0 {
+            0
+        } else {
+            let start = lo + (k - 1) as f32 / scale;
+            bounds.partition_point(|&u| u < start) as u8
+        };
+        let max_c = if k + 2 >= BINS {
+            n as u8
+        } else {
+            let end = lo + (k + 2) as f32 / scale;
+            bounds.partition_point(|&u| u < end) as u8
+        };
+        bins.push((min_c, max_c));
+    }
+    (bins, lo, scale)
 }
 
 impl Codebook {
@@ -34,8 +93,23 @@ impl Codebook {
                 bounds.len()
             )));
         }
-        let cb = Codebook { levels, bounds };
+        let mut cb = Codebook {
+            levels,
+            bounds,
+            bins: Vec::new(),
+            bin_lo: 0.0,
+            bin_scale: 0.0,
+        };
         cb.validate()?;
+        // u8 brackets cap the table at 255 boundaries (b ≤ 8 — every
+        // alphabet the codec can express); wider books fall back to
+        // per-coordinate binary search.
+        if cb.bounds.len() > SMALL_MAX_BOUNDS && cb.bounds.len() <= u8::MAX as usize {
+            let (bins, lo, scale) = build_bins(&cb.bounds);
+            cb.bins = bins;
+            cb.bin_lo = lo;
+            cb.bin_scale = scale;
+        }
         Ok(cb)
     }
 
@@ -109,7 +183,7 @@ impl Codebook {
     /// Index of the cell containing `z`: `#{j : u_j < z}`.
     #[inline]
     pub fn index_of(&self, z: f32) -> u8 {
-        if self.bounds.len() <= 16 {
+        if self.bounds.len() <= SMALL_MAX_BOUNDS {
             // branch-free compare-sum (mirrors the Pallas kernel)
             let mut idx = 0u8;
             for &u in &self.bounds {
@@ -127,7 +201,7 @@ impl Codebook {
     pub fn quantize_slice(&self, z: &[f32], out: &mut Vec<u8>) {
         out.clear();
         out.reserve(z.len());
-        if self.bounds.len() <= 16 {
+        if self.bounds.len() <= SMALL_MAX_BOUNDS {
             for &x in z {
                 let mut idx = 0u8;
                 for &u in &self.bounds {
@@ -161,14 +235,15 @@ impl Codebook {
         let s = sigma.max(SIGMA_FLOOR);
         out.clear();
         out.resize(g.len(), 0);
-        // boundaries in the raw domain (f64 to avoid double-rounding the
-        // affine map; result rounded once to f32)
-        let raw: Vec<f32> = self
-            .bounds
-            .iter()
-            .map(|&u| (u as f64 * s as f64 + mu as f64) as f32)
-            .collect();
-        if raw.len() <= 15 {
+        if self.bounds.len() <= SMALL_MAX_BOUNDS {
+            // boundaries in the raw domain (f64 to avoid double-rounding
+            // the affine map; result rounded once to f32) — stack-resident,
+            // no per-call allocation
+            let mut raw = [0f32; SMALL_MAX_BOUNDS];
+            let raw = &mut raw[..self.bounds.len()];
+            for (r, &u) in raw.iter_mut().zip(&self.bounds) {
+                *r = (u as f64 * s as f64 + mu as f64) as f32;
+            }
             // small alphabet: SIMD compare-sum over L1-resident blocks.
             // i32 accumulators keep the whole block in packed-SIMD form
             // (cmpps + psubd, 8 lanes); one narrowing pass at the end.
@@ -177,7 +252,7 @@ impl Codebook {
             for (gb, ob) in g.chunks(BLK).zip(out.chunks_mut(BLK)) {
                 let acc = &mut acc[..gb.len()];
                 acc.fill(0);
-                for &u in &raw {
+                for &u in raw.iter() {
                     for (a, &x) in acc.iter_mut().zip(gb) {
                         *a += (x > u) as i32;
                     }
@@ -186,42 +261,73 @@ impl Codebook {
                     *o = a as u8;
                 }
             }
-        } else {
-            // wide alphabet (b ≥ 5): binned lookup. The boundary span is
-            // split into 2048 uniform bins; each bin knows the (min, max)
-            // cell it can contain, so almost every coordinate resolves
-            // with one multiply + two loads, with a short compare loop
-            // only when a boundary crosses the bin (~3% of bins).
-            const BINS: usize = 2048;
-            let n = raw.len();
-            let lo = raw[0];
-            let hi = raw[n - 1];
-            let span = (hi - lo).max(f32::MIN_POSITIVE);
-            let scale = BINS as f32 / span;
-            let mut bins = Vec::with_capacity(BINS);
-            for k in 0..BINS {
-                let start = lo + k as f32 / scale;
-                let end = lo + (k + 1) as f32 / scale;
-                let min_c = raw.partition_point(|&u| u < start) as u8;
-                // the last bin is open-ended so tail values past hi
-                // (and float-rounded bin edges) resolve correctly
-                let max_c = if k == BINS - 1 {
-                    n as u8
-                } else {
-                    raw.partition_point(|&u| u < end) as u8
-                };
-                bins.push((min_c, max_c));
-            }
+        } else if !self.bins.is_empty() {
+            // wide alphabet (b ≥ 5): design-time binned lookup. The bin
+            // table lives in the normalized domain (invariant under the
+            // affine map), so the per-call cost is one division; each
+            // coordinate is normalized (sub + mul), resolved to a bin
+            // with one multiply + two loads, and finished by a short
+            // compare loop over the bin's (widened) boundary bracket.
+            // Result ≡ `index_of((x − μ)·inv)` for every input, including
+            // NaN (→ symbol 0) and boundary-exact values.
+            let inv = 1.0f32 / s;
+            let lo = self.bin_lo;
+            let scale = self.bin_scale;
+            let bounds = &self.bounds[..];
+            let bins = &self.bins[..];
             for (o, &x) in out.iter_mut().zip(g) {
-                let k = (((x - lo) * scale) as i32).clamp(0, BINS as i32 - 1)
+                let z = (x - mu) * inv;
+                let k = (((z - lo) * scale) as i32).clamp(0, BINS as i32 - 1)
                     as usize;
                 let (min_c, max_c) = bins[k];
                 let mut c = min_c;
-                // rare: bin straddles one (occasionally two) boundaries
+                // rare: bracket straddles a boundary (plus the one-cell
+                // widening margin)
                 for j in min_c..max_c {
-                    c += (raw[j as usize] < x) as u8;
+                    c += (bounds[j as usize] < z) as u8;
                 }
                 *o = c;
+            }
+        } else {
+            // > 255 boundaries: no u8-indexed bin table; binary search
+            let inv = 1.0f32 / s;
+            for (o, &x) in out.iter_mut().zip(g) {
+                *o = self.index_of((x - mu) * inv);
+            }
+        }
+    }
+
+    /// Scalar reference for [`quantize_normalized`]: the same per-width
+    /// affine semantics with none of the blocking/binning machinery. The
+    /// differential suite (`tests/quantizer_kernels.rs`) pins the fast
+    /// kernels byte-identical to this oracle.
+    pub fn quantize_normalized_reference(
+        &self,
+        g: &[f32],
+        mu: f32,
+        sigma: f32,
+        out: &mut Vec<u8>,
+    ) {
+        let s = sigma.max(SIGMA_FLOOR);
+        out.clear();
+        out.reserve(g.len());
+        if self.bounds.len() <= SMALL_MAX_BOUNDS {
+            let raw: Vec<f32> = self
+                .bounds
+                .iter()
+                .map(|&u| (u as f64 * s as f64 + mu as f64) as f32)
+                .collect();
+            for &x in g {
+                let mut c = 0u8;
+                for &u in &raw {
+                    c += (x > u) as u8;
+                }
+                out.push(c);
+            }
+        } else {
+            let inv = 1.0f32 / s;
+            for &x in g {
+                out.push(self.index_of((x - mu) * inv));
             }
         }
     }
@@ -232,8 +338,52 @@ impl Codebook {
         self.levels[idx as usize]
     }
 
+    /// Premultiplied reconstruction table `t[l] = σ·s_l + μ` — the exact
+    /// f32 expression the scalar path evaluates per coordinate, computed
+    /// once per packet (≤ 256 entries) so dequantize is a single gather
+    /// (+ add) per coordinate. Byte-identical by construction.
+    #[inline]
+    fn premul_table(&self, mu: f32, sigma: f32, t: &mut [f32; 256]) {
+        let s = sigma.max(SIGMA_FLOOR);
+        for (ti, &l) in t.iter_mut().zip(&self.levels) {
+            *ti = s * l + mu;
+        }
+    }
+
     /// De-normalize symbols into `out[i] = sigma * s_idx + mu` (PS side).
     pub fn dequantize_into(
+        &self,
+        symbols: &[u8],
+        mu: f32,
+        sigma: f32,
+        out: &mut [f32],
+    ) {
+        let mut t = [0f32; 256];
+        self.premul_table(mu, sigma, &mut t);
+        for (o, &i) in out.iter_mut().zip(symbols) {
+            *o = t[i as usize];
+        }
+    }
+
+    /// Accumulate de-normalized symbols: `acc[i] += sigma * s_idx + mu`.
+    /// The PS aggregation path (avoids materializing per-client vectors).
+    pub fn dequantize_accumulate(
+        &self,
+        symbols: &[u8],
+        mu: f32,
+        sigma: f32,
+        acc: &mut [f32],
+    ) {
+        let mut t = [0f32; 256];
+        self.premul_table(mu, sigma, &mut t);
+        for (o, &i) in acc.iter_mut().zip(symbols) {
+            *o += t[i as usize];
+        }
+    }
+
+    /// Scalar reference for [`dequantize_into`] (differential oracle):
+    /// evaluates `σ·s_idx + μ` per coordinate, no premultiplied table.
+    pub fn dequantize_into_reference(
         &self,
         symbols: &[u8],
         mu: f32,
@@ -246,9 +396,8 @@ impl Codebook {
         }
     }
 
-    /// Accumulate de-normalized symbols: `acc[i] += sigma * s_idx + mu`.
-    /// The PS aggregation path (avoids materializing per-client vectors).
-    pub fn dequantize_accumulate(
+    /// Scalar reference for [`dequantize_accumulate`] (differential oracle).
+    pub fn dequantize_accumulate_reference(
         &self,
         symbols: &[u8],
         mu: f32,
@@ -383,6 +532,66 @@ mod tests {
                         "i={i} x={x} r={r}");
             }
         }
+    }
+
+    #[test]
+    fn wide_path_matches_index_of() {
+        // the design-time bin cache must reproduce `index_of((x−μ)·inv)`
+        // exactly — including values far outside the boundary span and
+        // exact interior boundaries
+        let levels: Vec<f64> = (0..64).map(|i| (i as f64 - 31.5) / 8.0).collect();
+        let bounds: Vec<f64> =
+            levels.windows(2).map(|w| 0.5 * (w[0] + w[1])).collect();
+        let cb = Codebook::from_f64(&levels, &bounds).unwrap();
+        let (mu, sigma) = (0.3f32, 1.7f32);
+        let s = sigma.max(SIGMA_FLOOR);
+        let inv = 1.0f32 / s;
+        let mut rng = Rng::new(7);
+        let mut g = vec![0f32; 4096];
+        rng.fill_normal_f32(&mut g, mu, sigma);
+        g.extend_from_slice(&[-1e30, 1e30, f32::NAN, mu]);
+        for &u in &cb.bounds {
+            // place raw inputs so the normalized value is near/at u
+            g.push(u * s + mu);
+        }
+        let mut sym = Vec::new();
+        cb.quantize_normalized(&g, mu, sigma, &mut sym);
+        for (i, &x) in g.iter().enumerate() {
+            assert_eq!(sym[i], cb.index_of((x - mu) * inv), "i={i} x={x}");
+        }
+        // normalized passthrough (μ=0, σ=1): boundary-exact inputs must
+        // land in the lower cell in the fast path too
+        let mut zb = cb.bounds.clone();
+        zb.push(f32::NAN);
+        cb.quantize_normalized(&zb, 0.0, 1.0, &mut sym);
+        for (j, _) in cb.bounds.iter().enumerate() {
+            assert_eq!(sym[j] as usize, j, "boundary {j}");
+        }
+        assert_eq!(sym[cb.bounds.len()], 0, "NaN maps to symbol 0");
+    }
+
+    #[test]
+    fn dequantize_matches_reference() {
+        let cb = simple();
+        let mut rng = Rng::new(9);
+        let sym: Vec<u8> = (0..257).map(|_| (rng.next_u64() % 4) as u8).collect();
+        let (mu, sigma) = (0.25f32, 2.5f32);
+        let mut fast = vec![0f32; sym.len()];
+        let mut slow = vec![0f32; sym.len()];
+        cb.dequantize_into(&sym, mu, sigma, &mut fast);
+        cb.dequantize_into_reference(&sym, mu, sigma, &mut slow);
+        assert_eq!(
+            fast.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            slow.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        let mut afast = vec![0.5f32; sym.len()];
+        let mut aslow = vec![0.5f32; sym.len()];
+        cb.dequantize_accumulate(&sym, mu, sigma, &mut afast);
+        cb.dequantize_accumulate_reference(&sym, mu, sigma, &mut aslow);
+        assert_eq!(
+            afast.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            aslow.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
     }
 
     #[test]

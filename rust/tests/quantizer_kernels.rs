@@ -1,0 +1,215 @@
+//! Differential suite pinning the fast quantizer kernels byte-identical
+//! to their scalar references.
+//!
+//! The apply-path kernels in `quant::codebook` (blocked compare-sum for
+//! small alphabets, design-time binned lookup for wide ones, and the
+//! premultiplied dequantize tables) are performance rewrites of the
+//! per-coordinate scalar semantics `Q((g − μ)/max(σ, floor))` and
+//! `σ·s_l + μ`. They carry `*_reference` twins that state those
+//! semantics with none of the machinery; every test here drives both
+//! over the same inputs and compares **bit patterns**, not tolerances —
+//! the speed tier claims byte-identity, so approximate agreement is a
+//! failure.
+
+use rcfed::fl::compression::{designed_codebook, CompressionScheme};
+use rcfed::quant::codebook::{Codebook, SIGMA_FLOOR, SMALL_MAX_BOUNDS};
+use rcfed::util::rng::Rng;
+
+/// One ulp toward +∞ (finite inputs; bit-level, no std feature gates).
+fn ulp_up(x: f32) -> f32 {
+    let b = x.to_bits();
+    if x == 0.0 {
+        f32::from_bits(1)
+    } else if b >> 31 == 0 {
+        f32::from_bits(b + 1)
+    } else {
+        f32::from_bits(b - 1)
+    }
+}
+
+/// One ulp toward −∞.
+fn ulp_down(x: f32) -> f32 {
+    -ulp_up(-x)
+}
+
+/// Designed books covering both apply paths: b ∈ 1..=4 stays on the
+/// small compare-sum path (≤ 15 boundaries), b ∈ 5..=8 crosses
+/// `SMALL_MAX_BOUNDS` onto the binned path.
+fn designed_books() -> Vec<(u32, Codebook)> {
+    (1..=8)
+        .map(|bits| {
+            let (cb, _) =
+                designed_codebook(CompressionScheme::Lloyd { bits }).unwrap();
+            (bits, cb)
+        })
+        .collect()
+}
+
+/// A book too wide for the u8 bin table: exercises the binary-search
+/// fallback (no `bins`, still must match the reference).
+fn oversized_book() -> Codebook {
+    let levels: Vec<f64> =
+        (0..300).map(|i| (i as f64 - 149.5) / 40.0).collect();
+    let bounds: Vec<f64> =
+        levels.windows(2).map(|w| 0.5 * (w[0] + w[1])).collect();
+    Codebook::from_f64(&levels, &bounds).unwrap()
+}
+
+/// Adversarial input battery for one (codebook, μ, σ) triple.
+fn input_battery(cb: &Codebook, mu: f32, sigma: f32, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    let mut g = vec![0f32; 8192];
+    rng.fill_normal_f32(&mut g, mu, sigma);
+    // non-finite + extreme magnitudes
+    g.extend_from_slice(&[
+        f32::NAN,
+        f32::INFINITY,
+        f32::NEG_INFINITY,
+        -1e30,
+        1e30,
+        0.0,
+        -0.0,
+        f32::MIN_POSITIVE,
+        -f32::MIN_POSITIVE,
+        mu,
+    ]);
+    // boundary-exact raw inputs: the normalized value lands on (or one
+    // ulp around) each interior boundary — the `u_l < z ≤ u_{l+1}`
+    // lower-cell rule must agree across paths
+    let s = sigma.max(SIGMA_FLOOR);
+    for &u in &cb.bounds {
+        let raw = (u as f64 * s as f64 + mu as f64) as f32;
+        g.push(raw);
+        g.push(ulp_up(raw));
+        g.push(ulp_down(raw));
+    }
+    g
+}
+
+fn assert_symbols_match(cb: &Codebook, g: &[f32], mu: f32, sigma: f32, tag: &str) {
+    let (mut fast, mut slow) = (Vec::new(), Vec::new());
+    cb.quantize_normalized(g, mu, sigma, &mut fast);
+    cb.quantize_normalized_reference(g, mu, sigma, &mut slow);
+    assert_eq!(fast.len(), g.len(), "{tag}: output length");
+    for (i, (&f, &s)) in fast.iter().zip(&slow).enumerate() {
+        assert_eq!(f, s, "{tag}: symbol diverged at i={i} (x={})", g[i]);
+    }
+}
+
+fn assert_dequant_matches(cb: &Codebook, sym: &[u8], mu: f32, sigma: f32, tag: &str) {
+    let mut fast = vec![0f32; sym.len()];
+    let mut slow = vec![0f32; sym.len()];
+    cb.dequantize_into(sym, mu, sigma, &mut fast);
+    cb.dequantize_into_reference(sym, mu, sigma, &mut slow);
+    for (i, (f, s)) in fast.iter().zip(&slow).enumerate() {
+        assert_eq!(
+            f.to_bits(),
+            s.to_bits(),
+            "{tag}: dequantize_into diverged at i={i}"
+        );
+    }
+    // accumulate twins, folded onto a non-trivial accumulator
+    let mut afast: Vec<f32> = (0..sym.len()).map(|i| i as f32 * 0.25 - 3.0).collect();
+    let mut aslow = afast.clone();
+    cb.dequantize_accumulate(sym, mu, sigma, &mut afast);
+    cb.dequantize_accumulate_reference(sym, mu, sigma, &mut aslow);
+    for (i, (f, s)) in afast.iter().zip(&aslow).enumerate() {
+        assert_eq!(
+            f.to_bits(),
+            s.to_bits(),
+            "{tag}: dequantize_accumulate diverged at i={i}"
+        );
+    }
+}
+
+#[test]
+fn quantize_fast_paths_match_reference_across_widths() {
+    for (bits, cb) in designed_books() {
+        if bits <= 4 {
+            assert!(
+                cb.bounds.len() <= SMALL_MAX_BOUNDS,
+                "b={bits} expected on the small path"
+            );
+        } else {
+            assert!(
+                cb.bounds.len() > SMALL_MAX_BOUNDS,
+                "b={bits} expected on the binned path"
+            );
+        }
+        for (mu, sigma) in [(0.0f32, 1.0f32), (0.3, 1.7), (-2.5, 0.04)] {
+            let g = input_battery(&cb, mu, sigma, 0xC0DE + bits as u64);
+            assert_symbols_match(&cb, &g, mu, sigma, &format!("b={bits}"));
+        }
+    }
+}
+
+#[test]
+fn quantize_degenerate_sigma_matches_reference() {
+    // σ = 0 engages the SIGMA_FLOOR: normalized magnitudes explode, so
+    // every path must saturate identically (and identically handle the
+    // exactly-μ coordinate, which normalizes to 0)
+    for (bits, cb) in designed_books() {
+        let g = input_battery(&cb, 1.25, 0.0, 0xF100D + bits as u64);
+        assert_symbols_match(&cb, &g, 1.25, 0.0, &format!("b={bits} σ=0"));
+    }
+}
+
+#[test]
+fn quantize_empty_and_degenerate_inputs() {
+    for (bits, cb) in designed_books() {
+        let mut out = vec![7u8; 3];
+        cb.quantize_normalized(&[], 0.0, 1.0, &mut out);
+        assert!(out.is_empty(), "b={bits}: empty input must clear output");
+        // single coordinate, all paths
+        assert_symbols_match(&cb, &[0.5], 0.0, 1.0, &format!("b={bits} d=1"));
+    }
+}
+
+#[test]
+fn oversized_book_uses_search_fallback_and_matches() {
+    let cb = oversized_book();
+    assert!(cb.bounds.len() > u8::MAX as usize);
+    for (mu, sigma) in [(0.0f32, 1.0f32), (0.7, 2.2)] {
+        let g = input_battery(&cb, mu, sigma, 0xB16);
+        assert_symbols_match(&cb, &g, mu, sigma, "oversized");
+    }
+}
+
+#[test]
+fn dequantize_tables_match_reference_across_widths() {
+    let mut rng = Rng::new(0xDEC0DE);
+    for (bits, cb) in designed_books() {
+        let n = cb.levels.len() as u64;
+        // cover every symbol plus a long random tail (256 levels for
+        // b = 8: `i as u8` wraps exactly once around the alphabet)
+        let mut sym: Vec<u8> = (0..cb.levels.len()).map(|i| i as u8).collect();
+        sym.extend((0..4099).map(|_| (rng.next_u64() % n) as u8));
+        for (mu, sigma) in [(0.0f32, 1.0f32), (0.25, 2.5), (3.0, 0.0)] {
+            assert_dequant_matches(&cb, &sym, mu, sigma, &format!("b={bits}"));
+        }
+    }
+}
+
+#[test]
+fn quantize_dequantize_roundtrip_is_fixed_point() {
+    // quantizing an already-reconstructed vector must be stable: the
+    // symbols of recon(symbols) equal the original symbols (levels lie
+    // strictly inside their cells) — a joint sanity check that the fast
+    // quantize and the premultiplied dequantize agree about the affine
+    // map, on both the small and the binned path
+    for bits in [3u32, 6] {
+        let (cb, _) =
+            designed_codebook(CompressionScheme::Lloyd { bits }).unwrap();
+        let (mu, sigma) = (0.4f32, 1.9f32);
+        let mut rng = Rng::new(0x57AB1E + bits as u64);
+        let mut g = vec![0f32; 2048];
+        rng.fill_normal_f32(&mut g, mu, sigma);
+        let mut sym = Vec::new();
+        cb.quantize_normalized(&g, mu, sigma, &mut sym);
+        let mut rec = vec![0f32; g.len()];
+        cb.dequantize_into(&sym, mu, sigma, &mut rec);
+        let mut sym2 = Vec::new();
+        cb.quantize_normalized(&rec, mu, sigma, &mut sym2);
+        assert_eq!(sym, sym2, "b={bits}: roundtrip not a fixed point");
+    }
+}

@@ -201,6 +201,67 @@ fn population_larger_than_cohort() {
 }
 
 #[test]
+fn decode_thread_count_does_not_change_results() {
+    // the parallel server decode-accumulate (and the client worker pool
+    // that shares the same `threads` knob) is a throughput lever, never
+    // a results lever: `threads = 1` drives the serial reference decode
+    // loop, everything else fans packet decodes out and replays them in
+    // delivery order — byte-identical by construction, pinned here
+    // across the three paths with distinct decode planes (plain shared
+    // codebook under a lossy channel, per-client allocated codebooks,
+    // sparse top-k + error feedback)
+    let lossy = {
+        let mut cfg = base();
+        cfg.rounds = 8;
+        cfg.channel = ChannelSpec {
+            loss: 0.2,
+            availability: 0.85,
+            corrupt: 0.1,
+            ..ChannelSpec::ideal()
+        };
+        cfg
+    };
+    let allocated = {
+        let mut cfg = base();
+        cfg.scheme = CompressionScheme::Lloyd { bits: 3 };
+        cfg.alloc = RateAllocation::WaterFill {
+            budget_bpc: 2.5,
+            adapt_every: 2,
+            min_bits: 1,
+            max_bits: 6,
+        };
+        cfg.channel = ChannelSpec {
+            uplink_bps: 1e6,
+            bandwidth_spread: 0.4,
+            ..ChannelSpec::ideal()
+        };
+        cfg
+    };
+    let sparse = {
+        let mut cfg = base();
+        cfg.scheme = CompressionScheme::Lloyd { bits: 3 };
+        cfg.transform = TransformCfg::topk(0.25).with_ef();
+        cfg
+    };
+    for (tag, cfg) in
+        [("lossy", lossy), ("alloc", allocated), ("sparse", sparse)]
+    {
+        let mut cfg = cfg;
+        cfg.threads = 1;
+        let reference = run_experiment(&cfg).unwrap();
+        for threads in [0usize, 2, 3] {
+            cfg.threads = threads;
+            let got = run_experiment(&cfg).unwrap();
+            assert_identical(
+                &format!("threads_{tag}_{threads}"),
+                &reference,
+                &got,
+            );
+        }
+    }
+}
+
+#[test]
 fn shard_count_does_not_change_results() {
     // the worker-pool shard count is a throughput knob, never a results
     // knob: any sharding must reduce to the same ordered stream
