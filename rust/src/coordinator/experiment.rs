@@ -10,8 +10,8 @@ use crate::data::synth::ShardGen;
 use crate::data::{DatasetConfig, DatasetKind, FederatedDataset};
 use crate::fl::client::{Client, ClientUpdate};
 use crate::fl::compression::{
-    CompressionPipeline, CompressionScheme, RateAllocation, RateTarget,
-    RoundAdaptation, TransformCfg, WireCoder,
+    CompressionPipeline, CompressionScheme, DeltaCodec, Direction,
+    RateAllocation, RateTarget, RoundAdaptation, TransformCfg, WireCoder,
 };
 use crate::fl::metrics::MetricsLog;
 use crate::fl::packet::Packet;
@@ -97,6 +97,12 @@ pub struct ExperimentConfig {
     /// byte-identical to the pre-codec behavior), error feedback and/or
     /// top-k sparsification
     pub transform: TransformCfg,
+    /// server→client model-delta compression through the
+    /// direction-agnostic [`DeltaCodec`] (`None` = the legacy uncharged
+    /// fp32 broadcast, byte-identical to every pre-downlink run). Under
+    /// a [`RateTarget::Joint`] budget this must be the rcfed scheme —
+    /// the downlink dual-ascent loop drives its λ.
+    pub down_scheme: Option<CompressionScheme>,
     /// round execution: streamed cohorts (default) or fully resident
     /// clients — byte-identical results either way
     pub mode: ExecutionMode,
@@ -130,6 +136,7 @@ impl ExperimentConfig {
             rate_target: RateTarget::Off,
             alloc: RateAllocation::Uniform,
             transform: TransformCfg::default(),
+            down_scheme: None,
             mode: ExecutionMode::Streamed,
             round_shards: 0,
         }
@@ -173,14 +180,23 @@ impl ExperimentConfig {
     /// Row-key label: the scheme label plus the transform suffix (empty
     /// for identity) — the ONE composition every report/CSV key uses, so
     /// per-round metric labels and sweep row keys cannot drift apart.
-    /// The block wire tier adds a `_wblock` suffix; the historical wires
-    /// (Huffman, arithmetic) keep their pre-existing labels untouched.
+    /// The block wire tier adds a `_wblock` suffix; a compressed
+    /// downlink adds `_down_<scheme>`; the historical configurations
+    /// keep their pre-existing labels untouched.
     pub fn label(&self) -> String {
         let wire = match self.wire {
             WireCoder::Block => "_wblock",
             _ => "",
         };
-        format!("{}{}{wire}", self.scheme.label(), self.transform.suffix())
+        let down = match &self.down_scheme {
+            Some(s) => format!("_down_{}", s.label()),
+            None => String::new(),
+        };
+        format!(
+            "{}{}{wire}{down}",
+            self.scheme.label(),
+            self.transform.suffix()
+        )
     }
 
     fn native_backend(&self) -> NativeMlp {
@@ -242,6 +258,19 @@ impl ExperimentReport {
     /// for uniform-allocation runs).
     pub fn alloc_gini(&self) -> f64 {
         self.metrics.final_alloc_gini()
+    }
+
+    /// Measured downlink bits/coordinate of the last round that
+    /// delivered to a non-empty cohort (NaN when the broadcast is the
+    /// legacy uncompressed path).
+    pub fn down_bpc(&self) -> f64 {
+        self.metrics
+            .down_trace()
+            .iter()
+            .rev()
+            .map(|t| t.down_bpc)
+            .find(|b| !b.is_nan())
+            .unwrap_or(f64::NAN)
     }
 }
 
@@ -347,6 +376,26 @@ fn run_with_executor(
     exec: &mut Executor<'_>,
 ) -> Result<ExperimentReport> {
     config.channel.validate()?;
+    // a joint budget steers both directions: the downlink half needs a
+    // delta codec whose λ the controller can move
+    if config.rate_target.down_params().is_some() {
+        match config.down_scheme {
+            Some(CompressionScheme::RcFed { .. }) => {}
+            Some(other) => {
+                return Err(Error::Config(format!(
+                    "a joint rate budget drives the downlink λ, which \
+                     requires the rcfed down-scheme; got {other:?}"
+                )));
+            }
+            None => {
+                return Err(Error::Config(
+                    "a joint rate budget needs a compressed downlink; \
+                     set down_scheme (CLI: --down-scheme / --down-target)"
+                        .into(),
+                ));
+            }
+        }
+    }
     let total_timer = Timer::start();
     let mut pipeline = CompressionPipeline::design_full(
         config.scheme, config.wire, config.rate_target, config.alloc,
@@ -419,6 +468,25 @@ enum Executor<'a> {
         store: ClientStore,
         round_shards: usize,
     },
+}
+
+/// Last downlink model version client `idx` acknowledged — 0 (the
+/// agreed zero model) for clients that have never participated. Both
+/// executors answer from the same durable state the round loop spills.
+fn client_model_version(exec: &Executor<'_>, idx: usize) -> u32 {
+    match exec {
+        Executor::Resident(clients) => clients[idx].model_version(),
+        Executor::Streamed { store, .. } => store.model_version(idx),
+    }
+}
+
+/// Record a downlink delivery (incremental delta or full resync) in
+/// client `idx`'s durable state.
+fn set_client_model_version(exec: &mut Executor<'_>, idx: usize, v: u32) {
+    match exec {
+        Executor::Resident(clients) => clients[idx].set_model_version(v),
+        Executor::Streamed { store, .. } => store.set_model_version(idx, v),
+    }
 }
 
 /// The signature of a resident round runner (`run_round` for thread-safe
@@ -682,6 +750,21 @@ fn drive<B: Backend>(
     );
     let mut metrics = MetricsLog::new();
     let mut peak_rss_kb = 0u64;
+    // downlink delta codec: None keeps the legacy uncharged fp32
+    // broadcast and draws nothing — byte-identical to pre-downlink runs
+    let mut downlink = match config.down_scheme {
+        Some(scheme) => Some(DeltaCodec::design_with_target(
+            Direction::Downlink,
+            scheme,
+            config.wire,
+            d,
+            config.rate_target.down_params(),
+        )?),
+        None => None,
+    };
+    // the PS's private encode stream (only QSGD-like kernels would draw
+    // from it; constructing it is free and draws nothing when unused)
+    let mut down_rng = Rng::new(config.seed ^ 0x3C6E_F372_FE94_F82A);
     // bind the rate allocator (if any) to this population: the channel
     // model's per-client bandwidth factors seed the initial water-fill
     // (a free no-op under Alloc::Uniform)
@@ -713,7 +796,44 @@ fn drive<B: Backend>(
         // always true — and draws nothing — at availability 1)
         let mut sampled = sampler.sample_indices(k_all, k_round);
         sampled.retain(|_| network.participates());
-        let params_snapshot = server.params.clone();
+        // the effective cohort both executors run: ascending population
+        // index, duplicates collapsed, out-of-range dropped (exactly
+        // what `select_clients` yields from `sampled`)
+        let mut cohort = sampled.clone();
+        cohort.retain(|&i| i < k_all);
+        cohort.sort_unstable();
+        cohort.dedup();
+        // downlink: with a delta codec, the server encodes θ_t − θ_{t−1}
+        // through the same Transform → Kernel → WireCoder stages as the
+        // uplink, charges the measured bits, and the cohort *dequantizes
+        // the broadcast* — clients train on θ̂_v, never on raw θ. A
+        // client whose acknowledged version lags (sampled after sitting
+        // out version bumps) cannot apply the incremental delta: it gets
+        // one fp32 resync unicast of θ̂_v instead.
+        let (params_snapshot, down_round_bits) = match &mut downlink {
+            None => (server.params.clone(), 0u64),
+            Some(dc) => {
+                let pkt = dc.encode_round(
+                    &server.params, round as u32, &mut down_rng)?;
+                let new_ver = dc.version();
+                let mut incremental = 0usize;
+                let mut charged = 0u64;
+                for &idx in &cohort {
+                    if client_model_version(exec, idx) + 1 == new_ver {
+                        incremental += 1;
+                    } else {
+                        network.unicast(idx, dc.resync_bits());
+                        charged += dc.resync_bits();
+                    }
+                    set_client_model_version(exec, idx, new_ver);
+                }
+                network.broadcast(pkt.total_bits(), incremental);
+                charged += pkt.total_bits() * incremental as u64;
+                dc.observe_round(charged, (d * cohort.len()) as u64);
+                let snap = dc.decode_current(&pkt)?.to_vec();
+                (snap, charged)
+            }
+        };
         let updates = match exec {
             Executor::Resident(clients) => {
                 let mut selected = select_clients(clients, &sampled);
@@ -721,13 +841,6 @@ fn drive<B: Backend>(
                        &*pipeline)?
             }
             Executor::Streamed { source, store, round_shards } => {
-                // normalize to the exact cohort `select_clients` yields:
-                // ascending population index, duplicates collapsed,
-                // out-of-range dropped
-                let mut cohort = sampled.clone();
-                cohort.retain(|&i| i < k_all);
-                cohort.sort_unstable();
-                cohort.dedup();
                 stream_runner(
                     backend, source, store, &cohort, &params_snapshot,
                     &plan, &*pipeline, *round_shards,
@@ -775,6 +888,21 @@ fn drive<B: Backend>(
                 crate::debug!(
                     "round {round}: allocation re-solved, {moved} clients \
                      moved width"
+                );
+            }
+        }
+        // the downlink half of a joint budget closes its window on the
+        // same boundary: dual ascent on the downlink λ, then the
+        // re-designed delta codebook goes to every client (any of them
+        // may be sampled next round and must keep decoding)
+        if let Some(dc) = &mut downlink {
+            if let Some(bits) = dc.end_round(round)? {
+                network.broadcast(bits, k_all);
+                crate::debug!(
+                    "round {round}: downlink delta codebook re-designed \
+                     (λ={:.4}, realized {:.3} b/coord)",
+                    dc.lambda(),
+                    dc.last_realized()
                 );
             }
         }
@@ -841,6 +969,20 @@ fn drive<B: Backend>(
                 if n_sp > 0 { sp / n_sp as f64 } else { f64::NAN },
             );
         }
+        if let Some(dc) = &downlink {
+            // charged delta/resync bits per delivered coordinate; the
+            // per-window codebook republish rides on `bits_down` in the
+            // rate trace, not here
+            let bpc = if cohort.is_empty() {
+                f64::NAN
+            } else {
+                down_round_bits as f64 / (d * cohort.len()) as f64
+            };
+            metrics.push_down(bpc, dc.last_ef_norm());
+        }
+        // keep the downlink round buckets index-aligned with the uplink
+        // rounds even when this round charged no downlink bits
+        network.end_round();
         if is_eval {
             crate::debug!(
                 "round {round}: loss={train_loss:.4} acc={acc:.4} \
@@ -1142,6 +1284,74 @@ mod tests {
         cfg.rate_target =
             RateTarget::Track { bits_per_coord: 2.0, adapt_every: 2 };
         assert!(run_experiment(&cfg).is_err());
+    }
+
+    #[test]
+    fn legacy_broadcast_is_default_and_records_no_down_trace() {
+        let cfg = ExperimentConfig::tiny();
+        assert!(cfg.down_scheme.is_none());
+        assert_eq!(cfg.label(), cfg.scheme.label(), "label must not move");
+        let rep = run_experiment(&cfg).unwrap();
+        assert!(rep.metrics.down_trace().is_empty());
+        assert!(rep.down_bpc().is_nan());
+        assert_eq!(rep.downlink_bits, 0);
+    }
+
+    #[test]
+    fn compressed_downlink_charges_the_ledger_and_still_learns() {
+        let mut cfg = ExperimentConfig::tiny();
+        cfg.rounds = 30;
+        cfg.down_scheme = Some(cfg.scheme);
+        assert!(cfg.label().contains("_down_"));
+        let a = run_experiment(&cfg).unwrap();
+        let b = run_experiment(&cfg).unwrap();
+        assert_eq!(a.total_bits, b.total_bits, "deterministic replay");
+        assert_eq!(a.downlink_bits, b.downlink_bits);
+        assert_eq!(a.final_accuracy, b.final_accuracy);
+        assert!(a.downlink_bits > 0, "delta broadcasts must be charged");
+        assert_eq!(a.metrics.down_trace().len(), 30);
+        assert!(a.down_bpc().is_finite() && a.down_bpc() > 0.0);
+        assert!(a.total_comm_bits() > a.total_bits);
+        // lossy broadcasts cost some accuracy on tiny, but the run must
+        // still train (EF keeps the replica error bounded)
+        assert!(a.final_accuracy > 0.5, "acc={}", a.final_accuracy);
+    }
+
+    #[test]
+    fn joint_budget_requires_a_compressed_rcfed_downlink() {
+        let mut cfg = ExperimentConfig::tiny();
+        cfg.rate_target = RateTarget::Joint {
+            total_bpc: 4.0,
+            split: 0.625,
+            adapt_every: 3,
+        };
+        assert!(run_experiment(&cfg).is_err(), "no down scheme");
+        cfg.down_scheme = Some(CompressionScheme::Fp32);
+        assert!(run_experiment(&cfg).is_err(), "non-rcfed down scheme");
+    }
+
+    #[test]
+    fn joint_budget_runs_both_controllers_deterministically() {
+        let mut cfg = ExperimentConfig::tiny();
+        cfg.rounds = 12;
+        cfg.eval_every = 6;
+        cfg.rate_target = RateTarget::Joint {
+            total_bpc: 4.0,
+            split: 0.625,
+            adapt_every: 3,
+        };
+        cfg.down_scheme = Some(cfg.scheme);
+        let a = run_experiment(&cfg).unwrap();
+        let b = run_experiment(&cfg).unwrap();
+        assert_eq!(a.total_bits, b.total_bits);
+        assert_eq!(a.downlink_bits, b.downlink_bits);
+        assert_eq!(a.final_accuracy, b.final_accuracy);
+        // both traces recorded every round
+        assert_eq!(a.metrics.rate_trace().len(), 12);
+        assert_eq!(a.metrics.down_trace().len(), 12);
+        assert!(a.realized_bpc().is_finite(), "uplink window closed");
+        assert!(a.down_bpc().is_finite(), "downlink delivered");
+        assert!(a.downlink_bits > 0);
     }
 
     #[test]

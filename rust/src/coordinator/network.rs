@@ -576,6 +576,28 @@ impl SimulatedNetwork {
         self.round_downlink_bits.push(0);
     }
 
+    /// Close the current round: unconditionally pad BOTH per-round
+    /// ledgers to the same bucket count, so downlink round indices
+    /// always align with uplink rounds — even when one direction
+    /// charged nothing all round, or a charge landed before the first
+    /// [`Self::begin_round`] and lazily opened only its own round-0
+    /// bucket.
+    pub fn end_round(&mut self) {
+        let rounds = self
+            .round_bits
+            .len()
+            .max(self.round_downlink_bits.len())
+            .max(1);
+        self.round_bits.resize(rounds, 0);
+        self.round_downlink_bits.resize(rounds, 0);
+    }
+
+    /// Bucket counts of the two per-round ledgers, `(uplink, downlink)`
+    /// — equal after every [`Self::end_round`].
+    pub fn round_ledger_lens(&self) -> (usize, usize) {
+        (self.round_bits.len(), self.round_downlink_bits.len())
+    }
+
     pub fn bits_this_round(&self) -> u64 {
         *self.round_bits.last().unwrap_or(&0)
     }
@@ -694,6 +716,41 @@ mod tests {
         let mut fresh = SimulatedNetwork::new(2);
         fresh.unicast(0, 40);
         assert_eq!(fresh.downlink_bits_this_round(), 40);
+    }
+
+    #[test]
+    fn end_round_aligns_downlink_buckets_with_uplink_rounds() {
+        // regression: `charge_downlink` only lazily opens a round-0
+        // bucket, so a downlink charge before the first begin_round (or
+        // a round with traffic on one direction only) used to leave the
+        // two per-round ledgers at different lengths — downlink round
+        // indices drifted off the uplink's
+        let mut n = SimulatedNetwork::new(2);
+        n.broadcast(100, 2);
+        assert_eq!(n.round_ledger_lens(), (0, 1), "lazy open is one-sided");
+        n.end_round();
+        assert_eq!(n.round_ledger_lens(), (1, 1));
+        assert_eq!(n.bits_this_round(), 0);
+        assert_eq!(n.downlink_bits_this_round(), 200);
+
+        // a round that charges no downlink bits still closes aligned
+        n.begin_round();
+        n.transmit(&pkt(0, 1000));
+        n.end_round();
+        assert_eq!(n.round_ledger_lens(), (2, 2));
+        assert_eq!(n.downlink_bits_this_round(), 0);
+
+        // the mirror case: an uplink charge before any begin_round
+        let mut m = SimulatedNetwork::new(1);
+        m.transmit(&pkt(0, 800));
+        assert_eq!(m.round_ledger_lens(), (1, 0));
+        m.end_round();
+        assert_eq!(m.round_ledger_lens(), (1, 1));
+
+        // and a fully idle round on a fresh network still opens buckets
+        let mut idle = SimulatedNetwork::new(1);
+        idle.end_round();
+        assert_eq!(idle.round_ledger_lens(), (1, 1));
     }
 
     #[test]

@@ -97,6 +97,42 @@ where
 // Experiment sweeps (full federated runs)
 // ---------------------------------------------------------------------
 
+/// One downlink-axis cell: the server→client codec for the broadcast
+/// ([`ExperimentConfig::down_scheme`]) plus, for joint-budget cells, the
+/// [`RateTarget`] that drives both directions. A joint budget carries
+/// the uplink share inside itself, so a cell that sets `rate_target`
+/// *replaces* the grid's rate-target value — crossing the two axes
+/// would otherwise duplicate every joint cell.
+#[derive(Clone, Copy, Debug)]
+pub struct DownlinkCell {
+    /// broadcast codec (`None` ⇒ the legacy uncharged fp32 broadcast)
+    pub scheme: Option<CompressionScheme>,
+    /// replaces the cell's rate target when set (joint up+down budgets)
+    pub rate_target: Option<RateTarget>,
+}
+
+impl DownlinkCell {
+    /// The uncompressed reference point (legacy fp32 broadcast).
+    pub fn off() -> DownlinkCell {
+        DownlinkCell { scheme: None, rate_target: None }
+    }
+
+    /// A statically compressed broadcast (no joint budget).
+    pub fn compressed(scheme: CompressionScheme) -> DownlinkCell {
+        DownlinkCell { scheme: Some(scheme), rate_target: None }
+    }
+
+    /// Stable row-key label: the joint target when one is set, the
+    /// downlink scheme when statically compressed, `"off"` otherwise.
+    pub fn label(&self) -> String {
+        match (&self.rate_target, &self.scheme) {
+            (Some(rt), _) => rt.label(),
+            (None, Some(s)) => s.label(),
+            (None, None) => "off".into(),
+        }
+    }
+}
+
 /// Declarative experiment grid: `datasets × seeds × schemes`.
 ///
 /// Each base config carries a dataset + protocol (rounds, sampling,
@@ -132,6 +168,10 @@ pub struct SweepGrid {
     /// crosses every cell with each wire entropy coder, so the block
     /// throughput tier can ride the same grids as the paper coder
     pub wires: Vec<WireCoder>,
+    /// downlink axis (empty ⇒ each base's own `down_scheme`, normally
+    /// the uncharged legacy broadcast): crosses every cell with each
+    /// downlink codec / joint-budget configuration
+    pub downs: Vec<DownlinkCell>,
     /// sweep worker threads (0 ⇒ hardware)
     pub threads: usize,
     /// scheduler threads *inside* each cell. Defaults to 1: the sweep
@@ -151,6 +191,7 @@ impl SweepGrid {
             allocs: Vec::new(),
             transforms: Vec::new(),
             wires: Vec::new(),
+            downs: Vec::new(),
             threads: 0,
             inner_threads: 1,
         }
@@ -312,6 +353,41 @@ impl SweepGrid {
         self
     }
 
+    /// Add one downlink-axis cell. An uncompressed reference cell is
+    /// *not* added — chain `.down(DownlinkCell::off())` for the legacy
+    /// broadcast comparison point.
+    pub fn down(mut self, cell: DownlinkCell) -> Self {
+        self.downs.push(cell);
+        self
+    }
+
+    /// Scenario axis over joint up+down budgets: each downlink target
+    /// `d` becomes a [`RateTarget::Joint`] cell at total `up_bpc + d`
+    /// with the uplink share pinned to `up_bpc`, broadcasting through
+    /// `scheme` (must be rcfed — the joint loop drives the downlink λ).
+    /// Chain `.down(DownlinkCell::off())` and a plain Track cell for the
+    /// uncompressed and uplink-only reference points.
+    pub fn down_target_axis(
+        mut self,
+        up_bpc: f64,
+        down_targets: &[f64],
+        adapt_every: usize,
+        scheme: CompressionScheme,
+    ) -> Self {
+        for &d in down_targets {
+            let total = up_bpc + d;
+            self.downs.push(DownlinkCell {
+                scheme: Some(scheme),
+                rate_target: Some(RateTarget::Joint {
+                    total_bpc: total,
+                    split: up_bpc / total,
+                    adapt_every,
+                }),
+            });
+        }
+        self
+    }
+
     /// Sweep worker threads (0 ⇒ hardware).
     pub fn threads(mut self, threads: usize) -> Self {
         self.threads = threads;
@@ -320,7 +396,8 @@ impl SweepGrid {
 
     /// Expand the grid into per-cell configs with deterministic per-cell
     /// seeds, in declaration order (bases → seeds → channels →
-    /// rate targets → allocations → transforms → wires → schemes).
+    /// rate targets → allocations → transforms → wires → downlinks →
+    /// schemes).
     pub fn expand(&self) -> Vec<SweepCell> {
         let mut cells = Vec::new();
         for (base_index, base) in self.bases.iter().enumerate() {
@@ -356,35 +433,57 @@ impl SweepGrid {
             } else {
                 self.wires.clone()
             };
+            let downs: Vec<DownlinkCell> = if self.downs.is_empty() {
+                vec![DownlinkCell {
+                    scheme: base.down_scheme,
+                    rate_target: None,
+                }]
+            } else {
+                self.downs.clone()
+            };
             for &seed in &seeds {
                 for &channel in &channels {
                     for &rate_target in &rate_targets {
                         for &alloc in &allocs {
                             for &transform in &transforms {
                                 for &wire in &wires {
-                                    for &scheme in &self.schemes {
-                                        let mut config = base.clone();
-                                        config.scheme = scheme;
-                                        config.seed = seed;
-                                        config.channel = channel;
-                                        config.rate_target = rate_target;
-                                        config.alloc = alloc;
-                                        config.transform = transform;
-                                        config.wire = wire;
-                                        config.threads = self.inner_threads;
-                                        cells.push(SweepCell {
-                                            index: cells.len(),
-                                            base_index,
-                                            label: config.label(),
-                                            dataset: base.dataset.kind.name(),
-                                            seed,
-                                            channel: channel.label(),
-                                            rate: rate_target.label(),
-                                            alloc: alloc.label(),
-                                            transform: transform.label(),
-                                            wire: wire.name().to_string(),
-                                            config,
-                                        });
+                                    for &down in &downs {
+                                        for &scheme in &self.schemes {
+                                            let mut config = base.clone();
+                                            config.scheme = scheme;
+                                            config.seed = seed;
+                                            config.channel = channel;
+                                            config.rate_target = rate_target;
+                                            config.alloc = alloc;
+                                            config.transform = transform;
+                                            config.wire = wire;
+                                            config.down_scheme = down.scheme;
+                                            if let Some(rt) = down.rate_target
+                                            {
+                                                config.rate_target = rt;
+                                            }
+                                            config.threads =
+                                                self.inner_threads;
+                                            cells.push(SweepCell {
+                                                index: cells.len(),
+                                                base_index,
+                                                label: config.label(),
+                                                dataset: base
+                                                    .dataset
+                                                    .kind
+                                                    .name(),
+                                                seed,
+                                                channel: channel.label(),
+                                                rate: config
+                                                    .rate_target
+                                                    .label(),
+                                                alloc: alloc.label(),
+                                                transform: transform.label(),
+                                                wire: wire.name().to_string(),
+                                                down: down.label(),
+                                                config,
+                                            });
+                                        }
                                     }
                                 }
                             }
@@ -417,6 +516,8 @@ pub struct SweepCell {
     pub transform: String,
     /// wire-coder label (`"huffman"` for the paper coder)
     pub wire: String,
+    /// downlink label (`"off"` for the legacy uncharged broadcast)
+    pub down: String,
     pub config: ExperimentConfig,
 }
 
@@ -435,6 +536,8 @@ pub struct SweepCellResult {
     pub transform: String,
     /// wire-coder label (`"huffman"` for the paper coder)
     pub wire: String,
+    /// downlink label (`"off"` for the legacy uncharged broadcast)
+    pub down: String,
     pub scheme: CompressionScheme,
     pub report: ExperimentReport,
 }
@@ -450,6 +553,7 @@ pub struct SweepCellFailure {
     pub alloc: String,
     pub transform: String,
     pub wire: String,
+    pub down: String,
     pub error: String,
 }
 
@@ -498,15 +602,18 @@ pub fn run_sweep(grid: &SweepGrid) -> Result<SweepReport> {
                 alloc: cell.alloc,
                 transform: cell.transform,
                 wire: cell.wire,
+                down: cell.down,
                 scheme: cell.config.scheme,
                 report,
             }),
             Err(e) => {
                 crate::warn!(
                     "sweep cell {} (dataset {}, seed {}, channel {}, \
-                     rate {}, alloc {}, transform {}, wire {}) failed: {e}",
+                     rate {}, alloc {}, transform {}, wire {}, down {}) \
+                     failed: {e}",
                     cell.label, cell.dataset, cell.seed, cell.channel,
-                    cell.rate, cell.alloc, cell.transform, cell.wire
+                    cell.rate, cell.alloc, cell.transform, cell.wire,
+                    cell.down
                 );
                 failures.push(SweepCellFailure {
                     label: cell.label,
@@ -517,6 +624,7 @@ pub fn run_sweep(grid: &SweepGrid) -> Result<SweepReport> {
                     alloc: cell.alloc,
                     transform: cell.transform,
                     wire: cell.wire,
+                    down: cell.down,
                     error: e.to_string(),
                 });
             }
@@ -583,6 +691,10 @@ impl SweepReport {
         // Huffman coder — all-huffman grids keep the exact schema bytes
         let with_wire = self.cells.iter().any(|c| c.wire != "huffman")
             || self.failures.iter().any(|f| f.wire != "huffman");
+        // likewise the downlink columns, as soon as any cell compressed
+        // the broadcast
+        let with_down = self.cells.iter().any(|c| c.down != "off")
+            || self.failures.iter().any(|f| f.down != "off");
         let mut header: Vec<&str> = vec![Self::CSV_HEADER[0]];
         if multi_dataset {
             header.push("dataset");
@@ -605,6 +717,9 @@ impl SweepReport {
         if with_wire {
             header.push("wire");
         }
+        if with_down {
+            header.push("down");
+        }
         header.extend_from_slice(&Self::CSV_HEADER[1..]);
         if with_rate {
             header.extend_from_slice(&["realized_bpc", "downlink_gigabits"]);
@@ -617,6 +732,12 @@ impl SweepReport {
         }
         if with_transform {
             header.push("sparsity");
+        }
+        if with_down {
+            header.push("down_bpc");
+            if !with_rate && !with_alloc {
+                header.push("downlink_gigabits");
+            }
         }
         let mut w = CsvWriter::create(path, &header)?;
         for c in &self.cells {
@@ -642,6 +763,9 @@ impl SweepReport {
             if with_wire {
                 row.push(CsvField::from(c.wire.clone()));
             }
+            if with_down {
+                row.push(CsvField::from(c.down.clone()));
+            }
             row.push(CsvField::from(c.report.final_accuracy));
             row.push(CsvField::from(c.report.best_accuracy));
             row.push(CsvField::from(c.report.uplink_gigabits()));
@@ -662,6 +786,14 @@ impl SweepReport {
             }
             if with_transform {
                 row.push(CsvField::from(c.report.metrics.final_sparsity()));
+            }
+            if with_down {
+                row.push(CsvField::from(c.report.down_bpc()));
+                if !with_rate && !with_alloc {
+                    row.push(CsvField::from(
+                        c.report.downlink_bits as f64 / 1e9,
+                    ));
+                }
             }
             w.row(&row)?;
         }
@@ -709,6 +841,8 @@ impl SweepReport {
             || self.failures.iter().any(|f| f.transform != "id");
         let with_wire = self.cells.iter().any(|c| c.wire != "huffman")
             || self.failures.iter().any(|f| f.wire != "huffman");
+        let with_down = self.cells.iter().any(|c| c.down != "off")
+            || self.failures.iter().any(|f| f.down != "off");
         let cells: Vec<Json> = self
             .cells
             .iter()
@@ -767,6 +901,19 @@ impl SweepReport {
                 if with_wire {
                     fields.push(("wire", s(&c.wire)));
                 }
+                if with_down {
+                    fields.push(("down", s(&c.down)));
+                    fields.push((
+                        "down_bpc",
+                        num_or_null(c.report.down_bpc()),
+                    ));
+                    if !with_rate && !with_alloc {
+                        fields.push((
+                            "downlink_bits",
+                            num(c.report.downlink_bits as f64),
+                        ));
+                    }
+                }
                 if with_channel {
                     let st = &c.report.channel;
                     fields.push(("channel", s(&c.channel)));
@@ -815,6 +962,9 @@ impl SweepReport {
                 }
                 if with_wire {
                     fields.push(("wire", s(&f.wire)));
+                }
+                if with_down {
+                    fields.push(("down", s(&f.down)));
                 }
                 if with_channel {
                     fields.push(("channel", s(&f.channel)));
@@ -1262,6 +1412,74 @@ mod tests {
             .scheme(CompressionScheme::Fp32)
             .expand();
         assert_eq!(plain[0].wire, "huffman");
+    }
+
+    #[test]
+    fn down_axis_crosses_and_reports_gated_columns() {
+        use crate::fl::compression::RateTarget;
+        use crate::quant::rcq::LengthModel;
+        let rcfed = CompressionScheme::RcFed {
+            bits: 3,
+            lambda: 0.05,
+            length_model: LengthModel::Huffman,
+        };
+        let grid = SweepGrid::new(tiny_base())
+            .scheme(rcfed)
+            .down(DownlinkCell::off())
+            .down_target_axis(2.5, &[1.5], 3, rcfed);
+        let cells = grid.expand();
+        assert_eq!(cells.len(), 2); // off + one joint budget
+        assert_eq!(cells[0].down, "off");
+        assert_eq!(cells[0].rate, "off");
+        assert_eq!(cells[0].config.down_scheme, None);
+        assert_eq!(cells[1].down, "jt4s0.625w3");
+        // the joint cell replaces the rate target, so the rate label
+        // reflects the final config, not the (empty) rate axis
+        assert_eq!(cells[1].rate, "jt4s0.625w3");
+        assert_eq!(cells[1].config.down_scheme, Some(rcfed));
+        assert_eq!(
+            cells[1].config.rate_target,
+            RateTarget::Joint {
+                total_bpc: 4.0,
+                split: 0.625,
+                adapt_every: 3,
+            }
+        );
+        let mut grid = grid;
+        grid.threads = 1;
+        let report = run_sweep(&grid).unwrap();
+        assert_eq!(report.cells.len(), 2);
+        assert_eq!(report.cells[0].report.downlink_bits, 0);
+        assert!(report.cells[1].report.downlink_bits > 0);
+        assert!(report.cells[1].report.down_bpc().is_finite());
+        let dir = std::env::temp_dir()
+            .join(format!("rcfed_sweep_down_{}", std::process::id()));
+        let csv_path = dir.join("down.csv");
+        let json_path = dir.join("down.json");
+        report.write_csv(csv_path.to_str().unwrap()).unwrap();
+        report.write_json(json_path.to_str().unwrap()).unwrap();
+        let csv = std::fs::read_to_string(&csv_path).unwrap();
+        assert!(
+            csv.starts_with("scheme,rate_target,down,final_acc"),
+            "down key column missing: {csv}"
+        );
+        assert!(
+            csv.lines().next().unwrap().ends_with(
+                "wall_secs,realized_bpc,downlink_gigabits,down_bpc"
+            ),
+            "down metric column missing: {csv}"
+        );
+        let json = std::fs::read_to_string(&json_path).unwrap();
+        let v = crate::util::json::Json::parse(&json).unwrap();
+        let jcells = v.req("cells").unwrap().as_arr().unwrap();
+        assert!(jcells[0].get("down").is_some());
+        assert!(jcells[1].get("down_bpc").is_some());
+        std::fs::remove_dir_all(dir).ok();
+        // a grid without the axis stays down-free (no schema drift)
+        let plain = SweepGrid::new(tiny_base())
+            .scheme(CompressionScheme::Fp32)
+            .expand();
+        assert_eq!(plain[0].down, "off");
     }
 
     #[test]

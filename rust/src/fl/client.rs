@@ -38,6 +38,11 @@ use crate::util::Result;
 pub struct ClientState {
     pub rng: Rng,
     pub codec: TransformState,
+    /// last model version this client acknowledged from the downlink
+    /// delta codec (0 = the agreed zero model; see
+    /// [`crate::fl::codec::downlink::DeltaCodec`]). Unused — and zero —
+    /// when the downlink broadcast is the legacy uncharged fp32 path.
+    pub model_version: u32,
 }
 
 impl ClientState {
@@ -48,6 +53,7 @@ impl ClientState {
         ClientState {
             rng: Rng::new(seed ^ (id as u64).wrapping_mul(0x9E3779B97F4A7C15)),
             codec: TransformState::new(),
+            model_version: 0,
         }
     }
 }
@@ -218,6 +224,16 @@ impl Client {
     /// The client's transform state (EF residual diagnostics).
     pub fn codec_state(&self) -> &TransformState {
         &self.state.codec
+    }
+
+    /// Last downlink model version this client acknowledged.
+    pub fn model_version(&self) -> u32 {
+        self.state.model_version
+    }
+
+    /// Record a downlink delivery (incremental delta or full resync).
+    pub fn set_model_version(&mut self, version: u32) {
+        self.state.model_version = version;
     }
 }
 

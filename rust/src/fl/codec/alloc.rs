@@ -103,7 +103,9 @@ impl RateAllocation {
                  satisfy 1 <= min <= max <= 8 (symbols are u8)")));
         }
         match scheme {
-            CompressionScheme::Qsgd { .. } | CompressionScheme::Fp32 => {
+            CompressionScheme::Qsgd { .. }
+            | CompressionScheme::Fp32
+            | CompressionScheme::Sign => {
                 return Err(Error::Config(format!(
                     "rate allocation needs a designed-codebook scheme \
                      (rcfed|lloyd|nqfl|uniform); got {scheme:?}")));

@@ -13,10 +13,11 @@ use crate::util::{Error, Result};
 use super::design::designed_codebook;
 use super::quantize::{
     decode_sparse_fp32, encode_staged, qsgd_encode, qsgd_table_bytes,
-    CodebookCodec, CodecScratch, Kernel, QuantBackend,
+    sign_decode_into, sign_encode, sign_scale, CodebookCodec, CodecScratch,
+    Kernel, QuantBackend,
 };
 use super::scheme::{CompressionScheme, WireCoder};
-use super::transform::{TransformCfg, TransformState};
+use super::transform::{self, TransformCfg, TransformState};
 
 /// A ready-to-use compressor (design done once at construction).
 pub struct Compressor {
@@ -54,6 +55,7 @@ impl Compressor {
                 (Kernel::Qsgd(Qsgd::new(bits)), None, None)
             }
             CompressionScheme::Fp32 => (Kernel::Fp32, None, None),
+            CompressionScheme::Sign => (Kernel::Sign, None, None),
             _ => {
                 let (cb, rep) = designed_codebook(scheme)?;
                 let huffman = HuffmanCode::from_probs(&rep.probs)?;
@@ -96,6 +98,7 @@ impl Compressor {
             }
             Kernel::Qsgd(q) => QuantBackend::Qsgd(q),
             Kernel::Fp32 => QuantBackend::Fp32,
+            Kernel::Sign => QuantBackend::Sign,
         }
     }
 
@@ -244,6 +247,22 @@ impl Compressor {
                     index_bits: 0,
                 })
             }
+            Kernel::Sign => {
+                let scale = sign_scale(grad);
+                let (payload, payload_bits) = sign_encode(grad);
+                Ok(Packet {
+                    client_id,
+                    round,
+                    scheme: SchemeTag::Sign,
+                    bits_per_symbol: 1,
+                    d: grad.len() as u32,
+                    side_info: vec![scale],
+                    payload,
+                    payload_bits,
+                    table_bits: 0,
+                    index_bits: 0,
+                })
+            }
         }
     }
 
@@ -331,6 +350,55 @@ impl Compressor {
                         packet.payload[off..off + 4].try_into().unwrap(),
                     );
                 }
+            }
+            Kernel::Sign => {
+                // a single scale word — validated like (μ, σ) above
+                if packet.side_info.len() != 1 {
+                    return Err(Error::Coding(format!(
+                        "sign packet carries {} side-info values, \
+                         expected 1 (scale)",
+                        packet.side_info.len()
+                    )));
+                }
+                self.decode_sign_accumulate(packet, packet.side_info[0], acc)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Decode a sign-scheme payload and accumulate with the given scale
+    /// — shared by the static 1-word side-info path above and the
+    /// versioned delta-codec path (which validates and strips the
+    /// version word before delegating here). Sparse (top-k) packets
+    /// route through the index-block decoder.
+    pub(crate) fn decode_sign_accumulate(
+        &self,
+        packet: &Packet,
+        scale: f32,
+        acc: &mut [f32],
+    ) -> Result<()> {
+        let d = packet.d as usize;
+        if acc.len() != d {
+            return Err(Error::Coding(format!(
+                "accumulator {} != packet d {d}", acc.len())));
+        }
+        let mut vals = Vec::new();
+        if self.transform.is_sparse() {
+            let (indices, consumed) =
+                transform::unpack_indices(d, &packet.payload)?;
+            sign_decode_into(
+                &packet.payload[consumed..],
+                indices.len(),
+                scale,
+                &mut vals,
+            )?;
+            for (&i, &v) in indices.iter().zip(&vals) {
+                acc[i as usize] += v;
+            }
+        } else {
+            sign_decode_into(&packet.payload, d, scale, &mut vals)?;
+            for (a, &v) in acc.iter_mut().zip(&vals) {
+                *a += v;
             }
         }
         Ok(())
@@ -657,6 +725,7 @@ mod tests {
             CompressionScheme::Qsgd { bits: 3 },
             CompressionScheme::Uniform { bits: 3, clip: 4.0 },
             CompressionScheme::Fp32,
+            CompressionScheme::Sign,
         ] {
             for value in [0.0f32, 0.25, -3.5] {
                 let g = vec![value; 600];
@@ -718,5 +787,53 @@ mod tests {
         assert!(state.last_ef_norm > 0.0);
         let mut acc = vec![0f32; g.len()];
         c.decompress_accumulate(&pkt, &mut acc).unwrap();
+    }
+
+    #[test]
+    fn sign_roundtrip_is_one_bit_per_coord() {
+        let c = Compressor::design(CompressionScheme::Sign, WireCoder::Huffman)
+            .unwrap();
+        let g = gaussian_grad(10_000, 0.0, 1.0, 31);
+        let mut rng = Rng::new(32);
+        let pkt = c.compress(3, 1, &g, &mut rng).unwrap();
+        assert_eq!(pkt.scheme, SchemeTag::Sign);
+        assert_eq!(pkt.payload_bits, g.len() as u64);
+        assert_eq!(pkt.side_info.len(), 1);
+        let scale = pkt.side_info[0];
+        let mean_abs: f64 =
+            g.iter().map(|&x| f64::from(x.abs())).sum::<f64>() / g.len() as f64;
+        assert!((f64::from(scale) - mean_abs).abs() < 1e-6);
+        // through the real wire bytes: every coordinate comes back ±scale
+        let parsed = Packet::parse(&pkt.to_bytes()).unwrap();
+        let mut acc = vec![0f32; g.len()];
+        c.decompress_accumulate(&parsed, &mut acc).unwrap();
+        for (&x, &r) in g.iter().zip(&acc) {
+            assert_eq!(r, if x < 0.0 { -scale } else { scale });
+        }
+        // truncated payloads are recoverable rejects, not zero fill
+        let mut short = parsed.clone();
+        short.payload.truncate(short.payload.len() - 1);
+        let mut acc2 = vec![0f32; g.len()];
+        assert!(c.decompress_accumulate(&short, &mut acc2).is_err());
+    }
+
+    #[test]
+    fn sign_error_feedback_banks_residual() {
+        let c = Compressor::design_with_transform(
+            CompressionScheme::Sign,
+            WireCoder::Huffman,
+            TransformCfg::identity().with_ef(),
+        )
+        .unwrap();
+        let g = gaussian_grad(512, 0.0, 1.0, 41);
+        let mut rng = Rng::new(42);
+        let mut state = TransformState::new();
+        let pkt = c.compress_with(&mut state, 0, 0, &g, &mut rng).unwrap();
+        assert_eq!(pkt.payload_bits, 512);
+        assert!(state.last_ef_norm > 0.0);
+        let mut acc = vec![0f32; g.len()];
+        c.decompress_accumulate(&pkt, &mut acc).unwrap();
+        let scale = pkt.side_info[0];
+        assert!(acc.iter().all(|&v| v == scale || v == -scale));
     }
 }

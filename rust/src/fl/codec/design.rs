@@ -140,7 +140,9 @@ fn design_key(scheme: &CompressionScheme) -> Option<DesignKey> {
         CompressionScheme::Uniform { bits, clip } => {
             Some(DesignKey::Uniform { bits, clip_q: quantize_key_f64(clip) })
         }
-        CompressionScheme::Qsgd { .. } | CompressionScheme::Fp32 => None,
+        CompressionScheme::Qsgd { .. }
+        | CompressionScheme::Fp32
+        | CompressionScheme::Sign => None,
     }
 }
 
@@ -168,10 +170,10 @@ fn design_codebook_uncached(
             let cb = uniform_codebook(bits, clip)?;
             closed_form_report(cb)
         }
-        CompressionScheme::Qsgd { .. } | CompressionScheme::Fp32 => {
-            Err(Error::Quant(format!(
-                "scheme {scheme:?} has no designed codebook")))
-        }
+        CompressionScheme::Qsgd { .. }
+        | CompressionScheme::Fp32
+        | CompressionScheme::Sign => Err(Error::Quant(format!(
+            "scheme {scheme:?} has no designed codebook"))),
     }
 }
 
@@ -365,5 +367,6 @@ mod tests {
         assert!(
             designed_codebook(CompressionScheme::Qsgd { bits: 3 }).is_err()
         );
+        assert!(designed_codebook(CompressionScheme::Sign).is_err());
     }
 }

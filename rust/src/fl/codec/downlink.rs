@@ -1,0 +1,657 @@
+//! Direction-agnostic delta codec: the server→client model broadcast
+//! flowing through the same Transform → Kernel → WireCoder stages as
+//! the uplink gradients.
+//!
+//! The historical round loop broadcast `θ_t` as an *uncharged* fp32
+//! side channel — the ledger modeled gradient uplink only. This module
+//! symmetrizes the codec: the server encodes the model **delta**
+//! `θ_t − θ_{t−1}` through a [`Compressor`] with a server-owned
+//! error-feedback [`TransformState`], and every up-to-date client
+//! dequantizes the broadcast into its replica `θ̂_v`.
+//!
+//! The protocol is the EF induction: with residual `r` and reference
+//! `θ̂` both starting at zero (version 0 is the agreed "zero model"),
+//! round `t` quantizes `w_t = (θ_t − θ_{t−1}) + r_{t−1}` into `q_t`,
+//! banks `r_t = w_t − q_t`, and every client applies `θ̂_t = θ̂_{t−1} +
+//! q_t` — so `θ_t − θ̂_t = r_t` by induction and **one** server-side
+//! residual serves the whole population; no per-client replica state
+//! exists anywhere. Clients that missed broadcasts (never sampled while
+//! versions advanced) are behind `θ̂_v`; the round layer detects this
+//! via the version word on the wire and resyncs them with one fp32
+//! unicast of `θ̂_v` ([`DeltaCodec::resync_bits`]) — stale deltas are
+//! *rejected*, never silently applied.
+//!
+//! Under a [`super::pipeline::RateTarget::Joint`] budget the codec also
+//! runs the downlink half of the dual-ascent controller: measured
+//! ledger bits over delivered coordinates steer a private λ, and each
+//! window end re-designs the delta codebook against the window's
+//! empirical samples — the exact machinery the uplink Track loop uses,
+//! pointed the other way.
+
+use crate::coding::arithmetic::ArithmeticCoder;
+use crate::coding::huffman::HuffmanCode;
+use crate::fl::packet::{Packet, HEADER_BITS};
+use crate::stats::empirical::EmpiricalPdf;
+use crate::stats::moments::Welford;
+use crate::util::rng::Rng;
+use crate::util::{Error, Result};
+
+use super::compressor::Compressor;
+use super::design::{codebook_broadcast_bits, designed_adaptive_codebook};
+use super::pipeline::{
+    MAX_WINDOW_SAMPLES, STEP_GROW, STEP_INIT, STEP_MAX, STEP_MIN,
+    STEP_SHRINK,
+};
+use super::quantize::{CodecScratch, Kernel};
+use super::scheme::{CompressionScheme, WireCoder};
+use super::transform::{TransformCfg, TransformState};
+
+/// Which way a codec context points. The stage graph is identical in
+/// both directions; the direction only names the ledger the bits are
+/// charged to and the party that owns the EF residual.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    /// client → server (gradients; residual owned by each client)
+    Uplink,
+    /// server → client (model deltas; residual owned by the server)
+    Downlink,
+}
+
+impl Direction {
+    /// Stable label for CSVs and error messages.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Direction::Uplink => "up",
+            Direction::Downlink => "down",
+        }
+    }
+}
+
+/// The downlink half of a joint rate budget: a private dual-ascent
+/// state mirroring the uplink Track loop in
+/// [`super::pipeline::CompressionPipeline`].
+struct DeltaCtl {
+    target: f64,
+    window: usize,
+    lambda: f64,
+    step: f64,
+    prev_err: f64,
+    adapt_step: u32,
+    window_bits: u64,
+    window_coords: u64,
+    samples: Vec<f32>,
+    moments: Welford,
+    last_realized: f64,
+}
+
+/// Versioned delta codec over one model vector (see module docs).
+pub struct DeltaCodec {
+    direction: Direction,
+    compressor: Compressor,
+    /// the EF residual (server-owned for the downlink direction)
+    state: TransformState,
+    scratch: CodecScratch,
+    /// raw params at the last encode (`θ_{t−1}`)
+    prev: Vec<f32>,
+    /// the reconstructed replica `θ̂_v` every up-to-date peer holds
+    reference: Vec<f32>,
+    /// model version: bumped on every encode; v0 is the zero model
+    version: u32,
+    d: usize,
+    /// encode-side delta scratch
+    delta: Vec<f32>,
+    ctl: Option<DeltaCtl>,
+}
+
+impl DeltaCodec {
+    /// Static delta codec: one designed compressor, no rate controller.
+    pub fn design(
+        direction: Direction,
+        scheme: CompressionScheme,
+        wire: WireCoder,
+        d: usize,
+    ) -> Result<DeltaCodec> {
+        DeltaCodec::design_with_target(direction, scheme, wire, d, None)
+    }
+
+    /// Like [`Self::design`], with the optional closed-loop operating
+    /// point `(target bits/coord, window)` — the
+    /// [`super::pipeline::RateTarget::down_params`] share of a joint
+    /// budget. A target requires the rcfed scheme (λ is the control
+    /// variable, exactly as on the uplink).
+    pub fn design_with_target(
+        direction: Direction,
+        scheme: CompressionScheme,
+        wire: WireCoder,
+        d: usize,
+        target: Option<(f64, usize)>,
+    ) -> Result<DeltaCodec> {
+        if d == 0 {
+            return Err(Error::Config(
+                "delta codec needs a non-empty model".into()));
+        }
+        if matches!(scheme, CompressionScheme::Qsgd { .. }) {
+            return Err(Error::Config(format!(
+                "{}link delta coding does not support qsgd (its bucketed \
+                 norms leave no room for the version word); use a \
+                 designed-codebook scheme, sign or fp32",
+                direction.label()
+            )));
+        }
+        if let Some((bpc, window)) = target {
+            if !(bpc > 0.0 && bpc.is_finite()) {
+                return Err(Error::Config(format!(
+                    "{}link rate target {bpc} must be finite and > 0",
+                    direction.label()
+                )));
+            }
+            if window == 0 {
+                return Err(Error::Config(format!(
+                    "{}link rate target needs adapt-every >= 1",
+                    direction.label()
+                )));
+            }
+            if !matches!(scheme, CompressionScheme::RcFed { .. }) {
+                return Err(Error::Config(format!(
+                    "{}link rate targeting requires the rcfed scheme (λ \
+                     is the control variable); got {scheme:?}",
+                    direction.label()
+                )));
+            }
+        }
+        // fp32 deltas are lossless, so the residual is identically zero;
+        // skip the EF stage there and bank it everywhere else
+        let transform = if matches!(scheme, CompressionScheme::Fp32) {
+            TransformCfg::identity()
+        } else {
+            TransformCfg::identity().with_ef()
+        };
+        let compressor =
+            Compressor::design_with_transform(scheme, wire, transform)?;
+        let lambda = match scheme {
+            CompressionScheme::RcFed { lambda, .. } => lambda,
+            _ => 0.0,
+        };
+        Ok(DeltaCodec {
+            direction,
+            compressor,
+            state: TransformState::new(),
+            scratch: CodecScratch::new(),
+            prev: vec![0f32; d],
+            reference: vec![0f32; d],
+            version: 0,
+            d,
+            delta: vec![0f32; d],
+            ctl: target.map(|(target, window)| DeltaCtl {
+                target,
+                window,
+                lambda,
+                step: STEP_INIT,
+                prev_err: f64::NAN,
+                adapt_step: 0,
+                window_bits: 0,
+                window_coords: 0,
+                samples: Vec::new(),
+                moments: Welford::default(),
+                last_realized: f64::NAN,
+            }),
+        })
+    }
+
+    pub fn direction(&self) -> Direction {
+        self.direction
+    }
+
+    /// Current model version (`θ̂_v`; v0 is the agreed zero model).
+    pub fn version(&self) -> u32 {
+        self.version
+    }
+
+    /// The reconstructed replica every up-to-date peer holds.
+    pub fn reference(&self) -> &[f32] {
+        &self.reference
+    }
+
+    /// Wire cost of resyncing one lagging peer: a raw fp32 unicast of
+    /// `θ̂_v` under the standard packet header.
+    pub fn resync_bits(&self) -> u64 {
+        HEADER_BITS + 32 * self.d as u64
+    }
+
+    /// ‖EF residual‖₂ after the last encode (NaN before the first, and
+    /// always for fp32, which carries no residual).
+    pub fn last_ef_norm(&self) -> f64 {
+        self.state.last_ef_norm
+    }
+
+    pub fn is_adaptive(&self) -> bool {
+        self.ctl.is_some()
+    }
+
+    /// Current multiplier of the downlink controller (NaN when static).
+    pub fn lambda(&self) -> f64 {
+        self.ctl.as_ref().map_or(f64::NAN, |c| c.lambda)
+    }
+
+    /// Measured downlink bits/coordinate of the last closed window (NaN
+    /// when static or before the first window closes).
+    pub fn last_realized(&self) -> f64 {
+        self.ctl.as_ref().map_or(f64::NAN, |c| c.last_realized)
+    }
+
+    /// Encode this round's model delta `params − prev` (plus the banked
+    /// EF residual) into a versioned packet and advance to version
+    /// `v+1`. `rng` mirrors the uplink signature (the deterministic
+    /// schemes draw nothing).
+    pub fn encode_round(
+        &mut self,
+        params: &[f32],
+        round: u32,
+        rng: &mut Rng,
+    ) -> Result<Packet> {
+        if params.len() != self.d {
+            return Err(Error::Config(format!(
+                "model {} coords vs delta codec d {}",
+                params.len(),
+                self.d
+            )));
+        }
+        for (dl, (&p, &q)) in
+            self.delta.iter_mut().zip(params.iter().zip(&self.prev))
+        {
+            *dl = p - q;
+        }
+        let capture = self.ctl.is_some();
+        let mut pkt = self.compressor.compress_with_sample(
+            &mut self.state,
+            &mut self.scratch,
+            u32::MAX, // the PS, not a client
+            round,
+            &self.delta,
+            rng,
+            capture,
+        )?;
+        // the version rides as the LAST side-info word, after whatever
+        // the kernel wrote — the same convention as the uplink pipeline
+        pkt.side_info.push((self.version + 1) as f32);
+        self.version += 1;
+        self.prev.copy_from_slice(params);
+        if let Some(ctl) = &mut self.ctl {
+            if let Some(sample) = self.state.take_sample() {
+                for &z in &sample {
+                    if !z.is_finite() {
+                        continue;
+                    }
+                    ctl.moments.push(z as f64);
+                    if ctl.samples.len() < MAX_WINDOW_SAMPLES {
+                        ctl.samples.push(z);
+                    }
+                }
+            }
+        }
+        Ok(pkt)
+    }
+
+    /// Decode a current-version delta into the shared replica and
+    /// return `θ̂_v`. A packet whose version word does not match the
+    /// codec's current version is a **recoverable reject** (the peer
+    /// must be resynced), never a silent mis-decode.
+    pub fn decode_current(&mut self, packet: &Packet) -> Result<&[f32]> {
+        if packet.d as usize != self.d {
+            return Err(Error::Coding(format!(
+                "delta packet d={} vs model d={}", packet.d, self.d)));
+        }
+        let ver = packet.last_side_version()?;
+        if ver != self.version {
+            return Err(Error::Coding(format!(
+                "stale {}link delta v{ver} (current v{})",
+                self.direction.label(),
+                self.version
+            )));
+        }
+        match &self.compressor.kernel {
+            Kernel::Codebook { .. } => {
+                if packet.side_info.len() != 3 {
+                    return Err(Error::Coding(format!(
+                        "delta packet carries {} side-info values, \
+                         expected 3 (μ, σ, version)",
+                        packet.side_info.len()
+                    )));
+                }
+                let (mu, sigma) =
+                    (packet.side_info[0], packet.side_info[1]);
+                self.compressor.decode_codebook_accumulate(
+                    packet, mu, sigma, &mut self.reference)?;
+            }
+            Kernel::Sign => {
+                if packet.side_info.len() != 2 {
+                    return Err(Error::Coding(format!(
+                        "sign delta packet carries {} side-info values, \
+                         expected 2 (scale, version)",
+                        packet.side_info.len()
+                    )));
+                }
+                self.compressor.decode_sign_accumulate(
+                    packet, packet.side_info[0], &mut self.reference)?;
+            }
+            Kernel::Fp32 => {
+                // fp32 reads no side info beyond the version word
+                self.compressor
+                    .decompress_accumulate(packet, &mut self.reference)?;
+            }
+            Kernel::Qsgd(_) => {
+                return Err(Error::Coding(
+                    "qsgd delta packets are rejected at design time"
+                        .into(),
+                ));
+            }
+        }
+        Ok(&self.reference)
+    }
+
+    /// Report one round's ledger movement: `bits` as charged by the
+    /// network for this direction, over `coords` delivered coordinates
+    /// (model dim × receivers). A no-op for static codecs.
+    pub fn observe_round(&mut self, bits: u64, coords: u64) {
+        if let Some(ctl) = &mut self.ctl {
+            ctl.window_bits += bits;
+            ctl.window_coords += coords;
+        }
+    }
+
+    /// Close round `round` (0-based). On a window boundary the
+    /// controller runs dual ascent on the downlink λ and re-designs the
+    /// delta codebook against the window's empirical samples; the
+    /// returned bits are the publication cost the caller must charge
+    /// (every client needs the new codebook to keep decoding).
+    pub fn end_round(&mut self, round: usize) -> Result<Option<u64>> {
+        let Some(ctl) = &mut self.ctl else {
+            return Ok(None);
+        };
+        if (round + 1) % ctl.window != 0 {
+            return Ok(None);
+        }
+        if ctl.window_coords == 0 || ctl.samples.is_empty() {
+            // nothing delivered this window (empty cohorts): hold λ and
+            // keep accumulating — same guard as the uplink loop
+            return Ok(None);
+        }
+        let realized = ctl.window_bits as f64 / ctl.window_coords as f64;
+        ctl.last_realized = realized;
+        let err = realized - ctl.target;
+        if ctl.prev_err.is_finite() {
+            ctl.step *= if err.signum() == ctl.prev_err.signum() {
+                STEP_GROW
+            } else {
+                STEP_SHRINK
+            };
+            ctl.step = ctl.step.clamp(STEP_MIN, STEP_MAX);
+        }
+        ctl.prev_err = err;
+        ctl.lambda = (ctl.lambda + ctl.step * err).max(0.0);
+        let CompressionScheme::RcFed { bits, length_model, .. } =
+            self.compressor.scheme
+        else {
+            return Err(Error::Config(
+                "rate-constrained delta codec without an rcfed scheme"
+                    .into(),
+            ));
+        };
+        let samples = std::mem::take(&mut ctl.samples);
+        let moments = (
+            ctl.moments.mean(),
+            ctl.moments.stddev(),
+            ctl.moments.count(),
+        );
+        let pdf = EmpiricalPdf::from_samples(&samples);
+        ctl.adapt_step += 1;
+        let warm = self.compressor.codebook().cloned();
+        let (cb, rep) = designed_adaptive_codebook(
+            bits,
+            ctl.lambda,
+            length_model,
+            ctl.adapt_step,
+            moments,
+            &pdf,
+            warm.as_ref(),
+        )?;
+        let huffman = HuffmanCode::from_probs(&rep.probs)?;
+        let arith = ArithmeticCoder::from_probs(&rep.probs)?;
+        let broadcast = codebook_broadcast_bits(&cb);
+        self.compressor.kernel =
+            Kernel::Codebook { codebook: cb, huffman, arith };
+        self.compressor.design_mse = Some(rep.mse);
+        self.compressor.design_rate = Some(rep.huffman_rate);
+        ctl.window_bits = 0;
+        ctl.window_coords = 0;
+        ctl.moments = Welford::default();
+        Ok(Some(broadcast))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::rcq::LengthModel;
+
+    fn rcfed_scheme() -> CompressionScheme {
+        CompressionScheme::RcFed {
+            bits: 3,
+            lambda: 0.05,
+            length_model: LengthModel::Huffman,
+        }
+    }
+
+    fn walk(params: &mut [f32], rng: &mut Rng, scale: f32) {
+        let mut step = vec![0f32; params.len()];
+        rng.fill_normal_f32(&mut step, 0.0, scale);
+        for (p, s) in params.iter_mut().zip(&step) {
+            *p += s;
+        }
+    }
+
+    #[test]
+    fn direction_labels_are_stable() {
+        assert_eq!(Direction::Uplink.label(), "up");
+        assert_eq!(Direction::Downlink.label(), "down");
+    }
+
+    #[test]
+    fn ef_chain_tracks_the_model_within_the_residual() {
+        // the module invariant: θ_t − θ̂_t = r_t after every round, so
+        // replica error never exceeds the banked residual
+        let d = 2048;
+        let mut dc = DeltaCodec::design(
+            Direction::Downlink, rcfed_scheme(), WireCoder::Huffman, d,
+        )
+        .unwrap();
+        let mut rng = Rng::new(51);
+        let mut model_rng = Rng::new(52);
+        let mut params = vec![0f32; d];
+        walk(&mut params, &mut model_rng, 1.0);
+        for round in 0..8 {
+            let pkt =
+                dc.encode_round(&params, round, &mut rng).unwrap();
+            assert_eq!(pkt.client_id, u32::MAX);
+            assert_eq!(dc.version(), round + 1);
+            let replica =
+                dc.decode_current(&pkt).unwrap().to_vec();
+            // θ − θ̂ must equal the residual the encoder banked
+            let residual = dc.state.residual();
+            let err_norm: f64 = params
+                .iter()
+                .zip(&replica)
+                .map(|(&p, &q)| f64::from(p - q).powi(2))
+                .sum::<f64>()
+                .sqrt();
+            let res_norm: f64 = residual
+                .iter()
+                .map(|&r| f64::from(r).powi(2))
+                .sum::<f64>()
+                .sqrt();
+            assert!(
+                (err_norm - res_norm).abs() < 1e-3 * (1.0 + res_norm),
+                "round {round}: replica error {err_norm} vs banked \
+                 residual {res_norm}"
+            );
+            assert!((dc.last_ef_norm() - res_norm).abs() < 1e-9);
+            walk(&mut params, &mut model_rng, 0.05);
+        }
+    }
+
+    #[test]
+    fn stale_delta_is_a_recoverable_reject() {
+        let d = 512;
+        let mut dc = DeltaCodec::design(
+            Direction::Downlink, rcfed_scheme(), WireCoder::Huffman, d,
+        )
+        .unwrap();
+        let mut rng = Rng::new(61);
+        let params = vec![0.5f32; d];
+        let v1 = dc.encode_round(&params, 0, &mut rng).unwrap();
+        dc.decode_current(&v1).unwrap();
+        let before = dc.reference().to_vec();
+        let _v2 = dc.encode_round(&params, 1, &mut rng).unwrap();
+        // the v1 packet is now stale: rejected, replica untouched
+        let err = dc.decode_current(&v1);
+        assert!(err.is_err(), "stale delta accepted");
+        assert_eq!(dc.reference(), &before[..]);
+        // wire-parsed stale packets reject the same way (never panic)
+        let parsed = Packet::parse(&v1.to_bytes()).unwrap();
+        assert!(dc.decode_current(&parsed).is_err());
+    }
+
+    #[test]
+    fn fp32_delta_is_lossless_and_residual_free() {
+        let d = 300;
+        let mut dc = DeltaCodec::design(
+            Direction::Downlink,
+            CompressionScheme::Fp32,
+            WireCoder::Huffman,
+            d,
+        )
+        .unwrap();
+        let mut rng = Rng::new(71);
+        let mut model_rng = Rng::new(72);
+        let mut params = vec![0f32; d];
+        for round in 0..4 {
+            walk(&mut params, &mut model_rng, 0.3);
+            let pkt = dc.encode_round(&params, round, &mut rng).unwrap();
+            let replica = dc.decode_current(&pkt).unwrap();
+            assert_eq!(replica, &params[..], "fp32 deltas must be exact");
+        }
+        assert!(dc.last_ef_norm().is_nan(), "fp32 banks no residual");
+        assert_eq!(dc.resync_bits(), HEADER_BITS + 32 * d as u64);
+    }
+
+    #[test]
+    fn sign_delta_roundtrips_with_versioned_side_info() {
+        let d = 1024;
+        let mut dc = DeltaCodec::design(
+            Direction::Downlink,
+            CompressionScheme::Sign,
+            WireCoder::Huffman,
+            d,
+        )
+        .unwrap();
+        let mut rng = Rng::new(81);
+        let params = vec![0.25f32; d];
+        let pkt = dc.encode_round(&params, 0, &mut rng).unwrap();
+        assert_eq!(pkt.side_info.len(), 2, "(scale, version)");
+        assert_eq!(pkt.payload_bits, d as u64);
+        let replica = dc.decode_current(&pkt).unwrap();
+        assert!(replica.iter().all(|x| x.is_finite()));
+        assert!(dc.last_ef_norm() > 0.0, "sign must bank a residual");
+    }
+
+    #[test]
+    fn design_rejects_qsgd_and_bad_targets() {
+        let d = 64;
+        assert!(DeltaCodec::design(
+            Direction::Downlink,
+            CompressionScheme::Qsgd { bits: 3 },
+            WireCoder::Huffman,
+            d,
+        )
+        .is_err());
+        assert!(DeltaCodec::design(
+            Direction::Downlink, rcfed_scheme(), WireCoder::Huffman, 0,
+        )
+        .is_err());
+        // a target needs rcfed and a sane operating point
+        assert!(DeltaCodec::design_with_target(
+            Direction::Downlink,
+            CompressionScheme::Sign,
+            WireCoder::Huffman,
+            d,
+            Some((1.5, 2)),
+        )
+        .is_err());
+        for bad in [(0.0, 2), (f64::NAN, 2), (1.5, 0)] {
+            assert!(DeltaCodec::design_with_target(
+                Direction::Downlink,
+                rcfed_scheme(),
+                WireCoder::Huffman,
+                d,
+                Some(bad),
+            )
+            .is_err());
+        }
+    }
+
+    #[test]
+    fn controller_moves_lambda_and_pays_for_republication() {
+        let d = 4096;
+        let mut dc = DeltaCodec::design_with_target(
+            Direction::Downlink,
+            rcfed_scheme(),
+            WireCoder::Huffman,
+            d,
+            Some((0.5, 1)), // far below what 3-bit rcfed realizes
+        )
+        .unwrap();
+        assert!(dc.is_adaptive());
+        let lam0 = dc.lambda();
+        let mut rng = Rng::new(91);
+        let mut model_rng = Rng::new(92);
+        let mut params = vec![0f32; d];
+        walk(&mut params, &mut model_rng, 1.0);
+        let pkt = dc.encode_round(&params, 0, &mut rng).unwrap();
+        dc.decode_current(&pkt).unwrap();
+        dc.observe_round(pkt.total_bits(), d as u64);
+        let pub_bits = dc.end_round(0).unwrap();
+        assert!(pub_bits.unwrap() > 0, "redesign must cost downlink bits");
+        assert!(
+            dc.lambda() > lam0,
+            "realized ≫ target must raise λ: {} vs {lam0}",
+            dc.lambda()
+        );
+        assert!(dc.last_realized() > 0.5);
+        // the next delta encodes against the redesigned codebook and
+        // still roundtrips under the version protocol
+        walk(&mut params, &mut model_rng, 0.05);
+        let pkt2 = dc.encode_round(&params, 1, &mut rng).unwrap();
+        dc.decode_current(&pkt2).unwrap();
+        // a window with no deliveries holds λ and publishes nothing
+        let held = dc.lambda();
+        assert!(dc.end_round(1).unwrap().is_none());
+        assert_eq!(dc.lambda(), held);
+    }
+
+    #[test]
+    fn uplink_direction_runs_the_same_stage_graph() {
+        // the codec is direction-agnostic: an Uplink context delta-codes
+        // a client→server stream with identical machinery
+        let d = 256;
+        let mut dc = DeltaCodec::design(
+            Direction::Uplink, rcfed_scheme(), WireCoder::Huffman, d,
+        )
+        .unwrap();
+        assert_eq!(dc.direction(), Direction::Uplink);
+        let mut rng = Rng::new(93);
+        let params = vec![1.0f32; d];
+        let pkt = dc.encode_round(&params, 0, &mut rng).unwrap();
+        let replica = dc.decode_current(&pkt).unwrap();
+        assert!(replica.iter().all(|x| x.is_finite()));
+    }
+}

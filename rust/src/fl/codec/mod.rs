@@ -23,6 +23,10 @@
 //! * [`design`] — the process-wide codebook design cache (§3.1's
 //!   universal N(0,1) designs, plus the adaptive per-window keys);
 //! * [`compressor`] — the static [`Compressor`];
+//! * [`downlink`] — the direction-agnostic [`DeltaCodec`]: the same
+//!   stage graph pointed server→client (versioned model deltas with a
+//!   server-owned EF residual, plus the downlink half of a joint rate
+//!   budget);
 //! * [`pipeline`] — the round-loop [`CompressionPipeline`], the
 //!   closed-loop [`RateTarget`] controller and [`PacketDecoder`];
 //! * [`alloc`] — the water-filling per-client [`RateAllocation`].
@@ -40,6 +44,7 @@
 pub mod alloc;
 pub mod compressor;
 pub mod design;
+pub mod downlink;
 pub mod pipeline;
 pub mod quantize;
 pub mod scheme;
@@ -47,6 +52,7 @@ pub mod transform;
 
 pub use alloc::{AllocSnapshot, RateAllocation, RateAllocator};
 pub use compressor::Compressor;
+pub use downlink::{DeltaCodec, Direction};
 pub use design::{design_cache_stats, designed_codebook, DesignCacheStats};
 pub use pipeline::{
     CompressionPipeline, PacketDecoder, RateTarget, RoundAdaptation,

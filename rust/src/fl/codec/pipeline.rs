@@ -39,6 +39,20 @@ pub enum RateTarget {
         /// adaptation window length in rounds
         adapt_every: usize,
     },
+    /// Joint up+down budget: `total_bpc` is split between the uplink
+    /// Track loop (which targets `total_bpc · split`) and the downlink
+    /// delta codec (which targets `total_bpc · (1 − split)`), each
+    /// direction running its own dual ascent against *measured* ledger
+    /// bits. Requires the rcfed scheme on both directions (λ is the
+    /// control variable on each).
+    Joint {
+        /// total bits per coordinate across both directions
+        total_bpc: f64,
+        /// uplink fraction of the total, in (0, 1)
+        split: f64,
+        /// adaptation window length in rounds (shared by both loops)
+        adapt_every: usize,
+    },
 }
 
 impl RateTarget {
@@ -53,13 +67,53 @@ impl RateTarget {
             RateTarget::Track { bits_per_coord, adapt_every } => {
                 format!("rt{bits_per_coord}w{adapt_every}")
             }
+            RateTarget::Joint { total_bpc, split, adapt_every } => {
+                format!("jt{total_bpc}s{split}w{adapt_every}")
+            }
+        }
+    }
+
+    /// The uplink Track operating point as `(target bits/coord, window)`
+    /// — the direct target for `Track`, the uplink share for `Joint`,
+    /// `None` when off. The ONE place both variants resolve to the dual
+    /// ascent the pipeline runs.
+    pub fn track_params(&self) -> Option<(f64, usize)> {
+        match *self {
+            RateTarget::Off => None,
+            RateTarget::Track { bits_per_coord, adapt_every } => {
+                Some((bits_per_coord, adapt_every))
+            }
+            RateTarget::Joint { total_bpc, split, adapt_every } => {
+                Some((total_bpc * split, adapt_every))
+            }
+        }
+    }
+
+    /// The downlink share of a `Joint` budget as `(target bits/coord,
+    /// window)`; `None` for `Off` and the uplink-only `Track`.
+    pub fn down_params(&self) -> Option<(f64, usize)> {
+        match *self {
+            RateTarget::Joint { total_bpc, split, adapt_every } => {
+                Some((total_bpc * (1.0 - split), adapt_every))
+            }
+            _ => None,
         }
     }
 
     /// Reject nonsensical targets and unsupported schemes up front, so a
     /// bad configuration is a config error, not a silent no-op.
     pub fn validate(&self, scheme: &CompressionScheme) -> Result<()> {
-        let RateTarget::Track { bits_per_coord, adapt_every } = *self else {
+        if let RateTarget::Joint { total_bpc, split, .. } = *self {
+            if !(total_bpc > 0.0 && total_bpc.is_finite()) {
+                return Err(Error::Config(format!(
+                    "joint budget {total_bpc} must be finite and > 0")));
+            }
+            if !(split > 0.0 && split < 1.0) {
+                return Err(Error::Config(format!(
+                    "joint split {split} must lie strictly in (0, 1)")));
+            }
+        }
+        let Some((bits_per_coord, adapt_every)) = self.track_params() else {
             return Ok(());
         };
         if !(bits_per_coord > 0.0 && bits_per_coord.is_finite()) {
@@ -82,13 +136,14 @@ impl RateTarget {
 /// Dual-ascent step schedule: sign-adaptive — grow while the rate error
 /// keeps one sign (λ still marching toward the crossing), halve on a
 /// flip (bracketing the crossing).
-const STEP_INIT: f64 = 0.02;
-const STEP_GROW: f64 = 1.5;
-const STEP_SHRINK: f64 = 0.5;
-const STEP_MIN: f64 = 1e-3;
-const STEP_MAX: f64 = 0.25;
-/// Cap on buffered normalized samples per adaptation window.
-const MAX_WINDOW_SAMPLES: usize = 65_536;
+pub(crate) const STEP_INIT: f64 = 0.02;
+pub(crate) const STEP_GROW: f64 = 1.5;
+pub(crate) const STEP_SHRINK: f64 = 0.5;
+pub(crate) const STEP_MIN: f64 = 1e-3;
+pub(crate) const STEP_MAX: f64 = 0.25;
+/// Cap on buffered normalized samples per adaptation window (shared
+/// with the downlink delta codec's controller).
+pub(crate) const MAX_WINDOW_SAMPLES: usize = 65_536;
 
 /// What the pipeline did at a round boundary — returned to the round
 /// layer, which owns the downlink ledger.
@@ -490,7 +545,7 @@ impl CompressionPipeline {
                 None => RoundAdaptation::None,
             });
         }
-        let RateTarget::Track { bits_per_coord, adapt_every } = self.target
+        let Some((bits_per_coord, adapt_every)) = self.target.track_params()
         else {
             return Ok(RoundAdaptation::None);
         };
@@ -649,6 +704,50 @@ mod tests {
             RateTarget::Track { bits_per_coord: 2.5, adapt_every: 4 }.label(),
             "rt2.5w4"
         );
+        assert_eq!(
+            RateTarget::Joint { total_bpc: 4.0, split: 0.5, adapt_every: 4 }
+                .label(),
+            "jt4s0.5w4"
+        );
+    }
+
+    #[test]
+    fn joint_budget_splits_both_directions() {
+        let jt =
+            RateTarget::Joint { total_bpc: 4.0, split: 0.625, adapt_every: 2 };
+        assert!(jt.is_on());
+        assert_eq!(jt.track_params(), Some((2.5, 2)));
+        let (down, w) = jt.down_params().unwrap();
+        assert!((down - 1.5).abs() < 1e-12);
+        assert_eq!(w, 2);
+        assert!(jt.validate(&rcfed_scheme()).is_ok());
+        assert!(jt.validate(&CompressionScheme::Fp32).is_err());
+        for bad in [
+            RateTarget::Joint { total_bpc: 4.0, split: 1.0, adapt_every: 2 },
+            RateTarget::Joint { total_bpc: 4.0, split: 0.0, adapt_every: 2 },
+            RateTarget::Joint { total_bpc: 0.0, split: 0.5, adapt_every: 2 },
+            RateTarget::Joint { total_bpc: 4.0, split: 0.5, adapt_every: 0 },
+            RateTarget::Joint {
+                total_bpc: f64::NAN,
+                split: 0.5,
+                adapt_every: 2,
+            },
+        ] {
+            assert!(bad.validate(&rcfed_scheme()).is_err(), "{bad:?}");
+        }
+        // only Joint exposes a downlink share
+        assert!(RateTarget::Off.down_params().is_none());
+        assert!(RateTarget::Track { bits_per_coord: 2.0, adapt_every: 1 }
+            .down_params()
+            .is_none());
+        // the pipeline treats Joint exactly like Track at the split target
+        let pipe = CompressionPipeline::design(
+            rcfed_scheme(),
+            WireCoder::Huffman,
+            jt,
+        )
+        .unwrap();
+        assert!(pipe.is_adaptive());
     }
 
     #[test]

@@ -60,6 +60,8 @@ pub(crate) enum Kernel {
     },
     Qsgd(Qsgd),
     Fp32,
+    /// 1 bit/coordinate + per-packet mean-|x| scale (FedTern-style)
+    Sign,
 }
 
 /// One designed codebook + its wire codes, borrowed.
@@ -227,12 +229,59 @@ pub(crate) fn decode_sparse_fp32(
     Ok(())
 }
 
+/// Per-packet scale of sign quantization: the mean |x| of the working
+/// set (the L1-optimal magnitude for a ±s reconstruction).
+pub(crate) fn sign_scale(values: &[f32]) -> f32 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    let sum: f64 = values.iter().map(|&x| f64::from(x.abs())).sum();
+    (sum / values.len() as f64) as f32
+}
+
+/// Pack one sign bit per coordinate (1 ⇒ negative), LSB-first through
+/// the shared bit I/O; returns `(payload, payload_bits)` with
+/// `payload_bits == values.len()` — sign streams are near-incompressible
+/// at rate 1, so no wire entropy coder runs behind them.
+pub(crate) fn sign_encode(values: &[f32]) -> (Vec<u8>, u64) {
+    let mut w = crate::coding::bitio::BitWriter::with_capacity(
+        values.len().div_ceil(8),
+    );
+    for &x in values {
+        w.push(u64::from(x < 0.0), 1);
+    }
+    (w.finish(), values.len() as u64)
+}
+
+/// Decode `n` sign bits against `scale` into `out` (±scale per
+/// coordinate), under the same exact-coverage contract as the entropy
+/// coders.
+pub(crate) fn sign_decode_into(
+    payload: &[u8],
+    n: usize,
+    scale: f32,
+    out: &mut Vec<f32>,
+) -> Result<()> {
+    Packet::ensure_covers(payload, n as u64)?;
+    if !scale.is_finite() {
+        return Err(Error::Coding(format!("non-finite sign scale {scale}")));
+    }
+    let mut r = crate::coding::bitio::BitReader::new(payload);
+    out.clear();
+    out.reserve(n);
+    for _ in 0..n {
+        out.push(if r.read(1) == 1 { -scale } else { scale });
+    }
+    Ok(())
+}
+
 /// Borrowed view of a quantize backend, handed to [`encode_staged`] by
 /// both the static compressor and the per-client rate allocator.
 pub(crate) enum QuantBackend<'a> {
     Codebook(CodebookCodec<'a>),
     Qsgd(&'a Qsgd),
     Fp32,
+    Sign,
 }
 
 /// One QSGD message encoded for the wire: the unbiased stochastic
@@ -419,6 +468,36 @@ pub(crate) fn encode_staged(
                 }
                 Encoded {
                     side_info: vec![],
+                    payload,
+                    payload_bits,
+                    table_bits: 0,
+                    index_bits,
+                    sample: None,
+                }
+            }
+            QuantBackend::Sign => {
+                let scale = sign_scale(values);
+                let (coded, payload_bits) = sign_encode(values);
+                let (payload, index_bits) = match sparse_indices {
+                    None => (coded, 0),
+                    Some(idx) => {
+                        let (mut head, bits) = transform::pack_indices(d, idx);
+                        head.extend_from_slice(&coded);
+                        (head, bits)
+                    }
+                };
+                if want_recon {
+                    scratch.recon.clear();
+                    scratch.recon.extend(values.iter().map(|&x| {
+                        if x < 0.0 {
+                            -scale
+                        } else {
+                            scale
+                        }
+                    }));
+                }
+                Encoded {
+                    side_info: vec![scale],
                     payload,
                     payload_bits,
                     table_bits: 0,

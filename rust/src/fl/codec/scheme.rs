@@ -42,6 +42,10 @@ pub enum CompressionScheme {
     Uniform { bits: u32, clip: f64 },
     /// uncompressed float32 reference
     Fp32,
+    /// sign quantization (FedTern-style floor): 1 bit/coordinate plus a
+    /// per-packet mean-|x| scale — the cheapest baseline either link
+    /// direction can run
+    Sign,
 }
 
 impl CompressionScheme {
@@ -53,6 +57,7 @@ impl CompressionScheme {
             CompressionScheme::Qsgd { .. } => SchemeTag::Qsgd,
             CompressionScheme::Uniform { .. } => SchemeTag::Uniform,
             CompressionScheme::Fp32 => SchemeTag::Fp32,
+            CompressionScheme::Sign => SchemeTag::Sign,
         }
     }
 
@@ -64,12 +69,14 @@ impl CompressionScheme {
             | CompressionScheme::Qsgd { bits }
             | CompressionScheme::Uniform { bits, .. } => bits,
             CompressionScheme::Fp32 => 32,
+            CompressionScheme::Sign => 1,
         }
     }
 
     /// The same scheme with its bit-width rebound — how the rate
     /// allocator derives a client's per-width operating point from the
-    /// configured base scheme. A no-op for `Fp32` (no width to rebind).
+    /// configured base scheme. A no-op for `Fp32` and `Sign` (neither
+    /// has a width to rebind).
     pub fn with_bits(self, bits: u32) -> CompressionScheme {
         match self {
             CompressionScheme::RcFed { lambda, length_model, .. } => {
@@ -84,6 +91,7 @@ impl CompressionScheme {
                 CompressionScheme::Uniform { bits, clip }
             }
             CompressionScheme::Fp32 => CompressionScheme::Fp32,
+            CompressionScheme::Sign => CompressionScheme::Sign,
         }
     }
 
@@ -98,6 +106,7 @@ impl CompressionScheme {
             CompressionScheme::Qsgd { bits } => format!("qsgd_b{bits}"),
             CompressionScheme::Uniform { bits, .. } => format!("uniform_b{bits}"),
             CompressionScheme::Fp32 => "fp32".into(),
+            CompressionScheme::Sign => "sign".into(),
         }
     }
 }
@@ -130,6 +139,9 @@ mod tests {
         assert_eq!(rc.with_bits(5).bits(), 5);
         assert_eq!(CompressionScheme::Lloyd { bits: 2 }.with_bits(4).bits(), 4);
         assert_eq!(CompressionScheme::Fp32.with_bits(4), CompressionScheme::Fp32);
+        assert_eq!(CompressionScheme::Sign.with_bits(4), CompressionScheme::Sign);
+        assert_eq!(CompressionScheme::Sign.bits(), 1);
+        assert_eq!(CompressionScheme::Sign.label(), "sign");
         assert_eq!(
             CompressionScheme::Uniform { bits: 3, clip: 4.0 }.with_bits(6),
             CompressionScheme::Uniform { bits: 6, clip: 4.0 }

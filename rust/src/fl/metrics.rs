@@ -57,6 +57,19 @@ pub struct TransformTraceRow {
     pub sparsity: f64,
 }
 
+/// One round of the downlink delta-codec trace. Only recorded when the
+/// server→client broadcast is compressed, so legacy runs carry — and
+/// emit — nothing.
+#[derive(Clone, Copy, Debug)]
+pub struct DownTraceRow {
+    /// charged downlink bits/coordinate delivered this round (NaN on
+    /// rounds with an empty cohort)
+    pub down_bpc: f64,
+    /// ‖server EF residual‖₂ after this round's delta encode (NaN for
+    /// residual-free schemes)
+    pub down_ef_norm: f64,
+}
+
 /// One round of the cohort-streaming trace: how many clients computed,
 /// how many survived the channel, and the RSS sample behind the streamed
 /// path's flat-memory claim. Recorded every round on every run, but kept
@@ -82,6 +95,7 @@ pub struct MetricsLog {
     rate: Vec<RateTraceRow>,
     alloc: Vec<AllocTraceRow>,
     transform: Vec<TransformTraceRow>,
+    down: Vec<DownTraceRow>,
     stream: Vec<StreamTraceRow>,
 }
 
@@ -162,6 +176,19 @@ impl MetricsLog {
         self.transform.last().map(|t| t.sparsity).unwrap_or(f64::NAN)
     }
 
+    /// Record the downlink delta-codec trace for the round just pushed.
+    /// Call once per round, after [`push`](Self::push), only when the
+    /// broadcast is compressed — the CSV schema grows the `down_bpc` /
+    /// `down_ef_norm` columns exactly when every round has a trace row.
+    pub fn push_down(&mut self, down_bpc: f64, down_ef_norm: f64) {
+        self.down.push(DownTraceRow { down_bpc, down_ef_norm });
+    }
+
+    /// Per-round downlink trace (empty on legacy-broadcast runs).
+    pub fn down_trace(&self) -> &[DownTraceRow] {
+        &self.down
+    }
+
     /// Record the streaming trace for the round just pushed. Call once
     /// per round, after [`push`](Self::push). Unlike the other traces
     /// this one never reaches the CSV (see [`StreamTraceRow`]).
@@ -219,9 +246,10 @@ impl MetricsLog {
 
     /// Append all rounds to a CSV. The base schema is unchanged from the
     /// static path; the controller columns (`lambda`, `realized_bpc`,
-    /// `bits_down`), the allocation columns and the transform columns
-    /// (`ef_residual_norm`, `sparsity`) appear only when the matching
-    /// trace was recorded for every round, so static-run CSVs stay
+    /// `bits_down`), the allocation columns, the transform columns
+    /// (`ef_residual_norm`, `sparsity`) and the downlink columns
+    /// (`down_bpc`, `down_ef_norm`) appear only when the matching trace
+    /// was recorded for every round, so static-run CSVs stay
     /// byte-identical.
     pub fn write_csv(&self, path: &str, label: &str) -> Result<()> {
         let with_rate =
@@ -233,9 +261,13 @@ impl MetricsLog {
             && !self.alloc.is_empty()
             && self.alloc.len() == self.rounds.len();
         // the transform stage composes with either controller, so its
-        // columns gate independently and always come last
+        // columns gate independently
         let with_transform = !self.transform.is_empty()
             && self.transform.len() == self.rounds.len();
+        // the downlink codec composes with everything above and its
+        // columns always come last
+        let with_down =
+            !self.down.is_empty() && self.down.len() == self.rounds.len();
         let mut header = vec![
             "scheme", "round", "train_loss", "test_acc", "bits_up",
             "bits_cum", "wall_secs",
@@ -250,6 +282,9 @@ impl MetricsLog {
         }
         if with_transform {
             header.extend_from_slice(&["ef_residual_norm", "sparsity"]);
+        }
+        if with_down {
+            header.extend_from_slice(&["down_bpc", "down_ef_norm"]);
         }
         let mut w = CsvWriter::create(path, &header)?;
         for (i, r) in self.rounds.iter().enumerate() {
@@ -278,6 +313,11 @@ impl MetricsLog {
                 let t = &self.transform[i];
                 row.push(CsvField::from(t.ef_residual_norm));
                 row.push(CsvField::from(t.sparsity));
+            }
+            if with_down {
+                let t = &self.down[i];
+                row.push(CsvField::from(t.down_bpc));
+                row.push(CsvField::from(t.down_ef_norm));
             }
             w.row(&row)?;
         }
@@ -416,6 +456,43 @@ mod tests {
         let text = std::fs::read_to_string(&path).unwrap();
         assert!(text.lines().next().unwrap().ends_with(
             "lambda,realized_bpc,bits_down,ef_residual_norm,sparsity"
+        ));
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn down_trace_gates_extra_csv_columns() {
+        let dir = std::env::temp_dir().join(format!(
+            "rcfed_metrics_down_{}", std::process::id()));
+        let path = dir.join("dn.csv");
+        let mut m = MetricsLog::new();
+        m.push(0, 1.0, f64::NAN, 100, 0.01);
+        m.push_down(1.4, 0.3);
+        m.push(1, 0.9, 0.6, 90, 0.01);
+        m.push_down(1.5, 0.2);
+        assert_eq!(m.down_trace().len(), 2);
+        m.write_csv(path.to_str().unwrap(), "rcfed_b3_down").unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let header = text.lines().next().unwrap();
+        assert!(
+            header.ends_with("wall_secs,down_bpc,down_ef_norm"),
+            "downlink columns missing: {header}"
+        );
+        assert_eq!(text.lines().count(), 3);
+        std::fs::remove_dir_all(dir).ok();
+
+        // the downlink columns come last, after the rate columns
+        let mut both = MetricsLog::new();
+        both.push(0, 1.0, f64::NAN, 100, 0.01);
+        both.push_rate(0.05, f64::NAN, 0);
+        both.push_down(1.4, f64::NAN);
+        let dir = std::env::temp_dir().join(format!(
+            "rcfed_metrics_down_rate_{}", std::process::id()));
+        let path = dir.join("dnr.csv");
+        both.write_csv(path.to_str().unwrap(), "x").unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.lines().next().unwrap().ends_with(
+            "lambda,realized_bpc,bits_down,down_bpc,down_ef_norm"
         ));
         std::fs::remove_dir_all(dir).ok();
     }

@@ -46,6 +46,7 @@ pub enum SchemeTag {
     Qsgd = 3,
     Uniform = 4,
     Fp32 = 5,
+    Sign = 6,
 }
 
 impl SchemeTag {
@@ -57,6 +58,7 @@ impl SchemeTag {
             3 => SchemeTag::Qsgd,
             4 => SchemeTag::Uniform,
             5 => SchemeTag::Fp32,
+            6 => SchemeTag::Sign,
             other => {
                 return Err(Error::Coding(format!("bad scheme tag {other}")))
             }
@@ -106,7 +108,24 @@ impl Packet {
     /// can carry any f32 here). `Err` when the word is missing or
     /// malformed; the decode layers treat that as a recoverable reject.
     pub fn side_version(&self) -> Result<u32> {
-        let Some(&ver) = self.side_info.get(2) else {
+        self.side_version_at(2)
+    }
+
+    /// The model-version word the direction-agnostic delta codec
+    /// appends as the *last* side-info value (for the codebook schemes
+    /// that is the same third word the uplink machinery uses; schemes
+    /// with other side-info shapes still get a validated version).
+    pub fn last_side_version(&self) -> Result<u32> {
+        if self.side_info.is_empty() {
+            return Err(Error::Coding(
+                "packet carries no side info, no version word".into(),
+            ));
+        }
+        self.side_version_at(self.side_info.len() - 1)
+    }
+
+    fn side_version_at(&self, idx: usize) -> Result<u32> {
+        let Some(&ver) = self.side_info.get(idx) else {
             return Err(Error::Coding(format!(
                 "packet carries {} side-info values, no version word",
                 self.side_info.len()
@@ -281,6 +300,33 @@ mod tests {
             p.side_info[2] = bad;
             assert!(p.side_version().is_err(), "version {bad} accepted");
         }
+    }
+
+    #[test]
+    fn last_side_version_reads_the_final_word() {
+        let mut p = sample();
+        // (μ, σ, version): the codebook-scheme layout — last == third
+        p.side_info.push(7.0);
+        assert_eq!(p.last_side_version().unwrap(), 7);
+        assert_eq!(p.side_version().unwrap(), 7);
+        // single-word layout (e.g. a versioned fp32/sign delta)
+        p.side_info = vec![11.0];
+        assert_eq!(p.last_side_version().unwrap(), 11);
+        p.side_info[0] = f32::NAN;
+        assert!(p.last_side_version().is_err());
+        p.side_info.clear();
+        assert!(p.last_side_version().is_err());
+    }
+
+    #[test]
+    fn sign_tag_roundtrips() {
+        let mut p = sample();
+        p.scheme = SchemeTag::Sign;
+        p.bits_per_symbol = 1;
+        let q = Packet::from_bytes(&p.to_bytes()).unwrap();
+        assert_eq!(q.scheme, SchemeTag::Sign);
+        assert_eq!(SchemeTag::from_u8(6).unwrap(), SchemeTag::Sign);
+        assert!(SchemeTag::from_u8(7).is_err());
     }
 
     #[test]

@@ -96,6 +96,23 @@ impl ClientStore {
     pub fn peek(&self, idx: usize) -> Option<&ClientState> {
         self.durable.get(&(idx as u32))
     }
+
+    /// Last downlink model version client `idx` acknowledged (0 for
+    /// clients that have never participated — the agreed zero model).
+    pub fn model_version(&self, idx: usize) -> u32 {
+        self.durable
+            .get(&(idx as u32))
+            .map_or(0, |s| s.model_version)
+    }
+
+    /// Record a downlink delivery for client `idx`, materializing its
+    /// durable state (with the canonical seed derivation) on first
+    /// contact so the version survives until its next participation.
+    pub fn set_model_version(&mut self, idx: usize, version: u32) {
+        let mut state = self.checkout(idx);
+        state.model_version = version;
+        self.commit(idx, state);
+    }
 }
 
 #[cfg(test)]
@@ -137,6 +154,22 @@ mod tests {
         }
         // the draws really happened before the spill
         assert_eq!(drawn.len(), 4);
+    }
+
+    #[test]
+    fn model_versions_persist_and_default_to_zero() {
+        let mut store = ClientStore::new(9);
+        assert_eq!(store.model_version(3), 0);
+        store.set_model_version(3, 7);
+        assert_eq!(store.model_version(3), 7);
+        // first-contact materialization keeps the canonical seed
+        // derivation, so recording a broadcast never forks the stream
+        let mut state = store.checkout(3);
+        assert_eq!(state.model_version, 7);
+        let mut resident = ClientState::new(3, 9 ^ (3u64 << 20));
+        for _ in 0..8 {
+            assert_eq!(state.rng.next_u64(), resident.rng.next_u64());
+        }
     }
 
     #[test]

@@ -21,7 +21,7 @@ use rcfed::coordinator::experiment::{
     run_experiment, BackendChoice, ExecutionMode, ExperimentConfig,
 };
 use rcfed::coordinator::network::ChannelSpec;
-use rcfed::coordinator::sweep::{run_sweep, SweepGrid};
+use rcfed::coordinator::sweep::{run_sweep, DownlinkCell, SweepGrid};
 use rcfed::data::DatasetKind;
 use rcfed::fl::compression::{
     designed_codebook, CompressionScheme, RateAllocation, RateTarget,
@@ -62,7 +62,7 @@ fn print_usage() {
         "rcfed — rate-constrained quantization for federated learning\n\n\
          usage: rcfed <run|sweep|design|info> [--key value ...]\n\n\
          run    --dataset cifar|femnist|tiny --scheme \
-         rcfed|lloyd|nqfl|qsgd|uniform|fp32|topk{{ratio}}\n       \
+         rcfed|lloyd|nqfl|qsgd|uniform|fp32|sign|topk{{ratio}}\n       \
          [--bits 3] [--lambda 0.05] [--rounds 100] [--clients-per-round 0]\n       \
          [--local-iters 1] [--batch 64] [--lr 0.01] [--seed 42]\n       \
          [--backend native|pjrt] [--model mlp_synthcifar] [--out file.csv]\n       \
@@ -74,6 +74,10 @@ fn print_usage() {
          transform stage: [--topk ratio] [--ef]  (e.g. --scheme topk0.1 --ef)\n       \
          closed-loop rate control (rcfed only):\n       \
          [--rate-target bits_per_coord] [--adapt-every 5]\n       \
+         compressed downlink (direction-agnostic codec):\n       \
+         [--down-scheme rcfed|lloyd|nqfl|uniform|fp32|sign]\n       \
+         [--down-target bits_per_coord] (joins --rate-target into one\n       \
+         up+down budget; downlink defaults to rcfed)\n       \
          per-client rate allocation (codebook schemes):\n       \
          [--alloc uniform|waterfill] [--budget bits_per_coord]\n       \
          [--min-bits 1] [--max-bits 6] [--adapt-every 5]\n\
@@ -82,6 +86,8 @@ fn print_usage() {
          [--scheme-list rcfed,lloyd,fp32] [--sweep-threads 0] [--json file.json]\n       \
          scenario axes: [--loss-list p1,p2] [--deadline-list s1,s2]\n       \
          [--rate-target-list r1,r2 [--adapt-every 5]]\n       \
+         [--down-target-list d1,d2 [--down-scheme rcfed]] (joint up+down\n       \
+         budgets: crosses every --rate-target-list uplink share)\n       \
          [--budget-list b1,b2 [--min-bits 1 --max-bits 6]]\n       \
          [--topk-list r1,r2 [--ef]]\n\n\
          channel model (run + sweep; all default off/ideal):\n       \
@@ -109,6 +115,7 @@ fn scheme_by_name(
         "qsgd" => CompressionScheme::Qsgd { bits },
         "uniform" => CompressionScheme::Uniform { bits, clip },
         "fp32" => CompressionScheme::Fp32,
+        "sign" => CompressionScheme::Sign,
         other => return Err(Error::Config(format!("bad scheme {other:?}"))),
     })
 }
@@ -235,6 +242,47 @@ fn parse_config(args: &Args) -> Result<ExperimentConfig> {
         };
         cfg.rate_target.validate(&cfg.scheme)?;
     }
+    // direction-agnostic downlink: --down-scheme compresses the server
+    // broadcast through the same stage graph (versioned model deltas
+    // against a server-owned EF residual); --down-target joins it with
+    // --rate-target into one budget split across the two directions
+    let down_target = args.f64_or("down-target", f64::NAN)?;
+    if let Some(tok) = args.get("down-scheme").map(|s| s.to_string()) {
+        let bits = args.usize_or("bits", 3)? as u32;
+        let lambda = args.f64_or("lambda", 0.05)?;
+        let clip = args.f64_or("clip", 4.0)?;
+        let lm = parse_length_model(args)?;
+        cfg.down_scheme = Some(scheme_by_name(&tok, bits, lambda, lm, clip)?);
+    }
+    if !down_target.is_nan() {
+        let RateTarget::Track { bits_per_coord, adapt_every } =
+            cfg.rate_target
+        else {
+            return Err(Error::Config(
+                "--down-target is the downlink share of a joint budget; \
+                 set the uplink share with --rate-target"
+                    .into(),
+            ));
+        };
+        let total = bits_per_coord + down_target;
+        cfg.rate_target = RateTarget::Joint {
+            total_bpc: total,
+            split: bits_per_coord / total,
+            adapt_every,
+        };
+        cfg.rate_target.validate(&cfg.scheme)?;
+        if cfg.down_scheme.is_none() {
+            // the joint loop drives the downlink λ, so default the
+            // broadcast codec to rcfed at the run's operating point
+            let bits = args.usize_or("bits", 3)? as u32;
+            let lambda = args.f64_or("lambda", 0.05)?;
+            cfg.down_scheme = Some(CompressionScheme::RcFed {
+                bits,
+                lambda,
+                length_model: parse_length_model(args)?,
+            });
+        }
+    }
     // per-client rate allocation: --budget (encoded bits/coordinate,
     // averaged over the round's clients) turns water-filling on; --alloc
     // makes the mode explicit. Shares --adapt-every with the rate
@@ -333,6 +381,16 @@ fn cmd_run(args: &Args) -> Result<()> {
             report.total_comm_bits() as f64 / 1e9
         );
     }
+    if let Some(down) = cfg.down_scheme {
+        println!(
+            "downlink {:<13} down_bpc={:.3} b/coord downlink={:.6} Gb \
+             total={:.5} Gb",
+            down.label(),
+            report.down_bpc(),
+            report.downlink_bits as f64 / 1e9,
+            report.total_comm_bits() as f64 / 1e9
+        );
+    }
     if cfg.transform.is_active() {
         let trace = report.metrics.transform_trace().last();
         println!(
@@ -375,6 +433,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let loss_list = args.f64_list_or("loss-list", &[])?;
     let deadline_list = args.f64_list_or("deadline-list", &[])?;
     let rate_target_list = args.f64_list_or("rate-target-list", &[])?;
+    let down_target_list = args.f64_list_or("down-target-list", &[])?;
     let budget_list = args.f64_list_or("budget-list", &[])?;
     let topk_list = args.f64_list_or("topk-list", &[])?;
     let scheme_list = args.get("scheme-list").map(|s| s.to_string());
@@ -382,6 +441,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let list_clip = args.f64_or("clip", 4.0)?;
     let list_lm = parse_length_model(args)?;
     let adapt_every = args.usize_or("adapt-every", 5)?;
+    let down_scheme_tok = args.str_or("down-scheme", "rcfed");
     let min_bits = args.usize_or("min-bits", 1)? as u32;
     let max_bits = args.usize_or("max-bits", 6)? as u32;
     let sweep_threads = args.usize_or("sweep-threads", 0)?;
@@ -393,6 +453,16 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     // either the axis or a base-level --rate-target puts the sweep in
     // closed-loop mode; both only steer rcfed cells
     let rate_axis = !rate_target_list.is_empty() || base.rate_target.is_on();
+    // a compressed downlink (joint targets or a base-level --down-scheme)
+    // puts the sweep in bidirectional mode
+    let down_axis = !down_target_list.is_empty() || base.down_scheme.is_some();
+    if !down_target_list.is_empty() && rate_target_list.is_empty() {
+        return Err(Error::Config(
+            "--down-target-list is the downlink share of joint budgets; \
+             set the uplink shares with --rate-target-list"
+                .into(),
+        ));
+    }
     // likewise for the per-client allocation axis
     let alloc_axis = !budget_list.is_empty() || base.alloc.is_on();
     // and for the transform axis (a base-level --topk/--ef counts too)
@@ -453,7 +523,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
                      {tok:?} from --scheme-list or drop the rate axis"
                 )));
             }
-            if alloc_axis && matches!(tok, "qsgd" | "fp32") {
+            if alloc_axis && matches!(tok, "qsgd" | "fp32" | "sign") {
                 return Err(Error::Config(format!(
                     "allocation sweeps need a designed-codebook scheme; \
                      remove {tok:?} from --scheme-list or drop \
@@ -473,9 +543,13 @@ fn cmd_sweep(args: &Args) -> Result<()> {
                         grid = grid.rcfed_lambda_curve(b as u32, &lambdas);
                     }
                 }
-                // fp32 has no width axis: one cell, not one per --bits
+                // fp32/sign have no width axis: one cell, not one per
+                // --bits entry
                 "fp32" => {
                     grid = grid.scheme(CompressionScheme::Fp32);
+                }
+                "sign" => {
+                    grid = grid.scheme(CompressionScheme::Sign);
                 }
                 _ => {
                     for &b in &bits {
@@ -529,9 +603,47 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     // rate-target axis: the static reference cell rides along so the
     // closed-loop rows always have an off-row to compare against
     if !rate_target_list.is_empty() {
-        grid = grid
-            .rate_target(RateTarget::Off)
-            .rate_target_axis(&rate_target_list, adapt_every.max(1));
+        if down_target_list.is_empty() {
+            grid = grid
+                .rate_target(RateTarget::Off)
+                .rate_target_axis(&rate_target_list, adapt_every.max(1));
+        } else {
+            // joint up+down budgets: a joint cell carries its own
+            // RateTarget, so the whole closed loop lives on the downlink
+            // axis (crossing a separate rate axis would duplicate every
+            // joint cell) — plus an uncompressed baseline and one
+            // uplink-only reference per uplink share
+            if down_scheme_tok != "rcfed" {
+                return Err(Error::Config(format!(
+                    "a joint budget drives the downlink λ, which requires \
+                     the rcfed down-scheme; got {down_scheme_tok:?}"
+                )));
+            }
+            let down_scheme = scheme_by_name(
+                &down_scheme_tok,
+                rc_bits,
+                0.05,
+                list_lm,
+                list_clip,
+            )?;
+            grid = grid.down(DownlinkCell::off());
+            for &u in &rate_target_list {
+                grid = grid
+                    .down(DownlinkCell {
+                        scheme: None,
+                        rate_target: Some(RateTarget::Track {
+                            bits_per_coord: u,
+                            adapt_every: adapt_every.max(1),
+                        }),
+                    })
+                    .down_target_axis(
+                        u,
+                        &down_target_list,
+                        adapt_every.max(1),
+                        down_scheme,
+                    );
+            }
+        }
     }
     // allocation axis: the uniform reference cell rides along so budget
     // rows always have a shared-codebook row to compare against
@@ -588,6 +700,13 @@ fn cmd_sweep(args: &Args) -> Result<()> {
                 cell.report.metrics.final_sparsity()
             ));
         }
+        if down_axis {
+            line.push_str(&format!(
+                " down={:<12} down_bpc={:.3}",
+                cell.down,
+                cell.report.down_bpc()
+            ));
+        }
         println!("{line}");
     }
     use rcfed::util::csv::CsvField;
@@ -609,6 +728,9 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     if transform_axis {
         header.push("transform");
     }
+    if down_axis {
+        header.push("down");
+    }
     header.extend_from_slice(&["acc", "gigabits"]);
     if rate_axis {
         header.extend_from_slice(&["realized_bpc", "downlink_gigabits"]);
@@ -621,6 +743,12 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     }
     if transform_axis {
         header.push("sparsity");
+    }
+    if down_axis {
+        header.push("down_bpc");
+        if !rate_axis && !alloc_axis {
+            header.push("downlink_gigabits");
+        }
     }
     report.write_csv_with(&out, &header, |c| {
         let mut row = vec![CsvField::from(c.label.clone())];
@@ -639,6 +767,9 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         if transform_axis {
             row.push(CsvField::from(c.transform.clone()));
         }
+        if down_axis {
+            row.push(CsvField::from(c.down.clone()));
+        }
         row.push(CsvField::from(c.report.final_accuracy));
         row.push(CsvField::from(c.report.uplink_gigabits()));
         if rate_axis {
@@ -655,6 +786,14 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         }
         if transform_axis {
             row.push(CsvField::from(c.report.metrics.final_sparsity()));
+        }
+        if down_axis {
+            row.push(CsvField::from(c.report.down_bpc()));
+            if !rate_axis && !alloc_axis {
+                row.push(CsvField::from(
+                    c.report.downlink_bits as f64 / 1e9,
+                ));
+            }
         }
         row
     })?;

@@ -1,0 +1,134 @@
+//! Integration tests for the direction-agnostic downlink codec: the
+//! version protocol across rounds a client sits out, the joint up+down
+//! budget against a charged fp32 broadcast, and wire-level stale-delta
+//! rejection.
+
+use rcfed::coordinator::experiment::{run_experiment, ExperimentConfig};
+use rcfed::fl::compression::{
+    CompressionScheme, DeltaCodec, Direction, RateTarget, WireCoder,
+};
+use rcfed::fl::packet::{Packet, HEADER_BITS};
+use rcfed::quant::rcq::LengthModel;
+use rcfed::util::rng::Rng;
+
+fn rcfed_scheme() -> CompressionScheme {
+    CompressionScheme::RcFed {
+        bits: 3,
+        lambda: 0.05,
+        length_model: LengthModel::Huffman,
+    }
+}
+
+#[test]
+fn laggards_resync_instead_of_decoding_stale_deltas() {
+    // population ≫ cohort: most clients sit out most rounds, so their
+    // acked model version falls behind and the coordinator must unicast
+    // a full resync instead of the incremental delta. With an fp32
+    // downlink the accounting is closed-form: an incremental broadcast
+    // share costs HEADER + 32 (version word) + 32·d, a resync unicast
+    // HEADER + 32·d — so any resync pulls the ledger strictly below the
+    // all-incremental total.
+    let mut cfg = ExperimentConfig::tiny();
+    cfg.rounds = 8;
+    cfg.eval_every = 4;
+    cfg.dataset.num_clients = 64;
+    cfg.clients_per_round = 8;
+    cfg.down_scheme = Some(CompressionScheme::Fp32);
+    let rep = run_experiment(&cfg).unwrap();
+    let d = rep.num_params as u64;
+    let per_incremental = HEADER_BITS + 32 + 32 * d;
+    let all_incremental = cfg.rounds as u64
+        * cfg.clients_per_round as u64
+        * per_incremental;
+    assert!(rep.downlink_bits > 0, "downlink never charged");
+    assert!(
+        rep.downlink_bits < all_incremental,
+        "no resync ever happened: {} vs all-incremental {}",
+        rep.downlink_bits,
+        all_incremental
+    );
+    assert!(rep.final_accuracy.is_finite());
+    assert_eq!(rep.metrics.down_trace().len(), cfg.rounds);
+    assert!(rep.down_bpc().is_finite());
+    // the version protocol is deterministic: same seed, same ledger
+    let again = run_experiment(&cfg).unwrap();
+    assert_eq!(again.downlink_bits, rep.downlink_bits);
+    assert_eq!(
+        again.final_accuracy.to_bits(),
+        rep.final_accuracy.to_bits()
+    );
+}
+
+#[test]
+fn joint_budget_beats_a_charged_fp32_broadcast() {
+    // the acceptance check: at a joint up+down budget, total
+    // communication must come in below the charged fp32-broadcast
+    // baseline without giving up the tiny-task accuracy
+    let mut base = ExperimentConfig::tiny();
+    base.rounds = 30;
+    base.eval_every = 10;
+    base.scheme = rcfed_scheme();
+    base.down_scheme = Some(CompressionScheme::Fp32);
+    let fp32_broadcast = run_experiment(&base).unwrap();
+
+    let mut joint = base.clone();
+    joint.rate_target = RateTarget::Joint {
+        total_bpc: 4.0,
+        split: 0.625,
+        adapt_every: 5,
+    };
+    joint.down_scheme = Some(rcfed_scheme());
+    let budgeted = run_experiment(&joint).unwrap();
+
+    assert!(
+        budgeted.total_comm_bits() < fp32_broadcast.total_comm_bits(),
+        "joint budget {} bits vs fp32 broadcast {} bits",
+        budgeted.total_comm_bits(),
+        fp32_broadcast.total_comm_bits()
+    );
+    // equal-accuracy within a generous tiny-task tolerance
+    assert!(
+        budgeted.final_accuracy >= fp32_broadcast.final_accuracy - 0.2,
+        "accuracy collapsed: {} vs {}",
+        budgeted.final_accuracy,
+        fp32_broadcast.final_accuracy
+    );
+}
+
+#[test]
+fn stale_broadcasts_reject_recoverably_through_the_wire() {
+    // replaying last round's broadcast bytes must surface a recoverable
+    // error that leaves the reconstruction untouched; the current
+    // broadcast must still decode afterwards
+    let d = 80usize;
+    let mut codec = DeltaCodec::design(
+        Direction::Downlink,
+        rcfed_scheme(),
+        WireCoder::Huffman,
+        d,
+    )
+    .unwrap();
+    let mut rng = Rng::new(11);
+    let mut params = vec![0f32; d];
+    let mut stale: Option<Packet> = None;
+    for round in 0..4u32 {
+        for (i, p) in params.iter_mut().enumerate() {
+            *p += ((i as f32) * 0.13 + round as f32).sin() * 0.05;
+        }
+        let pkt = codec.encode_round(&params, round, &mut rng).unwrap();
+        let wire = Packet::parse(&pkt.to_bytes()).unwrap();
+        if let Some(old) = &stale {
+            let before = codec.reference().to_vec();
+            let err = codec.decode_current(old).unwrap_err();
+            assert!(err.to_string().contains("stale"), "{err}");
+            assert_eq!(
+                codec.reference(),
+                &before[..],
+                "a rejected delta must not touch the reference"
+            );
+        }
+        codec.decode_current(&wire).unwrap();
+        stale = Some(wire);
+    }
+    assert_eq!(codec.version(), 4);
+}

@@ -191,6 +191,57 @@ fn block_wire_coder_under_corruption() {
 }
 
 #[test]
+fn compressed_downlink_with_laggards() {
+    // the direction-agnostic delta codec: per-client acked versions are
+    // durable state (resident field vs. store entry), and a population
+    // larger than the cohort forces the resync path for clients that sat
+    // out rounds — both executors must charge the same ledger
+    let mut cfg = base();
+    cfg.rounds = 8;
+    cfg.dataset.num_clients = 64;
+    cfg.clients_per_round = 8;
+    cfg.down_scheme = Some(CompressionScheme::RcFed {
+        bits: 3,
+        lambda: 0.05,
+        length_model: LengthModel::Huffman,
+    });
+    check("downlink", &cfg);
+}
+
+#[test]
+fn joint_rate_budget_runs_both_controllers() {
+    // joint up+down budget: the uplink dual ascent and the downlink
+    // delta-codec controller both adapt mid-run — window state, λ
+    // trajectories and republication charges must match across executors
+    let mut cfg = base();
+    cfg.scheme = CompressionScheme::RcFed {
+        bits: 3,
+        lambda: 0.05,
+        length_model: LengthModel::Huffman,
+    };
+    cfg.rate_target = RateTarget::Joint {
+        total_bpc: 4.0,
+        split: 0.625,
+        adapt_every: 2,
+    };
+    cfg.down_scheme = Some(CompressionScheme::RcFed {
+        bits: 3,
+        lambda: 0.05,
+        length_model: LengthModel::Huffman,
+    });
+    check("joint", &cfg);
+}
+
+#[test]
+fn sign_scheme_on_both_directions() {
+    // the 1-bit sign kernel as uplink scheme and downlink codec at once
+    let mut cfg = base();
+    cfg.scheme = CompressionScheme::Sign;
+    cfg.down_scheme = Some(CompressionScheme::Sign);
+    check("sign", &cfg);
+}
+
+#[test]
 fn population_larger_than_cohort() {
     // the streaming configuration the executor exists for: sample a
     // small cohort out of a larger population every round
