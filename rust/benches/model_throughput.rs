@@ -1,0 +1,228 @@
+//! L3 model-compute micro-bench: blocked forward/grad kernels and the
+//! fused sgd step vs their scalar reference twins, at the three
+//! manifest shapes (`tiny`, `synth_femnist`, `synth_cifar`).
+//!
+//! Throughput unit is **Mcoord/s** where a "coordinate" is one
+//! weight-MAC of the forward pass (`batch · Σ_l dims[l]·dims[l+1]`) —
+//! the same unit for forward and grad so the grad rows honestly show
+//! the backward pass costing ~3× a forward at the same rate. The
+//! `speedup` column is fast-kernel throughput over the reference-twin
+//! throughput at the identical accumulation tree; CI floors the grad
+//! rows at tiny/femnist (see `.github/workflows/ci.yml`).
+//!
+//!     cargo bench --bench model_throughput
+//!
+//! Rep counts are auto-scaled so every closure does a comparable amount
+//! of work regardless of shape; there is no `RCFED_BENCH_N` knob — the
+//! shapes themselves are the size axis and the defaults are already
+//! smoke-sized.
+
+use rcfed::csv_row;
+use rcfed::model::kernels;
+use rcfed::model::native::NativeMlp;
+use rcfed::model::{Backend, ModelScratch};
+use rcfed::util::csv::CsvWriter;
+use rcfed::util::rng::Rng;
+use rcfed::util::timer::{bench, report};
+
+/// Weight-MACs of one forward pass at batch size `batch`.
+fn coords_per_pass(dims: &[usize], batch: usize) -> usize {
+    batch
+        * dims
+            .windows(2)
+            .map(|w| w[0] * w[1])
+            .sum::<usize>()
+}
+
+/// Inner-loop repetitions targeting ~8M coords of work per timed
+/// closure, so tiny shapes are not dominated by call overhead and cifar
+/// reference rows stay smoke-sized.
+fn reps_for(work: usize) -> usize {
+    (8_000_000 / work.max(1)).clamp(1, 512)
+}
+
+/// Standalone forward pass through the public kernels (fast or
+/// reference twin) — the bench-local equivalent of the model's private
+/// `forward_into`, so the forward rows isolate matvec throughput from
+/// the argmax/loss tails of `eval`/`grad`.
+fn forward(
+    m: &NativeMlp,
+    params: &[f32],
+    xs: &[f32],
+    batch: usize,
+    acts: &mut [Vec<f32>],
+    reference: bool,
+) {
+    let nl = m.dims.len() - 1;
+    let mut off = 0;
+    for l in 0..nl {
+        let (i, o) = (m.dims[l], m.dims[l + 1]);
+        let w = &params[off..off + i * o];
+        let b = &params[off + i * o..off + i * o + o];
+        off += i * o + o;
+        let (prev, rest) = acts.split_at_mut(l);
+        let h_in: &[f32] = if l == 0 { xs } else { &prev[l - 1] };
+        let h = &mut rest[0];
+        h.resize(batch * o, 0.0);
+        if reference {
+            kernels::matvec_bias_reference(w, b, h_in, batch, i, o, h);
+        } else {
+            kernels::matvec_bias(w, b, h_in, batch, i, o, h);
+        }
+        if l < nl - 1 {
+            for x in h.iter_mut() {
+                if *x < 0.0 {
+                    *x = 0.0;
+                }
+            }
+        }
+    }
+}
+
+fn main() {
+    let shapes: [(&str, NativeMlp); 3] = [
+        ("tiny", NativeMlp::tiny()),
+        ("femnist", NativeMlp::synth_femnist()),
+        ("cifar", NativeMlp::synth_cifar()),
+    ];
+    let mut w = CsvWriter::create(
+        "results/model.csv",
+        &["op", "shape", "mcoord_per_s", "examples_per_s", "speedup"],
+    )
+    .unwrap();
+
+    println!("== model-compute throughput (single thread) ==");
+    let mut rng = Rng::new(42);
+    for (name, m) in &shapes {
+        let batch = m.batch_size();
+        let d = m.num_params();
+        let classes = *m.dims.last().unwrap();
+        let params = m.init_params(7);
+        let mut xs = vec![0f32; batch * m.dims[0]];
+        rng.fill_normal_f32(&mut xs, 0.0, 1.0);
+        let ys: Vec<i32> =
+            (0..batch).map(|k| (k % classes) as i32).collect();
+        let coords = coords_per_pass(&m.dims, batch);
+        let reps = reps_for(coords);
+        let work = (reps * coords) as f64;
+        let ex = (reps * batch) as f64;
+        println!(
+            "-- {name}: dims {:?}, batch {batch}, d {d}, {reps} reps/iter",
+            m.dims
+        );
+
+        // forward: matvec chain only, fast vs reference twin
+        let mut acts: Vec<Vec<f32>> =
+            vec![Vec::new(); m.dims.len() - 1];
+        let mut fwd = |reference: bool| {
+            bench(1, 5, || {
+                for _ in 0..reps {
+                    forward(m, &params, &xs, batch, &mut acts, reference);
+                    std::hint::black_box(acts.last().unwrap().as_slice());
+                }
+            })
+        };
+        let f_fast = fwd(false);
+        let f_ref = fwd(true);
+        let tput = work / f_fast.median() / 1e6;
+        let tput_ref = work / f_ref.median() / 1e6;
+        let speedup = tput / tput_ref.max(1e-12);
+        report(&format!("forward/{name}"), &f_fast, work);
+        report(&format!("forward_reference/{name}"), &f_ref, work);
+        println!("   forward speedup {speedup:.2}x");
+        csv_row!(w, "forward", *name, tput, ex / f_fast.median(), speedup)
+            .unwrap();
+        csv_row!(
+            w,
+            "forward_reference",
+            *name,
+            tput_ref,
+            ex / f_ref.median(),
+            1.0f64
+        )
+        .unwrap();
+
+        // grad: full forward+backward through the Backend entry points
+        let mut grad_out = vec![0f32; d];
+        let mut scratch = ModelScratch::new();
+        let g_fast = bench(1, 5, || {
+            for _ in 0..reps {
+                let loss = m
+                    .grad_with(&params, &xs, &ys, &mut grad_out, &mut scratch)
+                    .unwrap();
+                std::hint::black_box(loss);
+            }
+        });
+        let g_ref = bench(1, 5, || {
+            for _ in 0..reps {
+                let loss = m
+                    .grad_reference(
+                        &params, &xs, &ys, &mut grad_out, &mut scratch,
+                    )
+                    .unwrap();
+                std::hint::black_box(loss);
+            }
+        });
+        let tput = work / g_fast.median() / 1e6;
+        let tput_ref = work / g_ref.median() / 1e6;
+        let speedup = tput / tput_ref.max(1e-12);
+        report(&format!("grad/{name}"), &g_fast, work);
+        report(&format!("grad_reference/{name}"), &g_ref, work);
+        println!("   grad speedup {speedup:.2}x");
+        csv_row!(w, "grad", *name, tput, ex / g_fast.median(), speedup)
+            .unwrap();
+        csv_row!(
+            w,
+            "grad_reference",
+            *name,
+            tput_ref,
+            ex / g_ref.median(),
+            1.0f64
+        )
+        .unwrap();
+
+        // sgd_step over the flat parameter vector: coords here are
+        // parameter updates, examples_per_s counts whole steps
+        let mut p = params.clone();
+        let sgd_reps = reps_for(d);
+        let sgd_work = (sgd_reps * d) as f64;
+        let s_fast = bench(1, 5, || {
+            for _ in 0..sgd_reps {
+                kernels::sgd_step(&mut p, &grad_out, 1e-7);
+            }
+            std::hint::black_box(p.as_slice());
+        });
+        let s_ref = bench(1, 5, || {
+            for _ in 0..sgd_reps {
+                kernels::sgd_step_reference(&mut p, &grad_out, 1e-7);
+            }
+            std::hint::black_box(p.as_slice());
+        });
+        let tput = sgd_work / s_fast.median() / 1e6;
+        let tput_ref = sgd_work / s_ref.median() / 1e6;
+        let speedup = tput / tput_ref.max(1e-12);
+        report(&format!("sgd_step/{name}"), &s_fast, sgd_work);
+        report(&format!("sgd_step_reference/{name}"), &s_ref, sgd_work);
+        println!("   sgd_step speedup {speedup:.2}x");
+        csv_row!(
+            w,
+            "sgd_step",
+            *name,
+            tput,
+            sgd_reps as f64 / s_fast.median(),
+            speedup
+        )
+        .unwrap();
+        csv_row!(
+            w,
+            "sgd_step_reference",
+            *name,
+            tput_ref,
+            sgd_reps as f64 / s_ref.median(),
+            1.0f64
+        )
+        .unwrap();
+    }
+    w.flush().unwrap();
+    println!("wrote results/model.csv");
+}

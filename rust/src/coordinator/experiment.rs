@@ -19,7 +19,7 @@ use crate::fl::server::{LrSchedule, Server};
 use crate::fl::store::{ClientStore, ShardSource};
 use crate::model::native::NativeMlp;
 use crate::model::pjrt::PjrtModel;
-use crate::model::Backend;
+use crate::model::{Backend, ModelScratch};
 use crate::coordinator::network::{
     ChannelSpec, ChannelStats, Delivery, SimulatedNetwork,
 };
@@ -284,11 +284,14 @@ fn evaluate<B: Backend + ?Sized>(
     let b = backend.batch_size();
     let mut correct = 0usize;
     let mut total = 0usize;
+    // one workspace for the whole sweep over test batches (the native
+    // backend's forward then allocates nothing per batch)
+    let mut scratch = ModelScratch::new();
     for (i, (xs, ys)) in ds.test_batches(b).enumerate() {
         if max_batches > 0 && i >= max_batches {
             break;
         }
-        correct += backend.eval(params, xs, ys)?;
+        correct += backend.eval_with(params, xs, ys, &mut scratch)?;
         total += ys.len();
     }
     if total == 0 {
@@ -552,13 +555,15 @@ enum Outcome<'a> {
 /// With `threads > 1` the per-packet decodes fan out across
 /// [`parallel_map`] while everything order-sensitive stays serial:
 /// the channel draws (phase 1), then an ordered replay of the decoded
-/// reconstructions into the accumulator (phase 3). Each worker decodes
-/// into a private zero-filled `d`-vector and the replay folds those
-/// vectors in delivery order, so the accumulator sees the same
-/// additions in the same order as the serial path — byte-identical by
-/// construction ([`Server::accumulate_decoded`] spells out the f32
+/// packets into the accumulator (phase 3). Each worker runs the split
+/// decode ([`CompressionPipeline::decode_body`]) — validation, entropy
+/// decode, reconstruction table — and the replay performs the fused
+/// gather-adds in delivery order, so the accumulator sees the exact
+/// f32 additions of the serial path in the same order — byte-identical
+/// by construction ([`Server::accumulate_decoded`] spells out the
 /// argument; `tests/streaming_identity.rs` pins it). Peak extra memory
-/// is `O(threads · d)`: decode batches advance chunk by chunk.
+/// is `O(threads · d)` bytes for codebook schemes (symbols, not f32
+/// reconstructions): decode batches advance chunk by chunk.
 fn deliver_round(
     round: usize,
     updates: &[ClientUpdate],
@@ -652,8 +657,8 @@ fn deliver_round(
     }
     let d = server.dim();
     for chunk in outcomes.chunks(workers) {
-        // phase 2 (parallel): decode this chunk's packets, each into a
-        // private zero-filled reconstruction buffer
+        // phase 2 (parallel): split-decode this chunk's packets —
+        // symbols + reconstruction table per packet, no accumulation
         let todo: Vec<&Packet> = chunk
             .iter()
             .filter_map(|o| match o {
@@ -669,26 +674,23 @@ fn deliver_round(
                 return Err(Error::Coding(format!(
                     "packet d={} vs model d={}", pkt.d, d)));
             }
-            let mut recon = vec![0f32; d];
-            dec.decompress_accumulate(pkt, &mut recon)?;
-            Ok(recon)
+            dec.decode_body(pkt)
         })
         .into_iter();
-        // phase 3 (serial): replay in delivery order
+        // phase 3 (serial): fused gather-add replay in delivery order
         for outcome in chunk {
             match outcome {
                 Outcome::Intact(up) => {
-                    let recon: Vec<f32> =
-                        decoded.next().expect("one result per packet")?;
-                    server.accumulate_decoded(&recon)?;
+                    let dp = decoded.next().expect("one result per packet")?;
+                    server.accumulate_decoded(&dp)?;
                     pipeline.observe_delivery(&up.packet, &up.sample);
                     survivors += 1;
                     loss_acc += up.mean_loss as f64;
                 }
                 Outcome::Reparsed(up, _) => {
                     match decoded.next().expect("one result per packet") {
-                        Ok(recon) => {
-                            server.accumulate_decoded(&recon)?;
+                        Ok(dp) => {
+                            server.accumulate_decoded(&dp)?;
                             pipeline.observe_delivery(&up.packet, &up.sample);
                             survivors += 1;
                             loss_acc += up.mean_loss as f64;

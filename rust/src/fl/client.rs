@@ -25,7 +25,7 @@ use crate::fl::compression::{
     CodecScratch, CompressionPipeline, TransformState,
 };
 use crate::fl::packet::Packet;
-use crate::model::Backend;
+use crate::model::{kernels, Backend, ModelScratch};
 use crate::util::rng::Rng;
 use crate::util::Result;
 
@@ -70,6 +70,8 @@ pub struct RoundScratch {
     ys: Vec<i32>,
     /// encode-side symbol/recon buffers (see [`CodecScratch`])
     codec: CodecScratch,
+    /// model-side activation/delta workspace (see [`ModelScratch`])
+    model: ModelScratch,
 }
 
 impl RoundScratch {
@@ -127,12 +129,15 @@ pub fn run_client_round<B: Backend + ?Sized>(
     for _ in 0..local_iters.max(1) {
         shard.sample_batch(
             &mut state.rng, batch, &mut scratch.xs, &mut scratch.ys);
-        let loss = backend.grad(
-            &scratch.local, &scratch.xs, &scratch.ys, &mut scratch.grad)?;
+        let loss = backend.grad_with(
+            &scratch.local,
+            &scratch.xs,
+            &scratch.ys,
+            &mut scratch.grad,
+            &mut scratch.model,
+        )?;
         loss_acc += loss as f64;
-        for (p, &g) in scratch.local.iter_mut().zip(&scratch.grad) {
-            *p -= lr * g;
-        }
+        kernels::sgd_step(&mut scratch.local, &scratch.grad, lr);
     }
     // effective gradient: (θ_t − θ_{k,e}) / η_t
     let inv_lr = 1.0 / lr;

@@ -11,7 +11,7 @@ use crate::util::rng::Rng;
 use crate::util::{Error, Result};
 
 use super::design::{codebook_broadcast_bits, designed_codebook};
-use super::pipeline::RateTarget;
+use super::pipeline::{DecodedBody, RateTarget};
 use super::quantize::{
     encode_staged, CodebookCodec, CodecScratch, QuantBackend,
 };
@@ -585,6 +585,36 @@ impl RateAllocator {
             return Err(Error::Coding(format!(
                 "accumulator {} != packet d {d}", acc.len())));
         }
+        let (codec, mu, sigma) = self.checked_codec(packet)?;
+        if self.transform.is_sparse() {
+            codec.decode_sparse_accumulate(packet, mu, sigma, acc)
+        } else {
+            codec.decode_accumulate(packet, mu, sigma, acc)
+        }
+    }
+
+    /// Split decode for the deferred-accumulate server path (same
+    /// validation + decode as [`Self::decompress_accumulate`], no
+    /// accumulator writes).
+    pub(crate) fn decode_body(&self, packet: &Packet) -> Result<DecodedBody> {
+        let (codec, mu, sigma) = self.checked_codec(packet)?;
+        if self.transform.is_sparse() {
+            let (indices, symbols, table) =
+                codec.decode_sparse_body(packet, mu, sigma)?;
+            Ok(DecodedBody::Sparse { indices, symbols, table })
+        } else {
+            let (symbols, table) = codec.decode_dense_body(packet, mu, sigma)?;
+            Ok(DecodedBody::Symbols { symbols, table })
+        }
+    }
+
+    /// Shared packet validation for the two decode paths: side-info
+    /// arity, allocation version, width-vs-assignment — returning the
+    /// *sender's* codec and the packet's (μ, σ).
+    fn checked_codec(
+        &self,
+        packet: &Packet,
+    ) -> Result<(CodebookCodec<'_>, f32, f32)> {
         if packet.side_info.len() != 3 {
             return Err(Error::Coding(format!(
                 "allocated packet carries {} side-info values, expected \
@@ -615,12 +645,7 @@ impl RateAllocator {
         }
         let design = self.design_of(width)?;
         let (mu, sigma) = (packet.side_info[0], packet.side_info[1]);
-        let codec = design.codec(self.wire);
-        if self.transform.is_sparse() {
-            codec.decode_sparse_accumulate(packet, mu, sigma, acc)
-        } else {
-            codec.decode_accumulate(packet, mu, sigma, acc)
-        }
+        Ok((design.codec(self.wire), mu, sigma))
     }
 
     /// Current width histogram `(width, clients)`, ascending.

@@ -11,6 +11,7 @@ use crate::util::rng::Rng;
 use crate::util::{Error, Result};
 
 use super::design::designed_codebook;
+use super::pipeline::DecodedBody;
 use super::quantize::{
     decode_sparse_fp32, encode_staged, qsgd_encode, qsgd_table_bytes,
     sign_decode_into, sign_encode, sign_scale, CodebookCodec, CodecScratch,
@@ -126,7 +127,9 @@ impl Compressor {
             return self.compress_with(&mut tmp, client_id, round, grad, rng);
         }
         let mut scratch = CodecScratch::new();
-        self.compress_dense(&mut scratch, client_id, round, grad, rng)
+        let (pkt, _) =
+            self.compress_dense(&mut scratch, client_id, round, grad, rng, false)?;
+        Ok(pkt)
     }
 
     /// Compress through the full staged path, threading the caller's
@@ -162,7 +165,12 @@ impl Compressor {
         capture_sample: bool,
     ) -> Result<Packet> {
         if !self.transform.is_active() {
-            return self.compress_dense(scratch, client_id, round, grad, rng);
+            let (pkt, sample) = self.compress_dense(
+                scratch, client_id, round, grad, rng, capture_sample)?;
+            if let Some(sample) = sample {
+                state.set_sample(sample);
+            }
+            return Ok(pkt);
         }
         encode_staged(
             &self.backend(),
@@ -181,7 +189,11 @@ impl Compressor {
 
     /// The legacy dense hot path — byte-identical to the pre-codec
     /// module for every scheme. The quantize stage writes into the
-    /// caller's reusable symbol buffer.
+    /// caller's reusable symbol buffer. With `capture_sample` the
+    /// codebook arm folds the adaptive controller's stats sample into
+    /// the moments pass (byte-identical to the old re-walk via
+    /// `grad_sample_from`); the other kernels return `None` and the
+    /// caller's fallback sampler applies.
     fn compress_dense(
         &self,
         scratch: &mut CodecScratch,
@@ -189,7 +201,8 @@ impl Compressor {
         round: u32,
         grad: &[f32],
         rng: &mut Rng,
-    ) -> Result<Packet> {
+        capture_sample: bool,
+    ) -> Result<(Packet, Option<Vec<f32>>)> {
         match &self.kernel {
             Kernel::Codebook { codebook, huffman, arith } => {
                 let codec = CodebookCodec {
@@ -198,70 +211,91 @@ impl Compressor {
                     arith,
                     wire: self.wire,
                 };
-                let (mu, sigma, payload, payload_bits) =
-                    codec.encode(grad, &mut scratch.symbols)?;
-                Ok(Packet {
-                    client_id,
-                    round,
-                    scheme: self.scheme.tag(),
-                    bits_per_symbol: self.scheme.bits() as u8,
-                    d: grad.len() as u32,
-                    side_info: vec![mu, sigma],
-                    payload,
-                    payload_bits,
-                    table_bits: 0, // universal design-time code (§3.1)
-                    index_bits: 0,
-                })
+                let (mu, sigma, sample) = if capture_sample {
+                    let (mu, sigma, s) =
+                        codec.quantize_sampling(grad, &mut scratch.symbols);
+                    (mu, sigma, Some(s))
+                } else {
+                    let (mu, sigma) =
+                        codec.quantize(grad, &mut scratch.symbols);
+                    (mu, sigma, None)
+                };
+                let (payload, payload_bits) = codec.code(&scratch.symbols)?;
+                Ok((
+                    Packet {
+                        client_id,
+                        round,
+                        scheme: self.scheme.tag(),
+                        bits_per_symbol: self.scheme.bits() as u8,
+                        d: grad.len() as u32,
+                        side_info: vec![mu, sigma],
+                        payload,
+                        payload_bits,
+                        table_bits: 0, // universal design-time code (§3.1)
+                        index_bits: 0,
+                    },
+                    sample,
+                ))
             }
             Kernel::Qsgd(q) => {
                 let e = qsgd_encode(q, grad, rng)?;
-                Ok(Packet {
-                    client_id,
-                    round,
-                    scheme: SchemeTag::Qsgd,
-                    bits_per_symbol: self.scheme.bits() as u8,
-                    d: grad.len() as u32,
-                    // one 32-bit ‖v‖ per bucket — bucketing's real cost
-                    side_info: e.msg.norms,
-                    payload: e.payload,
-                    payload_bits: e.payload_bits,
-                    table_bits: e.table_bits,
-                    index_bits: 0,
-                })
+                Ok((
+                    Packet {
+                        client_id,
+                        round,
+                        scheme: SchemeTag::Qsgd,
+                        bits_per_symbol: self.scheme.bits() as u8,
+                        d: grad.len() as u32,
+                        // one 32-bit ‖v‖ per bucket — bucketing's real
+                        // cost
+                        side_info: e.msg.norms,
+                        payload: e.payload,
+                        payload_bits: e.payload_bits,
+                        table_bits: e.table_bits,
+                        index_bits: 0,
+                    },
+                    None,
+                ))
             }
             Kernel::Fp32 => {
                 let mut payload = Vec::with_capacity(grad.len() * 4);
                 for &x in grad {
                     payload.extend_from_slice(&x.to_le_bytes());
                 }
-                Ok(Packet {
-                    client_id,
-                    round,
-                    scheme: SchemeTag::Fp32,
-                    bits_per_symbol: 32,
-                    d: grad.len() as u32,
-                    side_info: vec![],
-                    payload,
-                    payload_bits: grad.len() as u64 * 32,
-                    table_bits: 0,
-                    index_bits: 0,
-                })
+                Ok((
+                    Packet {
+                        client_id,
+                        round,
+                        scheme: SchemeTag::Fp32,
+                        bits_per_symbol: 32,
+                        d: grad.len() as u32,
+                        side_info: vec![],
+                        payload,
+                        payload_bits: grad.len() as u64 * 32,
+                        table_bits: 0,
+                        index_bits: 0,
+                    },
+                    None,
+                ))
             }
             Kernel::Sign => {
                 let scale = sign_scale(grad);
                 let (payload, payload_bits) = sign_encode(grad);
-                Ok(Packet {
-                    client_id,
-                    round,
-                    scheme: SchemeTag::Sign,
-                    bits_per_symbol: 1,
-                    d: grad.len() as u32,
-                    side_info: vec![scale],
-                    payload,
-                    payload_bits,
-                    table_bits: 0,
-                    index_bits: 0,
-                })
+                Ok((
+                    Packet {
+                        client_id,
+                        round,
+                        scheme: SchemeTag::Sign,
+                        bits_per_symbol: 1,
+                        d: grad.len() as u32,
+                        side_info: vec![scale],
+                        payload,
+                        payload_bits,
+                        table_bits: 0,
+                        index_bits: 0,
+                    },
+                    None,
+                ))
             }
         }
     }
@@ -404,6 +438,60 @@ impl Compressor {
         Ok(())
     }
 
+    /// Split decode for the deferred-accumulate server path: everything
+    /// [`Self::decompress_accumulate`] does except the accumulator
+    /// writes. Codebook packets decode to symbols + an owned
+    /// reconstruction table; the raw-value schemes (fp32, sign, qsgd)
+    /// fall back to their direct decoder into a private zeroed buffer —
+    /// exactly what the parallel delivery path did per worker before
+    /// the split.
+    pub(crate) fn decode_body(&self, packet: &Packet) -> Result<DecodedBody> {
+        match &self.kernel {
+            Kernel::Codebook { .. } => {
+                // (μ, σ) side info — a corrupted packet can carry any
+                // count or value, so validate before touching it
+                if packet.side_info.len() != 2 {
+                    return Err(Error::Coding(format!(
+                        "codebook packet carries {} side-info values, \
+                         expected 2 (μ, σ)",
+                        packet.side_info.len()
+                    )));
+                }
+                let (mu, sigma) = (packet.side_info[0], packet.side_info[1]);
+                self.decode_codebook_body(packet, mu, sigma)
+            }
+            _ => {
+                let mut recon = vec![0f32; packet.d as usize];
+                self.decompress_accumulate(packet, &mut recon)?;
+                Ok(DecodedBody::Recon(recon))
+            }
+        }
+    }
+
+    /// Split-decode twin of [`Self::decode_codebook_accumulate`]: same
+    /// (μ, σ) contract, deferred accumulation.
+    pub(crate) fn decode_codebook_body(
+        &self,
+        packet: &Packet,
+        mu: f32,
+        sigma: f32,
+    ) -> Result<DecodedBody> {
+        let Kernel::Codebook { codebook, huffman, arith } = &self.kernel
+        else {
+            return Err(Error::Coding(format!(
+                "scheme {:?} is not codebook-backed", self.scheme)));
+        };
+        let codec = CodebookCodec { codebook, huffman, arith, wire: self.wire };
+        if self.transform.is_sparse() {
+            let (indices, symbols, table) =
+                codec.decode_sparse_body(packet, mu, sigma)?;
+            Ok(DecodedBody::Sparse { indices, symbols, table })
+        } else {
+            let (symbols, table) = codec.decode_dense_body(packet, mu, sigma)?;
+            Ok(DecodedBody::Symbols { symbols, table })
+        }
+    }
+
     /// Decode a codebook-scheme payload and accumulate with the given
     /// (μ, σ) — shared by the static 2-word side-info path above and the
     /// pipeline's versioned 3-word path (which validates and strips the
@@ -445,6 +533,42 @@ mod tests {
         let mut g = vec![0f32; n];
         rng.fill_normal_f32(&mut g, mu, sigma);
         g
+    }
+
+    #[test]
+    fn fused_sampling_quantize_is_bitwise_identical() {
+        // quantize_sampling folds the stats capture into the moments
+        // pass; (μ, σ), the symbol stream AND the normalized sample must
+        // match the unfused quantize + sample_normalized pair bit for
+        // bit — including the empty-gradient and stride-1 edges
+        let c = Compressor::design(
+            CompressionScheme::RcFed {
+                bits: 3,
+                lambda: 0.05,
+                length_model: LengthModel::Huffman,
+            },
+            WireCoder::Huffman,
+        )
+        .unwrap();
+        let QuantBackend::Codebook(codec) = c.backend() else {
+            panic!("rcfed must be codebook-backed");
+        };
+        for n in [0usize, 1, 100, 2048, 5000] {
+            let g = gaussian_grad(n, 0.02, 0.3, 90 + n as u64);
+            let mut sym_a = Vec::new();
+            let (mu_a, sg_a) = codec.quantize(&g, &mut sym_a);
+            let expect = super::super::quantize::sample_normalized(
+                &g, mu_a, sg_a);
+            let mut sym_b = Vec::new();
+            let (mu_b, sg_b, sample) =
+                codec.quantize_sampling(&g, &mut sym_b);
+            assert_eq!(mu_a.to_bits(), mu_b.to_bits(), "n={n}");
+            assert_eq!(sg_a.to_bits(), sg_b.to_bits(), "n={n}");
+            assert_eq!(sym_a, sym_b, "n={n}");
+            let ea: Vec<u32> = expect.iter().map(|x| x.to_bits()).collect();
+            let eb: Vec<u32> = sample.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(ea, eb, "n={n}");
+        }
     }
 
     #[test]

@@ -55,7 +55,8 @@ pub use compressor::Compressor;
 pub use downlink::{DeltaCodec, Direction};
 pub use design::{design_cache_stats, designed_codebook, DesignCacheStats};
 pub use pipeline::{
-    CompressionPipeline, PacketDecoder, RateTarget, RoundAdaptation,
+    CompressionPipeline, DecodedPacket, PacketDecoder, RateTarget,
+    RoundAdaptation,
 };
 pub use quantize::CodecScratch;
 pub use scheme::{CompressionScheme, WireCoder};

@@ -644,6 +644,108 @@ impl CompressionPipeline {
         }
         self.compressor.decode_codebook_accumulate(packet, mu, sigma, acc)
     }
+
+    /// PS side, split decode: run every per-packet stage —
+    /// validation, entropy decode, reconstruction-table build — but
+    /// defer the accumulator writes into the returned
+    /// [`DecodedPacket`]. The parallel delivery path decodes packets
+    /// concurrently with this (1 byte/coordinate of decode output for
+    /// codebook schemes instead of a 4-byte recon vector) and replays
+    /// the fused gather-adds serially in arrival order.
+    ///
+    /// `decode_body(p)` + `accumulate_into(acc)` is byte-identical to
+    /// [`Self::decompress_accumulate`] — both run the same shared
+    /// decode bodies, and the gather-add is the exact f32 expression
+    /// the direct path evaluates.
+    pub fn decode_body(&self, packet: &Packet) -> Result<DecodedPacket> {
+        let body = if let Some(alloc) = &self.alloc {
+            alloc.decode_body(packet)?
+        } else if !self.adaptive {
+            self.compressor.decode_body(packet)?
+        } else {
+            if packet.side_info.len() != 3 {
+                return Err(Error::Coding(format!(
+                    "versioned packet carries {} side-info values, expected \
+                     3 (μ, σ, version)",
+                    packet.side_info.len()
+                )));
+            }
+            let (mu, sigma) = (packet.side_info[0], packet.side_info[1]);
+            let ver = packet.side_version()?;
+            if ver != self.version {
+                return Err(Error::Coding(format!(
+                    "stale codebook version {ver} (current {})",
+                    self.version
+                )));
+            }
+            self.compressor.decode_codebook_body(packet, mu, sigma)?
+        };
+        Ok(DecodedPacket { d: packet.d as usize, body })
+    }
+}
+
+/// A packet after the decode phase but before the accumulate phase:
+/// entropy-decoded symbols plus an owned reconstruction table (or a
+/// dense reconstruction for the raw-value schemes). Owning the table —
+/// 256 f32s — keeps the value independent of the pipeline, whose
+/// codebook may be redesigned (adaptive re-design, allocator re-fill)
+/// between decode and replay.
+#[derive(Debug)]
+pub struct DecodedPacket {
+    d: usize,
+    body: DecodedBody,
+}
+
+/// The scheme-shaped decode output behind [`DecodedPacket`].
+#[derive(Debug)]
+pub(crate) enum DecodedBody {
+    /// raw reconstruction (fp32 / sign / qsgd fall back to the direct
+    /// decoder — their decode already materializes values)
+    Recon(Vec<f32>),
+    /// dense codebook packet: one symbol per coordinate + premultiplied
+    /// reconstruction table
+    Symbols { symbols: Vec<u8>, table: Box<[f32; 256]> },
+    /// sparse (top-k) codebook packet: coordinate indices + symbols
+    Sparse {
+        indices: Vec<u32>,
+        symbols: Vec<u8>,
+        table: Box<[f32; 256]>,
+    },
+}
+
+impl DecodedPacket {
+    /// The packet's declared model dimension.
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    /// Replay phase: the fused gather-add (`acc[i] += t[sym[i]]`) into
+    /// the server accumulator — the same per-coordinate f32 adds, in
+    /// the same order, as the direct decode-accumulate path.
+    pub fn accumulate_into(&self, acc: &mut [f32]) -> Result<()> {
+        if acc.len() != self.d {
+            return Err(Error::Coding(format!(
+                "accumulator {} != decoded d {}", acc.len(), self.d)));
+        }
+        match &self.body {
+            DecodedBody::Recon(recon) => {
+                for (a, &v) in acc.iter_mut().zip(recon) {
+                    *a += v;
+                }
+            }
+            DecodedBody::Symbols { symbols, table } => {
+                for (a, &s) in acc.iter_mut().zip(symbols) {
+                    *a += table[s as usize];
+                }
+            }
+            DecodedBody::Sparse { indices, symbols, table } => {
+                for (&i, &s) in indices.iter().zip(symbols) {
+                    acc[i as usize] += table[s as usize];
+                }
+            }
+        }
+        Ok(())
+    }
 }
 
 /// PS-side decoding interface: the server is generic over this, so both
@@ -898,4 +1000,66 @@ mod tests {
     // The σ = 0 constant-gradient regression lives in
     // `super::compressor::tests`; the transform × Track composition
     // scenario lives in `tests/error_feedback.rs` (public API only).
+
+    /// `decode_body` + `accumulate_into` must be bitwise equal to the
+    /// direct `decompress_accumulate` for every scheme family — dense
+    /// codebook, raw-value fallbacks, sparse top-k, and the adaptive
+    /// versioned path (including its stale-version reject).
+    #[test]
+    fn split_decode_is_bitwise_identical_to_direct() {
+        let check = |pipe: &CompressionPipeline, pkt: &Packet, d: usize| {
+            let mut direct = vec![0.25f32; d];
+            pipe.decompress_accumulate(pkt, &mut direct).unwrap();
+            let dp = pipe.decode_body(pkt).unwrap();
+            assert_eq!(dp.dim(), d);
+            let mut replay = vec![0.25f32; d];
+            dp.accumulate_into(&mut replay).unwrap();
+            let a: Vec<u32> = direct.iter().map(|x| x.to_bits()).collect();
+            let b: Vec<u32> = replay.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(a, b);
+        };
+        let g = gaussian_grad(4096, 0.01, 0.5, 91);
+        // static pipelines across the kernel families
+        for scheme in [
+            rcfed_scheme(),
+            CompressionScheme::Lloyd { bits: 3 },
+            CompressionScheme::Qsgd { bits: 3 },
+            CompressionScheme::Fp32,
+            CompressionScheme::Sign,
+        ] {
+            let pipe = CompressionPipeline::design(
+                scheme, WireCoder::Huffman, RateTarget::Off)
+            .unwrap();
+            let mut rng = Rng::new(92);
+            let pkt = pipe.compress(0, 0, &g, &mut rng).unwrap();
+            check(&pipe, &pkt, g.len());
+        }
+        // sparse top-k over a codebook kernel
+        let sparse = Compressor::design_with_transform(
+            rcfed_scheme(),
+            WireCoder::Huffman,
+            TransformCfg::topk(0.1),
+        )
+        .unwrap();
+        let pipe = CompressionPipeline::from_compressor(sparse);
+        let mut rng = Rng::new(93);
+        let pkt = pipe.compress(0, 0, &g, &mut rng).unwrap();
+        check(&pipe, &pkt, g.len());
+        // adaptive versioned path: current version decodes, stale rejects
+        let mut adaptive = CompressionPipeline::design(
+            rcfed_scheme(),
+            WireCoder::Huffman,
+            RateTarget::Track { bits_per_coord: 2.0, adapt_every: 1 },
+        )
+        .unwrap();
+        let v0 = adaptive.compress(0, 0, &g, &mut rng).unwrap();
+        check(&adaptive, &v0, g.len());
+        let sample = adaptive.grad_sample(&g);
+        adaptive.observe_samples(&sample);
+        adaptive.observe_round(v0.total_bits(), v0.d as u64);
+        adaptive.end_round(0).unwrap();
+        assert!(adaptive.decode_body(&v0).is_err(), "stale version");
+        let v1 = adaptive.compress(0, 1, &g, &mut rng).unwrap();
+        check(&adaptive, &v1, g.len());
+    }
 }

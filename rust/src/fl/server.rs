@@ -5,7 +5,7 @@
 //! `θ_{t+1} = θ_t − η_t ḡ_t`. Learning-rate schedules include the
 //! Theorem-1 schedule `η_t = 2 / (ρ (t + γ))`.
 
-use crate::fl::compression::PacketDecoder;
+use crate::fl::compression::{DecodedPacket, PacketDecoder};
 use crate::fl::packet::Packet;
 use crate::util::{Error, Result};
 
@@ -97,24 +97,24 @@ impl Server {
         self.receive(decoder, &packet)
     }
 
-    /// Fold an already-decoded reconstruction into the accumulator.
+    /// Fold an already-decoded packet into the accumulator — the fused
+    /// replay half of the split decode
+    /// ([`crate::fl::compression::CompressionPipeline::decode_body`]).
     ///
-    /// The parallel delivery path decodes each packet into a private
-    /// zero-filled buffer off-thread, then replays the buffers here *in
-    /// delivery order*. Because the per-packet decode writes into a
-    /// fresh zeroed buffer and this fold adds the buffers serially in
-    /// the same order the serial path adds packets, the accumulator is
+    /// The parallel delivery path decodes each packet to symbols + a
+    /// reconstruction table off-thread, then replays the gather-adds
+    /// here *in delivery order*. The per-coordinate adds are the exact
+    /// f32 expressions the direct decode-accumulate evaluates, in the
+    /// same order the serial path adds packets, so the accumulator is
     /// byte-identical to [`receive`](Self::receive)-ing the packets one
     /// by one (f32 addition is non-associative across *different*
     /// orders, but the order here is the same).
-    pub fn accumulate_decoded(&mut self, recon: &[f32]) -> Result<()> {
-        if recon.len() != self.dim() {
+    pub fn accumulate_decoded(&mut self, decoded: &DecodedPacket) -> Result<()> {
+        if decoded.dim() != self.dim() {
             return Err(Error::Coding(format!(
-                "decoded d={} vs model d={}", recon.len(), self.dim())));
+                "decoded d={} vs model d={}", decoded.dim(), self.dim())));
         }
-        for (a, &g) in self.acc.iter_mut().zip(recon) {
-            *a += g;
-        }
+        decoded.accumulate_into(&mut self.acc)?;
         self.received += 1;
         Ok(())
     }
@@ -132,9 +132,7 @@ impl Server {
         }
         let lr = self.lr();
         let scale = lr / self.received as f32;
-        for (p, &g) in self.params.iter_mut().zip(&self.acc) {
-            *p -= scale * g;
-        }
+        crate::model::kernels::sgd_step(&mut self.params, &self.acc, scale);
         self.round += 1;
         Ok(lr)
     }
@@ -238,6 +236,41 @@ mod tests {
         server.step().unwrap();
         // θ = 0 − 1.0 · (g_good / 1): the corrupt packet left no trace
         assert_eq!(server.params, vec![-1.0, -2.0, -3.0, -4.0]);
+    }
+
+    #[test]
+    fn split_decode_replay_is_bitwise_identical_to_receive() {
+        // decode_body + accumulate_decoded (the parallel delivery
+        // contract) must leave the server in exactly the state the
+        // serial receive path produces — accumulator, count, and the
+        // stepped parameters, to the bit
+        use crate::fl::compression::{CompressionPipeline, RateTarget};
+        let p = CompressionPipeline::design(
+            CompressionScheme::Lloyd { bits: 3 },
+            WireCoder::Huffman,
+            RateTarget::Off,
+        )
+        .unwrap();
+        let d = 64;
+        let mut rng = Rng::new(9);
+        let mut serial = Server::new(vec![0.5; d], LrSchedule::Const(0.1));
+        let mut split = Server::new(vec![0.5; d], LrSchedule::Const(0.1));
+        serial.begin_round();
+        split.begin_round();
+        for cid in 0..3u32 {
+            let mut g = vec![0f32; d];
+            rng.fill_normal_f32(&mut g, 0.0, 1.5);
+            let pkt = p.compress(cid, 0, &g, &mut rng).unwrap();
+            serial.receive(&p, &pkt).unwrap();
+            let dp = p.decode_body(&pkt).unwrap();
+            split.accumulate_decoded(&dp).unwrap();
+        }
+        assert_eq!(serial.received(), split.received());
+        serial.step().unwrap();
+        split.step().unwrap();
+        let a: Vec<u32> = serial.params.iter().map(|x| x.to_bits()).collect();
+        let b: Vec<u32> = split.params.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(a, b);
     }
 
     #[test]

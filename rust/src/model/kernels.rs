@@ -1,0 +1,461 @@
+//! Blocked model-compute kernels for the native MLP backend, each pinned
+//! to a scalar `*_reference` twin with the **same accumulation tree**.
+//!
+//! The fast kernels restructure the loops for cache locality and
+//! autovectorization — row blocks of the weight matrix stay resident
+//! across the batch, inner loops run over contiguous lanes — without
+//! reordering any floating-point addition: per output element the adds
+//! happen in exactly the order the reference twin performs them, so fast
+//! and reference results are byte-identical (pinned by the differential
+//! battery below and consumed by `benches/model_throughput.rs`). That in
+//! turn is what keeps the round loop thread-count invariant: every
+//! worker computes bit-for-bit the same gradient regardless of which
+//! kernel tier runs.
+//!
+//! No `unsafe`: the speed comes from shapes the compiler can vectorize
+//! (contiguous axpy rows, fixed-width partial-sum lanes), not intrinsics.
+
+// The reference twins are *deliberately* index-walked scalar loops — the
+// pre-tier shapes the bench compares against — so the iterator rewrites
+// clippy suggests would defeat their purpose.
+#![allow(clippy::needless_range_loop)]
+
+/// Rows of the weight matrix processed per cache block: a block of
+/// `ROW_BLOCK × o` weights (≤ 32 KiB at o = 128) stays L1/L2-resident
+/// while the whole batch streams against it.
+pub const ROW_BLOCK: usize = 64;
+
+/// Partial-sum lanes in the dot-product reductions ([`backprop_delta`]).
+/// Fixed width so the fast and reference twins share one combine tree.
+pub const LANES: usize = 8;
+
+/// Dense layer forward: `out[n, :] = b + Σ_i x[n, i] · w[i, :]` for a
+/// row-major `w` of shape `[i_dim, o_dim]`.
+///
+/// Blocked over rows of `w` so each weight block is reused across the
+/// whole batch; the inner axpy over `o_dim` is contiguous and
+/// vectorizable. Coordinates with `x[n, i] == 0.0` are skipped (ReLU
+/// sparsity) — the skip predicate is shared verbatim with the reference
+/// twin because adding `0.0 · w` is not a no-op for `-0.0` outputs.
+pub fn matvec_bias(
+    w: &[f32],
+    b: &[f32],
+    x: &[f32],
+    batch: usize,
+    i_dim: usize,
+    o_dim: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(w.len(), i_dim * o_dim);
+    debug_assert_eq!(b.len(), o_dim);
+    debug_assert_eq!(x.len(), batch * i_dim);
+    debug_assert_eq!(out.len(), batch * o_dim);
+    for ic in (0..i_dim).step_by(ROW_BLOCK) {
+        let ie = (ic + ROW_BLOCK).min(i_dim);
+        for n in 0..batch {
+            let row = &x[n * i_dim + ic..n * i_dim + ie];
+            let o = &mut out[n * o_dim..(n + 1) * o_dim];
+            if ic == 0 {
+                o.copy_from_slice(b);
+            }
+            for (ii, &xv) in row.iter().enumerate() {
+                if xv == 0.0 {
+                    continue; // ReLU sparsity
+                }
+                let wrow = &w[(ic + ii) * o_dim..(ic + ii + 1) * o_dim];
+                for (oj, &wij) in o.iter_mut().zip(wrow) {
+                    *oj += xv * wij;
+                }
+            }
+        }
+    }
+}
+
+/// Scalar twin of [`matvec_bias`]: per-output-element strided dot
+/// products (stride-`o_dim` weight access, serial f32 reduction — the
+/// cache-hostile, non-vectorizable form). Same adds in the same order
+/// per element as the blocked kernel, so results are byte-identical.
+pub fn matvec_bias_reference(
+    w: &[f32],
+    b: &[f32],
+    x: &[f32],
+    batch: usize,
+    i_dim: usize,
+    o_dim: usize,
+    out: &mut [f32],
+) {
+    for n in 0..batch {
+        let row = &x[n * i_dim..(n + 1) * i_dim];
+        for j in 0..o_dim {
+            let mut acc = b[j];
+            for (ii, &xv) in row.iter().enumerate() {
+                if xv == 0.0 {
+                    continue; // ReLU sparsity
+                }
+                acc += xv * w[ii * o_dim + j];
+            }
+            out[n * o_dim + j] = acc;
+        }
+    }
+}
+
+/// Weight-gradient rank-1 accumulation:
+/// `gw[i, :] += Σ_n x[n, i] · delta[n, :]`.
+///
+/// Same row-blocking as the forward: a block of `gw` rows stays resident
+/// while the batch streams through, and per `(i, j)` the batch terms add
+/// in ascending `n` — identical tree to the reference twin.
+pub fn grad_weights(
+    x: &[f32],
+    delta: &[f32],
+    batch: usize,
+    i_dim: usize,
+    o_dim: usize,
+    gw: &mut [f32],
+) {
+    debug_assert_eq!(x.len(), batch * i_dim);
+    debug_assert_eq!(delta.len(), batch * o_dim);
+    debug_assert_eq!(gw.len(), i_dim * o_dim);
+    for ic in (0..i_dim).step_by(ROW_BLOCK) {
+        let ie = (ic + ROW_BLOCK).min(i_dim);
+        for n in 0..batch {
+            let row = &x[n * i_dim + ic..n * i_dim + ie];
+            let drow = &delta[n * o_dim..(n + 1) * o_dim];
+            for (ii, &xv) in row.iter().enumerate() {
+                if xv == 0.0 {
+                    continue; // ReLU sparsity
+                }
+                let grow = &mut gw[(ic + ii) * o_dim..(ic + ii + 1) * o_dim];
+                for (g, &d) in grow.iter_mut().zip(drow) {
+                    *g += xv * d;
+                }
+            }
+        }
+    }
+}
+
+/// Scalar twin of [`grad_weights`]: per-element strided batch reduction
+/// (stride-`i_dim` activations, stride-`o_dim` deltas). Byte-identical.
+pub fn grad_weights_reference(
+    x: &[f32],
+    delta: &[f32],
+    batch: usize,
+    i_dim: usize,
+    o_dim: usize,
+    gw: &mut [f32],
+) {
+    for ii in 0..i_dim {
+        for j in 0..o_dim {
+            let mut acc = gw[ii * o_dim + j];
+            for n in 0..batch {
+                let xv = x[n * i_dim + ii];
+                if xv == 0.0 {
+                    continue; // ReLU sparsity
+                }
+                acc += xv * delta[n * o_dim + j];
+            }
+            gw[ii * o_dim + j] = acc;
+        }
+    }
+}
+
+/// Bias-gradient accumulation: `gb[:] += Σ_n delta[n, :]`, batch terms
+/// in ascending `n` per output (contiguous vectorizable inner loop).
+pub fn grad_bias(delta: &[f32], batch: usize, o_dim: usize, gb: &mut [f32]) {
+    debug_assert_eq!(delta.len(), batch * o_dim);
+    debug_assert_eq!(gb.len(), o_dim);
+    for n in 0..batch {
+        let drow = &delta[n * o_dim..(n + 1) * o_dim];
+        for (g, &d) in gb.iter_mut().zip(drow) {
+            *g += d;
+        }
+    }
+}
+
+/// Scalar twin of [`grad_bias`]: per-output strided batch reduction.
+pub fn grad_bias_reference(
+    delta: &[f32],
+    batch: usize,
+    o_dim: usize,
+    gb: &mut [f32],
+) {
+    for (j, g) in gb.iter_mut().enumerate() {
+        let mut acc = *g;
+        for n in 0..batch {
+            acc += delta[n * o_dim + j];
+        }
+        *g = acc;
+    }
+}
+
+/// Backpropagated delta through a dense layer with a ReLU mask:
+/// `nd[n, i] = Σ_j delta[n, j] · w[i, j]` where `h[n, i] > 0`, else
+/// `0.0` (written explicitly — the buffer is reused, not fresh-zeroed).
+///
+/// The reduction over `j` runs as [`LANES`] independent partial sums
+/// combined in fixed lane order — the one tree both twins share. The
+/// fast kernel walks the lanes as contiguous chunks (vectorizable); the
+/// reference twin walks each lane as a strided scalar pass.
+pub fn backprop_delta(
+    w: &[f32],
+    delta: &[f32],
+    h: &[f32],
+    batch: usize,
+    i_dim: usize,
+    o_dim: usize,
+    nd: &mut [f32],
+) {
+    debug_assert_eq!(w.len(), i_dim * o_dim);
+    debug_assert_eq!(delta.len(), batch * o_dim);
+    debug_assert_eq!(h.len(), batch * i_dim);
+    debug_assert_eq!(nd.len(), batch * i_dim);
+    for n in 0..batch {
+        let drow = &delta[n * o_dim..(n + 1) * o_dim];
+        let hrow = &h[n * i_dim..(n + 1) * i_dim];
+        let ndrow = &mut nd[n * i_dim..(n + 1) * i_dim];
+        for ii in 0..i_dim {
+            if hrow[ii] <= 0.0 {
+                ndrow[ii] = 0.0; // ReLU gradient mask
+                continue;
+            }
+            let wrow = &w[ii * o_dim..(ii + 1) * o_dim];
+            let mut lanes = [0f32; LANES];
+            let mut dc = drow.chunks_exact(LANES);
+            let mut wc = wrow.chunks_exact(LANES);
+            for (dv, wv) in (&mut dc).zip(&mut wc) {
+                for l in 0..LANES {
+                    lanes[l] += dv[l] * wv[l];
+                }
+            }
+            for (l, (&dv, &wv)) in
+                dc.remainder().iter().zip(wc.remainder()).enumerate()
+            {
+                lanes[l] += dv * wv;
+            }
+            let mut acc = 0f32;
+            for &lane in &lanes {
+                acc += lane;
+            }
+            ndrow[ii] = acc;
+        }
+    }
+}
+
+/// Scalar twin of [`backprop_delta`]: each of the [`LANES`] partial sums
+/// is a serial strided pass over `j ≡ l (mod LANES)` — the same terms in
+/// the same per-lane order and the same fixed combine, so byte-identical
+/// to the chunked kernel.
+pub fn backprop_delta_reference(
+    w: &[f32],
+    delta: &[f32],
+    h: &[f32],
+    batch: usize,
+    i_dim: usize,
+    o_dim: usize,
+    nd: &mut [f32],
+) {
+    for n in 0..batch {
+        let drow = &delta[n * o_dim..(n + 1) * o_dim];
+        let hrow = &h[n * i_dim..(n + 1) * i_dim];
+        let ndrow = &mut nd[n * i_dim..(n + 1) * i_dim];
+        for ii in 0..i_dim {
+            if hrow[ii] <= 0.0 {
+                ndrow[ii] = 0.0; // ReLU gradient mask
+                continue;
+            }
+            let mut lanes = [0f32; LANES];
+            for (l, lane) in lanes.iter_mut().enumerate() {
+                let mut j = l;
+                while j < o_dim {
+                    *lane += drow[j] * w[ii * o_dim + j];
+                    j += LANES;
+                }
+            }
+            let mut acc = 0f32;
+            for &lane in &lanes {
+                acc += lane;
+            }
+            ndrow[ii] = acc;
+        }
+    }
+}
+
+/// Fused SGD step `p[i] -= lr · g[i]` over one contiguous span — the ONE
+/// traversal behind the client's local step, the server's aggregate step
+/// and `ParamSet::sgd_step`'s per-tensor walk (which previously indexed
+/// the flat gradient element by element).
+pub fn sgd_step(params: &mut [f32], grad: &[f32], lr: f32) {
+    debug_assert_eq!(params.len(), grad.len());
+    for (p, &g) in params.iter_mut().zip(grad) {
+        *p -= lr * g;
+    }
+}
+
+/// Scalar twin of [`sgd_step`] (indexed element walk). The op per
+/// element is identical, so the pair is byte-identical by construction;
+/// it exists to complete the differential battery and give the bench a
+/// baseline row.
+pub fn sgd_step_reference(params: &mut [f32], grad: &[f32], lr: f32) {
+    for i in 0..params.len() {
+        params[i] -= lr * grad[i];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn fill(rng: &mut Rng, n: usize, zeros: bool) -> Vec<f32> {
+        let mut v = vec![0f32; n];
+        rng.fill_normal_f32(&mut v, 0.0, 1.0);
+        if zeros {
+            // inject exact zeros so the ReLU-sparsity skip is exercised
+            for x in v.iter_mut().step_by(3) {
+                *x = 0.0;
+            }
+        }
+        v
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    /// Ragged shapes around the block/lane widths: non-multiples of
+    /// ROW_BLOCK and LANES, degenerate 1s, and a shape larger than one
+    /// row block.
+    const SHAPES: &[(usize, usize, usize)] = &[
+        (1, 1, 1),
+        (3, 7, 5),
+        (16, 32, 4),
+        (5, 63, 65),
+        (33, 130, 62),
+        (2, 100, 9),
+    ];
+
+    #[test]
+    fn matvec_bias_matches_reference_bitwise() {
+        let mut rng = Rng::new(11);
+        for &(batch, i, o) in SHAPES {
+            let w = fill(&mut rng, i * o, false);
+            let b = fill(&mut rng, o, false);
+            let x = fill(&mut rng, batch * i, true);
+            let mut fast = vec![0f32; batch * o];
+            let mut refr = vec![1f32; batch * o]; // dirty: must be overwritten
+            matvec_bias(&w, &b, &x, batch, i, o, &mut fast);
+            matvec_bias_reference(&w, &b, &x, batch, i, o, &mut refr);
+            assert_eq!(bits(&fast), bits(&refr), "shape {batch}x{i}x{o}");
+        }
+    }
+
+    #[test]
+    fn grad_weights_matches_reference_bitwise() {
+        let mut rng = Rng::new(12);
+        for &(batch, i, o) in SHAPES {
+            let x = fill(&mut rng, batch * i, true);
+            let d = fill(&mut rng, batch * o, false);
+            // non-zero starting accumulator: the kernels accumulate
+            let g0 = fill(&mut rng, i * o, false);
+            let mut fast = g0.clone();
+            let mut refr = g0.clone();
+            grad_weights(&x, &d, batch, i, o, &mut fast);
+            grad_weights_reference(&x, &d, batch, i, o, &mut refr);
+            assert_eq!(bits(&fast), bits(&refr), "shape {batch}x{i}x{o}");
+        }
+    }
+
+    #[test]
+    fn grad_bias_matches_reference_bitwise() {
+        let mut rng = Rng::new(13);
+        for &(batch, _, o) in SHAPES {
+            let d = fill(&mut rng, batch * o, false);
+            let g0 = fill(&mut rng, o, false);
+            let mut fast = g0.clone();
+            let mut refr = g0.clone();
+            grad_bias(&d, batch, o, &mut fast);
+            grad_bias_reference(&d, batch, o, &mut refr);
+            assert_eq!(bits(&fast), bits(&refr), "batch {batch} o {o}");
+        }
+    }
+
+    #[test]
+    fn backprop_delta_matches_reference_bitwise() {
+        let mut rng = Rng::new(14);
+        for &(batch, i, o) in SHAPES {
+            let w = fill(&mut rng, i * o, false);
+            let d = fill(&mut rng, batch * o, false);
+            // mix of positive / zero / negative activations so both the
+            // mask write and the lane reduction run
+            let h = fill(&mut rng, batch * i, true);
+            let mut fast = vec![7f32; batch * i]; // dirty: mask must zero it
+            let mut refr = vec![-7f32; batch * i];
+            backprop_delta(&w, &d, &h, batch, i, o, &mut fast);
+            backprop_delta_reference(&w, &d, &h, batch, i, o, &mut refr);
+            assert_eq!(bits(&fast), bits(&refr), "shape {batch}x{i}x{o}");
+        }
+    }
+
+    #[test]
+    fn sgd_step_matches_reference_bitwise() {
+        let mut rng = Rng::new(15);
+        for n in [0usize, 1, 7, 64, 1000] {
+            let g = fill(&mut rng, n, false);
+            let p0 = fill(&mut rng, n, false);
+            let mut fast = p0.clone();
+            let mut refr = p0;
+            sgd_step(&mut fast, &g, 0.05);
+            sgd_step_reference(&mut refr, &g, 0.05);
+            assert_eq!(bits(&fast), bits(&refr), "n {n}");
+        }
+    }
+
+    #[test]
+    fn non_finite_inputs_propagate_identically() {
+        // NaN / ±∞ in weights, activations and deltas must flow through
+        // both twins identically (bit-compare, NaN included): the skip
+        // predicates are on exact zero, never on finiteness
+        let mut rng = Rng::new(16);
+        let (batch, i, o) = (4usize, 19usize, 11usize);
+        let mut w = fill(&mut rng, i * o, false);
+        let mut x = fill(&mut rng, batch * i, true);
+        let mut d = fill(&mut rng, batch * o, false);
+        w[5] = f32::NAN;
+        w[i * o - 1] = f32::INFINITY;
+        x[3] = f32::NEG_INFINITY;
+        d[1] = f32::NAN;
+        let b = fill(&mut rng, o, false);
+
+        let mut fast = vec![0f32; batch * o];
+        let mut refr = vec![0f32; batch * o];
+        matvec_bias(&w, &b, &x, batch, i, o, &mut fast);
+        matvec_bias_reference(&w, &b, &x, batch, i, o, &mut refr);
+        assert_eq!(bits(&fast), bits(&refr));
+
+        let mut gf = vec![0f32; i * o];
+        let mut gr = vec![0f32; i * o];
+        grad_weights(&x, &d, batch, i, o, &mut gf);
+        grad_weights_reference(&x, &d, batch, i, o, &mut gr);
+        assert_eq!(bits(&gf), bits(&gr));
+
+        let h = fill(&mut rng, batch * i, true);
+        let mut nf = vec![0f32; batch * i];
+        let mut nr = vec![0f32; batch * i];
+        backprop_delta(&w, &d, &h, batch, i, o, &mut nf);
+        backprop_delta_reference(&w, &d, &h, batch, i, o, &mut nr);
+        assert_eq!(bits(&nf), bits(&nr));
+    }
+
+    #[test]
+    fn zero_batch_touches_nothing() {
+        // batch = 0 is rejected upstream (NativeMlp::check_batch); the
+        // kernels themselves must simply leave the outputs alone
+        let mut gw = vec![3f32; 6];
+        grad_weights(&[], &[], 0, 2, 3, &mut gw);
+        grad_weights_reference(&[], &[], 0, 2, 3, &mut gw);
+        assert_eq!(gw, vec![3f32; 6]);
+        let mut gb = vec![2f32; 3];
+        grad_bias(&[], 0, 3, &mut gb);
+        assert_eq!(gb, vec![2f32; 3]);
+    }
+}

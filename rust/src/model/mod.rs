@@ -12,10 +12,37 @@
 //!   for the Theorem-1 convergence harness (E4).
 
 pub mod convex;
+pub mod kernels;
 pub mod native;
 pub mod pjrt;
 
 use crate::util::Result;
+
+/// Reusable per-worker model workspace: the activation and delta buffers
+/// a backend's forward/backward pass needs, pre-sized after the first
+/// call so the warm training path allocates nothing.
+///
+/// Safe to share across clients: every buffer is fully overwritten
+/// before it is read (the native backprop writes the ReLU mask's zeros
+/// explicitly instead of relying on fresh-zeroed memory), so no state
+/// leaks between the clients a worker drives. Rides in the round loop's
+/// `RoundScratch` next to the codec scratch; backends that manage their
+/// own device memory ([`pjrt`]) simply ignore it.
+#[derive(Debug, Default)]
+pub struct ModelScratch {
+    /// per-layer post-activation buffers `h_1 … h_L` (the input batch is
+    /// read in place, never copied)
+    pub(crate) acts: Vec<Vec<f32>>,
+    /// ping-pong backprop delta buffers
+    pub(crate) delta_a: Vec<f32>,
+    pub(crate) delta_b: Vec<f32>,
+}
+
+impl ModelScratch {
+    pub fn new() -> ModelScratch {
+        ModelScratch::default()
+    }
+}
 
 /// A model the FL system can train.
 ///
@@ -43,6 +70,34 @@ pub trait Backend {
 
     /// Correct predictions on a batch.
     fn eval(&self, params: &[f32], xs: &[f32], ys: &[i32]) -> Result<usize>;
+
+    /// [`Self::grad`] with a caller-owned [`ModelScratch`]: the round
+    /// loop's zero-alloc entry point. Results are byte-identical to
+    /// [`Self::grad`] — scratch is a buffer-reuse knob, never a results
+    /// knob. Backends without reusable host buffers ignore the scratch
+    /// (the default forwards to [`Self::grad`]).
+    fn grad_with(
+        &self,
+        params: &[f32],
+        xs: &[f32],
+        ys: &[i32],
+        grad_out: &mut [f32],
+        _scratch: &mut ModelScratch,
+    ) -> Result<f32> {
+        self.grad(params, xs, ys, grad_out)
+    }
+
+    /// [`Self::eval`] with a caller-owned [`ModelScratch`] (same
+    /// contract as [`Self::grad_with`]).
+    fn eval_with(
+        &self,
+        params: &[f32],
+        xs: &[f32],
+        ys: &[i32],
+        _scratch: &mut ModelScratch,
+    ) -> Result<usize> {
+        self.eval(params, xs, ys)
+    }
 
     /// Whether `grad`/`eval` may be called concurrently from threads.
     fn supports_parallel(&self) -> bool {

@@ -6,8 +6,15 @@
 //! sweeps (hundreds of rounds × many configs) where PJRT round-trips per
 //! client step would dominate; numerics are cross-validated against the
 //! AOT JAX graph in `rust/tests/pjrt_roundtrip.rs`.
+//!
+//! The compute itself runs on the blocked kernels in
+//! [`crate::model::kernels`] with a caller-owned [`ModelScratch`]
+//! workspace, so a warm `grad_with`/`eval_with` call allocates nothing.
+//! [`NativeMlp::grad_reference`] re-runs the identical pipeline on the
+//! scalar `*_reference` twins — byte-identical output (pinned below),
+//! and the baseline the `model_throughput` bench measures against.
 
-use crate::model::Backend;
+use crate::model::{kernels, Backend, ModelScratch};
 use crate::util::rng::Rng;
 use crate::util::{Error, Result};
 
@@ -17,12 +24,25 @@ pub struct NativeMlp {
     /// layer widths: `[in, h1, …, classes]`
     pub dims: Vec<usize>,
     batch: usize,
+    /// per-layer `(w_l, b_l)` offsets into the flat parameter vector,
+    /// cached at construction (previously rebuilt on every call)
+    offs: Vec<(usize, usize)>,
+    /// total parameter count, cached at construction
+    d: usize,
 }
 
 impl NativeMlp {
     pub fn new(dims: Vec<usize>, batch: usize) -> NativeMlp {
         assert!(dims.len() >= 2, "need at least input and output dims");
-        NativeMlp { dims, batch }
+        let layers = dims.len() - 1;
+        let mut offs = Vec::with_capacity(layers);
+        let mut off = 0;
+        for l in 0..layers {
+            let (i, o) = (dims[l], dims[l + 1]);
+            offs.push((off, off + i * o));
+            off += i * o + o;
+        }
+        NativeMlp { dims, batch, offs, d: off }
     }
 
     /// The `mlp_synthcifar` architecture from the manifest.
@@ -45,55 +65,47 @@ impl NativeMlp {
     }
 
     /// (offset of w_l, offset of b_l) within the flat parameter vector.
-    fn layer_offsets(&self) -> Vec<(usize, usize)> {
-        let mut out = Vec::with_capacity(self.num_layers());
-        let mut off = 0;
-        for l in 0..self.num_layers() {
-            let (i, o) = (self.dims[l], self.dims[l + 1]);
-            out.push((off, off + i * o));
-            off += i * o + o;
-        }
-        out
+    fn layer_offsets(&self) -> &[(usize, usize)] {
+        &self.offs
     }
 
-    /// Forward pass; returns per-layer activations (h0 = input batch).
-    fn forward(&self, params: &[f32], xs: &[f32], batch: usize) -> Vec<Vec<f32>> {
-        let offs = self.layer_offsets();
-        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(self.num_layers() + 1);
-        acts.push(xs.to_vec());
-        for l in 0..self.num_layers() {
+    /// Forward pass into the workspace: `scratch.acts[l]` holds the
+    /// post-activation output of layer `l` (`acts[nl-1]` = logits). The
+    /// input batch is read in place — never copied into the workspace.
+    fn forward_into(
+        &self,
+        params: &[f32],
+        xs: &[f32],
+        batch: usize,
+        scratch: &mut ModelScratch,
+        reference: bool,
+    ) {
+        let nl = self.num_layers();
+        while scratch.acts.len() < nl {
+            scratch.acts.push(Vec::new());
+        }
+        for l in 0..nl {
             let (i, o) = (self.dims[l], self.dims[l + 1]);
-            let (wo, bo) = offs[l];
+            let (wo, bo) = self.offs[l];
             let w = &params[wo..wo + i * o];
             let b = &params[bo..bo + o];
-            let h_in = &acts[l];
-            let mut h = vec![0f32; batch * o];
-            // out[n, :] = Σ_i x[n, i] * w[i, :]  (axpy over rows: the inner
-            // loop is a contiguous fused-multiply-add, auto-vectorizable)
-            for n in 0..batch {
-                let row = &h_in[n * i..(n + 1) * i];
-                let out = &mut h[n * o..(n + 1) * o];
-                out.copy_from_slice(b);
-                for (ii, &x) in row.iter().enumerate() {
-                    if x == 0.0 {
-                        continue; // ReLU sparsity
-                    }
-                    let wrow = &w[ii * o..(ii + 1) * o];
-                    for (oj, &wij) in out.iter_mut().zip(wrow) {
-                        *oj += x * wij;
-                    }
-                }
+            let (prev, rest) = scratch.acts.split_at_mut(l);
+            let h_in: &[f32] = if l == 0 { xs } else { &prev[l - 1] };
+            let h = &mut rest[0];
+            h.resize(batch * o, 0.0);
+            if reference {
+                kernels::matvec_bias_reference(w, b, h_in, batch, i, o, h);
+            } else {
+                kernels::matvec_bias(w, b, h_in, batch, i, o, h);
             }
-            if l < self.num_layers() - 1 {
+            if l < nl - 1 {
                 for x in h.iter_mut() {
                     if *x < 0.0 {
                         *x = 0.0;
                     }
                 }
             }
-            acts.push(h);
         }
-        acts
     }
 
     fn check_batch(&self, xs: &[f32], ys: &[i32]) -> Result<usize> {
@@ -103,55 +115,21 @@ impl NativeMlp {
                 "batch shape mismatch: {} features, {} labels",
                 xs.len(), ys.len())));
         }
+        if ys.is_empty() {
+            return Err(Error::Config("empty batch".into()));
+        }
         Ok(ys.len())
     }
-}
 
-impl Backend for NativeMlp {
-    fn num_params(&self) -> usize {
-        (0..self.num_layers())
-            .map(|l| self.dims[l] * self.dims[l + 1] + self.dims[l + 1])
-            .sum()
-    }
-
-    fn batch_size(&self) -> usize {
-        self.batch
-    }
-
-    fn init_params(&self, seed: u64) -> Vec<f32> {
-        // He init on weights, zero biases — mirrors ParamSet::he_init and
-        // model.py::init_params in structure.
-        let mut rng = Rng::new(seed);
-        let mut out = vec![0f32; self.num_params()];
-        let offs = self.layer_offsets();
-        for l in 0..self.num_layers() {
-            let (i, o) = (self.dims[l], self.dims[l + 1]);
-            let (wo, _) = offs[l];
-            let scale = (2.0 / i as f64).sqrt() as f32;
-            rng.fill_normal_f32(&mut out[wo..wo + i * o], 0.0, scale);
-        }
-        out
-    }
-
-    fn grad(
-        &self,
-        params: &[f32],
-        xs: &[f32],
+    /// Softmax + mean cross-entropy on the logits; writes `dL/dlogits`
+    /// into `delta` (fully overwritten) and returns the mean loss.
+    fn softmax_ce_delta(
+        logits: &[f32],
         ys: &[i32],
-        grad_out: &mut [f32],
-    ) -> Result<f32> {
-        let batch = self.check_batch(xs, ys)?;
-        if grad_out.len() != self.num_params() {
-            return Err(Error::Config("grad_out length mismatch".into()));
-        }
-        let offs = self.layer_offsets();
-        let acts = self.forward(params, xs, batch);
-        let nl = self.num_layers();
-        let classes = self.dims[nl];
-
-        // softmax + CE on the last activation
-        let logits = &acts[nl];
-        let mut delta = vec![0f32; batch * classes]; // dL/dlogits
+        batch: usize,
+        classes: usize,
+        delta: &mut [f32],
+    ) -> f32 {
         let mut loss = 0f64;
         for n in 0..batch {
             let row = &logits[n * classes..(n + 1) * classes];
@@ -169,72 +147,147 @@ impl Backend for NativeMlp {
                 *dv = (p - (c == y) as usize as f32) / batch as f32;
             }
         }
-        let loss = (loss / batch as f64) as f32;
+        (loss / batch as f64) as f32
+    }
+
+    /// One shared gradient pipeline behind [`Backend::grad_with`] (fast
+    /// kernels) and [`Self::grad_reference`] (scalar twins).
+    fn grad_impl(
+        &self,
+        params: &[f32],
+        xs: &[f32],
+        ys: &[i32],
+        grad_out: &mut [f32],
+        scratch: &mut ModelScratch,
+        reference: bool,
+    ) -> Result<f32> {
+        let batch = self.check_batch(xs, ys)?;
+        if grad_out.len() != self.d {
+            return Err(Error::Config("grad_out length mismatch".into()));
+        }
+        self.forward_into(params, xs, batch, scratch, reference);
+        let nl = self.num_layers();
+        let classes = self.dims[nl];
+
+        scratch.delta_a.resize(batch * classes, 0.0);
+        let loss = NativeMlp::softmax_ce_delta(
+            &scratch.acts[nl - 1], ys, batch, classes, &mut scratch.delta_a);
 
         grad_out.fill(0.0);
-        // backprop
-        let mut cur_delta = delta;
         for l in (0..nl).rev() {
             let (i, o) = (self.dims[l], self.dims[l + 1]);
-            let (wo, bo) = offs[l];
-            let h_in = &acts[l];
-            // dW[i, :] += h_in[n, i] * delta[n, :]; db += delta[n, :]
-            {
-                let gw = &mut grad_out[wo..wo + i * o];
-                for n in 0..batch {
-                    let row = &h_in[n * i..(n + 1) * i];
-                    let drow = &cur_delta[n * o..(n + 1) * o];
-                    for (ii, &x) in row.iter().enumerate() {
-                        if x == 0.0 {
-                            continue;
-                        }
-                        let grow = &mut gw[ii * o..(ii + 1) * o];
-                        for (g, &d) in grow.iter_mut().zip(drow) {
-                            *g += x * d;
-                        }
-                    }
-                }
-            }
-            {
-                let gb = &mut grad_out[bo..bo + o];
-                for n in 0..batch {
-                    let drow = &cur_delta[n * o..(n + 1) * o];
-                    for (g, &d) in gb.iter_mut().zip(drow) {
-                        *g += d;
-                    }
-                }
+            let (wo, bo) = self.offs[l];
+            let h_in: &[f32] = if l == 0 {
+                xs
+            } else {
+                &scratch.acts[l - 1]
+            };
+            let (gw, rest) = grad_out[wo..bo + o].split_at_mut(i * o);
+            let gb = rest;
+            if reference {
+                kernels::grad_weights_reference(
+                    h_in, &scratch.delta_a, batch, i, o, gw);
+                kernels::grad_bias_reference(
+                    &scratch.delta_a, batch, o, gb);
+            } else {
+                kernels::grad_weights(h_in, &scratch.delta_a, batch, i, o, gw);
+                kernels::grad_bias(&scratch.delta_a, batch, o, gb);
             }
             if l > 0 {
-                // dh_in[n, i] = Σ_j delta[n, j] w[i, j], masked by ReLU
                 let w = &params[wo..wo + i * o];
-                let mut next_delta = vec![0f32; batch * i];
-                for n in 0..batch {
-                    let drow = &cur_delta[n * o..(n + 1) * o];
-                    let hrow = &acts[l][n * i..(n + 1) * i];
-                    let ndrow = &mut next_delta[n * i..(n + 1) * i];
-                    for ii in 0..i {
-                        if hrow[ii] <= 0.0 {
-                            continue; // ReLU gradient mask
-                        }
-                        let wrow = &w[ii * o..(ii + 1) * o];
-                        let mut acc = 0f32;
-                        for (d, wv) in drow.iter().zip(wrow) {
-                            acc += d * wv;
-                        }
-                        ndrow[ii] = acc;
-                    }
+                scratch.delta_b.resize(batch * i, 0.0);
+                if reference {
+                    kernels::backprop_delta_reference(
+                        w, &scratch.delta_a, h_in, batch, i, o,
+                        &mut scratch.delta_b);
+                } else {
+                    kernels::backprop_delta(
+                        w, &scratch.delta_a, h_in, batch, i, o,
+                        &mut scratch.delta_b);
                 }
-                cur_delta = next_delta;
+                std::mem::swap(&mut scratch.delta_a, &mut scratch.delta_b);
             }
         }
         Ok(loss)
     }
 
+    /// Reference-twin gradient: the identical pipeline routed through
+    /// the scalar `*_reference` kernels. Byte-identical to
+    /// [`Backend::grad`] (pinned in the tests below); exists as the
+    /// differential oracle and the `model_throughput` bench baseline.
+    pub fn grad_reference(
+        &self,
+        params: &[f32],
+        xs: &[f32],
+        ys: &[i32],
+        grad_out: &mut [f32],
+        scratch: &mut ModelScratch,
+    ) -> Result<f32> {
+        self.grad_impl(params, xs, ys, grad_out, scratch, true)
+    }
+}
+
+impl Backend for NativeMlp {
+    fn num_params(&self) -> usize {
+        self.d
+    }
+
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    fn init_params(&self, seed: u64) -> Vec<f32> {
+        // He init on weights, zero biases — mirrors ParamSet::he_init and
+        // model.py::init_params in structure.
+        let mut rng = Rng::new(seed);
+        let mut out = vec![0f32; self.d];
+        for l in 0..self.num_layers() {
+            let (i, o) = (self.dims[l], self.dims[l + 1]);
+            let (wo, _) = self.layer_offsets()[l];
+            let scale = (2.0 / i as f64).sqrt() as f32;
+            rng.fill_normal_f32(&mut out[wo..wo + i * o], 0.0, scale);
+        }
+        out
+    }
+
+    fn grad(
+        &self,
+        params: &[f32],
+        xs: &[f32],
+        ys: &[i32],
+        grad_out: &mut [f32],
+    ) -> Result<f32> {
+        let mut scratch = ModelScratch::new();
+        self.grad_with(params, xs, ys, grad_out, &mut scratch)
+    }
+
+    fn grad_with(
+        &self,
+        params: &[f32],
+        xs: &[f32],
+        ys: &[i32],
+        grad_out: &mut [f32],
+        scratch: &mut ModelScratch,
+    ) -> Result<f32> {
+        self.grad_impl(params, xs, ys, grad_out, scratch, false)
+    }
+
     fn eval(&self, params: &[f32], xs: &[f32], ys: &[i32]) -> Result<usize> {
+        let mut scratch = ModelScratch::new();
+        self.eval_with(params, xs, ys, &mut scratch)
+    }
+
+    fn eval_with(
+        &self,
+        params: &[f32],
+        xs: &[f32],
+        ys: &[i32],
+        scratch: &mut ModelScratch,
+    ) -> Result<usize> {
         let batch = self.check_batch(xs, ys)?;
-        let acts = self.forward(params, xs, batch);
+        self.forward_into(params, xs, batch, scratch, false);
         let classes = self.dims[self.num_layers()];
-        let logits = &acts[self.num_layers()];
+        let logits = &scratch.acts[self.num_layers() - 1];
         let mut correct = 0;
         for n in 0..batch {
             let row = &logits[n * classes..(n + 1) * classes];
@@ -280,15 +333,13 @@ mod tests {
         );
     }
 
-    #[test]
-    fn grad_matches_finite_differences() {
-        let m = NativeMlp::tiny();
-        let params = m.init_params(3);
-        let (xs, ys) = batch(&m, 4, 8);
+    fn check_finite_differences(m: &NativeMlp, n: usize, seed: u64) {
+        let params = m.init_params(seed);
+        let (xs, ys) = batch(m, seed + 1, n);
         let mut g = vec![0f32; m.num_params()];
         let loss0 = m.grad(&params, &xs, &ys, &mut g).unwrap();
         assert!(loss0.is_finite());
-        let mut rng = Rng::new(5);
+        let mut rng = Rng::new(seed + 2);
         let eps = 1e-3f32;
         for _ in 0..12 {
             let i = rng.below(m.num_params());
@@ -301,9 +352,97 @@ mod tests {
             let fd = (lp - lm) / (2.0 * eps);
             assert!(
                 (fd - g[i]).abs() < 5e-2 * g[i].abs().max(0.1),
-                "param {i}: fd={fd} ad={}", g[i]
+                "{} param {i}: fd={fd} ad={}", m.name(), g[i]
             );
         }
+    }
+
+    #[test]
+    fn grad_matches_finite_differences() {
+        check_finite_differences(&NativeMlp::tiny(), 8, 3);
+    }
+
+    #[test]
+    fn grad_matches_finite_differences_odd_batches() {
+        // batch sizes that are not multiples of the kernel block/lane
+        // widths (and not the preset batch) exercise the ragged tails
+        check_finite_differences(&NativeMlp::tiny(), 13, 17);
+        check_finite_differences(&NativeMlp::tiny(), 1, 23);
+    }
+
+    #[test]
+    fn grad_matches_finite_differences_femnist() {
+        check_finite_differences(&NativeMlp::synth_femnist(), 5, 31);
+    }
+
+    #[test]
+    fn grad_matches_finite_differences_cifar() {
+        check_finite_differences(&NativeMlp::synth_cifar(), 9, 37);
+    }
+
+    #[test]
+    fn fast_grad_is_bitwise_identical_to_reference_twin() {
+        // the acceptance contract of the kernel tier: blocked kernels and
+        // scalar reference twins share one accumulation tree, so the full
+        // gradient (and the loss) agree to the bit at every preset shape
+        // and at ragged batch sizes
+        for (m, n) in [
+            (NativeMlp::tiny(), 16usize),
+            (NativeMlp::tiny(), 13),
+            (NativeMlp::synth_femnist(), 7),
+            (NativeMlp::synth_cifar(), 5),
+        ] {
+            let params = m.init_params(41);
+            let (xs, ys) = batch(&m, 42, n);
+            let mut scratch = ModelScratch::new();
+            let mut fast = vec![0f32; m.num_params()];
+            let lf = m
+                .grad_with(&params, &xs, &ys, &mut fast, &mut scratch)
+                .unwrap();
+            let mut refr = vec![0f32; m.num_params()];
+            let lr = m
+                .grad_reference(&params, &xs, &ys, &mut refr, &mut scratch)
+                .unwrap();
+            assert_eq!(lf.to_bits(), lr.to_bits(), "{} loss", m.name());
+            let fb: Vec<u32> = fast.iter().map(|x| x.to_bits()).collect();
+            let rb: Vec<u32> = refr.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(fb, rb, "{} batch {n}", m.name());
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_is_bitwise_identical_to_fresh() {
+        // a dirty workspace (different model, different batch size) must
+        // not change a single bit of the next call's results
+        let m = NativeMlp::synth_femnist();
+        let params = m.init_params(51);
+        let (xs, ys) = batch(&m, 52, 9);
+        let mut fresh = vec![0f32; m.num_params()];
+        let l0 = m.grad(&params, &xs, &ys, &mut fresh).unwrap();
+        let mut scratch = ModelScratch::new();
+        // dirty the scratch: bigger batch on this model + another model
+        let (xs2, ys2) = batch(&m, 53, 32);
+        m.grad_with(&params, &xs2, &ys2, &mut fresh.clone(), &mut scratch)
+            .unwrap();
+        let other = NativeMlp::synth_cifar();
+        let op = other.init_params(54);
+        let (xs3, ys3) = batch(&other, 55, 4);
+        let mut og = vec![0f32; other.num_params()];
+        other.grad_with(&op, &xs3, &ys3, &mut og, &mut scratch).unwrap();
+        // now the original call through the dirty scratch
+        let mut warm = vec![0f32; m.num_params()];
+        let l1 = m.grad_with(&params, &xs, &ys, &mut warm, &mut scratch)
+            .unwrap();
+        assert_eq!(l0.to_bits(), l1.to_bits());
+        assert_eq!(
+            fresh.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            warm.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        // and eval through the same dirty scratch matches fresh eval
+        assert_eq!(
+            m.eval(&params, &xs, &ys).unwrap(),
+            m.eval_with(&params, &xs, &ys, &mut scratch).unwrap()
+        );
     }
 
     #[test]
@@ -350,6 +489,17 @@ mod tests {
         let mut g = vec![0f32; m.num_params()];
         assert!(m.grad(&params, &[0.0; 31], &[0], &mut g).is_err());
         assert!(m.grad(&params, &[0.0; 32], &[0], &mut [0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn zero_batch_rejected() {
+        // an empty batch would make the mean loss 0/0; reject it before
+        // the kernels run (for grad AND eval)
+        let m = NativeMlp::tiny();
+        let params = m.init_params(0);
+        let mut g = vec![0f32; m.num_params()];
+        assert!(m.grad(&params, &[], &[], &mut g).is_err());
+        assert!(m.eval(&params, &[], &[]).is_err());
     }
 
     #[test]

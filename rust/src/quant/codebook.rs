@@ -350,6 +350,17 @@ impl Codebook {
         }
     }
 
+    /// Owned premultiplied reconstruction table for deferred (fused)
+    /// accumulation: the decode phase builds the table once per packet,
+    /// and the replay phase does the gather-add without needing the
+    /// codec alive. Entries beyond the live levels are 0 (unreachable:
+    /// symbols are always `< levels.len()`).
+    pub fn recon_table(&self, mu: f32, sigma: f32) -> Box<[f32; 256]> {
+        let mut t = Box::new([0f32; 256]);
+        self.premul_table(mu, sigma, &mut t);
+        t
+    }
+
     /// De-normalize symbols into `out[i] = sigma * s_idx + mu` (PS side).
     pub fn dequantize_into(
         &self,

@@ -149,10 +149,9 @@ impl ParamSet {
         }
         let mut off = 0;
         for t in self.tensors.iter_mut() {
-            for x in t.iter_mut() {
-                *x -= lr * flat_grad[off];
-                off += 1;
-            }
+            let n = t.len();
+            crate::model::kernels::sgd_step(t, &flat_grad[off..off + n], lr);
+            off += n;
         }
         Ok(())
     }

@@ -2,9 +2,10 @@
 //!
 //! Clients need `(μ_{k,t}, σ_{k,t})` of each local gradient (paper §3.1).
 //! [`Welford`] is the numerically-stable streaming version; [`mean_std`]
-//! is the vectorizable two-pass version used on the hot path; both must
-//! agree (tested below). `combine` merges per-block partials produced by
-//! the L1 `moments` kernel.
+//! is the vectorizable single-pass lane version used on the hot path
+//! (with [`mean_std_reference`], the old two-pass form, as its oracle);
+//! all must agree (tested below). `combine` merges per-block partials
+//! produced by the L1 `moments` kernel.
 
 /// Numerically stable streaming mean/variance (Welford / Chan).
 #[derive(Clone, Copy, Debug, Default)]
@@ -61,8 +62,52 @@ impl Welford {
     }
 }
 
-/// Two-pass population mean/std of an f32 slice (f64 accumulation).
+/// Lane width of the fused moments pass (matches the model kernels).
+const LANES: usize = 8;
+
+/// Single-pass `(Σx, Σx²)` in f64 over [`LANES`] independent partial
+/// sums, combined in fixed lane order — the accumulation tree is a
+/// function of the data only, never of chunking or thread count.
+fn lane_moments(xs: &[f32]) -> (f64, f64) {
+    let mut s = [0f64; LANES];
+    let mut s2 = [0f64; LANES];
+    let mut it = xs.chunks_exact(LANES);
+    for c in &mut it {
+        for l in 0..LANES {
+            let x = c[l] as f64;
+            s[l] += x;
+            s2[l] += x * x;
+        }
+    }
+    for (l, &x) in it.remainder().iter().enumerate() {
+        let x = x as f64;
+        s[l] += x;
+        s2[l] += x * x;
+    }
+    (s.iter().sum::<f64>(), s2.iter().sum::<f64>())
+}
+
+/// Population mean/std of an f32 slice: one fused pass accumulating
+/// `(Σx, Σx²)` in f64 lanes, `σ² = (Σx²/n − μ²)₊` — the same moment
+/// identity [`combine_partials`] uses. The f64 lane accumulators keep
+/// the cancellation benign at gradient scale (see
+/// `single_pass_close_to_two_pass_reference` below); exact for constant
+/// inputs.
 pub fn mean_std(xs: &[f32]) -> (f32, f32) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let n = xs.len() as f64;
+    let (s, s2) = lane_moments(xs);
+    let mean = s / n;
+    let var = (s2 / n - mean * mean).max(0.0);
+    (mean as f32, var.sqrt() as f32)
+}
+
+/// The previous two-pass formulation (serial f64 sums, centered second
+/// pass) — the differential oracle for [`mean_std`] and the
+/// `model_throughput` baseline.
+pub fn mean_std_reference(xs: &[f32]) -> (f32, f32) {
     if xs.is_empty() {
         return (0.0, 0.0);
     }
@@ -77,6 +122,21 @@ pub fn mean_std(xs: &[f32]) -> (f32, f32) {
         .sum::<f64>()
         / n;
     (mean as f32, var.sqrt() as f32)
+}
+
+/// [`mean_std`] fused with the adaptive controller's strided raw-value
+/// capture: appends every `stride`-th element of `xs` to `sample`
+/// (un-normalized — the caller normalizes once (μ, σ) are known). One
+/// entry point for the quantizer's moments + stats-sample pass, so the
+/// sampled positions cannot drift from the dedicated sampler's.
+pub fn mean_std_with_stride_sample(
+    xs: &[f32],
+    stride: usize,
+    sample: &mut Vec<f32>,
+) -> (f32, f32) {
+    let (mean, std) = mean_std(xs);
+    sample.extend(xs.iter().step_by(stride.max(1)));
+    (mean, std)
 }
 
 /// Combine per-block `(sum, sumsq)` partials (from the L1 `moments`
@@ -149,5 +209,43 @@ mod tests {
         let (m, s) = mean_std(&[2.5; 100]);
         assert_eq!(m, 2.5);
         assert!(s.abs() < 1e-6);
+        // the (Σx²/n − μ²) identity must clamp, not sqrt a tiny
+        // negative residue, on constant inputs
+        assert_eq!(s, 0.0);
+    }
+
+    #[test]
+    fn single_pass_close_to_two_pass_reference() {
+        // ragged lengths around the lane width, offset means, and a
+        // near-constant vector (the cancellation-hostile case)
+        let mut rng = Rng::new(7);
+        for n in [1usize, 7, 8, 9, 1023, 4096] {
+            let mut xs = vec![0f32; n];
+            rng.fill_normal_f32(&mut xs, -2.0, 0.3);
+            let (m, s) = mean_std(&xs);
+            let (mr, sr) = mean_std_reference(&xs);
+            assert!((m - mr).abs() < 1e-5, "n={n}: {m} vs {mr}");
+            assert!((s - sr).abs() < 1e-5, "n={n}: {s} vs {sr}");
+        }
+        let mut tight = vec![0f32; 2048];
+        rng.fill_normal_f32(&mut tight, 1000.0, 1e-3);
+        let (s, sr) = (mean_std(&tight).1, mean_std_reference(&tight).1);
+        assert!((s - sr).abs() < 1e-4, "{s} vs {sr}");
+    }
+
+    #[test]
+    fn stride_sample_collects_raw_values() {
+        let mut rng = Rng::new(8);
+        let mut xs = vec![0f32; 100];
+        rng.fill_normal_f32(&mut xs, 0.0, 1.0);
+        let mut sample = Vec::new();
+        let (m, s) = mean_std_with_stride_sample(&xs, 7, &mut sample);
+        assert_eq!((m, s), mean_std(&xs));
+        let expect: Vec<f32> = xs.iter().step_by(7).copied().collect();
+        assert_eq!(sample, expect);
+        // stride 0 is treated as 1, not a panic
+        let mut all = Vec::new();
+        mean_std_with_stride_sample(&xs, 0, &mut all);
+        assert_eq!(all, xs);
     }
 }
